@@ -1,0 +1,34 @@
+//! Figure 10 interactively: sweep any factor from the golden setting and
+//! print the ODC/Collective acceleration curve.
+//!
+//! Run: cargo run --release --example parametric_study -- --factor devices
+
+use odc::report::Table;
+use odc::sim::parametric::{sweep, Factor};
+use odc::util::cli::Cli;
+
+fn main() {
+    let args = Cli::new("parametric_study", "Fig 10 sweeps from the golden setting (Table 1)")
+        .opt("factor", "all", "minibs | maxlen | packing | devices | all")
+        .opt("steps", "12", "minibatches per point")
+        .opt("seed", "11", "rng seed")
+        .parse();
+
+    let factors: Vec<Factor> = match args.get("factor") {
+        "minibs" => vec![Factor::MinibatchSize],
+        "maxlen" => vec![Factor::MaxLength],
+        "packing" => vec![Factor::PackingRatio],
+        "devices" => vec![Factor::Devices],
+        _ => vec![Factor::MinibatchSize, Factor::MaxLength, Factor::PackingRatio, Factor::Devices],
+    };
+
+    for f in factors {
+        let pts = sweep(f, &f.default_grid(), args.usize("steps"), args.u64("seed"));
+        let mut t = Table::new(&[f.label(), "ODC/Collective"]);
+        for p in &pts {
+            let bar = "#".repeat(((p.ratio - 0.95).max(0.0) * 60.0) as usize);
+            t.row(vec![format!("{}", p.x), format!("{:.3}x {bar}", p.ratio)]);
+        }
+        println!("{}", t.markdown());
+    }
+}

@@ -1,0 +1,173 @@
+"""AOT exporter: lower the L2/L1 stack to HLO text + manifest for Rust.
+
+Runs ONCE at `make artifacts`; Python is never on the training hot path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Output layout (per model preset):
+  artifacts/<preset>/
+    manifest.json             # shapes/dtypes/files — the rust runtime's index
+    embed_fwd_s<S>.hlo.txt    # one per sequence bucket
+    block_fwd_s<S>.hlo.txt
+    block_bwd_s<S>.hlo.txt
+    loss_head_s<S>.hlo.txt
+    embed_bwd_s<S>.hlo.txt
+    adam_chunk.hlo.txt        # sequence-independent shard ops
+    accum_chunk.hlo.txt
+    init/embed.bin            # f32-LE initial parameters
+    init/block_<i>.bin
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import PRESETS, ModelConfig
+from .kernels import accumulate as ACC
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XLA HLO text (see module docstring for why text)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def export_preset(cfg: ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+    pb, pe, c = cfg.block_params, cfg.embed_params, cfg.chunk
+    d = cfg.d_model
+    artifacts = {}
+
+    def emit(key, fn, in_specs, inputs, outputs):
+        fname = f"{key}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*in_specs))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[key] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  {key:<22} {len(text):>9} chars")
+
+    for s in cfg.seq_buckets:
+        emit(
+            f"embed_fwd_s{s}",
+            lambda e, t: M.embed_fwd(cfg, e, t),
+            [_spec((pe,)), _spec((s,), jnp.int32)],
+            [_io("emb_flat", (pe,)), _io("tokens", (s,), "i32")],
+            [_io("x", (s, d))],
+        )
+        emit(
+            f"block_fwd_s{s}",
+            lambda f_, x, g: M.block_fwd(cfg, f_, x, g),
+            [_spec((pb,)), _spec((s, d)), _spec((s,), jnp.int32)],
+            [_io("flat", (pb,)), _io("x", (s, d)), _io("seg", (s,), "i32")],
+            [_io("y", (s, d))],
+        )
+        emit(
+            f"block_bwd_s{s}",
+            lambda f_, x, g, dy: M.block_bwd(cfg, f_, x, g, dy),
+            [_spec((pb,)), _spec((s, d)), _spec((s,), jnp.int32), _spec((s, d))],
+            [_io("flat", (pb,)), _io("x", (s, d)), _io("seg", (s,), "i32"), _io("dy", (s, d))],
+            [_io("dx", (s, d)), _io("dflat", (pb,))],
+        )
+        emit(
+            f"loss_head_s{s}",
+            lambda e, x, t, m: M.loss_head(cfg, e, x, t, m),
+            [_spec((pe,)), _spec((s, d)), _spec((s,), jnp.int32), _spec((s,))],
+            [_io("emb_flat", (pe,)), _io("x", (s, d)), _io("targets", (s,), "i32"), _io("mask", (s,))],
+            [_io("loss_sum", ()), _io("ntok", ()), _io("dx", (s, d)), _io("demb_flat", (pe,))],
+        )
+        emit(
+            f"embed_bwd_s{s}",
+            lambda t, dx: M.embed_bwd(cfg, t, dx),
+            [_spec((s,), jnp.int32), _spec((s, d))],
+            [_io("tokens", (s,), "i32"), _io("dx", (s, d))],
+            [_io("demb_flat", (pe,))],
+        )
+
+    emit(
+        "accum_chunk",
+        lambda a, g, w: ACC.accumulate(a, g, w, block=c),
+        [_spec((c,)), _spec((c,)), _spec((1,))],
+        [_io("acc", (c,)), _io("g", (c,)), _io("w", (1,))],
+        [_io("out", (c,))],
+    )
+    emit(
+        "adam_chunk",
+        lambda p, m, v, g, hp: ACC.adam_step(p, m, v, g, hp, block=c),
+        [_spec((c,))] * 4 + [_spec((7,))],
+        [_io("p", (c,)), _io("m", (c,)), _io("v", (c,)), _io("g", (c,)), _io("hp", (7,))],
+        [_io("p2", (c,)), _io("m2", (c,)), _io("v2", (c,))],
+    )
+
+    # Initial parameters (raw f32 little-endian).
+    rng = np.random.default_rng(seed)
+    M.init_embed(cfg, rng).tofile(os.path.join(out_dir, "init", "embed.bin"))
+    for i in range(cfg.n_layers):
+        M.init_block(cfg, rng).tofile(os.path.join(out_dir, "init", f"block_{i}.bin"))
+
+    manifest = {
+        "preset": cfg.name,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "n_layers": cfg.n_layers,
+            "max_seq": cfg.max_seq,
+            "block_params": pb,
+            "embed_params": pe,
+            "total_params": cfg.total_params,
+        },
+        "seq_buckets": list(cfg.seq_buckets),
+        "chunk": c,
+        "artifacts": artifacts,
+        "init": {
+            "embed": "init/embed.bin",
+            "blocks": [f"init/block_{i}.bin" for i in range(cfg.n_layers)],
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", action="append", default=None, choices=sorted(PRESETS), help="model preset(s); default: tiny small")
+    ap.add_argument("--out", default=None, help="artifacts root (default ../artifacts)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    presets = args.preset or ["tiny", "small"]
+    root = args.out or os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    for name in presets:
+        cfg = PRESETS[name]
+        out_dir = os.path.join(root, name)
+        print(f"[aot] exporting preset {name} ({cfg.total_params/1e6:.1f}M params) -> {out_dir}")
+        export_preset(cfg, out_dir, seed=args.seed)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

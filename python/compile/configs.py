@@ -1,0 +1,104 @@
+"""Model configurations for the AOT exporter.
+
+A config fully determines the artifact set: one HLO module per
+(function, sequence-bucket) pair plus the sequence-independent chunk ops
+(adam / scatter-accumulate). The Rust engine consumes the manifest and is
+generic over configs.
+
+Presets:
+  tiny   — CI / pytest / rust integration tests (fast under interpret).
+  small  — the end-to-end training example (~5M params, minutes on CPU).
+  base   — ~25M params, used for longer validation runs.
+  m100   — ~98M params: the "train a ~100M transformer" target; on this
+           single-core CPU testbed it is exercised for a shorter run
+           (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    seq_buckets: tuple  # ascending sequence-length buckets (static HLO shapes)
+    block_q: int = 128
+    block_k: int = 128
+    chunk: int = 65536  # element count for adam/accumulate chunk kernels
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def max_seq(self) -> int:
+        return max(self.seq_buckets)
+
+    def block_param_shapes(self) -> List[tuple]:
+        """(name, shape) for one transformer block, flat-packing order."""
+        d, f = self.d_model, self.d_ff
+        return [
+            ("ln1_g", (d,)),
+            ("ln1_b", (d,)),
+            ("wq", (d, d)),
+            ("wk", (d, d)),
+            ("wv", (d, d)),
+            ("wo", (d, d)),
+            ("ln2_g", (d,)),
+            ("ln2_b", (d,)),
+            ("w1", (d, f)),
+            ("b1", (f,)),
+            ("w2", (f, d)),
+            ("b2", (d,)),
+        ]
+
+    @property
+    def block_params(self) -> int:
+        return sum(_prod(s) for _, s in self.block_param_shapes())
+
+    @property
+    def embed_params(self) -> int:
+        """Token embedding + learned positional embedding, flat-packed."""
+        return self.vocab * self.d_model + self.max_seq * self.d_model
+
+    @property
+    def total_params(self) -> int:
+        return self.embed_params + self.n_layers * self.block_params
+
+
+def _prod(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+PRESETS = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=64, n_heads=4, d_ff=256, n_layers=2,
+        seq_buckets=(32, 64), block_q=16, block_k=16, chunk=4096,
+    ),
+    "small": ModelConfig(
+        name="small", vocab=4096, d_model=256, n_heads=8, d_ff=1024,
+        n_layers=4, seq_buckets=(64, 128), block_q=32, block_k=32,
+        chunk=65536,
+    ),
+    "base": ModelConfig(
+        name="base", vocab=8192, d_model=384, n_heads=8, d_ff=1536,
+        n_layers=6, seq_buckets=(128, 256), block_q=64, block_k=64,
+        chunk=65536,
+    ),
+    "m100": ModelConfig(
+        name="m100", vocab=16384, d_model=768, n_heads=12, d_ff=3072,
+        n_layers=12, seq_buckets=(128,), block_q=128, block_k=128,
+        chunk=65536,
+    ),
+}

@@ -1,0 +1,89 @@
+"""L1: Pallas gradient-accumulation kernel (the scatter-accumulate op).
+
+In the paper (Appendix B), a server receiving a *scatter-accumulate* push
+runs a lightweight daemon that accumulates the incoming gradient into its
+owned shard: acc <- acc + w * g. This is the daemon's compute kernel,
+exported as a fixed-size chunk so the Rust engine can apply it to shards
+of any length (last chunk zero-padded).
+
+The adam kernel is the other server-side op: the owned shard's AdamW
+update at the minibatch boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accum_kernel(acc_ref, g_ref, w_ref, out_ref):
+    out_ref[...] = acc_ref[...] + w_ref[0] * g_ref[...]
+
+
+def accumulate(acc: jax.Array, g: jax.Array, w: jax.Array, *, block: int = 65536) -> jax.Array:
+    """acc + w * g over f32[n] via a tiled Pallas kernel.
+
+    Args:
+      acc, g: f32[n] with n % block == 0 (the AOT exporter pads).
+      w: f32[1] scalar weight (the microbatch aggregation weight w_m).
+    """
+    n = acc.shape[0]
+    b = min(block, n)
+    assert n % b == 0, f"accumulate: n={n} not a multiple of block={b}"
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(acc, g, w)
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, hp_ref, p_out, m_out, v_out):
+    """AdamW on one chunk. hp = [lr, beta1, beta2, eps, wd, bc1, bc2].
+
+    bc1/bc2 are the bias corrections (1 - beta^t) precomputed host-side so
+    the kernel stays elementwise (no transcendental pow on the hot path).
+    """
+    lr, b1, b2, eps, wd = hp_ref[0], hp_ref[1], hp_ref[2], hp_ref[3], hp_ref[4]
+    bc1, bc2 = hp_ref[5], hp_ref[6]
+    g = g_ref[...]
+    m2 = b1 * m_ref[...] + (1.0 - b1) * g
+    v2 = b2 * v_ref[...] + (1.0 - b2) * (g * g)
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    p_out[...] = p_ref[...] - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p_ref[...])
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+def adam_step(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    hparams: jax.Array,
+    *,
+    block: int = 65536,
+):
+    """Tiled AdamW step over f32[n] shards; hparams f32[7], see kernel."""
+    n = p.shape[0]
+    b = min(block, n)
+    assert n % b == 0, f"adam_step: n={n} not a multiple of block={b}"
+    vec = pl.BlockSpec((b,), lambda i: (i,))
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=(n // b,),
+        in_specs=[vec, vec, vec, vec, pl.BlockSpec((7,), lambda i: (0,))],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=True,
+    )(p, m, v, g, hparams)

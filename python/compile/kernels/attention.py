@@ -1,0 +1,293 @@
+"""L1: Pallas flash-attention for packed causal sequences (fwd + bwd).
+
+This is the compute hot-spot of the paper's workload: long-sequence
+attention whose O(s^2) cost is the source of the workload imbalance that
+motivates ODC. The paper's own kernels are Triton/CUDA (warps, shared
+memory); per DESIGN.md §Hardware-Adaptation we restructure the same
+algorithm for the TPU model Pallas exposes:
+
+  * the grid + BlockSpec describe the HBM->VMEM schedule (what CUDA does
+    with threadblocks): queries are tiled into `block_q`-row tiles that
+    stay resident, K/V stream through in `block_k` chunks;
+  * tiles are MXU-friendly (multiples of 128 at production sizes) so the
+    inner `q @ k^T` / `p @ v` products map onto the 128x128 systolic
+    array in bf16/f32;
+  * the online-softmax running (max, denom, acc) state is the VMEM
+    scratch (here: fori_loop carry, which interpret mode keeps on-chip).
+
+Kernels MUST run with interpret=True in this environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are verified against kernels/ref.py by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = ref.NEG_INF
+
+
+def _pick_block(s: int, want: int) -> int:
+    """Largest divisor of s that is <= want (block sizes must tile S)."""
+    b = min(want, s)
+    while s % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, seg_ref, o_ref, lse_ref, *, block_k: int, scale: float):
+    """One (head, q-tile) program of the flash-attention forward.
+
+    Streams K/V in `block_k` chunks, maintaining the online-softmax state
+    (m, l, acc). Causality lets us stop streaming at the last K block that
+    overlaps the query tile.
+    """
+    iq = pl.program_id(1)
+    block_q = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    s_total = k_ref.shape[1]
+
+    q = q_ref[0, :, :] * scale  # [BQ, Dh]
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)  # [BQ]
+    q_seg = pl.load(seg_ref, (pl.dslice(iq * block_q, block_q),))
+
+    # Number of K blocks that can causally interact with this Q tile.
+    n_kblocks = ((iq + 1) * block_q + block_k - 1) // block_k
+    n_kblocks = jnp.minimum(n_kblocks, s_total // block_k)
+
+    def body(ik, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        k_seg = pl.load(seg_ref, (pl.dslice(ik * block_k, block_k),))
+
+        s = jnp.dot(q, k_blk.T)  # [BQ, BK] — MXU product
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_seg[None, :] == q_seg[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+
+    o_ref[0, :, :] = acc_f / l_f[:, None]
+    lse_ref[0, :] = m_f + jnp.log(l_f)
+
+
+def flash_attention_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    segment_ids: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Pallas forward: (out f32[H,S,Dh], lse f32[H,S])."""
+    h, s, dh = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    scale = 1.0 / float(dh) ** 0.5
+
+    grid = (h, s // bq)
+    kernel = functools.partial(_fwd_kernel, block_k=bk, scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((s,), lambda ih, iq: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, bq), lambda ih, iq: (ih, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, s), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(q, k, v, segment_ids)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward (flash-attention two-kernel backward: dq; then dk/dv)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, seg_ref, do_ref, lse_ref, delta_ref, dq_ref, *, block_k: int, scale: float):
+    """dq for one (head, q-tile): dq = sum_k ds @ k, streaming K blocks."""
+    iq = pl.program_id(1)
+    block_q = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    s_total = k_ref.shape[1]
+
+    q = q_ref[0, :, :]
+    do = do_ref[0, :, :]
+    lse = lse_ref[0, :]
+    delta = delta_ref[0, :]
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    q_seg = pl.load(seg_ref, (pl.dslice(iq * block_q, block_q),))
+
+    n_kblocks = ((iq + 1) * block_q + block_k - 1) // block_k
+    n_kblocks = jnp.minimum(n_kblocks, s_total // block_k)
+
+    def body(ik, dq):
+        k_blk = pl.load(k_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(ik * block_k, block_k), slice(None)))
+        k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+        k_seg = pl.load(seg_ref, (pl.dslice(ik * block_k, block_k),))
+
+        s = jnp.dot(q, k_blk.T) * scale
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_seg[None, :] == q_seg[:, None])
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jnp.dot(do, v_blk.T)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k_blk)
+
+    dq0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    dq_ref[0, :, :] = jax.lax.fori_loop(0, n_kblocks, body, dq0)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, seg_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, block_q: int, scale: float):
+    """dk/dv for one (head, k-tile): streams causally-later Q blocks."""
+    ik = pl.program_id(1)
+    block_k = k_ref.shape[1]
+    dh = k_ref.shape[2]
+    s_total = q_ref.shape[1]
+
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    k_seg = pl.load(seg_ref, (pl.dslice(ik * block_k, block_k),))
+
+    # Causality: only Q blocks whose last row is >= this K tile's first row.
+    iq_start = (ik * block_k) // block_q
+    n_qblocks = s_total // block_q
+
+    def body(iq, carry):
+        dk, dv = carry
+        q_blk = pl.load(q_ref, (0, pl.dslice(iq * block_q, block_q), slice(None)))
+        do_blk = pl.load(do_ref, (0, pl.dslice(iq * block_q, block_q), slice(None)))
+        lse_blk = pl.load(lse_ref, (0, pl.dslice(iq * block_q, block_q)))
+        delta_blk = pl.load(delta_ref, (0, pl.dslice(iq * block_q, block_q)))
+        q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+        q_seg = pl.load(seg_ref, (pl.dslice(iq * block_q, block_q),))
+
+        s = jnp.dot(q_blk, k.T) * scale  # [BQ, BK]
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_seg[None, :] == q_seg[:, None])
+        p = jnp.where(mask, jnp.exp(s - lse_blk[:, None]), 0.0)
+        dv_new = dv + jnp.dot(p.T, do_blk)
+        dp = jnp.dot(do_blk, v.T)
+        ds = p * (dp - delta_blk[:, None]) * scale
+        dk_new = dk + jnp.dot(ds.T, q_blk)
+        return dk_new, dv_new
+
+    dk0 = jnp.zeros((block_k, dh), dtype=jnp.float32)
+    dv0 = jnp.zeros((block_k, dh), dtype=jnp.float32)
+    dk_f, dv_f = jax.lax.fori_loop(iq_start, n_qblocks, body, (dk0, dv0))
+    dk_ref[0, :, :] = dk_f
+    dv_ref[0, :, :] = dv_f
+
+
+def flash_attention_bwd(
+    q, k, v, segment_ids, out, lse, dout, *, block_q: int = 128, block_k: int = 128
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pallas backward from saved (out, lse): returns (dq, dk, dv)."""
+    h, s, dh = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    scale = 1.0 / float(dh) ** 0.5
+    delta = jnp.sum(dout * out, axis=-1)  # [H, S]
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_k=bk, scale=scale),
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((s,), lambda ih, iq: (0,)),
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, bq), lambda ih, iq: (ih, iq)),
+            pl.BlockSpec((1, bq), lambda ih, iq: (ih, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, segment_ids, dout, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, block_q=bq, scale=scale),
+        grid=(h, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda ih, ik: (ih, 0, 0)),
+            pl.BlockSpec((1, bk, dh), lambda ih, ik: (ih, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda ih, ik: (ih, ik, 0)),
+            pl.BlockSpec((s,), lambda ih, ik: (0,)),
+            pl.BlockSpec((1, s, dh), lambda ih, ik: (ih, 0, 0)),
+            pl.BlockSpec((1, s), lambda ih, ik: (ih, 0)),
+            pl.BlockSpec((1, s), lambda ih, ik: (ih, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, dh), lambda ih, ik: (ih, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda ih, ik: (ih, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, s, dh), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, segment_ids, dout, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper used by the L2 model
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def flash_attention(q, k, v, segment_ids, block_q: int = 128, block_k: int = 128):
+    """Differentiable packed-causal flash attention (Pallas fwd AND bwd)."""
+    out, _ = flash_attention_fwd(q, k, v, segment_ids, block_q=block_q, block_k=block_k)
+    return out
+
+
+def _vjp_fwd(q, k, v, segment_ids, block_q, block_k):
+    out, lse = flash_attention_fwd(q, k, v, segment_ids, block_q=block_q, block_k=block_k)
+    return out, (q, k, v, segment_ids, out, lse)
+
+
+def _vjp_bwd(block_q, block_k, saved, dout):
+    q, k, v, segment_ids, out, lse = saved
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, segment_ids, out, lse, dout, block_q=block_q, block_k=block_k
+    )
+    return dq, dk, dv, None
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

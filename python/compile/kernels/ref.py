@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. pytest + hypothesis sweep shapes/dtypes and
+`assert_allclose` kernel-vs-ref; the JAX model (L2) can also be built
+against these references to cross-check end-to-end numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def attention_mask(segment_ids: jax.Array) -> jax.Array:
+    """Causal block-diagonal mask for packed sequences.
+
+    Token i may attend to token j iff j <= i (causal) and both belong to
+    the same packed segment (no cross-contamination; Krell et al. 2021).
+    The diagonal is always allowed, so rows are never fully masked.
+
+    Args:
+      segment_ids: int32[S]; padding shares segment id 0.
+
+    Returns:
+      bool[S, S], True where attention is allowed.
+    """
+    i = jnp.arange(segment_ids.shape[0])[:, None]
+    j = jnp.arange(segment_ids.shape[0])[None, :]
+    same_seg = segment_ids[:, None] == segment_ids[None, :]
+    return (j <= i) & same_seg
+
+
+def attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, segment_ids: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Reference multi-head attention forward.
+
+    Args:
+      q, k, v: f32[H, S, Dh]
+      segment_ids: int32[S]
+
+    Returns:
+      (out f32[H, S, Dh], lse f32[H, S]) — lse is the log-sum-exp of the
+      scaled masked scores, saved for the flash backward pass.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("hsd,htd->hst", q, k) * scale
+    mask = attention_mask(segment_ids)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("hst,htd->hsd", e / denom, v)
+    lse = (m + jnp.log(denom))[..., 0]
+    return out, lse
+
+
+def attention(q, k, v, segment_ids):
+    """Forward only (drops lse); differentiable by jax autodiff."""
+    return attention_fwd(q, k, v, segment_ids)[0]
+
+
+def attention_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    segment_ids: jax.Array,
+    out: jax.Array,
+    lse: jax.Array,
+    dout: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference flash-style backward from saved (out, lse).
+
+    Matches the math the Pallas backward kernels implement:
+      p     = exp(scores - lse)
+      dv    = p^T @ dout
+      dp    = dout @ v^T
+      delta = rowsum(dout * out)
+      ds    = p * (dp - delta) * scale
+      dq    = ds @ k ;  dk = ds^T @ q
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("hsd,htd->hst", q, k) * scale
+    mask = attention_mask(segment_ids)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jnp.exp(scores - lse[..., None])
+    p = jnp.where(mask, p, 0.0)
+    dv = jnp.einsum("hst,hsd->htd", p, dout)
+    dp = jnp.einsum("hsd,htd->hst", dout, v)
+    delta = jnp.sum(dout * out, axis=-1, keepdims=True)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("hst,htd->hsd", ds, k)
+    dk = jnp.einsum("hst,hsd->htd", ds, q)
+    return dq, dk, dv
+
+
+def accumulate(acc: jax.Array, g: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference for the scatter-accumulate daemon op: acc + w * g."""
+    return acc + w * g
+
+
+def adam_step(p, m, v, g, lr, beta1, beta2, eps, wd, t):
+    """Reference AdamW update (decoupled weight decay), step count t>=1."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * (g * g)
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2

@@ -1,0 +1,193 @@
+"""L2: the JAX transformer — per-layer fwd/bwd units the Rust FSDP engine drives.
+
+FSDP's communication structure is per-layer: all-gather layer params before
+forward, all-gather again + reduce-scatter grads in backward. To let the
+Rust coordinator own those boundaries (and swap Collective <-> ODC there),
+the model is exported as *per-layer* HLO modules operating on FLAT f32
+parameter vectors (the FSDP flat-parameter representation the comm layer
+shards):
+
+  embed_fwd(emb_flat, tokens)            -> x                  [S, D]
+  block_fwd(flat, x, seg)                -> y                  [S, D]
+  block_bwd(flat, x, seg, dy)            -> (dx, dflat)        (recompute)
+  loss_head(emb_flat, x, targets, mask)  -> (loss_sum, ntok, dx, demb_flat)
+  embed_bwd(tokens, dx)                  -> demb_flat          (scatter-add)
+
+block_bwd recomputes the forward from the saved layer *input* (per-layer
+activation checkpointing), so the engine stores one [S, D] tensor per
+layer per in-flight microbatch — the standard FSDP + checkpoint setup.
+Attention inside block_fwd is the L1 Pallas kernel (custom_vjp, so
+block_bwd's autodiff uses the Pallas backward kernels too).
+
+The LM head is tied to the token embedding. loss_head returns the SUM of
+masked token cross-entropies plus the token count; the engine aggregates
+microbatch gradients with weights w_m = 1 (sum) and divides by the global
+token count at the optimizer step — the paper's §2.1 aggregation policy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.attention import flash_attention
+
+LN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter packing
+# ---------------------------------------------------------------------------
+
+
+def unflatten_block(cfg: ModelConfig, flat: jax.Array) -> dict:
+    """Split a flat f32[P_block] vector into the block's named tensors."""
+    out = {}
+    off = 0
+    for name, shape in cfg.block_param_shapes():
+        n = int(np.prod(shape))
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == cfg.block_params
+    return out
+
+
+def split_embed(cfg: ModelConfig, emb_flat: jax.Array):
+    """emb_flat -> (token_emb [V, D], pos_emb [Smax, D])."""
+    v, d, smax = cfg.vocab, cfg.d_model, cfg.max_seq
+    tok = emb_flat[: v * d].reshape(v, d)
+    pos = emb_flat[v * d :].reshape(smax, d)
+    return tok, pos
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def embed_fwd(cfg: ModelConfig, emb_flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Token + positional embedding lookup; tokens int32[S] -> f32[S, D]."""
+    tok, pos = split_embed(cfg, emb_flat)
+    s = tokens.shape[0]
+    return tok[tokens] + pos[:s]
+
+
+def embed_bwd(cfg: ModelConfig, tokens: jax.Array, dx: jax.Array) -> jax.Array:
+    """Gradient of embed_fwd w.r.t. emb_flat (scatter-add + pos grad)."""
+    v, d, smax = cfg.vocab, cfg.d_model, cfg.max_seq
+    s = tokens.shape[0]
+    dtok = jnp.zeros((v, d), jnp.float32).at[tokens].add(dx)
+    dpos = jnp.zeros((smax, d), jnp.float32).at[:s].add(dx)
+    return jnp.concatenate([dtok.reshape(-1), dpos.reshape(-1)])
+
+
+def block_fwd(cfg: ModelConfig, flat: jax.Array, x: jax.Array, seg: jax.Array) -> jax.Array:
+    """Pre-LN transformer block: attn(Pallas) + MLP, both residual."""
+    p = unflatten_block(cfg, flat)
+    s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    xn = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = (xn @ p["wq"]).reshape(s, h, dh).transpose(1, 0, 2)
+    k = (xn @ p["wk"]).reshape(s, h, dh).transpose(1, 0, 2)
+    v = (xn @ p["wv"]).reshape(s, h, dh).transpose(1, 0, 2)
+    attn = flash_attention(q, k, v, seg, cfg.block_q, cfg.block_k)
+    attn = attn.transpose(1, 0, 2).reshape(s, d)
+    x = x + attn @ p["wo"]
+
+    xn = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    mlp = jax.nn.gelu(xn @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return x + mlp
+
+
+def block_bwd(cfg: ModelConfig, flat: jax.Array, x: jax.Array, seg: jax.Array, dy: jax.Array):
+    """VJP of block_fwd from the saved layer input (recompute inside)."""
+    y, vjp = jax.vjp(lambda f, xx: block_fwd(cfg, f, xx, seg), flat, x)
+    del y
+    dflat, dx = vjp(dy)
+    return dx, dflat
+
+
+def loss_head(cfg: ModelConfig, emb_flat: jax.Array, x: jax.Array, targets: jax.Array, mask: jax.Array):
+    """Tied-embedding LM head + masked cross-entropy (sum, not mean).
+
+    Returns (loss_sum f32[], ntok f32[], dx f32[S,D], demb_flat).
+    """
+
+    def f(emb_flat_, x_):
+        tok, _ = split_embed(cfg, emb_flat_)
+        logits = x_ @ tok.T  # [S, V]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+        ce = lse - picked
+        return jnp.sum(ce * mask)
+
+    loss_sum, vjp = jax.vjp(f, emb_flat, x)
+    demb, dx = vjp(jnp.float32(1.0))
+    ntok = jnp.sum(mask)
+    return loss_sum, ntok, dx, demb
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (python-side tests + convergence cross-check)
+# ---------------------------------------------------------------------------
+
+
+def model_loss(cfg: ModelConfig, emb_flat, block_flats, tokens, seg, targets, mask):
+    """Full forward pass composed from the per-layer units. Differentiable."""
+    x = embed_fwd(cfg, emb_flat, tokens)
+    for flat in block_flats:
+        x = block_fwd(cfg, flat, x, seg)
+    loss_sum, ntok, _, _ = loss_head(cfg, emb_flat, x, targets, mask)
+    return loss_sum, ntok
+
+
+def model_grads(cfg: ModelConfig, emb_flat, block_flats, tokens, seg, targets, mask):
+    """Autodiff gradients of the summed loss — the engine-equivalence oracle."""
+
+    def f(emb_flat_, blocks_):
+        x = embed_fwd(cfg, emb_flat_, tokens)
+        for flat in blocks_:
+            x = block_fwd(cfg, flat, x, seg)
+        loss_sum, _, _, _ = loss_head(cfg, emb_flat_, x, targets, mask)
+        return loss_sum
+
+    return jax.grad(f, argnums=(0, 1))(emb_flat, list(block_flats))
+
+
+# ---------------------------------------------------------------------------
+# Initialization (written to artifacts/<cfg>/init/*.bin at export time)
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ModelConfig, rng: np.random.Generator) -> np.ndarray:
+    d = cfg.d_model
+    tok = rng.standard_normal((cfg.vocab, d), dtype=np.float32) * 0.02
+    pos = rng.standard_normal((cfg.max_seq, d), dtype=np.float32) * 0.01
+    return np.concatenate([tok.reshape(-1), pos.reshape(-1)])
+
+
+def init_block(cfg: ModelConfig, rng: np.random.Generator) -> np.ndarray:
+    """GPT-2-style init, flat-packed in block_param_shapes() order."""
+    d = cfg.d_model
+    parts = []
+    for name, shape in cfg.block_param_shapes():
+        if name in ("ln1_g", "ln2_g"):
+            parts.append(np.ones(shape, np.float32))
+        elif name in ("ln1_b", "ln2_b", "b1", "b2"):
+            parts.append(np.zeros(shape, np.float32))
+        elif name in ("wo", "w2"):
+            # residual-path projections get the depth-scaled init
+            scale = np.float32(0.02 / np.sqrt(2.0 * cfg.n_layers))
+            parts.append(rng.standard_normal(shape, dtype=np.float32) * scale)
+        else:
+            parts.append(rng.standard_normal(shape, dtype=np.float32) * 0.02)
+    return np.concatenate([p.reshape(-1) for p in parts])

@@ -1,0 +1,76 @@
+"""AOT exporter: manifest consistency + HLO text sanity for the tiny preset."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_model_sizes(manifest):
+    from compile.configs import PRESETS
+
+    cfg = PRESETS["tiny"]
+    m = manifest["model"]
+    assert m["block_params"] == cfg.block_params
+    assert m["embed_params"] == cfg.embed_params
+    assert m["total_params"] == cfg.total_params
+    assert manifest["seq_buckets"] == list(cfg.seq_buckets)
+
+
+def test_every_artifact_file_exists_and_is_hlo(manifest):
+    for key, art in manifest["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), key
+        with open(path) as f:
+            head = f.read(400)
+        assert "HloModule" in head, f"{key} does not look like HLO text"
+
+
+def test_expected_artifact_set(manifest):
+    keys = set(manifest["artifacts"])
+    for s in manifest["seq_buckets"]:
+        for fn in ["embed_fwd", "block_fwd", "block_bwd", "loss_head", "embed_bwd"]:
+            assert f"{fn}_s{s}" in keys
+    assert "adam_chunk" in keys and "accum_chunk" in keys
+
+
+def test_io_shapes_consistent(manifest):
+    m = manifest["model"]
+    d = m["d_model"]
+    for s in manifest["seq_buckets"]:
+        bf = manifest["artifacts"][f"block_fwd_s{s}"]
+        assert bf["inputs"][0]["shape"] == [m["block_params"]]
+        assert bf["inputs"][1]["shape"] == [s, d]
+        assert bf["outputs"][0]["shape"] == [s, d]
+        bb = manifest["artifacts"][f"block_bwd_s{s}"]
+        assert bb["outputs"][1]["shape"] == [m["block_params"]]
+        lh = manifest["artifacts"][f"loss_head_s{s}"]
+        assert lh["outputs"][0]["shape"] == [] and lh["outputs"][1]["shape"] == []
+
+
+def test_init_files(manifest):
+    emb = os.path.join(ART, manifest["init"]["embed"])
+    assert os.path.getsize(emb) == 4 * manifest["model"]["embed_params"]
+    for b in manifest["init"]["blocks"]:
+        assert os.path.getsize(os.path.join(ART, b)) == 4 * manifest["model"]["block_params"]
+
+
+def test_no_custom_calls(manifest):
+    """CPU PJRT cannot execute Mosaic custom-calls; interpret=True must
+    have lowered everything to plain HLO."""
+    for art in manifest["artifacts"].values():
+        with open(os.path.join(ART, art["file"])) as f:
+            assert "custom-call" not in f.read()

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas flash-attention vs the pure-jnp oracle.
+
+hypothesis sweeps shapes (heads, seq, head-dim, block sizes) and segment
+layouts; every case asserts allclose against kernels/ref.py. This is the
+CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mk_qkv(rng, h, s, dh):
+    return [jnp.asarray(rng.standard_normal((h, s, dh), dtype=np.float32)) for _ in range(3)]
+
+
+def mk_segments(rng, s, max_segs):
+    """Random packed layout: contiguous segments 1..n, trailing pad seg 0."""
+    n_segs = int(rng.integers(1, max_segs + 1))
+    cuts = np.sort(rng.choice(np.arange(1, s), size=n_segs - 1, replace=False)) if n_segs > 1 else np.array([], dtype=int)
+    seg = np.zeros(s, dtype=np.int32)
+    bounds = [0, *cuts.tolist(), s]
+    for i in range(n_segs):
+        seg[bounds[i] : bounds[i + 1]] = i + 1
+    # random chance of trailing padding
+    if rng.random() < 0.5 and s >= 8:
+        pad = int(rng.integers(1, s // 4 + 1))
+        seg[s - pad :] = 0
+    return jnp.asarray(seg)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 32, 48, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 64]),
+    bk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwd_matches_ref(h, s, dh, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = mk_segments(rng, s, 4)
+    out, lse = A.flash_attention_fwd(q, k, v, seg, block_q=bq, block_k=bk)
+    ro, rl = R.attention_fwd(q, k, v, seg)
+    np.testing.assert_allclose(out, ro, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(lse, rl, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    h=st.sampled_from([1, 2]),
+    s=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([8, 16]),
+    bq=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bwd_matches_ref(h, s, dh, bq, bk, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = mk_segments(rng, s, 3)
+    do = jnp.asarray(rng.standard_normal((h, s, dh), dtype=np.float32))
+    out, lse = A.flash_attention_fwd(q, k, v, seg, block_q=bq, block_k=bk)
+    dq, dk, dv = A.flash_attention_bwd(q, k, v, seg, out, lse, do, block_q=bq, block_k=bk)
+    ro, rl = R.attention_fwd(q, k, v, seg)
+    rdq, rdk, rdv = R.attention_bwd(q, k, v, seg, ro, rl, do)
+    np.testing.assert_allclose(dq, rdq, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(dk, rdk, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(dv, rdv, rtol=3e-4, atol=3e-4)
+
+
+def test_custom_vjp_matches_autodiff_of_ref():
+    rng = np.random.default_rng(7)
+    h, s, dh = 2, 32, 16
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = mk_segments(rng, s, 3)
+
+    f = lambda q_, k_, v_: jnp.sum(A.flash_attention(q_, k_, v_, seg, 16, 16) ** 2)
+    g = lambda q_, k_, v_: jnp.sum(R.attention(q_, k_, v_, seg) ** 2)
+    ga = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gb = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+def test_causality_no_future_leak():
+    """Changing token j must not affect outputs at positions i < j."""
+    rng = np.random.default_rng(3)
+    h, s, dh = 2, 32, 8
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = jnp.ones(s, jnp.int32)
+    out1, _ = A.flash_attention_fwd(q, k, v, seg, block_q=8, block_k=8)
+    j = 20
+    k2 = k.at[:, j:, :].set(99.0)
+    v2 = v.at[:, j:, :].set(-99.0)
+    out2, _ = A.flash_attention_fwd(q, k2, v2, seg, block_q=8, block_k=8)
+    np.testing.assert_allclose(out1[:, :j], out2[:, :j], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, j:], out2[:, j:])
+
+
+def test_segment_isolation_no_cross_contamination():
+    """Per-segment outputs equal attention run on each segment alone."""
+    rng = np.random.default_rng(11)
+    h, s, dh = 2, 32, 8
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = jnp.asarray(np.array([1] * 12 + [2] * 20, np.int32))
+    out, _ = A.flash_attention_fwd(q, k, v, seg, block_q=8, block_k=8)
+    for lo, hi, sid in [(0, 12, 1), (12, 32, 2)]:
+        sub_out = R.attention(q[:, lo:hi], k[:, lo:hi], v[:, lo:hi], jnp.full(hi - lo, sid, jnp.int32))
+        np.testing.assert_allclose(out[:, lo:hi], sub_out, rtol=2e-5, atol=2e-5)
+
+
+def test_all_pad_rows_are_finite():
+    rng = np.random.default_rng(5)
+    h, s, dh = 1, 16, 8
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = jnp.zeros(s, jnp.int32)  # everything is padding
+    out, lse = A.flash_attention_fwd(q, k, v, seg, block_q=8, block_k=8)
+    assert np.all(np.isfinite(out)) and np.all(np.isfinite(lse))
+
+
+def test_block_size_invariance():
+    """Result must not depend on the chosen tiling."""
+    rng = np.random.default_rng(13)
+    h, s, dh = 2, 64, 16
+    q, k, v = mk_qkv(rng, h, s, dh)
+    seg = mk_segments(rng, s, 4)
+    ref_out, _ = A.flash_attention_fwd(q, k, v, seg, block_q=64, block_k=64)
+    for bq, bk in [(8, 8), (16, 32), (32, 16), (64, 8)]:
+        out, _ = A.flash_attention_fwd(q, k, v, seg, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, ref_out, rtol=2e-5, atol=2e-5)
+
+
+def test_pick_block_divides():
+    for s in [16, 48, 96, 128, 130]:
+        for want in [8, 16, 128]:
+            b = A._pick_block(s, want)
+            assert s % b == 0 and 1 <= b <= min(want, s)

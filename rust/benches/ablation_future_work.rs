@@ -1,0 +1,103 @@
+//! Ablations for the paper's §6.2 future-work directions + the design
+//! choices DESIGN.md calls out.
+//!
+//! 1. Hierarchical gather (node-leader caching): inter-node ODC traffic
+//!    /G — how much of the flat-p2p penalty does it recover?
+//! 2. Heavy-micro alignment in LB-Micro (sorting microbatches desc so
+//!    heavy ones share a barrier index) — on vs off.
+
+use odc::balance::cost::CostModel;
+use odc::balance::packers::{plan_run, Plan};
+use odc::comm::topology::Topology;
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use odc::data::distributions::sample_lengths;
+use odc::report::Table;
+use odc::sim::run::{simulate, SimConfig};
+use odc::sim::timeline::time_minibatch;
+use odc::util::rng::Rng;
+
+fn main() {
+    hierarchical_gather();
+    alignment_ablation();
+}
+
+/// §6.2 hierarchical gather at multi-node scale, short-context workload
+/// (where comm is exposed — same setting as Fig 12).
+fn hierarchical_gather() {
+    println!("== Ablation: §6.2 hierarchical gather (truncated LongAlign 8K, 1.5B) ==\n");
+    let mut t = Table::new(&["devices", "collective", "ODC flat p2p", "ODC hierarchical", "hier/flat"]);
+    for devices in [16usize, 32] {
+        let mk = |scheme, hier| {
+            let exp = ExperimentConfig {
+                model: PaperModel::M1_5B,
+                dataset: Dataset::LongAlign,
+                scheme,
+                balancer: Balancer::LbMicro,
+                sharding: Sharding::Full,
+                minibs: 4,
+                devices,
+                devices_per_node: 8,
+                packing_ratio: 1.0,
+                max_len: 8_192,
+                steps: 12,
+                seed: 5,
+            };
+            let mut cfg = SimConfig::new(exp);
+            cfg.hierarchical_gather = hier;
+            simulate(&cfg).samples_per_sec_per_device
+        };
+        let col = mk(CommScheme::Collective, false);
+        let flat = mk(CommScheme::Odc, false);
+        let hier = mk(CommScheme::Odc, true);
+        t.row(vec![
+            devices.to_string(),
+            format!("{col:.3}"),
+            format!("{flat:.3}"),
+            format!("{hier:.3}"),
+            format!("{:.2}x", hier / flat),
+        ]);
+    }
+    println!("{}", t.markdown());
+}
+
+/// DESIGN.md design choice: LB-Micro sorts each device's microbatches by
+/// cost desc so heavy microbatches align on the same barrier index.
+/// Compare the collective wall time with aligned vs shuffled micro order.
+fn alignment_ablation() {
+    println!("== Ablation: heavy-microbatch alignment under collective barriers ==\n");
+    let cost = CostModel::for_model(PaperModel::M1_5B);
+    let topo = Topology::paper(8, 8);
+    let mut rng = Rng::new(9);
+    let lens = sample_lengths(Dataset::LongAlign, None, 8 * 8 * 16, &mut rng);
+    let mut plan_rng = Rng::new(10);
+    let plans = plan_run(Balancer::LbMicro, &lens, 8, 8, 65_536, &cost, &mut plan_rng);
+
+    let wall = |ps: &[Plan]| -> f64 {
+        ps.iter()
+            .map(|p| {
+                time_minibatch(p, &lens, PaperModel::M1_5B, &cost, CommScheme::Collective, Sharding::Full, &topo).wall
+            })
+            .sum()
+    };
+    let aligned = wall(&plans);
+
+    // shuffle each device's microbatch order (de-align)
+    let mut shuf_rng = Rng::new(11);
+    let shuffled: Vec<Plan> = plans
+        .iter()
+        .map(|p| {
+            let mut q = p.clone();
+            for dev in q.micro.iter_mut() {
+                shuf_rng.shuffle(dev);
+            }
+            q
+        })
+        .collect();
+    let dealigned = wall(&shuffled);
+
+    let mut t = Table::new(&["micro order", "total wall (s)", "vs aligned"]);
+    t.row(vec!["aligned (sorted desc)".into(), format!("{aligned:.2}"), "1.00x".into()]);
+    t.row(vec!["shuffled".into(), format!("{dealigned:.2}"), format!("{:.2}x", dealigned / aligned)]);
+    println!("{}", t.markdown());
+    println!("(ODC is invariant to microbatch order — only the barrier scheme cares.)");
+}

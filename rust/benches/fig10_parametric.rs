@@ -1,0 +1,20 @@
+//! Figure 10: parametric study — acceleration ratio of ODC vs Collective
+//! (both LB-Micro), varying one factor at a time from the golden setting
+//! (Table 1: 1.5B, LongAlign 64K, minibs 4, 8 devices, packing ratio 1).
+
+use odc::report::Table;
+use odc::sim::parametric::{sweep, Factor};
+
+fn main() {
+    let steps = if std::env::var("ODC_BENCH_FULL").is_ok() { 24 } else { 10 };
+    println!("== Figure 10: ODC/Collective acceleration ratio (golden setting sweeps) ==\n");
+    for factor in [Factor::MinibatchSize, Factor::MaxLength, Factor::PackingRatio, Factor::Devices] {
+        let grid = factor.default_grid();
+        let pts = sweep(factor, &grid, steps, 11);
+        let mut t = Table::new(&[factor.label(), "acceleration"]);
+        for p in &pts {
+            t.row(vec![format!("{}", p.x), format!("{:.3}x", p.ratio)]);
+        }
+        println!("{}", t.markdown());
+    }
+}

@@ -1,0 +1,55 @@
+//! Figure 11 + Table 2: communication-primitive bandwidth.
+//!
+//! Intra-node: measured on the REAL shared-memory backends (this testbed
+//! is one "node"); devices are threads, so absolute numbers reflect host
+//! memcpy bandwidth, but the comparison ODC-vs-collective is live.
+//! Inter-node: reported from the Appendix D analytic model (Table 2
+//! volumes over the paper's NVSwitch/RoCE bandwidths).
+
+use odc::comm::primbench::{bench_primitive, Primitive};
+use odc::comm::topology::Topology;
+use odc::comm::volume;
+use odc::report::Table;
+
+fn main() {
+    let full = std::env::var("ODC_BENCH_FULL").is_ok();
+    let elems: usize = if full { 1 << 22 } else { 1 << 18 }; // f32 buffer
+    let iters = if full { 20 } else { 5 };
+
+    println!("== Fig 11 (intra-node, measured): primitive completion bandwidth ==");
+    println!("   buffer = {} MiB, {} iters\n", elems * 4 >> 20, iters);
+    let mut t = Table::new(&["primitive", "devices=2", "4", "8"]);
+    for prim in [Primitive::AllGather, Primitive::Gather, Primitive::ReduceScatter, Primitive::ScatterAccumulate] {
+        let mut cells = vec![prim.label().to_string()];
+        for world in [2usize, 4, 8] {
+            let r = bench_primitive(prim, world, elems, iters);
+            cells.push(format!("{:.2} GB/s", r.gbps));
+        }
+        t.row(cells);
+    }
+    println!("{}", t.markdown());
+
+    println!("== Fig 11 (inter-node, analytic — Table 2 volumes / paper bandwidths) ==\n");
+    let layer_bytes = 64.0 * 1e6; // 64 MB layer
+    let mut t2 = Table::new(&["devices", "collective ring (ms)", "ODC p2p (ms)", "ODC/collective"]);
+    for d in [8usize, 16, 32, 64] {
+        let topo = Topology::paper(d, 8);
+        let c = volume::layer_op_time(false, layer_bytes, &topo) * 1e3;
+        let o = volume::layer_op_time(true, layer_bytes, &topo) * 1e3;
+        t2.row(vec![format!("{d}"), format!("{c:.3}"), format!("{o:.3}"), format!("{:.2}x", o / c)]);
+    }
+    println!("{}", t2.markdown());
+
+    println!("== Table 2: per-client volume split (K = per-device shard bytes) ==\n");
+    let k = 1.0;
+    let mut t3 = Table::new(&["method", "intra-node (xK)", "inter-node (xK)", "total (xK)"]);
+    for (name, v) in [
+        ("Collective all-gather (ring)", volume::collective_ring(32, 8, k)),
+        ("ODC gather", volume::odc_p2p(32, 8, k)),
+        ("Collective reduce-scatter (ring)", volume::collective_ring(32, 8, k)),
+        ("ODC scatter-accumulate", volume::odc_p2p(32, 8, k)),
+    ] {
+        t3.row(vec![name.to_string(), format!("{:.2}", v.intra), format!("{:.2}", v.inter), format!("{:.2}", v.total())]);
+    }
+    println!("(D=32, G=8)\n{}", t3.markdown());
+}

@@ -1,0 +1,37 @@
+//! Figure 13: per-device memory consumption, hybrid vs full sharding.
+
+use odc::config::PaperModel;
+use odc::engine::memory::{full_sharding, hybrid_sharding, MemoryInputs};
+use odc::report::Table;
+
+fn main() {
+    println!("== Fig 13: per-device memory (GiB), full vs hybrid sharding ==\n");
+    let mut t = Table::new(&["model", "devices", "full (GiB)", "hybrid (GiB)", "hybrid/full"]);
+    for (model, devices) in [
+        (PaperModel::M1_5B, 8),
+        (PaperModel::M7B, 8),
+        (PaperModel::M7B, 32),
+        (PaperModel::M14B, 16),
+        (PaperModel::M32B, 32),
+    ] {
+        let (layers, hidden, params) = model.shape();
+        let m = MemoryInputs {
+            params,
+            devices,
+            devices_per_node: 8,
+            hidden,
+            layers,
+            micro_tokens: 8_192, // the Fig 12/13 truncated-LongAlign setting
+        };
+        let f = full_sharding(&m).gib();
+        let h = hybrid_sharding(&m).gib();
+        t.row(vec![
+            model.to_string(),
+            devices.to_string(),
+            format!("{f:.1}"),
+            format!("{h:.1}"),
+            format!("{:.2}x", h / f),
+        ]);
+    }
+    println!("{}", t.markdown());
+}

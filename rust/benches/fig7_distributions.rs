@@ -1,0 +1,41 @@
+//! Figure 7: sequence-length distributions of the evaluation datasets.
+//! Prints summary percentiles + an ASCII log-bucket histogram per
+//! dataset (the synthetic fits behind every simulated experiment).
+
+use odc::config::Dataset;
+use odc::data::distributions::{sample_lengths, summarize};
+use odc::report::{ascii_hist, Table};
+use odc::util::rng::Rng;
+
+fn main() {
+    let n = 50_000;
+    println!("== Figure 7: sequence length distributions (n={n} draws each) ==\n");
+    let mut t = Table::new(&["dataset", "p50", "p90", "p99", "max", "mean"]);
+    for ds in [Dataset::LongAlign, Dataset::SweSmith, Dataset::Aime] {
+        let mut rng = Rng::new(7);
+        let lens = sample_lengths(ds, None, n, &mut rng);
+        let (p50, p90, p99, max, mean) = summarize(&lens);
+        t.row(vec![
+            ds.to_string(),
+            format!("{p50:.0}"),
+            format!("{p90:.0}"),
+            format!("{p99:.0}"),
+            format!("{max}"),
+            format!("{mean:.0}"),
+        ]);
+    }
+    println!("{}", t.markdown());
+
+    for ds in [Dataset::LongAlign, Dataset::SweSmith, Dataset::Aime] {
+        let mut rng = Rng::new(7);
+        let lens = sample_lengths(ds, None, n, &mut rng);
+        // log2 buckets from 256 to 64K
+        let mut buckets = vec![0usize; 9];
+        for &l in &lens {
+            let b = ((l as f64 / 256.0).log2().floor() as i64).clamp(0, 8) as usize;
+            buckets[b] += 1;
+        }
+        println!("{ds} (tokens, log2 buckets from 256):");
+        println!("{}\n", ascii_hist(&buckets, 48));
+    }
+}

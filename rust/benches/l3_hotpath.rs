@@ -1,0 +1,64 @@
+//! L3 hot-path microbenchmarks (the §Perf targets): planner cost, the
+//! simulator inner loop, KK partitioning, and the comm backends' data
+//! path. Uses the in-repo bench harness (criterion is unavailable
+//! offline). ODC_BENCH_ITERS to increase sampling.
+
+use odc::balance::cost::CostModel;
+use odc::balance::kk::karmarkar_karp;
+use odc::balance::packers::plan_run;
+use odc::comm::backend::ParamStore;
+use odc::comm::primbench::{bench_primitive, Primitive};
+use odc::comm::shared::SharedBuf;
+use odc::config::{Balancer, Dataset, ExperimentConfig, PaperModel};
+use odc::sim::run::{simulate, SimConfig};
+use odc::util::bench::Bencher;
+use odc::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== L3 hot-path microbenchmarks ==\n");
+
+    // Karmarkar–Karp at planner scale
+    let mut rng = Rng::new(3);
+    let costs: Vec<f64> = (0..256).map(|_| rng.f64() * 1e15).collect();
+    b.run("kk_256x8_equal", || karmarkar_karp(&costs, 8, true));
+    b.run("kk_256x8_free", || karmarkar_karp(&costs, 8, false));
+
+    // whole-run planning (the per-step scheduler cost)
+    let cost = CostModel::for_model(PaperModel::M1_5B);
+    let mut rng2 = Rng::new(4);
+    let lens: Vec<usize> = (0..512).map(|_| (rng2.lognormal(9.0, 0.8) as usize).clamp(32, 65_536)).collect();
+    for bal in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+        b.run(&format!("plan_512samples_{bal}"), || {
+            let mut r = Rng::new(5);
+            plan_run(bal, &lens, 8, 4, 65_536, &cost, &mut r)
+        });
+    }
+
+    // one simulated experiment cell end-to-end
+    let mut exp = ExperimentConfig::golden();
+    exp.dataset = Dataset::LongAlign;
+    exp.steps = 8;
+    b.run("simulate_golden_8steps", || simulate(&SimConfig::new(exp.clone())));
+
+    // shared-memory window ops (the gather/scatter data path)
+    let buf = SharedBuf::new(1 << 20);
+    let src = vec![1.0f32; 1 << 20];
+    let mut dst = vec![0.0f32; 1 << 20];
+    b.run("sharedbuf_write_4MiB", || buf.write(0, &src));
+    b.run("sharedbuf_read_4MiB", || buf.read(0, &mut dst));
+    b.run("sharedbuf_accumulate_4MiB", || buf.accumulate(0, &src, 0.5));
+
+    // full backend primitives at engine scale (2 and 4 device threads)
+    for world in [2usize, 4] {
+        for prim in [Primitive::Gather, Primitive::ScatterAccumulate] {
+            let r = bench_primitive(prim, world, 1 << 18, 3);
+            println!("{:<44} {:>10.3} ms/op   ({:.2} GB/s, {} dev)", format!("prim_{}_{world}dev", r.name), r.secs * 1e3, r.gbps, world);
+        }
+    }
+
+    // param store construction (allocation cost at trainer startup)
+    b.run("paramstore_new_13M", || ParamStore::new(&[4_200_000, 790_000, 790_000, 790_000, 790_000], 4));
+    let _ = Arc::new(());
+}

@@ -1,0 +1,46 @@
+//! Table 3 / Figure 9: RL (GRPO on AIME) samples/s/device, including
+//! verl's Native balancer. RL mode constrains LB-Mini to equal sample
+//! counts per device (§5.2-a). ODC_BENCH_FULL=1 adds the 14B model.
+
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel};
+use odc::report::{pct_delta, Table};
+use odc::sim::run::simulate_cell;
+
+fn main() {
+    let full = std::env::var("ODC_BENCH_FULL").is_ok();
+    let models: Vec<PaperModel> =
+        if full { vec![PaperModel::M1_5B, PaperModel::M7B, PaperModel::M14B] } else { vec![PaperModel::M1_5B, PaperModel::M7B] };
+    let steps = if full { 16 } else { 8 };
+    let minibs_grid = [2usize, 4, 8, 16];
+
+    println!("== Table 3 / Fig 9: RL (AIME) samples/s/device ==\n");
+    for &model in &models {
+        let devices = if model == PaperModel::M14B { 16 } else { 8 };
+        let _ = ExperimentConfig::paper_devices(model);
+        let run = |scheme, bal, mb| {
+            simulate_cell(model, Dataset::Aime, scheme, bal, mb, devices, steps, 5).samples_per_sec_per_device
+        };
+        let methods: Vec<(&str, CommScheme, Balancer)> = vec![
+            ("Collective Native", CommScheme::Collective, Balancer::VerlNative),
+            ("Collective LB-Micro", CommScheme::Collective, Balancer::LbMicro),
+            ("ODC LB-Micro", CommScheme::Odc, Balancer::LbMicro),
+            ("ODC LB-Mini", CommScheme::Odc, Balancer::LbMini),
+        ];
+        let vals: Vec<Vec<f64>> =
+            methods.iter().map(|&(_, s, b)| minibs_grid.iter().map(|&mb| run(s, b, mb)).collect()).collect();
+        let mut t = Table::new(&["method", "minibs=2", "4", "8", "16"]);
+        for (i, (name, ..)) in methods.iter().enumerate() {
+            let mut cells = vec![name.to_string()];
+            for j in 0..minibs_grid.len() {
+                let v = vals[i][j];
+                if i >= 2 {
+                    cells.push(format!("{v:.3} {}", pct_delta(v, vals[1][j])));
+                } else {
+                    cells.push(format!("{v:.3}"));
+                }
+            }
+            t.row(cells);
+        }
+        println!("{model} on AIME ({devices} devices):\n{}", t.markdown());
+    }
+}

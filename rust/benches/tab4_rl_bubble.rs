@@ -1,0 +1,36 @@
+//! Table 4: RL bubble rates (packing-algorithm estimate), per method and
+//! minibatch size.
+
+use odc::config::{Balancer, CommScheme, Dataset, PaperModel};
+use odc::report::Table;
+use odc::sim::run::simulate_cell;
+
+fn main() {
+    let full = std::env::var("ODC_BENCH_FULL").is_ok();
+    let models: Vec<(PaperModel, usize)> = if full {
+        vec![(PaperModel::M1_5B, 8), (PaperModel::M7B, 8), (PaperModel::M14B, 16)]
+    } else {
+        vec![(PaperModel::M1_5B, 8)]
+    };
+    let steps = 16;
+    let minibs_grid = [2usize, 4, 8, 16];
+
+    println!("== Table 4: RL (AIME) bubble rate %, estimated by the packer ==\n");
+    for (model, devices) in models {
+        let mut t = Table::new(&["method", "minibs=2", "4", "8", "16"]);
+        for (name, scheme, bal) in [
+            ("Collective Native", CommScheme::Collective, Balancer::VerlNative),
+            ("Collective LB-Micro", CommScheme::Collective, Balancer::LbMicro),
+            ("ODC LB-Micro", CommScheme::Odc, Balancer::LbMicro),
+            ("ODC LB-Mini", CommScheme::Odc, Balancer::LbMini),
+        ] {
+            let mut cells = vec![name.to_string()];
+            for &mb in &minibs_grid {
+                let r = simulate_cell(model, Dataset::Aime, scheme, bal, mb, devices, steps, 5);
+                cells.push(format!("{:.2}", 100.0 * r.bubble_rate));
+            }
+            t.row(cells);
+        }
+        println!("{model} ({devices} devices):\n{}", t.markdown());
+    }
+}

@@ -1,0 +1,60 @@
+//! Table 5 / Figure 8: SFT samples/s/device across model scales,
+//! datasets, minibatch sizes, and methods. Set ODC_BENCH_FULL=1 for the
+//! complete 1.5B–32B grid (slower); default runs 1.5B + 7B.
+
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel};
+use odc::report::{pct_delta, Table};
+use odc::sim::run::simulate_cell;
+
+fn main() {
+    let full = std::env::var("ODC_BENCH_FULL").is_ok();
+    let models: Vec<PaperModel> = if full {
+        vec![PaperModel::M1_5B, PaperModel::M7B, PaperModel::M14B, PaperModel::M32B]
+    } else {
+        vec![PaperModel::M1_5B, PaperModel::M7B]
+    };
+    let steps = if full { 16 } else { 8 };
+    let seed = 5;
+    let minibs_grid = [1usize, 2, 4, 8];
+
+    println!("== Table 5 / Fig 8: SFT samples/s/device (simulated A100 testbed) ==\n");
+    for ds in [Dataset::LongAlign, Dataset::SweSmith] {
+        for &model in &models {
+            let devices = ExperimentConfig::paper_devices(model);
+            let mut t = Table::new(&["method", "minibs=1", "2", "4", "8"]);
+            let run = |scheme, bal, mb| {
+                simulate_cell(model, ds, scheme, bal, mb, devices, steps, seed).samples_per_sec_per_device
+            };
+            let methods: Vec<(&str, CommScheme, Balancer)> = vec![
+                ("Collective LocalSort", CommScheme::Collective, Balancer::LocalSort),
+                ("ODC LocalSort", CommScheme::Odc, Balancer::LocalSort),
+                ("Collective LB-Micro", CommScheme::Collective, Balancer::LbMicro),
+                ("ODC LB-Micro", CommScheme::Odc, Balancer::LbMicro),
+                ("ODC LB-Mini", CommScheme::Odc, Balancer::LbMini),
+            ];
+            // baselines for the (+x%) annotations, as in the paper
+            let base: Vec<Vec<f64>> = methods
+                .iter()
+                .map(|&(_, s, b)| minibs_grid.iter().map(|&mb| run(s, b, mb)).collect())
+                .collect();
+            for (i, (name, scheme, _)) in methods.iter().enumerate() {
+                let baseline_row = match i {
+                    1 => Some(0), // ODC LocalSort vs Collective LocalSort
+                    3 | 4 => Some(2), // ODC LB-* vs Collective LB-Micro
+                    _ => None,
+                };
+                let mut cells = vec![name.to_string()];
+                for (j, _) in minibs_grid.iter().enumerate() {
+                    let v = base[i][j];
+                    match baseline_row {
+                        Some(b) => cells.push(format!("{v:.3} {}", pct_delta(v, base[b][j]))),
+                        None => cells.push(format!("{v:.3}")),
+                    }
+                }
+                let _ = scheme;
+                t.row(cells);
+            }
+            println!("{model} on {ds} ({devices} devices):\n{}", t.markdown());
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Table 6: SFT bubble rates (packing-algorithm estimate).
+
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel};
+use odc::report::Table;
+use odc::sim::run::simulate_cell;
+
+fn main() {
+    let full = std::env::var("ODC_BENCH_FULL").is_ok();
+    let models: Vec<PaperModel> = if full {
+        vec![PaperModel::M1_5B, PaperModel::M7B, PaperModel::M14B, PaperModel::M32B]
+    } else {
+        vec![PaperModel::M1_5B]
+    };
+    let steps = 16;
+    let minibs_grid = [1usize, 2, 4, 8];
+
+    println!("== Table 6: SFT bubble rate %, estimated by the packer ==\n");
+    for ds in [Dataset::LongAlign, Dataset::SweSmith] {
+        for &model in &models {
+            let devices = ExperimentConfig::paper_devices(model);
+            let mut t = Table::new(&["method", "minibs=1", "2", "4", "8"]);
+            for (name, scheme, bal) in [
+                ("Collective LocalSort", CommScheme::Collective, Balancer::LocalSort),
+                ("Collective LB-Micro", CommScheme::Collective, Balancer::LbMicro),
+                ("ODC LocalSort", CommScheme::Odc, Balancer::LocalSort),
+                ("ODC LB-Micro", CommScheme::Odc, Balancer::LbMicro),
+                ("ODC LB-Mini", CommScheme::Odc, Balancer::LbMini),
+            ] {
+                let mut cells = vec![name.to_string()];
+                for &mb in &minibs_grid {
+                    let r = simulate_cell(model, ds, scheme, bal, mb, devices, steps, 5);
+                    cells.push(format!("{:.2}", 100.0 * r.bubble_rate));
+                }
+                t.row(cells);
+            }
+            println!("{model} on {ds} ({devices} devices):\n{}", t.markdown());
+        }
+    }
+}

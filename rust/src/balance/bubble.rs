@@ -1,0 +1,185 @@
+//! Bubble-rate estimation (Tables 4 and 6).
+//!
+//! The paper defines bubble rate as "the ratio of device idle time —
+//! caused by workload imbalance — to the total run time, as estimated by
+//! the packing algorithm" (Appendix G). Communication is ignored here
+//! (that's the simulator's job); this is the pure compute-imbalance
+//! estimate, which the paper shows closely tracks the measured speedups.
+//!
+//! * **Collective** (eq. 1 collapsed over uniform layers): every
+//!   microbatch index is a barrier, so T = Σ_m max_d c(m, d).
+//! * **ODC**: devices only sync at the minibatch end: T = max_d Σ_m c(m, d).
+
+use super::cost::CostModel;
+use super::packers::Plan;
+use crate::config::CommScheme;
+
+#[derive(Clone, Debug)]
+pub struct BubbleReport {
+    /// Estimated minibatch wall time (FLOP-equivalents).
+    pub total: f64,
+    /// Per-device busy time.
+    pub busy: Vec<f64>,
+    /// 1 - mean(busy)/total.
+    pub bubble_rate: f64,
+}
+
+/// Estimate the bubble rate of one minibatch plan under a comm scheme.
+pub fn estimate_bubble(plan: &Plan, lens: &[usize], cost: &CostModel, scheme: CommScheme) -> BubbleReport {
+    let d = plan.devices();
+    let m_max = plan.max_micro_count();
+    let micro_cost = |dev: usize, m: usize| -> f64 {
+        match plan.micro[dev].get(m) {
+            Some(mb) if !mb.is_empty() => {
+                let ls: Vec<usize> = mb.iter().map(|&i| lens[i]).collect();
+                cost.micro_cost(&ls)
+            }
+            _ => 0.0,
+        }
+    };
+
+    let busy: Vec<f64> = (0..d).map(|dev| (0..m_max).map(|m| micro_cost(dev, m)).sum()).collect();
+
+    let total = match scheme {
+        CommScheme::Collective => {
+            // per-microbatch barrier: wait for the slowest device each index
+            (0..m_max)
+                .map(|m| (0..d).map(|dev| micro_cost(dev, m)).fold(0.0, f64::max))
+                .sum()
+        }
+        CommScheme::Odc => busy.iter().cloned().fold(0.0, f64::max),
+    };
+
+    let total = total.max(f64::MIN_POSITIVE);
+    let bubble_rate = 1.0 - busy.iter().sum::<f64>() / (d as f64 * total);
+    BubbleReport { total, busy, bubble_rate }
+}
+
+/// Aggregate bubble rate over a whole run (time-weighted).
+pub fn run_bubble(plans: &[Plan], lens: &[usize], cost: &CostModel, scheme: CommScheme) -> f64 {
+    let mut total = 0.0;
+    let mut busy = 0.0;
+    let mut d = 1.0;
+    for p in plans {
+        let r = estimate_bubble(p, lens, cost, scheme);
+        total += r.total;
+        busy += r.busy.iter().sum::<f64>();
+        d = r.busy.len() as f64;
+    }
+    if total <= 0.0 {
+        return 0.0;
+    }
+    1.0 - busy / (d * total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::packers::plan_run;
+    use crate::config::{Balancer, PaperModel};
+    use crate::util::rng::Rng;
+
+    fn cost() -> CostModel {
+        CostModel::for_model(PaperModel::M1_5B)
+    }
+
+    /// Two devices, two microbatches each, costs chosen by hand.
+    fn hand_plan() -> (Plan, Vec<usize>) {
+        // device 0: micro [s0], [s1]; device 1: micro [s2], [s3]
+        let plan = Plan { micro: vec![vec![vec![0], vec![1]], vec![vec![2], vec![3]]] };
+        let lens = vec![10_000, 1_000, 1_000, 10_000];
+        (plan, lens)
+    }
+
+    #[test]
+    fn collective_pays_per_micro_max() {
+        let (plan, lens) = hand_plan();
+        let c = cost();
+        let big = c.micro_cost(&[10_000]);
+        let small = c.micro_cost(&[1_000]);
+        let r = estimate_bubble(&plan, &lens, &c, CommScheme::Collective);
+        // step 1 max = big (dev0), step 2 max = big (dev1)
+        assert!((r.total - 2.0 * big).abs() < 1e-3 * big);
+        let expect_bubble = 1.0 - (2.0 * big + 2.0 * small) / (2.0 * 2.0 * big);
+        assert!((r.bubble_rate - expect_bubble).abs() < 1e-9);
+    }
+
+    #[test]
+    fn odc_pays_per_device_total() {
+        let (plan, lens) = hand_plan();
+        let c = cost();
+        let big = c.micro_cost(&[10_000]);
+        let small = c.micro_cost(&[1_000]);
+        let r = estimate_bubble(&plan, &lens, &c, CommScheme::Odc);
+        // both devices have busy = big + small; perfectly balanced
+        assert!((r.total - (big + small)).abs() < 1e-3 * big);
+        assert!(r.bubble_rate.abs() < 1e-9);
+    }
+
+    #[test]
+    fn odc_never_worse_than_collective() {
+        let c = cost();
+        let mut rng = Rng::new(21);
+        for trial in 0..20 {
+            let lens: Vec<usize> =
+                (0..64).map(|_| (rng.lognormal(8.5, 1.1) as usize).clamp(16, 65_536)).collect();
+            let mut r2 = Rng::new(trial);
+            for b in [Balancer::LocalSort, Balancer::LbMicro] {
+                for plan in plan_run(b, &lens, 4, 4, 65_536, &c, &mut r2) {
+                    let col = estimate_bubble(&plan, &lens, &c, CommScheme::Collective);
+                    let odc = estimate_bubble(&plan, &lens, &c, CommScheme::Odc);
+                    assert!(
+                        odc.total <= col.total + 1e-6,
+                        "ODC total must not exceed collective on the same plan"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minibs_one_equalizes_schemes() {
+        // With one sample per device per minibatch, ODC == Collective
+        // (the §5.2 observation that all methods match at minibatch 1).
+        let c = cost();
+        let mut rng = Rng::new(5);
+        let lens: Vec<usize> = (0..32).map(|_| (rng.lognormal(8.0, 1.0) as usize).clamp(16, 65_536)).collect();
+        let mut r = Rng::new(6);
+        for plan in plan_run(Balancer::LbMicro, &lens, 8, 1, 65_536, &c, &mut r) {
+            let col = estimate_bubble(&plan, &lens, &c, CommScheme::Collective);
+            let odc = estimate_bubble(&plan, &lens, &c, CommScheme::Odc);
+            assert!((col.total - odc.total).abs() < 1e-6 * col.total);
+        }
+    }
+
+    #[test]
+    fn bubble_rate_in_unit_interval() {
+        let c = cost();
+        let mut rng = Rng::new(33);
+        let lens: Vec<usize> = (0..128).map(|_| (rng.lognormal(8.0, 1.2) as usize).clamp(16, 65_536)).collect();
+        let mut r = Rng::new(34);
+        for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+            for plan in plan_run(b, &lens, 4, 4, 65_536, &c, &mut r) {
+                for s in [CommScheme::Collective, CommScheme::Odc] {
+                    let rep = estimate_bubble(&plan, &lens, &c, s);
+                    assert!((0.0..1.0).contains(&rep.bubble_rate), "{b:?} {s:?}: {}", rep.bubble_rate);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lb_mini_lowers_odc_bubble_vs_lb_micro() {
+        // The paper's Table 6 pattern at small minibatch sizes.
+        let c = cost();
+        let mut rng = Rng::new(44);
+        let lens: Vec<usize> = (0..1024).map(|_| (rng.lognormal(8.5, 1.15) as usize).clamp(32, 65_536)).collect();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let micro = plan_run(Balancer::LbMicro, &lens, 8, 2, 65_536, &c, &mut r1);
+        let mini = plan_run(Balancer::LbMini, &lens, 8, 2, 65_536, &c, &mut r2);
+        let b_micro = run_bubble(&micro, &lens, &c, CommScheme::Odc);
+        let b_mini = run_bubble(&mini, &lens, &c, CommScheme::Odc);
+        assert!(b_mini <= b_micro + 0.02, "LB-Mini {b_mini} should be <= LB-Micro {b_micro} under ODC");
+    }
+}

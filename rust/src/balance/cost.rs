@@ -1,0 +1,111 @@
+//! Per-sample compute-cost model shared by packers and simulator.
+//!
+//! For a sample of sequence length `s`, a transformer's fwd+bwd cost is
+//!   cost(s) = 6·N·s  +  12·L·h·s²
+//! (parameter FLOPs linear in tokens; attention FLOPs quadratic — the
+//! O(s)-memory / O(s²)-compute mismatch at the heart of §4). Packed
+//! microbatches use block-diagonal attention, so a microbatch's cost is
+//! the SUM of its samples' costs plus a fixed launch overhead.
+
+use crate::config::PaperModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// FLOPs per token from parameters (≈ 6·N_params).
+    pub linear: f64,
+    /// FLOPs per token² from attention (≈ 12·L·h).
+    pub quad: f64,
+    /// Per-microbatch fixed overhead, in FLOP-equivalents (kernel launch,
+    /// optimizer bookkeeping). Calibrated so overhead ≈ 2ms on an A100.
+    pub micro_overhead: f64,
+    /// Effective device throughput in FLOP/s (A100 bf16 at ~40% MFU).
+    pub device_flops: f64,
+}
+
+impl CostModel {
+    pub fn for_model(m: PaperModel) -> CostModel {
+        let (layers, hidden, params) = m.shape();
+        Self::from_dims(layers, hidden, params)
+    }
+
+    /// Cost model for arbitrary transformer dimensions (used by the real
+    /// engine, whose models come from the artifact manifest).
+    pub fn from_dims(layers: usize, hidden: usize, params: f64) -> CostModel {
+        let device_flops = 1.25e14; // 312 TFLOPs bf16 * ~0.4 MFU
+        CostModel {
+            linear: 6.0 * params,
+            quad: 12.0 * (layers * hidden) as f64,
+            micro_overhead: 0.002 * device_flops,
+            device_flops,
+        }
+    }
+
+    /// Compute cost of one sample (FLOPs).
+    #[inline]
+    pub fn sample_cost(&self, len: usize) -> f64 {
+        let s = len as f64;
+        self.linear * s + self.quad * s * s
+    }
+
+    /// Cost of a packed microbatch given member lengths.
+    pub fn micro_cost(&self, lens: &[usize]) -> f64 {
+        self.micro_overhead + lens.iter().map(|&l| self.sample_cost(l)).sum::<f64>()
+    }
+
+    /// Convert FLOPs to seconds on one device.
+    #[inline]
+    pub fn seconds(&self, flops: f64) -> f64 {
+        flops / self.device_flops
+    }
+
+    /// Per-layer slice of a cost (for the per-layer barrier simulator).
+    pub fn per_layer(&self, flops: f64, layers: usize) -> f64 {
+        flops / layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_dominates_at_long_context() {
+        let c = CostModel::for_model(PaperModel::M1_5B);
+        // at 64K, attention should be a large share for a small model
+        let s = 65_536;
+        let quad = c.quad * (s as f64) * (s as f64);
+        let lin = c.linear * s as f64;
+        assert!(quad > lin, "quad {quad} vs lin {lin}");
+        // at 256 tokens, parameters dominate
+        let s = 256;
+        assert!(c.linear * s as f64 > c.quad * (s as f64) * (s as f64));
+    }
+
+    #[test]
+    fn cost_monotone_in_length() {
+        let c = CostModel::for_model(PaperModel::M7B);
+        let mut prev = 0.0;
+        for s in [1usize, 128, 1024, 8192, 65536] {
+            let x = c.sample_cost(s);
+            assert!(x > prev);
+            prev = x;
+        }
+    }
+
+    #[test]
+    fn micro_cost_is_sum_plus_overhead() {
+        let c = CostModel::for_model(PaperModel::M1_5B);
+        let lens = [100usize, 200, 300];
+        let want: f64 = lens.iter().map(|&l| c.sample_cost(l)).sum::<f64>() + c.micro_overhead;
+        assert!((c.micro_cost(&lens) - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn bigger_models_cost_more() {
+        let s = 4096;
+        let costs: Vec<f64> = PaperModel::all().iter().map(|&m| CostModel::for_model(m).sample_cost(s)).collect();
+        for w in costs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

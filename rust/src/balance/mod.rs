@@ -1,0 +1,19 @@
+//! Load balancing: the paper's packing algorithms (§4, Appendix C).
+//!
+//! * [`cost`] — the O(s) + O(s²) per-sample compute-cost model that both
+//!   the packers and the simulator share.
+//! * [`kk`] — Karmarkar–Karp k-way number partitioning (Listing 1's
+//!   `karmarkar_karp`, with the `equal_size` variant).
+//! * [`packers`] — LocalSort, LB-Micro, LB-Mini and verl's native
+//!   two-level strategy (Listings 1–3).
+//! * [`bubble`] — the idle-time estimator behind Tables 4 and 6.
+
+pub mod bubble;
+pub mod cost;
+pub mod kk;
+pub mod packers;
+
+pub use bubble::{estimate_bubble, BubbleReport};
+pub use cost::CostModel;
+pub use kk::karmarkar_karp;
+pub use packers::{plan_run, Plan};

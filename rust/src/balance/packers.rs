@@ -1,0 +1,503 @@
+//! The paper's load-balancing strategies (Listings 1–3).
+//!
+//! All planners consume the GLOBAL batch (sample lengths for an entire
+//! run segment) and emit one [`Plan`] per minibatch = per optimizer step:
+//!
+//! * **LocalSort** (Bai et al. 2024 adaptation) — samples dealt to
+//!   devices, locally sorted by length, NOT packed (one sample per
+//!   microbatch).
+//! * **LB-Micro** — per-minibatch Karmarkar–Karp across devices with
+//!   equal sample counts, then synchronized microbatch packing (all
+//!   devices use the same microbatch count — collective's constraint).
+//! * **LB-Mini** (ODC only) — per-minibatch KK *without* the equal-count
+//!   constraint, then fully local microbatch packing: devices may run
+//!   different microbatch counts, which is only sound when the comm
+//!   scheme has no per-layer barrier.
+//! * **VerlNative** (Listing 2) — verl's two-level scheme: balance the
+//!   whole global batch across ranks FIRST, then split into minibatches;
+//!   suboptimal because nothing balances within a minibatch.
+
+use super::cost::CostModel;
+use super::kk::karmarkar_karp;
+use crate::config::Balancer;
+use crate::util::rng::Rng;
+
+/// Placement of one minibatch: `micro[d][m]` = global sample indices of
+/// device d's m-th microbatch.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub micro: Vec<Vec<Vec<usize>>>,
+}
+
+impl Plan {
+    pub fn devices(&self) -> usize {
+        self.micro.len()
+    }
+
+    pub fn max_micro_count(&self) -> usize {
+        self.micro.iter().map(|d| d.len()).max().unwrap_or(0)
+    }
+
+    /// All sample indices placed on device d.
+    pub fn device_samples(&self, d: usize) -> Vec<usize> {
+        self.micro[d].iter().flatten().copied().collect()
+    }
+
+    /// Every sample index in the plan (sorted) — partition check helper.
+    pub fn all_samples(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.micro.iter().flatten().flatten().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// `microbatch_partition` of Listing 1: split one device's minibatch into
+/// the fewest microbatches that satisfy the token budget. OOM check uses
+/// TOKENS (activation memory is O(s)); partition quality uses COMPUTE
+/// cost (O(s²)) — the paper's memory/compute mismatch.
+///
+/// Singleton microbatches are always feasible: a lone max-length sample
+/// must be runnable by assumption (budget >= max sample length).
+pub fn microbatch_partition(
+    sample_ids: &[usize],
+    lens: &[usize],
+    max_tokens: usize,
+    cost: &CostModel,
+    k_start: usize,
+) -> (Vec<Vec<usize>>, usize) {
+    if sample_ids.is_empty() {
+        return (Vec::new(), k_start.max(1));
+    }
+    let costs: Vec<f64> = sample_ids.iter().map(|&i| cost.sample_cost(lens[i])).collect();
+    let mut k = k_start.max(1).min(sample_ids.len());
+    loop {
+        let parts = karmarkar_karp(&costs, k, false);
+        if !oom(&parts, sample_ids, lens, max_tokens) || k >= sample_ids.len() {
+            let micro: Vec<Vec<usize>> = parts
+                .into_iter()
+                .filter(|p| !p.is_empty())
+                .map(|p| p.iter().map(|&j| sample_ids[j]).collect())
+                .collect();
+            return (micro, k);
+        }
+        k += 1;
+    }
+}
+
+/// `check_oom` of Listing 1: token budget violated by any multi-sample
+/// microbatch.
+fn oom(parts: &[Vec<usize>], sample_ids: &[usize], lens: &[usize], max_tokens: usize) -> bool {
+    parts.iter().any(|p| {
+        p.len() > 1 && p.iter().map(|&j| lens[sample_ids[j]]).sum::<usize>() > max_tokens
+    })
+}
+
+/// Split shuffled `order` into consecutive minibatches of `per_step`.
+fn chunk_minibatches(order: &[usize], per_step: usize) -> Vec<Vec<usize>> {
+    order.chunks(per_step).filter(|c| c.len() == per_step).map(|c| c.to_vec()).collect()
+}
+
+/// Sort microbatches by descending cost so heavy microbatches align on
+/// the same index across devices (reduces the per-index max that the
+/// collective barrier pays).
+fn sort_micro_desc(micro: &mut [Vec<usize>], lens: &[usize], cost: &CostModel) {
+    micro.sort_by(|a, b| {
+        let ca: f64 = a.iter().map(|&i| cost.sample_cost(lens[i])).sum();
+        let cb: f64 = b.iter().map(|&i| cost.sample_cost(lens[i])).sum();
+        cb.partial_cmp(&ca).unwrap()
+    });
+}
+
+/// Planner options beyond the balancer choice.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOpts {
+    /// RL mode (§5.2-a): verl requires identical sample counts per
+    /// device, so LB-Mini runs its minibatch KK with `equal_size=true`
+    /// (microbatch counts may still differ). SFT mode leaves sample
+    /// counts free (`equal_size=false` in Listing 1).
+    pub lb_mini_equal_size: bool,
+}
+
+impl Default for PackOpts {
+    fn default() -> Self {
+        PackOpts { lb_mini_equal_size: false }
+    }
+}
+
+/// Produce per-minibatch plans for the whole global batch.
+///
+/// * `lens` — global sample lengths.
+/// * `world` — device count.
+/// * `minibs` — samples per minibatch PER DEVICE.
+/// * `max_tokens` — microbatch token budget.
+pub fn plan_run(
+    balancer: Balancer,
+    lens: &[usize],
+    world: usize,
+    minibs: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    rng: &mut Rng,
+) -> Vec<Plan> {
+    plan_run_opts(balancer, lens, world, minibs, max_tokens, cost, rng, PackOpts::default())
+}
+
+/// `plan_run` with explicit [`PackOpts`].
+#[allow(clippy::too_many_arguments)]
+pub fn plan_run_opts(
+    balancer: Balancer,
+    lens: &[usize],
+    world: usize,
+    minibs: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    rng: &mut Rng,
+    opts: PackOpts,
+) -> Vec<Plan> {
+    let per_step = world * minibs;
+    assert!(per_step > 0);
+    let mut order: Vec<usize> = (0..lens.len()).collect();
+    rng.shuffle(&mut order);
+
+    match balancer {
+        Balancer::LocalSort => chunk_minibatches(&order, per_step)
+            .into_iter()
+            .map(|mb| plan_local_sort(&mb, lens, world, cost))
+            .collect(),
+        Balancer::LbMicro => chunk_minibatches(&order, per_step)
+            .into_iter()
+            .map(|mb| plan_lb_micro(&mb, lens, world, max_tokens, cost))
+            .collect(),
+        Balancer::LbMini => chunk_minibatches(&order, per_step)
+            .into_iter()
+            .map(|mb| plan_lb_mini(&mb, lens, world, max_tokens, cost, opts.lb_mini_equal_size))
+            .collect(),
+        Balancer::VerlNative => plan_verl_native(&order, lens, world, minibs, max_tokens, cost, rng),
+    }
+}
+
+/// LocalSort: deal samples round-robin, sort each device's set by length
+/// descending, one sample per microbatch (no packing).
+fn plan_local_sort(mb: &[usize], lens: &[usize], world: usize, cost: &CostModel) -> Plan {
+    let mut per_dev: Vec<Vec<usize>> = vec![Vec::new(); world];
+    for (i, &s) in mb.iter().enumerate() {
+        per_dev[i % world].push(s);
+    }
+    let micro = per_dev
+        .into_iter()
+        .map(|mut samples| {
+            samples.sort_by(|&a, &b| {
+                cost.sample_cost(lens[b]).partial_cmp(&cost.sample_cost(lens[a])).unwrap()
+            });
+            samples.into_iter().map(|s| vec![s]).collect()
+        })
+        .collect();
+    Plan { micro }
+}
+
+/// LB-Micro: KK across devices (equal counts), then microbatch packing
+/// with a SYNCHRONIZED k (the all_reduce(is_oom) loop of Listing 1).
+fn plan_lb_micro(mb: &[usize], lens: &[usize], world: usize, max_tokens: usize, cost: &CostModel) -> Plan {
+    let costs: Vec<f64> = mb.iter().map(|&i| cost.sample_cost(lens[i])).collect();
+    let parts = karmarkar_karp(&costs, world, true);
+    let dev_samples: Vec<Vec<usize>> =
+        parts.into_iter().map(|p| p.iter().map(|&j| mb[j]).collect()).collect();
+
+    // Synchronized k: every rank must use the same microbatch count, so
+    // k grows until NO rank OOMs (all_reduce over is_oom).
+    let mut k = 1;
+    loop {
+        let mut ok = true;
+        let mut plans: Vec<Vec<Vec<usize>>> = Vec::with_capacity(world);
+        for samples in &dev_samples {
+            let (micro, k_used) = microbatch_partition(samples, lens, max_tokens, cost, k);
+            if k_used > k && samples.len() > k {
+                ok = false;
+                k = k_used;
+                break;
+            }
+            plans.push(micro);
+        }
+        if ok {
+            // pad rank plans to equal microbatch count with empty micros
+            let kmax = plans.iter().map(|p| p.len()).max().unwrap_or(1);
+            for p in &mut plans {
+                sort_micro_desc(p, lens, cost);
+                while p.len() < kmax {
+                    p.push(Vec::new());
+                }
+            }
+            return Plan { micro: plans };
+        }
+    }
+}
+
+/// LB-Mini (ODC only): KK across devices WITHOUT the equal-count
+/// constraint, then fully independent local packing.
+fn plan_lb_mini(
+    mb: &[usize],
+    lens: &[usize],
+    world: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    equal_size: bool,
+) -> Plan {
+    let costs: Vec<f64> = mb.iter().map(|&i| cost.sample_cost(lens[i])).collect();
+    let parts = karmarkar_karp(&costs, world, equal_size);
+    let micro = parts
+        .into_iter()
+        .map(|p| {
+            let samples: Vec<usize> = p.iter().map(|&j| mb[j]).collect();
+            let (m, _) = microbatch_partition(&samples, lens, max_tokens, cost, 1);
+            m
+        })
+        .collect();
+    Plan { micro }
+}
+
+/// Listing 2 — verl's native two-level strategy: balance the GLOBAL batch
+/// across ranks first (equal counts), then each rank slices its local
+/// stream into minibatches sequentially. Nothing balances within a
+/// minibatch, which is why LB-Micro beats it (Fig 9).
+fn plan_verl_native(
+    order: &[usize],
+    lens: &[usize],
+    world: usize,
+    minibs: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    rng: &mut Rng,
+) -> Vec<Plan> {
+    let costs: Vec<f64> = order.iter().map(|&i| cost.sample_cost(lens[i])).collect();
+    let parts = karmarkar_karp(&costs, world, true);
+    let mut rank_stream: Vec<Vec<usize>> =
+        parts.into_iter().map(|p| p.iter().map(|&j| order[j]).collect()).collect();
+    // verl gives no ordering guarantee within a rank's stream; our KK
+    // happens to emit cost-sorted sets, which would *accidentally*
+    // balance the sequential minibatch slices. Shuffle to restore the
+    // arbitrary order the real system slices on.
+    for s in rank_stream.iter_mut() {
+        rng.shuffle(s);
+    }
+
+    let n_steps = rank_stream.iter().map(|s| s.len() / minibs).min().unwrap_or(0);
+    let mut plans = Vec::with_capacity(n_steps);
+    for step in 0..n_steps {
+        // Per-step, per-rank local packing with synchronized k.
+        let dev_samples: Vec<Vec<usize>> = rank_stream
+            .iter()
+            .map(|s| s[step * minibs..(step + 1) * minibs].to_vec())
+            .collect();
+        let mut k = 1;
+        let plan = loop {
+            let mut ok = true;
+            let mut micro: Vec<Vec<Vec<usize>>> = Vec::with_capacity(world);
+            for samples in &dev_samples {
+                let (m, k_used) = microbatch_partition(samples, lens, max_tokens, cost, k);
+                if k_used > k && samples.len() > k {
+                    ok = false;
+                    k = k_used;
+                    break;
+                }
+                micro.push(m);
+            }
+            if ok {
+                let kmax = micro.iter().map(|p| p.len()).max().unwrap_or(1);
+                for p in &mut micro {
+                    sort_micro_desc(p, lens, cost);
+                    while p.len() < kmax {
+                        p.push(Vec::new());
+                    }
+                }
+                break Plan { micro };
+            }
+        };
+        plans.push(plan);
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Balancer, PaperModel};
+    use crate::util::prop::check;
+
+    fn setup(n: usize, seed: u64) -> (Vec<usize>, CostModel, Rng) {
+        let mut rng = Rng::new(seed);
+        let lens: Vec<usize> = (0..n).map(|_| (rng.lognormal(8.0, 1.0) as usize).clamp(16, 65_536)).collect();
+        (lens, CostModel::for_model(PaperModel::M1_5B), Rng::new(seed + 1))
+    }
+
+    fn check_plan_partition(plans: &[Plan], world: usize, minibs: usize) {
+        for p in plans {
+            assert_eq!(p.devices(), world);
+            let all = p.all_samples();
+            assert_eq!(all.len(), world * minibs, "each plan holds one minibatch");
+            let mut dedup = all.clone();
+            dedup.dedup();
+            assert_eq!(dedup.len(), all.len(), "no duplicated samples");
+        }
+        // no sample appears in two plans
+        let mut seen: Vec<usize> = plans.iter().flat_map(|p| p.all_samples()).collect();
+        let n = seen.len();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n);
+    }
+
+    #[test]
+    fn all_balancers_produce_valid_partitions() {
+        let (lens, cost, mut rng) = setup(64, 3);
+        for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+            let plans = plan_run(b, &lens, 4, 4, 65_536, &cost, &mut rng);
+            assert!(!plans.is_empty(), "{b:?}");
+            check_plan_partition(&plans, 4, 4);
+        }
+    }
+
+    #[test]
+    fn local_sort_is_unpacked_and_sorted() {
+        let (lens, cost, mut rng) = setup(32, 5);
+        let plans = plan_run(Balancer::LocalSort, &lens, 4, 8, usize::MAX, &cost, &mut rng);
+        for p in &plans {
+            for dev in &p.micro {
+                assert_eq!(dev.len(), 8, "one microbatch per sample");
+                for m in dev {
+                    assert_eq!(m.len(), 1);
+                }
+                // sorted descending by length
+                let l: Vec<usize> = dev.iter().map(|m| lens[m[0]]).collect();
+                assert!(l.windows(2).all(|w| w[0] >= w[1]), "{l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lb_micro_equal_micro_count_across_devices() {
+        let (lens, cost, mut rng) = setup(64, 7);
+        let plans = plan_run(Balancer::LbMicro, &lens, 4, 4, 65_536, &cost, &mut rng);
+        for p in &plans {
+            let counts: Vec<usize> = p.micro.iter().map(|d| d.len()).collect();
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn lb_mini_may_vary_micro_count() {
+        // Adversarial minibatch: 4 max-length samples whose compute cost
+        // exceeds the per-device average, and 28 mid-length samples. KK
+        // gives the long samples their own devices (1 microbatch each)
+        // while the other devices take 7 mid samples that overflow the
+        // token budget (2 microbatches) — the per-device microbatch-count
+        // freedom only ODC can exploit.
+        let mut lens = vec![65_536usize; 4];
+        lens.extend(std::iter::repeat(12_000).take(28));
+        let cost = CostModel::for_model(PaperModel::M1_5B);
+        let mut rng = Rng::new(0);
+        let plans = plan_run(Balancer::LbMini, &lens, 8, 4, 65_536, &cost, &mut rng);
+        let varied = plans.iter().any(|p| {
+            let c: Vec<usize> = p.micro.iter().map(|d| d.len()).collect();
+            c.iter().any(|&x| x != c[0])
+        });
+        assert!(varied, "expected some variation in microbatch counts");
+    }
+
+    #[test]
+    fn token_budget_respected() {
+        let (lens, cost, mut rng) = setup(128, 13);
+        let budget = 65_536;
+        for b in [Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+            let plans = plan_run(b, &lens, 4, 8, budget, &cost, &mut rng);
+            for p in &plans {
+                for dev in &p.micro {
+                    for m in dev {
+                        if m.len() > 1 {
+                            let toks: usize = m.iter().map(|&i| lens[i]).sum();
+                            assert!(toks <= budget, "{b:?}: {toks} > {budget}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lb_mini_balances_better_than_local_sort() {
+        let (lens, cost, _) = setup(512, 17);
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let mini = plan_run(Balancer::LbMini, &lens, 8, 8, 65_536, &cost, &mut r1);
+        let sorted = plan_run(Balancer::LocalSort, &lens, 8, 8, 65_536, &cost, &mut r2);
+        let spread = |plans: &[Plan]| -> f64 {
+            plans
+                .iter()
+                .map(|p| {
+                    let busy: Vec<f64> = (0..p.devices())
+                        .map(|d| p.device_samples(d).iter().map(|&i| cost.sample_cost(lens[i])).sum())
+                        .collect();
+                    let mx = busy.iter().cloned().fold(f64::MIN, f64::max);
+                    let mn = busy.iter().cloned().fold(f64::MAX, f64::min);
+                    (mx - mn) / mx
+                })
+                .sum::<f64>()
+                / plans.len() as f64
+        };
+        assert!(spread(&mini) < spread(&sorted), "LB-Mini should balance device totals better");
+    }
+
+    #[test]
+    fn microbatch_partition_min_k() {
+        let lens = vec![100, 100, 100, 100];
+        let cost = CostModel::for_model(PaperModel::M1_5B);
+        // budget 250 tokens: 4 samples of 100 need >= 2 microbatches
+        let (micro, k) = microbatch_partition(&[0, 1, 2, 3], &lens, 250, &cost, 1);
+        assert!(k >= 2);
+        for m in &micro {
+            assert!(m.iter().map(|&i| lens[i]).sum::<usize>() <= 250 || m.len() == 1);
+        }
+    }
+
+    #[test]
+    fn singleton_over_budget_is_feasible() {
+        let lens = vec![1_000];
+        let cost = CostModel::for_model(PaperModel::M1_5B);
+        let (micro, _) = microbatch_partition(&[0], &lens, 10, &cost, 1);
+        assert_eq!(micro.len(), 1);
+        assert_eq!(micro[0], vec![0]);
+    }
+
+    #[test]
+    fn prop_plans_are_partitions() {
+        check(
+            "plan-partition",
+            25,
+            |r| {
+                let world = r.range(1, 6) as u64;
+                let minibs = r.range(1, 6) as u64;
+                let n = (world * minibs * r.range(1, 4) as u64) as usize;
+                let lens: Vec<u64> = (0..n).map(|_| r.below(60_000) + 16).collect();
+                (lens, (world, minibs))
+            },
+            |(lens, (world, minibs))| {
+                let lens_u: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
+                let cost = CostModel::for_model(PaperModel::M1_5B);
+                let mut rng = Rng::new(1);
+                for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+                    let plans = plan_run(b, &lens_u, *world as usize, *minibs as usize, 65_536, &cost, &mut rng);
+                    let mut seen: Vec<usize> = plans.iter().flat_map(|p| p.all_samples()).collect();
+                    let n = seen.len();
+                    seen.sort_unstable();
+                    seen.dedup();
+                    if seen.len() != n {
+                        return Err(format!("{b:?}: duplicated samples"));
+                    }
+                    if n > lens_u.len() {
+                        return Err(format!("{b:?}: invented samples"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

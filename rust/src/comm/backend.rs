@@ -1,0 +1,72 @@
+//! The `CommBackend` trait: what the FSDP engine drives, and the single
+//! seam where Collective and ODC differ.
+//!
+//! Call protocol (per device thread):
+//!
+//! ```text
+//! for each minibatch:
+//!   for each local microbatch (collective: padded to equal count):
+//!     for layer in 0..L:        gather_params(dev, layer, buf)   # fwd
+//!     for layer in (0..L).rev:  gather_params(dev, layer, buf)   # bwd
+//!                               reduce_grad(dev, layer, grad, w)
+//!   end_minibatch(dev)                 # grads complete after this
+//!   for layer in 0..L: take_grad_shard(dev, layer, g); adam; write shard
+//!   end_step(dev)                      # params republished
+//! ```
+//!
+//! `Collective` implements gather/reduce with per-layer barriers (the
+//! paper's Figure 1); `Odc` implements them with one-sided reads and
+//! mailbox pushes, so the ONLY synchronization is `end_minibatch` /
+//! `end_step` (Figure 2).
+
+use super::shared::ShardedParam;
+use std::sync::Arc;
+
+/// Parameter store shared by engine and backends: one sharded flat
+/// vector per layer (layer 0 = embedding, 1..=L = blocks).
+pub struct ParamStore {
+    pub layers: Vec<Arc<ShardedParam>>,
+}
+
+impl ParamStore {
+    pub fn new(layer_lens: &[usize], world: usize) -> Self {
+        ParamStore { layers: layer_lens.iter().map(|&l| Arc::new(ShardedParam::new(l, world))).collect() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn max_padded_len(&self) -> usize {
+        self.layers.iter().map(|l| l.padded_len()).max().unwrap_or(0)
+    }
+}
+
+pub trait CommBackend: Send + Sync {
+    fn world(&self) -> usize;
+
+    /// Materialize the full (logical-length) parameters of `layer` into
+    /// `out`. FSDP all-gather / ODC gather.
+    fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]);
+
+    /// Contribute a full-layer gradient with aggregation weight `weight`.
+    /// FSDP reduce-scatter / ODC scatter-accumulate. `grad` has the
+    /// layer's PADDED length (tail zeros).
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32);
+
+    /// Blocks until every device's gradients for this minibatch are fully
+    /// accumulated (ODC: until all clients pushed + daemon drained;
+    /// Collective: a plain barrier — accumulation was synchronous).
+    fn end_minibatch(&self, dev: usize);
+
+    /// Copy out + reset the accumulated gradient shard for `layer`.
+    /// Only valid between `end_minibatch` and `end_step`.
+    fn take_grad_shard(&self, dev: usize, layer: usize, out: &mut [f32]);
+
+    /// Barrier after the optimizer update: params are republished and the
+    /// next minibatch may start gathering.
+    fn end_step(&self, dev: usize);
+
+    /// Human-readable scheme name (reports/logs).
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,195 @@
+//! Baseline backend: collective all-gather / reduce-scatter with
+//! per-layer synchronization barriers (paper Figure 1).
+//!
+//! Every `gather_params` and `reduce_grad` is a rendezvous of ALL
+//! devices — the source of the straggler stalls the paper measures. The
+//! data movement itself is plain shared-memory copies; what we model
+//! faithfully is the *synchronization structure*: no device can pass a
+//! layer boundary until the slowest one arrives.
+
+use super::backend::{CommBackend, ParamStore};
+use super::shared::SharedBuf;
+use std::sync::{Arc, Barrier, Mutex};
+
+pub struct CollectiveComm {
+    world: usize,
+    params: Arc<ParamStore>,
+    /// Per-device full-layer gradient staging slot (reduce-scatter input).
+    stage: Vec<SharedBuf>,
+    /// Aggregation weight published alongside each stage slot.
+    stage_weight: Vec<Mutex<f32>>,
+    /// Per-device accumulated gradient shards, one per layer.
+    acc: Vec<Mutex<Vec<Vec<f32>>>>,
+    barrier: Barrier,
+}
+
+impl CollectiveComm {
+    pub fn new(params: Arc<ParamStore>, world: usize) -> Self {
+        let max_len = params.max_padded_len();
+        let acc = (0..world)
+            .map(|_| Mutex::new(params.layers.iter().map(|l| vec![0.0; l.shard_len]).collect()))
+            .collect();
+        CollectiveComm {
+            world,
+            stage: (0..world).map(|_| SharedBuf::new(max_len)).collect(),
+            stage_weight: (0..world).map(|_| Mutex::new(0.0)).collect(),
+            acc,
+            params,
+            barrier: Barrier::new(world),
+        }
+    }
+}
+
+impl CommBackend for CollectiveComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn gather_params(&self, _dev: usize, layer: usize, out: &mut [f32]) {
+        // all-gather entry barrier: nobody reads until everyone arrives
+        self.barrier.wait();
+        let p = &self.params.layers[layer];
+        let n = p.padded_len().min(out.len());
+        p.buf.read(0, &mut out[..n]);
+        // exit barrier: nobody proceeds (and later mutates) until all read
+        self.barrier.wait();
+    }
+
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        // publish my contribution
+        self.stage[dev].write(0, grad);
+        *self.stage_weight[dev].lock().unwrap() = weight;
+        self.barrier.wait();
+        // scatter phase: accumulate MY shard from every peer's slot
+        let range = p.shard_range(dev);
+        let mut chunk = vec![0.0f32; range.len()];
+        let mut acc = self.acc[dev].lock().unwrap();
+        for peer in 0..self.world {
+            self.stage[peer].read(range.start, &mut chunk);
+            let w = *self.stage_weight[peer].lock().unwrap();
+            if w != 0.0 {
+                for (a, &c) in acc[layer].iter_mut().zip(&chunk) {
+                    *a += w * c;
+                }
+            }
+        }
+        drop(acc);
+        // exit barrier: slots may be overwritten next call
+        self.barrier.wait();
+    }
+
+    fn end_minibatch(&self, _dev: usize) {
+        self.barrier.wait();
+    }
+
+    fn take_grad_shard(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        let mut acc = self.acc[dev].lock().unwrap();
+        out.copy_from_slice(&acc[layer]);
+        acc[layer].fill(0.0);
+    }
+
+    fn end_step(&self, _dev: usize) {
+        self.barrier.wait();
+    }
+
+    fn name(&self) -> &'static str {
+        "collective"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// 3 devices, 1 layer of logical length 7 (padded 9). Each device
+    /// contributes grad = dev+1 everywhere; reduced shard must be
+    /// sum(w_d * (d+1)).
+    #[test]
+    fn reduce_scatter_sums_contributions() {
+        let world = 3;
+        let params = Arc::new(ParamStore::new(&[7], world));
+        let comm = Arc::new(CollectiveComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    let grad = vec![(dev + 1) as f32; 9];
+                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 3];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    for &v in &shard {
+                        assert_eq!(v, 6.0); // 1 + 2 + 3
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn gather_returns_current_params() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[6], world));
+        let vals: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        params.layers[0].init_from(&vals);
+        let comm = Arc::new(CollectiveComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                let want = vals.clone();
+                s.spawn(move || {
+                    let mut out = vec![0.0; 6];
+                    comm.gather_params(dev, 0, &mut out);
+                    assert_eq!(out, want);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_reduce() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[4], world));
+        let comm = Arc::new(CollectiveComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    let grad = vec![1.0f32; 4];
+                    let w = if dev == 0 { 0.25 } else { 0.75 };
+                    comm.reduce_grad(dev, 0, &grad, w);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 2];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    for &v in &shard {
+                        assert!((v - 1.0).abs() < 1e-6);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn take_resets_accumulator() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[4], world));
+        let comm = Arc::new(CollectiveComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    comm.reduce_grad(dev, 0, &[1.0; 4], 1.0);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 2];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    assert_eq!(shard, vec![2.0, 2.0]);
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    assert_eq!(shard, vec![0.0, 0.0], "second take sees reset");
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,26 @@
+//! Communication layer: the paper's contribution.
+//!
+//! * [`topology`] — cluster model (NVSwitch intra-node, RoCE inter-node).
+//! * [`volume`] — per-client communication volumes (Table 2) and the
+//!   analytic time model the simulator uses.
+//! * [`shared`] — shared-memory substrate standing in for CUDA-IPC /
+//!   NVSHMEM one-sided windows: shard stores, push mailboxes, and the
+//!   accumulation daemon.
+//! * [`collective`] — baseline backend: all-gather / reduce-scatter with
+//!   per-layer barriers.
+//! * [`odc`] — the paper's backend: gather / scatter-accumulate with one
+//!   barrier per minibatch.
+//! * [`backend`] — the `CommBackend` trait the engine drives.
+//! * [`primbench`] — the Fig 11 primitive bandwidth benchmark.
+
+pub mod backend;
+pub mod collective;
+pub mod odc;
+pub mod primbench;
+pub mod shared;
+pub mod topology;
+pub mod volume;
+
+pub use backend::CommBackend;
+pub use collective::CollectiveComm;
+pub use odc::OdcComm;

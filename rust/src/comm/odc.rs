@@ -1,0 +1,324 @@
+//! ODC backend: on-demand point-to-point communication (paper §3).
+//!
+//! * `gather_params` is a **one-sided read** of each owner's parameter
+//!   window — no barrier, no participation of the owner (the CUDA-IPC /
+//!   NVSHMEM `get_mem` analogue).
+//! * `reduce_grad` is **scatter-accumulate**: the client splits its
+//!   full-layer gradient by owner and pushes each piece into the owner's
+//!   mailbox (the `put_mem` + notify analogue, Appendix B). A per-device
+//!   **daemon thread** — the paper's "lightweight daemon" that polls for
+//!   notifications without occupying compute — drains the mailbox and
+//!   accumulates into the owned shard.
+//! * The ONLY rendezvous is `end_minibatch`: a client broadcasts `Done`
+//!   to every server; a server's gradients are complete once all `world`
+//!   clients are done and its mailbox is drained. Devices therefore
+//!   progress completely independently within a minibatch (Figure 2),
+//!   including running *different microbatch counts* (LB-Mini).
+//!
+//! Buffering matches Appendix B: each (server, client) pair has its own
+//! in-flight payloads (here: owned `Vec`s moving through the channel),
+//! so concurrent pushes from different clients never alias, and requests
+//! from a single client are serialized.
+
+use super::backend::{CommBackend, ParamStore};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+enum Msg {
+    /// One gradient piece for this server's shard of `layer`.
+    Accum { layer: usize, weight: f32, data: Vec<f32> },
+    /// A client has finished every microbatch of the current minibatch.
+    Done,
+    /// The colocated worker asks for the completed accumulators; the
+    /// daemon replies once all `world` clients are Done.
+    Flush { reply: mpsc::Sender<Vec<Vec<f32>>> },
+    Shutdown,
+}
+
+pub struct OdcComm {
+    world: usize,
+    params: Arc<ParamStore>,
+    /// Mailbox senders, one per server device. A Mutex serializes sends
+    /// from concurrent clients (channel send is cheap; the paper's
+    /// per-client buffers make pushes to one server independent — the
+    /// lock here only orders enqueue, not the transfer).
+    mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
+    /// Grads returned by the local daemon at the minibatch boundary.
+    taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
+    barrier: Barrier,
+    daemons: Mutex<Vec<JoinHandle<()>>>,
+    /// Payload buffer pool (§Perf): daemons return consumed push buffers
+    /// here so clients reuse them instead of allocating per push — the
+    /// analogue of the paper's preallocated per-client RDMA buffers.
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+}
+
+impl OdcComm {
+    pub fn new(params: Arc<ParamStore>, world: usize) -> Self {
+        let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
+        let pool: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut mailbox = Vec::with_capacity(world);
+        let mut daemons = Vec::with_capacity(world);
+        for _dev in 0..world {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let lens = shard_lens.clone();
+            let pool_ = Arc::clone(&pool);
+            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, world, pool_)));
+            mailbox.push(Mutex::new(tx));
+        }
+        OdcComm {
+            world,
+            params,
+            mailbox,
+            taken: (0..world).map(|_| Mutex::new(None)).collect(),
+            barrier: Barrier::new(world),
+            daemons: Mutex::new(daemons),
+            pool,
+        }
+    }
+
+    /// Grab a pooled payload buffer of exactly `len` elements (contents
+    /// arbitrary — caller overwrites).
+    fn payload(&self, len: usize) -> Vec<f32> {
+        let mut pool = self.pool.lock().unwrap();
+        if let Some(pos) = pool.iter().position(|b| b.capacity() >= len) {
+            let mut b = pool.swap_remove(pos);
+            // SAFETY-free resize: contents are fully overwritten by the
+            // caller's copy_from_slice before the buffer is read.
+            b.resize(len, 0.0);
+            b
+        } else {
+            vec![0.0; len]
+        }
+    }
+
+    fn send(&self, server: usize, msg: Msg) {
+        self.mailbox[server].lock().unwrap().send(msg).expect("daemon alive");
+    }
+}
+
+/// The accumulation daemon: single-threaded state machine owning the
+/// device's gradient accumulators.
+fn daemon_loop(
+    rx: mpsc::Receiver<Msg>,
+    shard_lens: Vec<usize>,
+    world: usize,
+    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+) {
+    const POOL_CAP: usize = 64;
+    let fresh = |lens: &[usize]| -> Vec<Vec<f32>> { lens.iter().map(|&l| vec![0.0; l]).collect() };
+    let mut acc = fresh(&shard_lens);
+    let mut done = 0usize;
+    let mut flush: Option<mpsc::Sender<Vec<Vec<f32>>>> = None;
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        match msg {
+            Msg::Accum { layer, weight, data } => {
+                let a = &mut acc[layer];
+                debug_assert_eq!(a.len(), data.len());
+                for (x, &g) in a.iter_mut().zip(&data) {
+                    *x += weight * g;
+                }
+                // recycle the payload buffer for future pushes
+                let mut p = pool.lock().unwrap();
+                if p.len() < POOL_CAP {
+                    p.push(data);
+                }
+            }
+            Msg::Done => done += 1,
+            Msg::Flush { reply } => flush = Some(reply),
+            Msg::Shutdown => return,
+        }
+        if done == world {
+            if let Some(reply) = flush.take() {
+                let out = std::mem::replace(&mut acc, fresh(&shard_lens));
+                done = 0;
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+impl CommBackend for OdcComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn gather_params(&self, _dev: usize, layer: usize, out: &mut [f32]) {
+        // One-sided read: parameters are immutable during the minibatch
+        // (owners only write between end_minibatch and end_step), so no
+        // synchronization is needed — the owner's compute is undisturbed.
+        let p = &self.params.layers[layer];
+        let n = p.padded_len().min(out.len());
+        p.buf.read(0, &mut out[..n]);
+    }
+
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        if weight == 0.0 {
+            return; // idle slot: ODC has nothing to send and nothing to wait for
+        }
+        let _ = dev;
+        for server in 0..self.world {
+            let r = p.shard_range(server);
+            let mut data = self.payload(r.len());
+            data.copy_from_slice(&grad[r]);
+            self.send(server, Msg::Accum { layer, weight, data });
+        }
+    }
+
+    fn end_minibatch(&self, dev: usize) {
+        // scatter-accumulate epilogue: tell every server this client is done
+        for server in 0..self.world {
+            self.send(server, Msg::Done);
+        }
+        // then wait for the local daemon to see all clients done
+        let (rtx, rrx) = mpsc::channel();
+        self.send(dev, Msg::Flush { reply: rtx });
+        let grads = rrx.recv().expect("daemon flush");
+        *self.taken[dev].lock().unwrap() = Some(grads);
+    }
+
+    fn take_grad_shard(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        let slot = self.taken[dev].lock().unwrap();
+        let grads = slot.as_ref().expect("take_grad_shard before end_minibatch");
+        out.copy_from_slice(&grads[layer]);
+    }
+
+    fn end_step(&self, _dev: usize) {
+        // The single global barrier per step: params republished.
+        self.barrier.wait();
+    }
+
+    fn name(&self) -> &'static str {
+        "odc"
+    }
+}
+
+impl Drop for OdcComm {
+    fn drop(&mut self) {
+        for server in 0..self.world {
+            let _ = self.mailbox[server].lock().unwrap().send(Msg::Shutdown);
+        }
+        for d in self.daemons.lock().unwrap().drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_is_barrier_free_and_current() {
+        // A single device can gather repeatedly with nobody else
+        // participating — impossible under the collective backend.
+        let params = Arc::new(ParamStore::new(&[8], 2));
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        params.layers[0].init_from(&vals);
+        let comm = OdcComm::new(Arc::clone(&params), 2);
+        let mut out = vec![0.0; 8];
+        for _ in 0..3 {
+            comm.gather_params(0, 0, &mut out);
+            assert_eq!(out, vals);
+        }
+    }
+
+    #[test]
+    fn scatter_accumulate_sums_across_clients() {
+        let world = 3;
+        let params = Arc::new(ParamStore::new(&[9], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    // device pushes (dev+1) twice with weight 1 — two microbatches
+                    let grad = vec![(dev + 1) as f32; 9];
+                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 3];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    for &v in &shard {
+                        assert_eq!(v, 12.0); // 2 * (1 + 2 + 3)
+                    }
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn different_push_counts_per_device() {
+        // The LB-Mini property: devices contribute different numbers of
+        // microbatches and nothing deadlocks.
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[4], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    let pushes = if dev == 0 { 3 } else { 1 };
+                    for _ in 0..pushes {
+                        comm.reduce_grad(dev, 0, &[1.0; 4], 1.0);
+                    }
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 2];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    assert_eq!(shard, vec![4.0, 4.0]); // 3 + 1 pushes
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn two_minibatches_reset_cleanly() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[4], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for step in 1..=2 {
+                        comm.reduce_grad(dev, 0, &[step as f32; 4], 1.0);
+                        comm.end_minibatch(dev);
+                        let mut shard = vec![0.0; 2];
+                        comm.take_grad_shard(dev, 0, &mut shard);
+                        assert_eq!(shard, vec![2.0 * step as f32; 2]);
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_pushes() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[2], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 });
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 1];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    assert!((shard[0] - 2.5).abs() < 1e-6);
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Shared-memory substrate standing in for the paper's RDMA windows.
+//!
+//! The paper's ODC uses CUDA-IPC (intra-node) and NVSHMEM (inter-node):
+//! *one-sided* reads/writes of peer GPU memory that do not interrupt the
+//! peer's compute. The closest CPU analogue is a plain shared buffer
+//! accessed without locks. [`SharedBuf`] is exactly that: an
+//! `UnsafeCell` window with `read`/`write` ops whose safety contract is
+//! the same *phase discipline* real FSDP relies on:
+//!
+//! * parameter windows are only written at the optimizer step, inside a
+//!   barrier-delimited phase in which no device reads them;
+//! * gradient staging slots are written only by their owning device and
+//!   read by peers only between the surrounding barriers;
+//! * ODC mailboxes transfer ownership through a channel, so a message's
+//!   payload is never aliased.
+//!
+//! Violating the discipline is a logic bug in the coordinator, not in
+//! this substrate — mirroring how real RDMA gives you no protection
+//! either. The engine's integration tests (engine vs single-device
+//! oracle, Collective vs ODC equivalence) are the guard.
+
+use std::cell::UnsafeCell;
+
+/// One-sided shared window of f32s (RDMA-region analogue).
+pub struct SharedBuf {
+    data: UnsafeCell<Box<[f32]>>,
+}
+
+// SAFETY: concurrent access is governed by the phase discipline described
+// in the module docs; all actual loads/stores go through raw pointers in
+// `read`/`write` and never create overlapping &mut.
+unsafe impl Sync for SharedBuf {}
+unsafe impl Send for SharedBuf {}
+
+impl SharedBuf {
+    pub fn new(len: usize) -> Self {
+        SharedBuf { data: UnsafeCell::new(vec![0.0; len].into_boxed_slice()) }
+    }
+
+    pub fn len(&self) -> usize {
+        unsafe { (&*self.data.get()).len() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One-sided read: copy `out.len()` values starting at `offset`.
+    #[inline]
+    pub fn read(&self, offset: usize, out: &mut [f32]) {
+        let src = unsafe { &*self.data.get() };
+        assert!(offset + out.len() <= src.len(), "read out of window");
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr().add(offset), out.as_mut_ptr(), out.len());
+        }
+    }
+
+    /// One-sided write: copy `data` into the window at `offset`.
+    #[inline]
+    pub fn write(&self, offset: usize, data: &[f32]) {
+        let dst = unsafe { &mut *self.data.get() };
+        assert!(offset + data.len() <= dst.len(), "write out of window");
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dst.as_mut_ptr().add(offset), data.len());
+        }
+    }
+
+    /// Accumulate `data * weight` into the window (server-side daemon op).
+    #[inline]
+    pub fn accumulate(&self, offset: usize, data: &[f32], weight: f32) {
+        let dst = unsafe { &mut *self.data.get() };
+        assert!(offset + data.len() <= dst.len(), "accumulate out of window");
+        let dst = &mut dst[offset..offset + data.len()];
+        for (d, &s) in dst.iter_mut().zip(data) {
+            *d += weight * s;
+        }
+    }
+
+    /// Zero a range (grad reset at minibatch boundary).
+    pub fn clear(&self, offset: usize, len: usize) {
+        let dst = unsafe { &mut *self.data.get() };
+        dst[offset..offset + len].fill(0.0);
+    }
+}
+
+/// A flat layer parameter vector sharded across `world` devices
+/// (FSDP's flat-parameter + shard layout). The stored buffer is padded
+/// so every device owns an equal-length shard.
+pub struct ShardedParam {
+    pub buf: SharedBuf,
+    pub logical_len: usize,
+    pub shard_len: usize,
+    pub world: usize,
+}
+
+impl ShardedParam {
+    pub fn new(logical_len: usize, world: usize) -> Self {
+        let shard_len = logical_len.div_ceil(world);
+        ShardedParam {
+            buf: SharedBuf::new(shard_len * world),
+            logical_len,
+            shard_len,
+            world,
+        }
+    }
+
+    pub fn padded_len(&self) -> usize {
+        self.shard_len * self.world
+    }
+
+    /// Padded index range owned by device `dev`.
+    pub fn shard_range(&self, dev: usize) -> std::ops::Range<usize> {
+        let lo = dev * self.shard_len;
+        lo..lo + self.shard_len
+    }
+
+    /// Initialize from a logical (unpadded) vector.
+    pub fn init_from(&self, values: &[f32]) {
+        assert_eq!(values.len(), self.logical_len);
+        self.buf.write(0, values);
+        if self.padded_len() > self.logical_len {
+            self.buf.clear(self.logical_len, self.padded_len() - self.logical_len);
+        }
+    }
+
+    /// Read the full logical vector (gather target).
+    pub fn read_logical(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.logical_len);
+        self.buf.read(0, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let b = SharedBuf::new(16);
+        b.write(4, &[1.0, 2.0, 3.0]);
+        let mut out = [0.0; 3];
+        b.read(4, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn accumulate_adds_weighted() {
+        let b = SharedBuf::new(4);
+        b.write(0, &[1.0, 1.0, 1.0, 1.0]);
+        b.accumulate(0, &[2.0, 4.0, 6.0, 8.0], 0.5);
+        let mut out = [0.0; 4];
+        b.read(0, &mut out);
+        assert_eq!(out, [2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "read out of window")]
+    fn read_bounds_checked() {
+        let b = SharedBuf::new(4);
+        let mut out = [0.0; 3];
+        b.read(2, &mut out);
+    }
+
+    #[test]
+    fn sharded_param_padding() {
+        let p = ShardedParam::new(10, 4);
+        assert_eq!(p.shard_len, 3);
+        assert_eq!(p.padded_len(), 12);
+        assert_eq!(p.shard_range(0), 0..3);
+        assert_eq!(p.shard_range(3), 9..12);
+        let vals: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        p.init_from(&vals);
+        let mut out = vec![0.0; 10];
+        p.read_logical(&mut out);
+        assert_eq!(out, vals);
+        // padding is zeroed
+        let mut pad = [9.9; 2];
+        p.buf.read(10, &mut pad);
+        assert_eq!(pad, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn concurrent_disjoint_writes() {
+        // Phase discipline: disjoint shard writes from multiple threads.
+        let p = Arc::new(ShardedParam::new(64, 4));
+        std::thread::scope(|s| {
+            for dev in 0..4 {
+                let p = Arc::clone(&p);
+                s.spawn(move || {
+                    let r = p.shard_range(dev);
+                    let vals = vec![dev as f32 + 1.0; r.len()];
+                    p.buf.write(r.start, &vals);
+                });
+            }
+        });
+        let mut out = vec![0.0; 64];
+        p.read_logical(&mut out);
+        for dev in 0..4 {
+            for i in p.shard_range(dev) {
+                assert_eq!(out[i], dev as f32 + 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Cluster topology model: the paper's testbed is A100 nodes with
+//! NVSwitch inside a node and 800 Gbps RoCE RDMA between nodes.
+
+/// Bandwidths in bytes/second.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    pub devices: usize,
+    pub devices_per_node: usize,
+    /// Per-GPU NVSwitch bandwidth (A100: 600 GB/s bidirectional; we use
+    /// the ~250 GB/s achievable unidirectional busbw).
+    pub intra_bw: f64,
+    /// Per-GPU share of the node's inter-node NIC (800 Gbps per node
+    /// = 100 GB/s, / 8 GPUs = 12.5 GB/s per GPU).
+    pub inter_bw: f64,
+    /// Per-message latency (seconds) — RDMA op setup cost.
+    pub latency: f64,
+}
+
+impl Topology {
+    pub fn paper(devices: usize, devices_per_node: usize) -> Topology {
+        let dpn = devices_per_node.min(devices).max(1);
+        Topology {
+            devices,
+            devices_per_node: dpn,
+            intra_bw: 250e9,
+            inter_bw: 100e9 / dpn as f64,
+            latency: 10e-6,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.devices.div_ceil(self.devices_per_node)
+    }
+
+    #[inline]
+    pub fn node_of(&self, dev: usize) -> usize {
+        dev / self.devices_per_node
+    }
+
+    #[inline]
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    pub fn multi_node(&self) -> bool {
+        self.nodes() > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_math() {
+        let t = Topology::paper(32, 8);
+        assert_eq!(t.nodes(), 4);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert!(t.same_node(9, 15));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn single_node_when_small() {
+        let t = Topology::paper(8, 8);
+        assert_eq!(t.nodes(), 1);
+        assert!(!t.multi_node());
+    }
+
+    #[test]
+    fn inter_slower_than_intra() {
+        let t = Topology::paper(16, 8);
+        assert!(t.inter_bw < t.intra_bw / 2.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Per-client communication volume (paper Table 2) + the analytic comm
+//! time model shared by the simulator and the hybrid-sharding analysis.
+//!
+//! Notation (Appendix D): D = total devices, G = devices per node,
+//! K = per-device shard size in bytes. Both schemes move the same total
+//! volume, (D-1)·K per client, but ODC's point-to-point pattern forgoes
+//! the hierarchical ring: its inter-node share is (D-G)·K instead of the
+//! ring's (D-1)·K/G.
+
+use super::topology::Topology;
+
+/// Bytes a single client sends/receives for one collective-equivalent op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Volume {
+    pub intra: f64,
+    pub inter: f64,
+}
+
+impl Volume {
+    pub fn total(&self) -> f64 {
+        self.intra + self.inter
+    }
+}
+
+/// Ring all-gather (and, symmetrically, ring reduce-scatter): each client
+/// moves (D-1)/D of the full buffer; a hierarchical ring sends only 1/G
+/// of that across nodes.
+pub fn collective_ring(d: usize, g: usize, k: f64) -> Volume {
+    let (df, gf) = (d as f64, g as f64);
+    if d <= g {
+        // single node: everything is intra
+        return Volume { intra: (df - 1.0) * k, inter: 0.0 };
+    }
+    Volume {
+        intra: (gf - 1.0) / gf * (df - 1.0) * k,
+        inter: (df - 1.0) / gf * k,
+    }
+}
+
+/// ODC gather / scatter-accumulate: a client talks to every peer
+/// directly — (G-1) peers intra-node, (D-G) peers on other nodes.
+pub fn odc_p2p(d: usize, g: usize, k: f64) -> Volume {
+    let (df, gf) = (d as f64, g as f64);
+    if d <= g {
+        return Volume { intra: (df - 1.0) * k, inter: 0.0 };
+    }
+    Volume { intra: (gf - 1.0) * k, inter: (df - gf) * k }
+}
+
+/// §6.2 "ODC-specific Optimizations": hierarchical gather. A shard from
+/// a remote node is fetched across the network ONCE per node (by the
+/// first requester) and re-served intra-node from that peer's cache,
+/// "effectively creating a hierarchical communication path similar to
+/// topology-aware collectives". Per-client amortized volumes:
+///   inter: (D-G)·K / G      (the node's G clients share each fetch)
+///   intra: (G-1)·K + (D-G)·K·(G-1)/G   (local shards + redistribution)
+pub fn odc_hierarchical(d: usize, g: usize, k: f64) -> Volume {
+    let (df, gf) = (d as f64, g as f64);
+    if d <= g {
+        return Volume { intra: (df - 1.0) * k, inter: 0.0 };
+    }
+    Volume {
+        intra: (gf - 1.0) * k + (df - gf) * k * (gf - 1.0) / gf,
+        inter: (df - gf) * k / gf,
+    }
+}
+
+/// Time for one client to complete an op of per-device shard size
+/// `k_bytes`, assuming intra and inter phases overlap (both schemes
+/// pipeline chunks): t = max(intra/bw_intra, inter/bw_inter) + latency.
+pub fn op_time(vol: Volume, topo: &Topology) -> f64 {
+    let t_intra = vol.intra / topo.intra_bw;
+    let t_inter = vol.inter / topo.inter_bw;
+    t_intra.max(t_inter) + topo.latency
+}
+
+/// Convenience: per-client time of a full-layer all-gather under the
+/// given scheme. `layer_bytes` is the FULL layer size; each device holds
+/// layer_bytes/D.
+pub fn layer_op_time(odc: bool, layer_bytes: f64, topo: &Topology) -> f64 {
+    let k = layer_bytes / topo.devices as f64;
+    let vol = if odc {
+        odc_p2p(topo.devices, topo.devices_per_node, k)
+    } else {
+        collective_ring(topo.devices, topo.devices_per_node, k)
+    };
+    op_time(vol, topo)
+}
+
+/// Per-client time of a full-layer gather with the §6.2 hierarchical
+/// (node-leader caching) optimization enabled.
+pub fn hierarchical_layer_op_time(layer_bytes: f64, topo: &Topology) -> f64 {
+    let k = layer_bytes / topo.devices as f64;
+    op_time(odc_hierarchical(topo.devices, topo.devices_per_node, k), topo)
+}
+
+/// Hybrid (ZeRO++-style) sharding: params/grads sharded only within the
+/// node, so gather/scatter-accumulate never leaves the node. Per-client
+/// shard is layer_bytes/G.
+pub fn hybrid_layer_op_time(layer_bytes: f64, topo: &Topology) -> f64 {
+    let g = topo.devices_per_node;
+    let k = layer_bytes / g as f64;
+    let vol = Volume { intra: (g as f64 - 1.0) * k, inter: 0.0 };
+    op_time(vol, topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: f64 = 1e6;
+
+    #[test]
+    fn table2_totals_match() {
+        // Both schemes move (D-1)*K per client — Table 2's "Total" column.
+        for (d, g) in [(8, 8), (16, 8), (32, 8), (64, 8)] {
+            let c = collective_ring(d, g, K);
+            let o = odc_p2p(d, g, K);
+            let want = (d as f64 - 1.0) * K;
+            assert!((c.total() - want).abs() < 1e-6, "ring total d={d}");
+            assert!((o.total() - want).abs() < 1e-6, "odc total d={d}");
+        }
+    }
+
+    #[test]
+    fn table2_ring_split() {
+        // D=16, G=8: intra = 7/8*15K, inter = 15/8*K
+        let c = collective_ring(16, 8, K);
+        assert!((c.intra - 7.0 / 8.0 * 15.0 * K).abs() < 1e-6);
+        assert!((c.inter - 15.0 / 8.0 * K).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table2_odc_split() {
+        // D=16, G=8: intra = 7K, inter = 8K
+        let o = odc_p2p(16, 8, K);
+        assert!((o.intra - 7.0 * K).abs() < 1e-6);
+        assert!((o.inter - 8.0 * K).abs() < 1e-6);
+    }
+
+    #[test]
+    fn odc_more_inter_node_traffic() {
+        // The paper's Appendix D point: ODC shifts volume to the slow links.
+        for d in [16, 32, 64] {
+            let c = collective_ring(d, 8, K);
+            let o = odc_p2p(d, 8, K);
+            assert!(o.inter > c.inter, "d={d}");
+        }
+    }
+
+    #[test]
+    fn single_node_identical() {
+        let c = collective_ring(8, 8, K);
+        let o = odc_p2p(8, 8, K);
+        assert_eq!(c, o);
+        assert_eq!(c.inter, 0.0);
+    }
+
+    #[test]
+    fn odc_slower_across_nodes_comparable_within() {
+        // Fig 11's shape: comparable intra-node, slower inter-node.
+        let single = Topology::paper(8, 8);
+        let multi = Topology::paper(32, 8);
+        let layer = 1e9;
+        let (c1, o1) = (layer_op_time(false, layer, &single), layer_op_time(true, layer, &single));
+        assert!((c1 - o1).abs() / c1 < 0.05, "intra-node should be comparable");
+        let (c4, o4) = (layer_op_time(false, layer, &multi), layer_op_time(true, layer, &multi));
+        assert!(o4 > 1.5 * c4, "ODC should be clearly slower cross-node: {o4} vs {c4}");
+    }
+
+    #[test]
+    fn hierarchical_gather_cuts_inter_traffic_by_g() {
+        // §6.2: node-leader caching divides inter-node volume by G.
+        let o = odc_p2p(32, 8, K);
+        let h = odc_hierarchical(32, 8, K);
+        assert!((h.inter - o.inter / 8.0).abs() < 1e-6);
+        assert!(h.inter < o.inter);
+    }
+
+    #[test]
+    fn hierarchical_closes_gap_to_collective() {
+        let topo = Topology::paper(32, 8);
+        let layer = 1e9;
+        let ring = layer_op_time(false, layer, &topo);
+        let p2p = layer_op_time(true, layer, &topo);
+        let hier = hierarchical_layer_op_time(layer, &topo);
+        assert!(hier < p2p, "hierarchical {hier} should beat flat p2p {p2p}");
+        assert!(hier < 2.0 * ring, "hierarchical should be within 2x of the ring");
+    }
+
+    #[test]
+    fn hierarchical_single_node_identical_to_p2p() {
+        assert_eq!(odc_hierarchical(8, 8, K), odc_p2p(8, 8, K));
+    }
+
+    #[test]
+    fn hybrid_removes_inter_traffic() {
+        let topo = Topology::paper(32, 8);
+        let layer = 1e9;
+        let h = hybrid_layer_op_time(layer, &topo);
+        let full_odc = layer_op_time(true, layer, &topo);
+        assert!(h < full_odc, "hybrid should beat full-shard ODC cross-node");
+    }
+}

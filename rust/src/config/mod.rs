@@ -1,0 +1,269 @@
+//! Experiment configuration: typed configs, paper presets, JSON I/O.
+//!
+//! Every paper experiment cell (model × dataset × devices × minibatch ×
+//! method) is expressible as an [`ExperimentConfig`]; `presets` holds the
+//! golden setting (Table 1) and the grids behind Tables 3–6 / Figs 8–12.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Paper evaluation models (DeepSeek-R1-Distill-Qwen family shapes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PaperModel {
+    M1_5B,
+    M7B,
+    M14B,
+    M32B,
+}
+
+impl PaperModel {
+    pub fn all() -> [PaperModel; 4] {
+        [PaperModel::M1_5B, PaperModel::M7B, PaperModel::M14B, PaperModel::M32B]
+    }
+
+    /// (layers, hidden, params) of the underlying Qwen2.5 shapes.
+    pub fn shape(self) -> (usize, usize, f64) {
+        match self {
+            PaperModel::M1_5B => (28, 1536, 1.54e9),
+            PaperModel::M7B => (28, 3584, 7.62e9),
+            PaperModel::M14B => (48, 5120, 14.77e9),
+            PaperModel::M32B => (64, 5120, 32.76e9),
+        }
+    }
+
+    pub fn layers(self) -> usize {
+        self.shape().0
+    }
+
+    pub fn hidden(self) -> usize {
+        self.shape().1
+    }
+
+    pub fn params(self) -> f64 {
+        self.shape().2
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "1.5b" | "1_5b" | "m1_5b" => Some(PaperModel::M1_5B),
+            "7b" | "m7b" => Some(PaperModel::M7B),
+            "14b" | "m14b" => Some(PaperModel::M14B),
+            "32b" | "m32b" => Some(PaperModel::M32B),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PaperModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PaperModel::M1_5B => "1.5B",
+            PaperModel::M7B => "7B",
+            PaperModel::M14B => "14B",
+            PaperModel::M32B => "32B",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Evaluation datasets (Fig 7 distributions; synthetic fits in `data`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    LongAlign,
+    SweSmith,
+    Aime,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "longalign" => Some(Dataset::LongAlign),
+            "swesmith" | "swe-smith" => Some(Dataset::SweSmith),
+            "aime" => Some(Dataset::Aime),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dataset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dataset::LongAlign => "LongAlign",
+            Dataset::SweSmith => "SWE-Smith",
+            Dataset::Aime => "AIME",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Communication scheme under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CommScheme {
+    /// Baseline: ring all-gather / reduce-scatter, per-layer barriers.
+    Collective,
+    /// The paper's contribution: p2p gather / scatter-accumulate,
+    /// one barrier per minibatch.
+    Odc,
+}
+
+impl fmt::Display for CommScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", match self {
+            CommScheme::Collective => "Collective",
+            CommScheme::Odc => "ODC",
+        })
+    }
+}
+
+/// Load-balancing algorithm (§5.1 and Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Balancer {
+    /// Sort by length on each device, no packing (LongAlign-style).
+    LocalSort,
+    /// Microbatch-level packing, equal microbatch count per device.
+    LbMicro,
+    /// Minibatch-level balancing (ODC only): per-device microbatch count.
+    LbMini,
+    /// verl's native two-level partitioning (Listing 2) — RL baseline.
+    VerlNative,
+}
+
+impl fmt::Display for Balancer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", match self {
+            Balancer::LocalSort => "LocalSort",
+            Balancer::LbMicro => "LB-Micro",
+            Balancer::LbMini => "LB-Mini",
+            Balancer::VerlNative => "Native",
+        })
+    }
+}
+
+/// Parameter/gradient sharding extent (§6.1 Hybrid Sharding, ZeRO++-style).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sharding {
+    /// Parameters + grads + optimizer state sharded across ALL devices.
+    Full,
+    /// Params/grads sharded within a node; optimizer states across nodes.
+    Hybrid,
+}
+
+/// One experiment cell.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: PaperModel,
+    pub dataset: Dataset,
+    pub scheme: CommScheme,
+    pub balancer: Balancer,
+    pub sharding: Sharding,
+    /// Samples per minibatch PER DEVICE (paper's "minibatch size").
+    pub minibs: usize,
+    pub devices: usize,
+    pub devices_per_node: usize,
+    /// max tokens per microbatch = packing_ratio * max_seq_len.
+    pub packing_ratio: f64,
+    /// Maximum sequence length in the (possibly rescaled) dataset.
+    pub max_len: usize,
+    /// Minibatches to run per measurement.
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Golden setting of the parametric study (Table 1).
+    pub fn golden() -> Self {
+        ExperimentConfig {
+            model: PaperModel::M1_5B,
+            dataset: Dataset::LongAlign,
+            scheme: CommScheme::Odc,
+            balancer: Balancer::LbMicro,
+            sharding: Sharding::Full,
+            minibs: 4,
+            devices: 8,
+            devices_per_node: 8,
+            packing_ratio: 1.0,
+            max_len: 65536,
+            steps: 16,
+            seed: 0,
+        }
+    }
+
+    /// Devices used in the paper for a model scale (SFT experiments).
+    pub fn paper_devices(model: PaperModel) -> usize {
+        match model {
+            PaperModel::M1_5B | PaperModel::M7B => 8,
+            PaperModel::M14B => 16,
+            PaperModel::M32B => 32,
+        }
+    }
+
+    /// Token budget for one microbatch.
+    pub fn max_tokens_per_micro(&self) -> usize {
+        ((self.packing_ratio * self.max_len as f64).round() as usize).max(self.max_len)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} {} {} {} minibs={}", self.model, self.dataset, self.scheme, self.balancer, self.minibs)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.to_string())),
+            ("dataset", Json::str(self.dataset.to_string())),
+            ("scheme", Json::str(self.scheme.to_string())),
+            ("balancer", Json::str(self.balancer.to_string())),
+            ("minibs", Json::num(self.minibs as f64)),
+            ("devices", Json::num(self.devices as f64)),
+            ("devices_per_node", Json::num(self.devices_per_node as f64)),
+            ("packing_ratio", Json::num(self.packing_ratio)),
+            ("max_len", Json::num(self.max_len as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matches_table1() {
+        let g = ExperimentConfig::golden();
+        assert_eq!(g.model, PaperModel::M1_5B);
+        assert_eq!(g.dataset, Dataset::LongAlign);
+        assert_eq!(g.minibs, 4);
+        assert_eq!(g.devices, 8);
+        assert!((g.packing_ratio - 1.0).abs() < 1e-12);
+        assert_eq!(g.max_len, 65536);
+    }
+
+    #[test]
+    fn model_parse_roundtrip() {
+        for m in PaperModel::all() {
+            assert_eq!(PaperModel::parse(&m.to_string()), Some(m));
+        }
+    }
+
+    #[test]
+    fn paper_device_counts() {
+        assert_eq!(ExperimentConfig::paper_devices(PaperModel::M1_5B), 8);
+        assert_eq!(ExperimentConfig::paper_devices(PaperModel::M14B), 16);
+        assert_eq!(ExperimentConfig::paper_devices(PaperModel::M32B), 32);
+    }
+
+    #[test]
+    fn max_tokens_scales_with_ratio() {
+        let mut g = ExperimentConfig::golden();
+        assert_eq!(g.max_tokens_per_micro(), 65536);
+        g.packing_ratio = 2.0;
+        assert_eq!(g.max_tokens_per_micro(), 131072);
+    }
+
+    #[test]
+    fn config_json_has_fields() {
+        let j = ExperimentConfig::golden().to_json();
+        assert_eq!(j.get("devices").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("dataset").unwrap().as_str(), Some("LongAlign"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload + data substrates: sequence-length distributions (Fig 7) and
+//! a synthetic token corpus for the real training engine.
+
+pub mod corpus;
+pub mod distributions;
+
+pub use distributions::{sample_lengths, DistSpec};

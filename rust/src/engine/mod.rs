@@ -1,0 +1,14 @@
+//! The real FSDP training engine: one OS thread per device, sharded
+//! parameters/gradients/optimizer state, per-layer gathers, and the
+//! pluggable [`crate::comm::CommBackend`] deciding whether layer
+//! boundaries are barriers (Collective) or free-running (ODC).
+//!
+//! All model math executes through the PJRT artifacts (L2/L1); the
+//! engine owns only coordination + the sharded AdamW server step.
+
+pub mod memory;
+pub mod optimizer;
+pub mod packing;
+pub mod trainer;
+
+pub use trainer::{train, StepLog, TrainerConfig};

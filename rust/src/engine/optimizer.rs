@@ -1,0 +1,113 @@
+//! Sharded AdamW — the "server" half of the decentralized parameter
+//! server: each device applies the update only to the shard it owns.
+//!
+//! The default path is this vectorizable Rust loop (it IS the server-side
+//! op; the paper's daemon does the same on-GPU). The PJRT `adam_chunk`
+//! artifact implements the identical math; `trainer::TrainerConfig::
+//! pjrt_shard_ops` routes updates through it instead, and the unit tests
+//! + python tests pin the two together.
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.01 }
+    }
+}
+
+/// Per-shard Adam state.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u32,
+}
+
+impl AdamState {
+    pub fn new(len: usize) -> Self {
+        AdamState { m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    /// In-place AdamW step on `p` with gradient `g`.
+    pub fn step(&mut self, cfg: &AdamConfig, p: &mut [f32], g: &[f32]) {
+        assert_eq!(p.len(), g.len());
+        assert_eq!(p.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
+        let (b1, b2) = (cfg.beta1, cfg.beta2);
+        for i in 0..p.len() {
+            let gi = g[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * gi;
+            let v = b2 * self.v[i] + (1.0 - b2) * gi * gi;
+            self.m[i] = m;
+            self.v[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            p[i] -= cfg.lr * (mhat / (vhat.sqrt() + cfg.eps) + cfg.weight_decay * p[i]);
+        }
+    }
+
+    /// Bias corrections for the PJRT adam_chunk hparam vector.
+    pub fn bias_corrections(&self, cfg: &AdamConfig) -> (f32, f32) {
+        (1.0 - cfg.beta1.powi(self.t as i32), 1.0 - cfg.beta2.powi(self.t as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_formula() {
+        let cfg = AdamConfig { lr: 0.01, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.1 };
+        let mut st = AdamState::new(1);
+        let mut p = vec![1.0f32];
+        st.step(&cfg, &mut p, &[0.5]);
+        // t=1: m=0.05, v=0.00025 ; mhat=0.5, vhat=0.25
+        let want = 1.0 - 0.01 * (0.5 / (0.25f32.sqrt() + 1e-8) + 0.1 * 1.0);
+        assert!((p[0] - want).abs() < 1e-6, "{} vs {want}", p[0]);
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        // minimize f(x) = x² — Adam should get close to 0
+        let cfg = AdamConfig { lr: 0.05, weight_decay: 0.0, ..Default::default() };
+        let mut st = AdamState::new(1);
+        let mut p = vec![3.0f32];
+        for _ in 0..500 {
+            let g = 2.0 * p[0];
+            st.step(&cfg, &mut p, &[g]);
+        }
+        assert!(p[0].abs() < 0.05, "{}", p[0]);
+    }
+
+    #[test]
+    fn zero_grad_only_decays() {
+        let cfg = AdamConfig { lr: 0.1, weight_decay: 0.01, ..Default::default() };
+        let mut st = AdamState::new(2);
+        let mut p = vec![1.0f32, -2.0];
+        st.step(&cfg, &mut p, &[0.0, 0.0]);
+        assert!((p[0] - (1.0 - 0.1 * 0.01)).abs() < 1e-6);
+        assert!((p[1] - (-2.0 + 0.1 * 0.01 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_counter_advances() {
+        let cfg = AdamConfig::default();
+        let mut st = AdamState::new(1);
+        let mut p = vec![0.0f32];
+        st.step(&cfg, &mut p, &[1.0]);
+        st.step(&cfg, &mut p, &[1.0]);
+        assert_eq!(st.t, 2);
+        let (bc1, _) = st.bias_corrections(&cfg);
+        assert!((bc1 - (1.0 - 0.9f32.powi(2))).abs() < 1e-7);
+    }
+}

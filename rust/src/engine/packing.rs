@@ -1,0 +1,93 @@
+//! Microbatch materialization: packed samples → fixed-shape bucket
+//! arrays (tokens, segment ids, targets, loss mask) for the static-shape
+//! HLO artifacts. This is the runtime half of sequence packing (Krell et
+//! al. 2021): samples are concatenated, segment ids isolate attention,
+//! and padding carries segment id 0 with a zero loss mask.
+
+use crate::data::corpus::Sample;
+use anyhow::{anyhow, Result};
+
+/// A microbatch ready for the artifacts of bucket `seq`.
+#[derive(Clone, Debug)]
+pub struct PackedMicro {
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub seg: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Real (unpadded) token count.
+    pub real_tokens: usize,
+}
+
+/// Pack `samples` into the smallest bucket from `buckets` that fits.
+pub fn pack_micro(samples: &[&Sample], buckets: &[usize]) -> Result<PackedMicro> {
+    let total: usize = samples.iter().map(|s| s.len()).sum();
+    let seq = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= total)
+        .ok_or(anyhow!("microbatch of {total} tokens exceeds largest bucket {buckets:?}"))?;
+
+    let mut tokens = Vec::with_capacity(seq);
+    let mut seg = Vec::with_capacity(seq);
+    let mut targets = Vec::with_capacity(seq);
+    let mut mask = Vec::with_capacity(seq);
+    for (i, s) in samples.iter().enumerate() {
+        tokens.extend_from_slice(&s.tokens);
+        targets.extend_from_slice(&s.targets);
+        seg.extend(std::iter::repeat((i + 1) as i32).take(s.len()));
+        mask.extend(std::iter::repeat(1.0f32).take(s.len()));
+    }
+    let real_tokens = tokens.len();
+    tokens.resize(seq, 0);
+    targets.resize(seq, 0);
+    seg.resize(seq, 0); // padding segment: isolated, masked out
+    mask.resize(seq, 0.0);
+    Ok(PackedMicro { seq, tokens, seg, targets, mask, real_tokens })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Sample;
+
+    fn sample(len: usize, tok: i32) -> Sample {
+        Sample { tokens: vec![tok; len], targets: vec![tok + 1; len] }
+    }
+
+    #[test]
+    fn packs_two_samples_with_segments() {
+        let (a, b) = (sample(5, 1), sample(7, 2));
+        let p = pack_micro(&[&a, &b], &[16, 32]).unwrap();
+        assert_eq!(p.seq, 16);
+        assert_eq!(p.real_tokens, 12);
+        assert_eq!(&p.seg[..5], &[1; 5]);
+        assert_eq!(&p.seg[5..12], &[2; 7]);
+        assert_eq!(&p.seg[12..], &[0; 4]);
+        assert_eq!(&p.mask[..12], &[1.0; 12]);
+        assert_eq!(&p.mask[12..], &[0.0; 4]);
+        assert_eq!(p.tokens.len(), 16);
+        assert_eq!(p.targets[4], 2);
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let a = sample(20, 1);
+        let p = pack_micro(&[&a], &[16, 32, 64]).unwrap();
+        assert_eq!(p.seq, 32);
+    }
+
+    #[test]
+    fn errors_when_too_long() {
+        let a = sample(100, 1);
+        assert!(pack_micro(&[&a], &[16, 32]).is_err());
+    }
+
+    #[test]
+    fn exact_fit_no_padding() {
+        let a = sample(16, 3);
+        let p = pack_micro(&[&a], &[16]).unwrap();
+        assert_eq!(p.real_tokens, 16);
+        assert!(p.mask.iter().all(|&m| m == 1.0));
+    }
+}

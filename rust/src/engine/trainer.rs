@@ -1,0 +1,457 @@
+//! The FSDP trainer: one OS thread per device, PJRT compute, pluggable
+//! communication backend. This is the system the paper patches into
+//! FSDP, at small scale but with REAL math end to end:
+//!
+//! ```text
+//! per device, per minibatch:
+//!   for each local microbatch (collective: padded to the common count):
+//!     gather(embed) ─ gather(block l) … ─ block_fwd …   # forward
+//!     loss_head → dx
+//!     for l = L..1: gather(block l) ─ block_bwd ─ reduce_grad(l)
+//!     reduce_grad(embed)
+//!   end_minibatch          # ODC: the ONLY rendezvous
+//!   sharded AdamW on owned shards; republish; end_step
+//! ```
+//!
+//! Under `Collective`, every gather/reduce is a barrier (per-layer
+//! lockstep); under `Odc` devices free-run to `end_minibatch`, which is
+//! what lets LB-Mini give devices different microbatch counts.
+
+use crate::balance::cost::CostModel;
+use crate::balance::packers::{plan_run, Plan};
+use crate::comm::backend::{CommBackend, ParamStore};
+use crate::comm::{CollectiveComm, OdcComm};
+use crate::config::{Balancer, CommScheme};
+use crate::data::corpus::{make_dataset, BigramLm, Sample};
+use crate::data::distributions::DistSpec;
+use crate::engine::optimizer::{AdamConfig, AdamState};
+use crate::engine::packing::pack_micro;
+use crate::runtime::{ComputeService, Input, Manifest};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// artifacts/<preset> directory (run `make artifacts` first).
+    pub artifacts_dir: PathBuf,
+    pub world: usize,
+    pub scheme: CommScheme,
+    pub balancer: Balancer,
+    /// Samples per minibatch per device.
+    pub minibs: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub adam: AdamConfig,
+    /// Route grad-scaling + AdamW through the PJRT chunk kernels instead
+    /// of the native Rust loop (validation mode; slower).
+    pub pjrt_shard_ops: bool,
+    /// Sequence-length distribution (scaled into the bucket range).
+    pub len_sigma: f64,
+    /// Test/ablation hook: run these exact plans instead of planning.
+    /// Microbatch *composition* is semantically meaningful (packing
+    /// offsets select positional embeddings), so equivalence tests pin
+    /// the plan and vary only the communication scheme / world mapping.
+    pub plan_override: Option<Vec<Plan>>,
+}
+
+impl TrainerConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        TrainerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            world: 2,
+            scheme: CommScheme::Odc,
+            balancer: Balancer::LbMini,
+            minibs: 4,
+            steps: 4,
+            seed: 0,
+            adam: AdamConfig::default(),
+            pjrt_shard_ops: false,
+            len_sigma: 0.8,
+            plan_override: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    /// Mean per-token cross-entropy (nats).
+    pub loss: f64,
+    pub tokens: u64,
+    pub wall_s: f64,
+}
+
+#[derive(Debug)]
+pub struct TrainRun {
+    pub logs: Vec<StepLog>,
+    /// Final logical parameters per layer (0 = embed) — for equivalence
+    /// tests and checkpoint-style inspection.
+    pub final_params: Vec<Vec<f32>>,
+    pub scheme: CommScheme,
+}
+
+/// The plans `train` would generate for this config (same seeding path).
+/// Used by equivalence tests to pin microbatch composition across runs.
+pub fn plan_preview(cfg: &TrainerConfig) -> Result<Vec<Plan>> {
+    let man = Manifest::load(&cfg.artifacts_dir)?;
+    let max_bucket = *man.seq_buckets.iter().max().unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let spec =
+        DistSpec { median: max_bucket as f64 / 6.0, sigma: cfg.len_sigma, min_len: 4, max_len: max_bucket };
+    let n = cfg.steps * cfg.world * cfg.minibs;
+    let lens: Vec<usize> = (0..n).map(|_| spec.sample(&mut rng)).collect();
+    let cost = CostModel::from_dims(man.n_layers, man.d_model, man.total_params as f64);
+    let _ = rng.fork(7); // keep rng stream aligned with train()
+    let mut plan_rng = rng.fork(13);
+    Ok(plan_run(cfg.balancer, &lens, cfg.world, cfg.minibs, max_bucket, &cost, &mut plan_rng))
+}
+
+/// Train per the config; returns the loss curve and final parameters.
+pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
+    let man = Manifest::load(&cfg.artifacts_dir)?;
+    if cfg.scheme == CommScheme::Collective && cfg.balancer == Balancer::LbMini {
+        return Err(anyhow!("LB-Mini requires ODC (devices run unequal microbatch counts)"));
+    }
+    let host = ComputeService::start(&man)?;
+
+    // --- parameters ------------------------------------------------------
+    let layer_lens = man.layer_lens();
+    let params = Arc::new(ParamStore::new(&layer_lens, cfg.world));
+    for (l, p) in params.layers.iter().enumerate() {
+        p.init_from(&man.load_init(l)?);
+    }
+    let backend: Arc<dyn CommBackend> = match cfg.scheme {
+        CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
+        CommScheme::Odc => Arc::new(OdcComm::new(Arc::clone(&params), cfg.world)),
+    };
+
+    // --- data + plan -------------------------------------------------------
+    let max_bucket = *man.seq_buckets.iter().max().unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let spec = DistSpec {
+        median: max_bucket as f64 / 6.0,
+        sigma: cfg.len_sigma,
+        min_len: 4,
+        max_len: max_bucket,
+    };
+    let n = cfg.steps * cfg.world * cfg.minibs;
+    let lens: Vec<usize> = (0..n).map(|_| spec.sample(&mut rng)).collect();
+    let lm = BigramLm::new(man.vocab, 4, cfg.seed);
+    let mut data_rng = rng.fork(7);
+    let samples: Arc<Vec<Sample>> = Arc::new(make_dataset(&lm, &lens, &mut data_rng));
+
+    let cost = CostModel::from_dims(man.n_layers, man.d_model, man.total_params as f64);
+    let mut plan_rng = rng.fork(13);
+    let plans: Arc<Vec<Plan>> = Arc::new(match &cfg.plan_override {
+        Some(p) => p.clone(),
+        None => plan_run(cfg.balancer, &lens, cfg.world, cfg.minibs, max_bucket, &cost, &mut plan_rng),
+    });
+    if plans.len() != cfg.steps {
+        return Err(anyhow!("planned {} steps, expected {}", plans.len(), cfg.steps));
+    }
+    if plans.iter().any(|p| p.devices() != cfg.world) {
+        return Err(anyhow!("plan device count does not match world size"));
+    }
+
+    // --- shared step metrics ----------------------------------------------
+    let tok_count: Arc<Vec<AtomicU64>> = Arc::new((0..cfg.steps).map(|_| AtomicU64::new(0)).collect());
+    let loss_sum: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
+    let wall: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
+
+    // --- device threads ----------------------------------------------------
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for dev in 0..cfg.world {
+            let ctx = DeviceCtx {
+                dev,
+                cfg: cfg.clone(),
+                man: man.clone(),
+                svc: host.handle(),
+                backend: Arc::clone(&backend),
+                params: Arc::clone(&params),
+                plans: Arc::clone(&plans),
+                samples: Arc::clone(&samples),
+                tok_count: Arc::clone(&tok_count),
+                loss_sum: Arc::clone(&loss_sum),
+                wall: Arc::clone(&wall),
+            };
+            handles.push(s.spawn(move || device_main(ctx)));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("device thread panicked"))??;
+        }
+        Ok(())
+    })?;
+
+    // --- collect -----------------------------------------------------------
+    let logs = (0..cfg.steps)
+        .map(|step| {
+            let tokens = tok_count[step].load(Ordering::Relaxed);
+            StepLog {
+                step,
+                loss: *loss_sum[step].lock().unwrap() / tokens.max(1) as f64,
+                tokens,
+                wall_s: *wall[step].lock().unwrap(),
+            }
+        })
+        .collect();
+    let final_params = params
+        .layers
+        .iter()
+        .map(|p| {
+            let mut out = vec![0.0f32; p.logical_len];
+            p.read_logical(&mut out);
+            out
+        })
+        .collect();
+    Ok(TrainRun { logs, final_params, scheme: cfg.scheme })
+}
+
+struct DeviceCtx {
+    dev: usize,
+    cfg: TrainerConfig,
+    man: Manifest,
+    svc: ComputeService,
+    backend: Arc<dyn CommBackend>,
+    params: Arc<ParamStore>,
+    plans: Arc<Vec<Plan>>,
+    samples: Arc<Vec<Sample>>,
+    tok_count: Arc<Vec<AtomicU64>>,
+    loss_sum: Arc<Vec<Mutex<f64>>>,
+    wall: Arc<Vec<Mutex<f64>>>,
+}
+
+fn device_main(ctx: DeviceCtx) -> Result<()> {
+    let man = &ctx.man;
+    let dev = ctx.dev;
+    let n_layers = man.n_layers;
+    let embed_pad = ctx.params.layers[0].padded_len();
+    let block_pad = ctx.params.layers[1].padded_len();
+
+    // reusable buffers
+    let mut emb_buf = vec![0.0f32; embed_pad];
+    let mut flat_buf = vec![0.0f32; block_pad];
+    let mut grad_pad = vec![0.0f32; embed_pad.max(block_pad)];
+
+    // local master copy of owned shards + Adam state
+    let mut shards: Vec<Vec<f32>> = ctx
+        .params
+        .layers
+        .iter()
+        .map(|p| {
+            let r = p.shard_range(dev);
+            let mut v = vec![0.0f32; r.len()];
+            p.buf.read(r.start, &mut v);
+            v
+        })
+        .collect();
+    let mut adam: Vec<AdamState> = shards.iter().map(|s| AdamState::new(s.len())).collect();
+    let mut gshard = vec![0.0f32; ctx.params.layers.iter().map(|p| p.shard_len).max().unwrap()];
+
+    for (step, plan) in ctx.plans.iter().enumerate() {
+        let t0 = Instant::now();
+        let my = &plan.micro[dev];
+        // Collective needs lockstep over the common (padded) count.
+        let m_count = match ctx.cfg.scheme {
+            CommScheme::Collective => plan.max_micro_count(),
+            CommScheme::Odc => my.len(),
+        };
+
+        for m in 0..m_count {
+            let micro = my.get(m).map(|v| v.as_slice()).unwrap_or(&[]);
+            if micro.is_empty() {
+                idle_participation(&ctx, n_layers, &mut emb_buf, &mut flat_buf, &mut grad_pad)?;
+                continue;
+            }
+            run_microbatch(&ctx, step, micro, &mut emb_buf, &mut flat_buf, &mut grad_pad)?;
+        }
+
+        ctx.backend.end_minibatch(dev);
+
+        // ---- server role: sharded AdamW on owned shards ----
+        let ntok = ctx.tok_count[step].load(Ordering::SeqCst).max(1) as f32;
+        for l in 0..=n_layers {
+            let p = &ctx.params.layers[l];
+            let g = &mut gshard[..p.shard_len];
+            ctx.backend.take_grad_shard(dev, l, g);
+            if ctx.cfg.pjrt_shard_ops {
+                pjrt_adam_step(&ctx, l, &mut shards[l], g, &mut adam[l], ntok)?;
+            } else {
+                for x in g.iter_mut() {
+                    *x /= ntok;
+                }
+                adam[l].step(&ctx.cfg.adam, &mut shards[l], g);
+            }
+            let r = p.shard_range(dev);
+            p.buf.write(r.start, &shards[l]);
+        }
+        ctx.backend.end_step(dev);
+        if dev == 0 {
+            *ctx.wall[step].lock().unwrap() = t0.elapsed().as_secs_f64();
+        }
+    }
+    Ok(())
+}
+
+/// Forward + backward of one packed microbatch through PJRT.
+fn run_microbatch(
+    ctx: &DeviceCtx,
+    step: usize,
+    micro: &[usize],
+    emb_buf: &mut [f32],
+    flat_buf: &mut [f32],
+    grad_pad: &mut [f32],
+) -> Result<()> {
+    let man = &ctx.man;
+    let dev = ctx.dev;
+    let n_layers = man.n_layers;
+    let refs: Vec<&Sample> = micro.iter().map(|&i| &ctx.samples[i]).collect();
+    let packed = pack_micro(&refs, &man.seq_buckets)?;
+    let s = packed.seq;
+    ctx.tok_count[step].fetch_add(packed.real_tokens as u64, Ordering::SeqCst);
+
+    // ---- forward ----
+    ctx.backend.gather_params(dev, 0, emb_buf);
+    let emb = &emb_buf[..man.embed_params];
+    let mut out = ctx.svc.call(
+        &format!("embed_fwd_s{s}"),
+        vec![Input::F32(emb.to_vec()), Input::I32(packed.tokens.clone())],
+    )?;
+    let mut x = out.swap_remove(0);
+
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for l in 1..=n_layers {
+        ctx.backend.gather_params(dev, l, flat_buf);
+        let flat = &flat_buf[..man.block_params];
+        let mut out = ctx.svc.call(
+            &format!("block_fwd_s{s}"),
+            vec![Input::F32(flat.to_vec()), Input::F32(x.clone()), Input::I32(packed.seg.clone())],
+        )?;
+        acts.push(std::mem::replace(&mut x, out.swap_remove(0)));
+    }
+
+    let out = ctx.svc.call(
+        &format!("loss_head_s{s}"),
+        vec![
+            Input::F32(emb.to_vec()),
+            Input::F32(x.clone()),
+            Input::I32(packed.targets.clone()),
+            Input::F32(packed.mask.clone()),
+        ],
+    )?;
+    let (loss_sum, _ntok, mut dx, demb_head) =
+        (out[0][0] as f64, out[1][0] as f64, out[2].clone(), out[3].clone());
+    *ctx.loss_sum[step].lock().unwrap() += loss_sum;
+
+    // ---- backward (recompute per layer from saved inputs) ----
+    for l in (1..=n_layers).rev() {
+        ctx.backend.gather_params(dev, l, flat_buf);
+        let flat = &flat_buf[..man.block_params];
+        let out = ctx.svc.call(
+            &format!("block_bwd_s{s}"),
+            vec![
+                Input::F32(flat.to_vec()),
+                Input::F32(acts[l - 1].clone()),
+                Input::I32(packed.seg.clone()),
+                Input::F32(dx),
+            ],
+        )?;
+        dx = out[0].clone();
+        let p = &ctx.params.layers[l];
+        let gp = &mut grad_pad[..p.padded_len()];
+        gp[..man.block_params].copy_from_slice(&out[1]);
+        gp[man.block_params..].fill(0.0);
+        ctx.backend.reduce_grad(dev, l, gp, 1.0);
+    }
+
+    // embedding gradient: head (tied weights) + input scatter-add
+    let out = ctx.svc.call(
+        &format!("embed_bwd_s{s}"),
+        vec![Input::I32(packed.tokens.clone()), Input::F32(dx)],
+    )?;
+    let p = &ctx.params.layers[0];
+    let gp = &mut grad_pad[..p.padded_len()];
+    for (i, slot) in gp[..man.embed_params].iter_mut().enumerate() {
+        *slot = demb_head[i] + out[0][i];
+    }
+    gp[man.embed_params..].fill(0.0);
+    ctx.backend.reduce_grad(dev, 0, gp, 1.0);
+    Ok(())
+}
+
+/// A padded empty slot under Collective: the device must join exactly the
+/// same barrier sequence as a real microbatch — gathers in forward, then
+/// gather+reduce per layer in backward, then the embed reduce — with a
+/// zero-weight contribution. Under ODC this is a no-op by construction.
+fn idle_participation(
+    ctx: &DeviceCtx,
+    n_layers: usize,
+    emb_buf: &mut [f32],
+    flat_buf: &mut [f32],
+    grad_pad: &mut [f32],
+) -> Result<()> {
+    if matches!(ctx.cfg.scheme, CommScheme::Odc) {
+        return Ok(());
+    }
+    let dev = ctx.dev;
+    ctx.backend.gather_params(dev, 0, emb_buf);
+    for l in 1..=n_layers {
+        ctx.backend.gather_params(dev, l, flat_buf);
+    }
+    for l in (1..=n_layers).rev() {
+        ctx.backend.gather_params(dev, l, flat_buf);
+        let p = &ctx.params.layers[l];
+        grad_pad[..p.padded_len()].fill(0.0);
+        ctx.backend.reduce_grad(dev, l, &grad_pad[..p.padded_len()], 0.0);
+    }
+    let p = &ctx.params.layers[0];
+    grad_pad[..p.padded_len()].fill(0.0);
+    ctx.backend.reduce_grad(dev, 0, &grad_pad[..p.padded_len()], 0.0);
+    Ok(())
+}
+
+/// Validation path: scale + AdamW through the PJRT chunk kernels
+/// (`accum_chunk` is exercised by the scatter-accumulate tests; here we
+/// run `adam_chunk` over the shard in fixed-size chunks).
+fn pjrt_adam_step(
+    ctx: &DeviceCtx,
+    _layer: usize,
+    p: &mut [f32],
+    g: &mut [f32],
+    st: &mut AdamState,
+    ntok: f32,
+) -> Result<()> {
+    for x in g.iter_mut() {
+        *x /= ntok;
+    }
+    st.t += 1;
+    let (bc1, bc2) = st.bias_corrections(&ctx.cfg.adam);
+    let a = &ctx.cfg.adam;
+    let hp = vec![a.lr, a.beta1, a.beta2, a.eps, a.weight_decay, bc1, bc2];
+    let c = ctx.man.chunk;
+    let mut off = 0;
+    while off < p.len() {
+        let n = c.min(p.len() - off);
+        let mut pc = vec![0.0f32; c];
+        let mut mc = vec![0.0f32; c];
+        let mut vc = vec![0.0f32; c];
+        let mut gc = vec![0.0f32; c];
+        pc[..n].copy_from_slice(&p[off..off + n]);
+        mc[..n].copy_from_slice(&st.m[off..off + n]);
+        vc[..n].copy_from_slice(&st.v[off..off + n]);
+        gc[..n].copy_from_slice(&g[off..off + n]);
+        let out = ctx.svc.call(
+            "adam_chunk",
+            vec![Input::F32(pc), Input::F32(mc), Input::F32(vc), Input::F32(gc), Input::F32(hp.clone())],
+        )?;
+        p[off..off + n].copy_from_slice(&out[0][..n]);
+        st.m[off..off + n].copy_from_slice(&out[1][..n]);
+        st.v[off..off + n].copy_from_slice(&out[2][..n]);
+        off += n;
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! # ODC — On-Demand Communication for LLM post-training
+//!
+//! Reproduction of *"Revisiting Parameter Server in LLM Post-Training"*
+//! (CS.DC 2026) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: an FSDP
+//!   training engine whose per-layer communication is pluggable between
+//!   `Collective` (all-gather / reduce-scatter, per-layer barriers) and
+//!   `Odc` (point-to-point gather / scatter-accumulate, one barrier per
+//!   minibatch), the load-balancing algorithms (LocalSort, LB-Micro,
+//!   LB-Mini, Verl variants), and a discrete-event cluster simulator that
+//!   regenerates every table and figure of the paper at testbed scale.
+//! * **L2** — the JAX transformer (`python/compile/model.py`), AOT-lowered
+//!   once to HLO text and executed from Rust via PJRT.
+//! * **L1** — the Pallas flash-attention + shard-op kernels
+//!   (`python/compile/kernels/`), verified against pure-jnp oracles.
+//!
+//! Python never runs on the training hot path.
+
+pub mod balance;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,165 @@
+//! `odc` — launcher CLI for the ODC reproduction.
+//!
+//! Subcommands:
+//!   sim      — simulate one experiment cell (paper-scale testbed)
+//!   train    — REAL FSDP training through PJRT (needs `make artifacts`)
+//!   dist     — print dataset length-distribution summaries (Fig 7)
+//!   memory   — full vs hybrid sharding memory model (Fig 13)
+//!
+//! Examples:
+//!   odc sim --model 7b --dataset longalign --scheme odc --balancer lb-mini --minibs 4
+//!   odc train --preset small --world 4 --steps 40
+//!   odc dist
+
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use odc::engine::trainer::{train, TrainerConfig};
+use odc::sim::run::{simulate, SimConfig};
+use odc::util::cli::Cli;
+use std::path::Path;
+
+fn parse_scheme(s: &str) -> anyhow::Result<CommScheme> {
+    match s {
+        "odc" => Ok(CommScheme::Odc),
+        "collective" => Ok(CommScheme::Collective),
+        other => anyhow::bail!("unknown scheme `{other}` (odc|collective)"),
+    }
+}
+
+fn parse_balancer(s: &str) -> anyhow::Result<Balancer> {
+    match s {
+        "local-sort" => Ok(Balancer::LocalSort),
+        "lb-micro" => Ok(Balancer::LbMicro),
+        "lb-mini" => Ok(Balancer::LbMini),
+        "native" => Ok(Balancer::VerlNative),
+        other => anyhow::bail!("unknown balancer `{other}`"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    odc::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = argv.get(1..).unwrap_or(&[]).to_vec();
+
+    match sub {
+        "sim" => {
+            let cli = Cli::new("odc sim", "simulate one experiment cell")
+                .opt("model", "1.5b", "1.5b | 7b | 14b | 32b")
+                .opt("dataset", "longalign", "longalign | swesmith | aime")
+                .opt("scheme", "odc", "odc | collective")
+                .opt("balancer", "lb-micro", "local-sort | lb-micro | lb-mini | native")
+                .opt("minibs", "4", "samples per minibatch per device")
+                .opt("devices", "8", "device count")
+                .opt("packing-ratio", "1.0", "microbatch budget / max len")
+                .opt("max-len", "0", "override max sequence length (0 = dataset default)")
+                .opt("steps", "16", "minibatches to simulate")
+                .opt("seed", "0", "rng seed")
+                .flag("hybrid", "ZeRO++-style hybrid sharding");
+            let a = match cli.parse_from(&rest) {
+                Ok(a) => a,
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    std::process::exit(2);
+                }
+            };
+            let dataset = Dataset::parse(a.get("dataset")).ok_or(anyhow::anyhow!("bad dataset"))?;
+            let max_len = match a.usize("max-len") {
+                0 => match dataset {
+                    Dataset::LongAlign => 65_536,
+                    Dataset::SweSmith => 32_768,
+                    Dataset::Aime => 16_384,
+                },
+                x => x,
+            };
+            let exp = ExperimentConfig {
+                model: PaperModel::parse(a.get("model")).ok_or(anyhow::anyhow!("bad model"))?,
+                dataset,
+                scheme: parse_scheme(a.get("scheme"))?,
+                balancer: parse_balancer(a.get("balancer"))?,
+                sharding: if a.flag("hybrid") { Sharding::Hybrid } else { Sharding::Full },
+                minibs: a.usize("minibs"),
+                devices: a.usize("devices"),
+                devices_per_node: 8,
+                packing_ratio: a.f64("packing-ratio"),
+                max_len,
+                steps: a.usize("steps"),
+                seed: a.u64("seed"),
+            };
+            let r = simulate(&SimConfig::new(exp));
+            println!("{}", r.label);
+            println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
+            println!("  bubble rate      : {:.2}%", 100.0 * r.bubble_rate);
+            println!(
+                "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
+                r.mean_minibatch_s, r.minibatches, r.samples
+            );
+        }
+        "train" => {
+            let cli = Cli::new("odc train", "real FSDP training through PJRT")
+                .opt("preset", "small", "artifact preset under artifacts/")
+                .opt("world", "4", "device threads")
+                .opt("minibs", "4", "samples per device per minibatch")
+                .opt("steps", "40", "optimizer steps")
+                .opt("scheme", "odc", "odc | collective")
+                .opt("balancer", "lb-mini", "local-sort | lb-micro | lb-mini")
+                .opt("lr", "0.003", "AdamW lr")
+                .opt("seed", "0", "rng seed")
+                .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
+            let a = match cli.parse_from(&rest) {
+                Ok(a) => a,
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    std::process::exit(2);
+                }
+            };
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(a.get("preset"));
+            anyhow::ensure!(dir.join("manifest.json").exists(), "no artifacts at {dir:?}; run `make artifacts`");
+            let mut cfg = TrainerConfig::new(dir);
+            cfg.world = a.usize("world");
+            cfg.minibs = a.usize("minibs");
+            cfg.steps = a.usize("steps");
+            cfg.scheme = parse_scheme(a.get("scheme"))?;
+            cfg.balancer = parse_balancer(a.get("balancer"))?;
+            cfg.adam.lr = a.f64("lr") as f32;
+            cfg.seed = a.u64("seed");
+            cfg.pjrt_shard_ops = a.flag("pjrt-shard-ops");
+            let run = train(&cfg)?;
+            for log in &run.logs {
+                println!(
+                    "step {:>4}  loss {:>8.4}  tokens {:>8}  wall {:>7.3}s",
+                    log.step, log.loss, log.tokens, log.wall_s
+                );
+            }
+        }
+        "dist" => {
+            use odc::data::distributions::{sample_lengths, summarize};
+            use odc::util::rng::Rng;
+            for ds in [Dataset::LongAlign, Dataset::SweSmith, Dataset::Aime] {
+                let mut rng = Rng::new(7);
+                let lens = sample_lengths(ds, None, 20_000, &mut rng);
+                let (p50, p90, p99, max, mean) = summarize(&lens);
+                println!("{ds:<10} p50={p50:<7.0} p90={p90:<7.0} p99={p99:<7.0} max={max:<7} mean={mean:.0}");
+            }
+        }
+        "memory" => {
+            use odc::engine::memory::{full_sharding, hybrid_sharding, MemoryInputs};
+            for model in PaperModel::all() {
+                let (layers, hidden, params) = model.shape();
+                let devices = ExperimentConfig::paper_devices(model);
+                let m = MemoryInputs { params, devices, devices_per_node: 8, hidden, layers, micro_tokens: 8192 };
+                println!(
+                    "{model:<5} {devices:>2} devices: full {:>6.1} GiB | hybrid {:>6.1} GiB",
+                    full_sharding(&m).gib(),
+                    hybrid_sharding(&m).gib()
+                );
+            }
+        }
+        _ => {
+            println!("odc {} — Revisiting Parameter Server in LLM Post-Training", odc::version());
+            println!("\nsubcommands: sim | train | dist | memory");
+            println!("try: odc sim --help, odc train --help");
+            println!("benches (one per paper table/figure): cargo bench");
+        }
+    }
+    Ok(())
+}

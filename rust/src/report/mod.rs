@@ -1,0 +1,113 @@
+//! Report emitters: render experiment results as the markdown tables /
+//! CSV series mirroring the paper's tables and figures.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned markdown table builder.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let emit = |out: &mut String, cells: &[String]| {
+            out.push('|');
+            for i in 0..ncol {
+                let _ = write!(out, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.headers);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            emit(&mut out, row);
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a throughput delta the way the paper's tables do: "(+36%)".
+pub fn pct_delta(ours: f64, baseline: f64) -> String {
+    let pct = (ours / baseline - 1.0) * 100.0;
+    format!("({}{:.0}%)", if pct >= 0.0 { "+" } else { "" }, pct)
+}
+
+/// An ASCII sparkline-style histogram for Fig 7 style distribution plots.
+pub fn ascii_hist(counts: &[usize], width: usize) -> String {
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    counts
+        .iter()
+        .map(|&c| {
+            let n = (c * width).div_ceil(max);
+            format!("{} {}", "#".repeat(n), c)
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = Table::new(&["method", "val"]);
+        t.row(vec!["ODC".into(), "1.0".into()]);
+        t.row(vec!["Collective".into(), "0.8".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| method     | val |"));
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn pct_delta_formats() {
+        assert_eq!(pct_delta(1.36, 1.0), "(+36%)");
+        assert_eq!(pct_delta(0.95, 1.0), "(-5%)");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (shapes, dtypes, file names, initial parameters).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub block_params: usize,
+    pub embed_params: usize,
+    pub total_params: usize,
+    pub seq_buckets: Vec<usize>,
+    pub chunk: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub init_embed: PathBuf,
+    pub init_blocks: Vec<PathBuf>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let name = j.req("name")?.as_str().ok_or(anyhow!("bad name"))?.to_string();
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .ok_or(anyhow!("bad shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or(anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.req("dtype")?.as_str() {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => return Err(anyhow!("unsupported dtype {other:?}")),
+    };
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    /// Load `artifacts/<preset>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let m = j.req("model").map_err(|e| anyhow!("{e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            m.req(k).map_err(|e| anyhow!("{e}"))?.as_usize().ok_or(anyhow!("model.{k} not a number"))
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.req("artifacts").map_err(|e| anyhow!("{e}"))?.as_obj().ok_or(anyhow!("artifacts not an object"))? {
+            let file = v.req("file").map_err(|e| anyhow!("{e}"))?.as_str().ok_or(anyhow!("bad file"))?.to_string();
+            let inputs = v.req("inputs").map_err(|e| anyhow!("{e}"))?.as_arr().unwrap_or(&[]).iter().map(tensor_spec).collect::<Result<Vec<_>>>()?;
+            let outputs = v.req("outputs").map_err(|e| anyhow!("{e}"))?.as_arr().unwrap_or(&[]).iter().map(tensor_spec).collect::<Result<Vec<_>>>()?;
+            artifacts.insert(k.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+
+        let init = j.req("init").map_err(|e| anyhow!("{e}"))?;
+        let init_embed = dir.join(init.req("embed").map_err(|e| anyhow!("{e}"))?.as_str().ok_or(anyhow!("bad init.embed"))?);
+        let init_blocks = init
+            .req("blocks")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or(anyhow!("bad init.blocks"))?
+            .iter()
+            .map(|b| Ok(dir.join(b.as_str().ok_or(anyhow!("bad block path"))?)))
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            preset: j.req("preset").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("?").to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            n_layers: get("n_layers")?,
+            max_seq: get("max_seq")?,
+            block_params: get("block_params")?,
+            embed_params: get("embed_params")?,
+            total_params: get("total_params")?,
+            seq_buckets: j
+                .req("seq_buckets")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .ok_or(anyhow!("bad seq_buckets"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or(anyhow!("bad bucket")))
+                .collect::<Result<Vec<_>>>()?,
+            chunk: j.req("chunk").map_err(|e| anyhow!("{e}"))?.as_usize().ok_or(anyhow!("bad chunk"))?,
+            artifacts,
+            init_embed,
+            init_blocks,
+            dir,
+        })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(key).ok_or(anyhow!("artifact `{key}` not in manifest"))
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(key)?.file))
+    }
+
+    /// Smallest bucket that fits `tokens`; errors if none.
+    pub fn bucket_for(&self, tokens: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .find(|&s| s >= tokens)
+            .ok_or(anyhow!("{tokens} tokens exceed the largest bucket {:?}", self.seq_buckets))
+    }
+
+    /// Load raw f32-LE initial parameters for layer (0 = embed).
+    pub fn load_init(&self, layer: usize) -> Result<Vec<f32>> {
+        let (path, want) = if layer == 0 {
+            (&self.init_embed, self.embed_params)
+        } else {
+            (&self.init_blocks[layer - 1], self.block_params)
+        };
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != want * 4 {
+            return Err(anyhow!("{path:?}: expected {} bytes, got {}", want * 4, bytes.len()));
+        }
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Flat lengths of every layer (0 = embed, 1..=L = blocks).
+    pub fn layer_lens(&self) -> Vec<usize> {
+        let mut v = vec![self.embed_params];
+        v.extend(std::iter::repeat(self.block_params).take(self.n_layers));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+    }
+
+    fn have_artifacts() -> bool {
+        tiny_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.d_model, 64);
+        assert_eq!(m.n_layers, 2);
+        assert_eq!(m.layer_lens().len(), 3);
+        assert!(m.artifacts.contains_key("block_fwd_s32"));
+        assert_eq!(m.bucket_for(30).unwrap(), 32);
+        assert_eq!(m.bucket_for(33).unwrap(), 64);
+        assert!(m.bucket_for(1000).is_err());
+    }
+
+    #[test]
+    fn init_sizes_match() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert_eq!(m.load_init(0).unwrap().len(), m.embed_params);
+        assert_eq!(m.load_init(1).unwrap().len(), m.block_params);
+    }
+
+    #[test]
+    fn io_specs_parse() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        let bf = m.artifact("block_fwd_s32").unwrap();
+        assert_eq!(bf.inputs.len(), 3);
+        assert_eq!(bf.inputs[2].dtype, DType::I32);
+        assert_eq!(bf.outputs[0].shape, vec![32, 64]);
+    }
+}

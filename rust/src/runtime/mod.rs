@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them
+//! from the Rust hot path. Python is never involved at runtime.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (thread-bound), while
+//! the FSDP engine runs one OS thread per device. [`service`] therefore
+//! hosts the PJRT client + compiled executables on a dedicated *compute
+//! service* thread — the analogue of a GPU's single in-order stream —
+//! and device threads submit execute requests over a channel.
+
+pub mod manifest;
+pub mod service;
+
+pub use manifest::Manifest;
+pub use service::{ComputeService, Input};

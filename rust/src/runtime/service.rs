@@ -1,0 +1,229 @@
+//! The compute service: a dedicated thread owning the PJRT CPU client
+//! and one compiled executable per artifact; device threads submit
+//! execute requests over an mpsc channel and block on the reply.
+//!
+//! Rationale: the `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` are
+//! `Rc`-backed and must stay on one thread. Funneling execution through
+//! a single in-order service also mirrors how a real accelerator
+//! serializes kernel launches on a stream; on this single-core testbed
+//! it costs nothing.
+//!
+//! Input/output payloads cross the channel as plain `Vec<f32>`/`Vec<i32>`
+//! (Literals are also thread-bound); the service builds literals, runs
+//! the executable, and decomposes the tuple reply.
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+/// One tensor argument.
+#[derive(Clone, Debug)]
+pub enum Input {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Input {
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+        }
+    }
+}
+
+struct Request {
+    artifact: String,
+    inputs: Vec<Input>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Msg {
+    Call(Request),
+    Shutdown,
+}
+
+/// Handle to the compute service; cheap to clone, one per device thread.
+#[derive(Clone)]
+pub struct ComputeService {
+    tx: mpsc::Sender<Msg>,
+}
+
+/// Keeps the service thread alive; dropping it shuts the service down.
+pub struct ServiceHost {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHost {
+    pub fn handle(&self) -> ComputeService {
+        ComputeService { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ServiceHost {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ComputeService {
+    /// Start the service for a manifest: loads + compiles EVERY artifact
+    /// once (AOT), then serves calls until the host is dropped.
+    pub fn start(manifest: &Manifest) -> Result<ServiceHost> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let man = manifest.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(man, rx, ready_tx))
+            .context("spawning pjrt service")?;
+        ready_rx.recv().map_err(|_| anyhow!("service thread died during startup"))??;
+        Ok(ServiceHost { tx, join: Some(join) })
+    }
+
+    /// Execute `artifact` with `inputs`; returns all outputs as f32 vecs.
+    pub fn call(&self, artifact: &str, inputs: Vec<Input>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Call(Request { artifact: artifact.to_string(), inputs, reply }))
+            .map_err(|_| anyhow!("compute service is down"))?;
+        rrx.recv().map_err(|_| anyhow!("compute service dropped the request"))?
+    }
+}
+
+fn service_main(man: Manifest, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let setup = || -> Result<(xla::PjRtClient, BTreeMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = BTreeMap::new();
+        for (key, spec) in &man.artifacts {
+            let path = man.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+            exes.insert(key.clone(), (spec.clone(), exe));
+        }
+        Ok((client, exes))
+    };
+    let (client, exes) = match setup() {
+        Ok(x) => {
+            let _ = ready.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => return,
+            Msg::Call(req) => {
+                let result = run_one(&client, &exes, &req);
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    exes: &BTreeMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
+    req: &Request,
+) -> Result<Vec<Vec<f32>>> {
+    let (spec, exe) = exes.get(&req.artifact).ok_or(anyhow!("unknown artifact `{}`", req.artifact))?;
+    if req.inputs.len() != spec.inputs.len() {
+        return Err(anyhow!("{}: expected {} inputs, got {}", req.artifact, spec.inputs.len(), req.inputs.len()));
+    }
+    // §Perf + leak avoidance: host data goes straight to device buffers
+    // (`buffer_from_host_buffer`) and runs through `execute_b`. The
+    // published crate's literal-based `execute` shim `release()`s every
+    // input device buffer without freeing it — a ~50 MB/microbatch leak
+    // at engine scale (see EXPERIMENTS.md §Perf) — and pays an extra
+    // host copy through the intermediate Literal.
+    let mut input_bufs = Vec::with_capacity(req.inputs.len());
+    for (ts, input) in spec.inputs.iter().zip(&req.inputs) {
+        if ts.elems() != input.len() {
+            return Err(anyhow!("{}: input `{}` expects {} elems, got {}", req.artifact, ts.name, ts.elems(), input.len()));
+        }
+        let buf = match (input, &ts.dtype) {
+            (Input::F32(v), DType::F32) => client.buffer_from_host_buffer::<f32>(v, &ts.shape, None),
+            (Input::I32(v), DType::I32) => client.buffer_from_host_buffer::<i32>(v, &ts.shape, None),
+            _ => return Err(anyhow!("{}: input `{}` dtype mismatch", req.artifact, ts.name)),
+        }
+        .map_err(|e| anyhow!("{}: uploading `{}`: {e:?}", req.artifact, ts.name))?;
+        input_bufs.push(buf);
+    }
+    let bufs = exe.execute_b::<xla::PjRtBuffer>(&input_bufs).map_err(|e| anyhow!("executing {}: {e:?}", req.artifact))?;
+    let tuple = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+    let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+    if parts.len() != spec.outputs.len() {
+        return Err(anyhow!("{}: expected {} outputs, got {}", req.artifact, spec.outputs.len(), parts.len()));
+    }
+    parts
+        .into_iter()
+        .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn embed_fwd_executes_with_correct_shapes() {
+        let Some(man) = tiny() else { return };
+        let host = ComputeService::start(&man).unwrap();
+        let svc = host.handle();
+        let s = man.seq_buckets[0];
+        let emb = man.load_init(0).unwrap();
+        let tokens = vec![1i32; s];
+        let out = svc.call(&format!("embed_fwd_s{s}"), vec![Input::F32(emb), Input::I32(tokens)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), s * man.d_model);
+        assert!(out[0].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn accum_chunk_matches_cpu() {
+        let Some(man) = tiny() else { return };
+        let host = ComputeService::start(&man).unwrap();
+        let svc = host.handle();
+        let c = man.chunk;
+        let acc = vec![1.0f32; c];
+        let g: Vec<f32> = (0..c).map(|i| (i % 7) as f32).collect();
+        let out = svc
+            .call("accum_chunk", vec![Input::F32(acc.clone()), Input::F32(g.clone()), Input::F32(vec![0.5])])
+            .unwrap();
+        for i in 0..c {
+            assert!((out[0][i] - (acc[i] + 0.5 * g[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn input_arity_and_shape_errors() {
+        let Some(man) = tiny() else { return };
+        let host = ComputeService::start(&man).unwrap();
+        let svc = host.handle();
+        assert!(svc.call("accum_chunk", vec![]).is_err());
+        assert!(svc.call("nope", vec![]).is_err());
+        let bad = svc.call("accum_chunk", vec![Input::F32(vec![0.0; 3]), Input::F32(vec![0.0; 3]), Input::F32(vec![0.5])]);
+        assert!(bad.is_err());
+    }
+}

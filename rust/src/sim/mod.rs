@@ -1,0 +1,22 @@
+//! Testbed-scale simulator: regenerates the paper's evaluation numbers
+//! (Tables 3–6, Figures 8–10, 12) for 1.5B–32B models on 8–32 "A100s".
+//!
+//! The simulator is a *deterministic timeline simulator* that implements
+//! the paper's timing equations exactly:
+//!
+//! * **Collective** — eq. (1): every microbatch index is a rendezvous of
+//!   all devices (the sum over per-layer maxima collapses to the
+//!   per-microbatch maximum when per-layer times are proportional, which
+//!   holds for a homogeneous layer stack — see `timeline::tests`).
+//! * **ODC** — devices progress independently; the minibatch ends at the
+//!   slowest device's finish time, plus the drain + optimizer epilogue.
+//!
+//! Compute times come from `balance::cost` (O(s) + O(s²)); communication
+//! times come from `comm::volume` (Table 2 volumes over the `Topology`
+//! bandwidths), overlapped with compute as in §6.1.
+
+pub mod parametric;
+pub mod run;
+pub mod timeline;
+
+pub use run::{simulate, RunResult, SimConfig};

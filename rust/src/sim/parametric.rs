@@ -1,0 +1,119 @@
+//! Parametric study (§5.3, Figure 10): acceleration ratio of ODC over
+//! Collective (both with LB-Micro) as one factor varies from the golden
+//! setting of Table 1.
+
+use crate::config::{Balancer, CommScheme, ExperimentConfig};
+use crate::sim::run::{simulate, SimConfig};
+
+/// A single point: (x value, ODC/Collective throughput ratio).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub x: f64,
+    pub ratio: f64,
+}
+
+/// Acceleration ratio for one config (ODC LB-Micro vs Collective LB-Micro).
+pub fn acceleration_ratio(base: &ExperimentConfig) -> f64 {
+    let mut col = base.clone();
+    col.scheme = CommScheme::Collective;
+    col.balancer = Balancer::LbMicro;
+    let mut odc = base.clone();
+    odc.scheme = CommScheme::Odc;
+    odc.balancer = Balancer::LbMicro;
+    let rc = simulate(&SimConfig::new(col));
+    let ro = simulate(&SimConfig::new(odc));
+    ro.samples_per_sec_per_device / rc.samples_per_sec_per_device
+}
+
+/// The four panels of Figure 10.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Factor {
+    MinibatchSize,
+    MaxLength,
+    PackingRatio,
+    Devices,
+}
+
+impl Factor {
+    pub fn label(self) -> &'static str {
+        match self {
+            Factor::MinibatchSize => "minibatch size",
+            Factor::MaxLength => "max length",
+            Factor::PackingRatio => "packing ratio",
+            Factor::Devices => "devices",
+        }
+    }
+
+    pub fn default_grid(self) -> Vec<f64> {
+        match self {
+            Factor::MinibatchSize => vec![1.0, 2.0, 4.0, 8.0, 16.0],
+            Factor::MaxLength => vec![8_192.0, 16_384.0, 32_768.0, 65_536.0],
+            Factor::PackingRatio => vec![1.0, 2.0, 4.0, 8.0],
+            Factor::Devices => vec![2.0, 4.0, 8.0, 16.0, 32.0],
+        }
+    }
+}
+
+/// Sweep one factor from the golden setting, holding the rest constant.
+pub fn sweep(factor: Factor, grid: &[f64], steps: usize, seed: u64) -> Vec<SweepPoint> {
+    grid.iter()
+        .map(|&x| {
+            let mut exp = ExperimentConfig::golden();
+            exp.steps = steps;
+            exp.seed = seed;
+            match factor {
+                Factor::MinibatchSize => exp.minibs = x as usize,
+                Factor::MaxLength => exp.max_len = x as usize,
+                Factor::PackingRatio => exp.packing_ratio = x,
+                Factor::Devices => {
+                    exp.devices = x as usize;
+                    exp.devices_per_node = (x as usize).min(8);
+                }
+            }
+            SweepPoint { x, ratio: acceleration_ratio(&exp) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ratios(f: Factor, grid: &[f64]) -> Vec<f64> {
+        sweep(f, grid, 6, 11).into_iter().map(|p| p.ratio).collect()
+    }
+
+    #[test]
+    fn ratio_above_one_at_golden() {
+        let mut exp = ExperimentConfig::golden();
+        exp.steps = 6;
+        assert!(acceleration_ratio(&exp) > 1.0);
+    }
+
+    #[test]
+    fn ratio_grows_with_max_length() {
+        // Fig 10: longer sequences amplify O(s²) imbalance.
+        let r = ratios(Factor::MaxLength, &[8_192.0, 65_536.0]);
+        assert!(r[1] >= r[0] * 0.98, "{r:?}");
+    }
+
+    #[test]
+    fn ratio_shrinks_with_packing_ratio() {
+        // Fig 10: larger budgets give the baseline more packing freedom.
+        let r = ratios(Factor::PackingRatio, &[1.0, 8.0]);
+        assert!(r[1] <= r[0] + 0.02, "{r:?}");
+    }
+
+    #[test]
+    fn ratio_grows_with_devices() {
+        // Fig 10: more devices, more heterogeneity.
+        let r = ratios(Factor::Devices, &[2.0, 32.0]);
+        assert!(r[1] >= r[0] - 0.02, "{r:?}");
+    }
+
+    #[test]
+    fn minibs_one_no_gain() {
+        let r = ratios(Factor::MinibatchSize, &[1.0]);
+        assert!((r[0] - 1.0).abs() < 0.05, "{r:?}");
+    }
+}

@@ -1,0 +1,238 @@
+//! End-to-end simulated runs: dataset draw → packing → timeline → metrics.
+//!
+//! One [`simulate`] call reproduces one cell of the paper's evaluation
+//! grid (a model × dataset × method × minibatch-size combination) and
+//! reports samples/s/device (Tables 3 & 5) plus the packing-estimated
+//! bubble rate (Tables 4 & 6).
+
+use crate::balance::bubble::estimate_bubble;
+use crate::balance::cost::CostModel;
+use crate::balance::packers::{plan_run_opts, PackOpts};
+use crate::comm::topology::Topology;
+use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use crate::data::distributions::sample_lengths;
+use crate::sim::timeline::{hybrid_step_overhead, time_minibatch_opt};
+use crate::util::rng::Rng;
+
+/// Simulation-specific knobs on top of the experiment cell.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub exp: ExperimentConfig,
+    /// RL mode (Table 3): LB-Mini keeps equal per-device sample counts.
+    pub rl_mode: bool,
+    /// §6.2 ODC optimization: hierarchical (node-leader cached) gathers.
+    pub hierarchical_gather: bool,
+}
+
+impl SimConfig {
+    pub fn new(exp: ExperimentConfig) -> Self {
+        let rl_mode = exp_is_rl(&exp);
+        SimConfig { exp, rl_mode, hierarchical_gather: false }
+    }
+}
+
+fn exp_is_rl(exp: &ExperimentConfig) -> bool {
+    exp.dataset == Dataset::Aime
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    /// Samples per second per device — the paper's headline metric.
+    pub samples_per_sec_per_device: f64,
+    /// Packing-estimated bubble rate (Tables 4/6 definition).
+    pub bubble_rate: f64,
+    /// Mean minibatch wall seconds.
+    pub mean_minibatch_s: f64,
+    pub minibatches: usize,
+    pub samples: usize,
+}
+
+/// Simulate `exp.steps` minibatches of the configured cell.
+pub fn simulate(cfg: &SimConfig) -> RunResult {
+    let exp = &cfg.exp;
+    let cost = CostModel::for_model(exp.model);
+    let topo = Topology::paper(exp.devices, exp.devices_per_node);
+    let mut rng = Rng::new(exp.seed);
+
+    // Draw enough samples for `steps` minibatches.
+    let n_samples = exp.steps * exp.devices * exp.minibs;
+    let lens = sample_lengths(exp.dataset, Some(exp.max_len), n_samples, &mut rng);
+
+    let opts = PackOpts { lb_mini_equal_size: cfg.rl_mode };
+    let mut plan_rng = rng.fork(1);
+    let plans = plan_run_opts(
+        exp.balancer,
+        &lens,
+        exp.devices,
+        exp.minibs,
+        exp.max_tokens_per_micro(),
+        &cost,
+        &mut plan_rng,
+        opts,
+    );
+
+    let mut total_wall = 0.0;
+    let mut total_busy = 0.0;
+    let mut bubble_busy = 0.0;
+    let mut bubble_total = 0.0;
+    let mut samples = 0usize;
+    for plan in &plans {
+        let t = time_minibatch_opt(plan, &lens, exp.model, &cost, exp.scheme, exp.sharding, &topo, cfg.hierarchical_gather);
+        total_wall += t.wall + optimizer_epilogue(exp, &topo);
+        total_busy += t.busy.iter().sum::<f64>();
+        let b = estimate_bubble(plan, &lens, &cost, exp.scheme);
+        bubble_busy += b.busy.iter().sum::<f64>();
+        bubble_total += b.total;
+        samples += plan.all_samples().len();
+    }
+
+    let d = exp.devices as f64;
+    let bubble_rate = if bubble_total > 0.0 { 1.0 - bubble_busy / (d * bubble_total) } else { 0.0 };
+    let _ = total_busy;
+    RunResult {
+        label: exp.label(),
+        samples_per_sec_per_device: samples as f64 / (total_wall.max(1e-12) * d),
+        bubble_rate,
+        mean_minibatch_s: total_wall / plans.len().max(1) as f64,
+        minibatches: plans.len(),
+        samples,
+    }
+}
+
+/// Per-minibatch epilogue: gradient drain + sharded AdamW (cheap) plus
+/// hybrid sharding's cross-node state exchange when applicable.
+fn optimizer_epilogue(exp: &ExperimentConfig, topo: &Topology) -> f64 {
+    let adam = 0.002; // sharded elementwise update, ~ms-scale
+    let hybrid = match exp.sharding {
+        Sharding::Hybrid => hybrid_step_overhead(exp.model, topo),
+        Sharding::Full => 0.0,
+    };
+    adam + hybrid
+}
+
+/// Convenience: simulate a (scheme, balancer) pair against the paper's
+/// standard cell layout.
+pub fn simulate_cell(
+    model: PaperModel,
+    dataset: Dataset,
+    scheme: CommScheme,
+    balancer: Balancer,
+    minibs: usize,
+    devices: usize,
+    steps: usize,
+    seed: u64,
+) -> RunResult {
+    let exp = ExperimentConfig {
+        model,
+        dataset,
+        scheme,
+        balancer,
+        sharding: Sharding::Full,
+        minibs,
+        devices,
+        devices_per_node: 8,
+        packing_ratio: 1.0,
+        max_len: match dataset {
+            Dataset::LongAlign => 65_536,
+            Dataset::SweSmith => 32_768,
+            Dataset::Aime => 16_384,
+        },
+        steps,
+        seed,
+    };
+    simulate(&SimConfig::new(exp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(scheme: CommScheme, balancer: Balancer, minibs: usize) -> RunResult {
+        simulate_cell(PaperModel::M1_5B, Dataset::LongAlign, scheme, balancer, minibs, 8, 8, 7)
+    }
+
+    #[test]
+    fn odc_beats_collective_with_packing() {
+        // The headline: ODC LB-Micro > Collective LB-Micro at minibs 4–8.
+        for minibs in [4, 8] {
+            let col = quick(CommScheme::Collective, Balancer::LbMicro, minibs);
+            let odc = quick(CommScheme::Odc, Balancer::LbMicro, minibs);
+            assert!(
+                odc.samples_per_sec_per_device > col.samples_per_sec_per_device,
+                "minibs={minibs}: odc {} <= col {}",
+                odc.samples_per_sec_per_device,
+                col.samples_per_sec_per_device
+            );
+        }
+    }
+
+    #[test]
+    fn all_methods_similar_at_minibs_one() {
+        // §5.2: "All methods perform similarly when the minibatch size is
+        // one, since ODC synchronizes after every sample."
+        let col = quick(CommScheme::Collective, Balancer::LbMicro, 1);
+        let odc = quick(CommScheme::Odc, Balancer::LbMicro, 1);
+        let rel = (odc.samples_per_sec_per_device - col.samples_per_sec_per_device).abs()
+            / col.samples_per_sec_per_device;
+        assert!(rel < 0.05, "rel diff {rel}");
+    }
+
+    #[test]
+    fn lb_mini_at_least_matches_lb_micro_small_minibs() {
+        let micro = quick(CommScheme::Odc, Balancer::LbMicro, 2);
+        let mini = quick(CommScheme::Odc, Balancer::LbMini, 2);
+        assert!(mini.samples_per_sec_per_device >= micro.samples_per_sec_per_device * 0.97);
+    }
+
+    #[test]
+    fn bubble_rate_decreases_with_minibs() {
+        // Table 6 trend: bubble rate falls as minibatch size grows.
+        let b2 = quick(CommScheme::Collective, Balancer::LbMicro, 2).bubble_rate;
+        let b8 = quick(CommScheme::Collective, Balancer::LbMicro, 8).bubble_rate;
+        assert!(b8 < b2, "b8 {b8} should be < b2 {b2}");
+    }
+
+    #[test]
+    fn native_worst_in_rl() {
+        // Fig 9: LB-Micro is substantially faster than verl Native.
+        let native =
+            simulate_cell(PaperModel::M1_5B, Dataset::Aime, CommScheme::Collective, Balancer::VerlNative, 8, 8, 8, 3);
+        let micro =
+            simulate_cell(PaperModel::M1_5B, Dataset::Aime, CommScheme::Collective, Balancer::LbMicro, 8, 8, 8, 3);
+        assert!(micro.samples_per_sec_per_device > native.samples_per_sec_per_device);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = quick(CommScheme::Odc, Balancer::LbMini, 4);
+        let b = quick(CommScheme::Odc, Balancer::LbMini, 4);
+        assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
+    }
+
+    #[test]
+    fn hierarchical_gather_helps_short_context_multinode() {
+        // §6.2 ablation: node-leader caching recovers exposed inter-node
+        // comm when sequences are too short to hide it.
+        let mut exp = ExperimentConfig::golden();
+        exp.devices = 32;
+        exp.max_len = 8_192;
+        exp.scheme = CommScheme::Odc;
+        exp.steps = 8;
+        let mut flat = SimConfig::new(exp.clone());
+        flat.hierarchical_gather = false;
+        let mut hier = SimConfig::new(exp);
+        hier.hierarchical_gather = true;
+        assert!(
+            simulate(&hier).samples_per_sec_per_device >= simulate(&flat).samples_per_sec_per_device,
+            "hierarchical gather must not hurt"
+        );
+    }
+
+    #[test]
+    fn counts_match_request() {
+        let r = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        assert_eq!(r.minibatches, 8);
+        assert_eq!(r.samples, 8 * 8 * 4);
+    }
+}

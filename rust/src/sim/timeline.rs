@@ -1,0 +1,234 @@
+//! Minibatch timeline computation: the timing equations of §2.2 / §3.
+//!
+//! For one minibatch plan, computes the wall time and per-device busy
+//! time under either communication scheme, including the per-layer
+//! communication costs (Table 2 volumes over the topology bandwidths)
+//! overlapped with compute (§6.1: communication volume is constant in s
+//! while compute grows as O(s²), so long microbatches hide comm).
+
+use crate::balance::cost::CostModel;
+use crate::balance::packers::Plan;
+use crate::comm::topology::Topology;
+use crate::comm::volume;
+use crate::config::{CommScheme, PaperModel, Sharding};
+
+/// Per-layer parameter bytes for a model (bf16).
+pub fn layer_bytes(model: PaperModel) -> f64 {
+    2.0 * model.params() / model.layers() as f64
+}
+
+/// Communication seconds for ONE microbatch on one device: forward
+/// gathers every layer once, backward gathers + reduce-scatters every
+/// layer (Figure 4) => 3·L layer-ops.
+pub fn micro_comm_time(model: PaperModel, scheme: CommScheme, sharding: Sharding, topo: &Topology) -> f64 {
+    micro_comm_time_opt(model, scheme, sharding, topo, false)
+}
+
+/// `micro_comm_time` with the §6.2 hierarchical-gather optimization
+/// toggle (meaningful for ODC full sharding across nodes only).
+pub fn micro_comm_time_opt(
+    model: PaperModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+) -> f64 {
+    let lb = layer_bytes(model);
+    let per_op = match (sharding, scheme, hierarchical) {
+        (Sharding::Hybrid, _, _) => volume::hybrid_layer_op_time(lb, topo),
+        (Sharding::Full, CommScheme::Odc, true) => volume::hierarchical_layer_op_time(lb, topo),
+        (Sharding::Full, odc_or_col, _) => volume::layer_op_time(odc_or_col == CommScheme::Odc, lb, topo),
+    };
+    3.0 * model.layers() as f64 * per_op
+}
+
+/// Hybrid sharding's per-minibatch epilogue: optimizer states live
+/// across nodes (ZeRO++-style), so once per minibatch the node-level
+/// gradients are reduce-scattered across nodes and fresh params
+/// all-gathered back — 2 inter-node passes over the full model.
+pub fn hybrid_step_overhead(model: PaperModel, topo: &Topology) -> f64 {
+    if !topo.multi_node() {
+        return 0.0;
+    }
+    let nodes = topo.nodes() as f64;
+    let bytes = 2.0 * model.params();
+    // per node NIC moves (nodes-1)/nodes of the model, twice
+    2.0 * (bytes * (nodes - 1.0) / nodes) / (topo.inter_bw * topo.devices_per_node as f64)
+}
+
+/// Result of timing one minibatch.
+#[derive(Clone, Debug)]
+pub struct MinibatchTiming {
+    /// Wall-clock seconds for the minibatch (excl. optimizer epilogue).
+    pub wall: f64,
+    /// Per-device busy seconds (compute ∪ exposed comm).
+    pub busy: Vec<f64>,
+}
+
+/// Effective duration of one microbatch slot on one device: compute
+/// overlapped with communication. An EMPTY slot still pays the full
+/// communication time under collective (the device must join every
+/// all-gather/reduce-scatter barrier) but costs nothing under ODC.
+fn slot_time(compute: f64, comm: f64, scheme: CommScheme, empty: bool) -> f64 {
+    match (scheme, empty) {
+        (CommScheme::Collective, true) => comm,
+        (CommScheme::Odc, true) => 0.0,
+        (_, false) => compute.max(comm),
+    }
+}
+
+/// Time one minibatch under the given scheme (the heart of the sim).
+pub fn time_minibatch(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+) -> MinibatchTiming {
+    time_minibatch_opt(plan, lens, model, cost, scheme, sharding, topo, false)
+}
+
+/// `time_minibatch` with the hierarchical-gather toggle.
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_opt(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+) -> MinibatchTiming {
+    let d = plan.devices();
+    let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
+    let m_max = plan.max_micro_count();
+
+    let micro_secs = |dev: usize, m: usize| -> (f64, bool) {
+        match plan.micro[dev].get(m) {
+            Some(mb) if !mb.is_empty() => {
+                let ls: Vec<usize> = mb.iter().map(|&i| lens[i]).collect();
+                (cost.seconds(cost.micro_cost(&ls)), false)
+            }
+            Some(_) => (0.0, true),  // padded empty slot (collective)
+            None => (0.0, true),     // device simply has fewer microbatches (ODC)
+        }
+    };
+
+    let mut busy = vec![0.0f64; d];
+    let wall = match scheme {
+        CommScheme::Collective => {
+            // eq. (1): lockstep over microbatch indices
+            let mut t = 0.0;
+            for m in 0..m_max {
+                let mut step = 0.0f64;
+                for (dev, b) in busy.iter_mut().enumerate() {
+                    let (c, empty) = micro_secs(dev, m);
+                    let s = slot_time(c, comm, CommScheme::Collective, empty);
+                    *b += s;
+                    step = step.max(s);
+                }
+                t += step;
+            }
+            t
+        }
+        CommScheme::Odc => {
+            // decoupled progress: each device runs only its own slots
+            for (dev, b) in busy.iter_mut().enumerate() {
+                for m in 0..plan.micro[dev].len() {
+                    let (c, empty) = micro_secs(dev, m);
+                    *b += slot_time(c, comm, CommScheme::Odc, empty);
+                }
+            }
+            busy.iter().cloned().fold(0.0, f64::max)
+        }
+    };
+
+    MinibatchTiming { wall, busy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::packers::Plan;
+
+    fn topo8() -> Topology {
+        Topology::paper(8, 8)
+    }
+
+    fn cost() -> CostModel {
+        CostModel::for_model(PaperModel::M1_5B)
+    }
+
+    /// device0: one long sample; device1: one short sample.
+    fn skew_plan() -> (Plan, Vec<usize>) {
+        (Plan { micro: vec![vec![vec![0]], vec![vec![1]]] }, vec![60_000, 1_000])
+    }
+
+    #[test]
+    fn collective_wall_is_max_of_slots() {
+        let (plan, lens) = skew_plan();
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let t = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Collective, Sharding::Full, &topo);
+        let comm = micro_comm_time(PaperModel::M1_5B, CommScheme::Collective, Sharding::Full, &topo);
+        let long = c.seconds(c.micro_cost(&[60_000])).max(comm);
+        assert!((t.wall - long).abs() < 1e-9);
+    }
+
+    #[test]
+    fn odc_not_slower_than_collective_same_plan() {
+        let (plan, lens) = skew_plan();
+        let c = cost();
+        let topo = Topology::paper(2, 8); // single node: comm times equal
+        let tc = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Collective, Sharding::Full, &topo);
+        let to = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo);
+        assert!(to.wall <= tc.wall + 1e-12);
+    }
+
+    #[test]
+    fn odc_skips_empty_slots_collective_pays_comm() {
+        // device0 has 2 micros, device1 has 1 + empty padding
+        let plan = Plan { micro: vec![vec![vec![0], vec![1]], vec![vec![2], vec![]]] };
+        let lens = vec![30_000, 30_000, 30_000];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let comm = micro_comm_time(PaperModel::M1_5B, CommScheme::Collective, Sharding::Full, &topo);
+        let tc = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Collective, Sharding::Full, &topo);
+        let to = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo);
+        // collective: device1's second slot still costs `comm`, and the
+        // minibatch waits for max(slot) each index
+        let slot = c.seconds(c.micro_cost(&[30_000])).max(comm);
+        assert!((tc.wall - 2.0 * slot).abs() < 1e-9);
+        assert!((to.wall - 2.0 * slot.max(0.0)).abs() < 1e-9 || to.wall <= tc.wall);
+    }
+
+    #[test]
+    fn long_sequences_hide_comm() {
+        // §6.1: comm per microbatch is constant, compute is O(s²)
+        let topo = Topology::paper(32, 8);
+        let c = CostModel::for_model(PaperModel::M7B);
+        let comm = micro_comm_time(PaperModel::M7B, CommScheme::Odc, Sharding::Full, &topo);
+        let compute_64k = c.seconds(c.micro_cost(&[65_536]));
+        assert!(compute_64k > comm, "64K-token compute {compute_64k} should hide {comm}");
+    }
+
+    #[test]
+    fn odc_comm_slower_multi_node() {
+        let topo = Topology::paper(32, 8);
+        let cc = micro_comm_time(PaperModel::M7B, CommScheme::Collective, Sharding::Full, &topo);
+        let oc = micro_comm_time(PaperModel::M7B, CommScheme::Odc, Sharding::Full, &topo);
+        assert!(oc > cc);
+        // hybrid sharding removes the gap
+        let hc = micro_comm_time(PaperModel::M7B, CommScheme::Odc, Sharding::Hybrid, &topo);
+        assert!(hc < oc);
+    }
+
+    #[test]
+    fn hybrid_overhead_zero_single_node() {
+        assert_eq!(hybrid_step_overhead(PaperModel::M7B, &topo8()), 0.0);
+        assert!(hybrid_step_overhead(PaperModel::M7B, &Topology::paper(16, 8)) > 0.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Bench harness substrate (criterion is unreachable offline).
+//!
+//! `cargo bench` targets set `harness = false` and drive this runner:
+//! warmup, timed iterations, and a summary line with mean / p50 / p95 /
+//! std. Report emitters in `report` turn grouped results into the
+//! markdown tables mirroring the paper's tables/figures.
+
+use super::stats::{percentile, Summary};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter  (p50 {:>9.3}, p95 {:>9.3}, ±{:>8.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.std_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Small defaults: single-core CI box; benches are about *relative*
+        // numbers. Override via ODC_BENCH_ITERS for longer runs.
+        let iters = std::env::var("ODC_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+        Bencher { warmup: 2, iters }
+    }
+}
+
+impl Bencher {
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = Summary::from_slice(&samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: s.mean(),
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            std_ns: s.std(),
+        };
+        println!("{}", r.line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: 1, iters: 5 };
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 5);
+    }
+}

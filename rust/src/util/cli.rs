@@ -1,0 +1,191 @@
+//! Small declarative CLI substrate (clap is unreachable offline).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, and a
+//! subcommand word. Every binary/example in this repo funnels through
+//! this so `--help` output is uniform.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_flag) {
+                (_, true) => String::new(),
+                (Some(d), _) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse from an explicit token list (testable); exits on --help.
+    pub fn parse_from(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(raw) = t.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (raw.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} is a flag, takes no value"));
+                    }
+                    flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+        // fill defaults / check required
+        for spec in &self.specs {
+            if spec.is_flag || values.contains_key(spec.name) {
+                continue;
+            }
+            match &spec.default {
+                Some(d) => {
+                    values.insert(spec.name.to_string(), d.clone());
+                }
+                None => return Err(format!("missing required --{}\n\n{}", spec.name, self.usage())),
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse process args; prints usage and exits on error or --help.
+    pub fn parse(&self) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.name) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{}`", self.get(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{}`", self.get(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{}`", self.get(name)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test").opt("devices", "8", "device count").req("preset", "model preset").flag("verbose", "chatty")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = cli().parse_from(&toks(&["--preset", "tiny"])).unwrap();
+        assert_eq!(a.usize("devices"), 8);
+        assert_eq!(a.get("preset"), "tiny");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cli().parse_from(&toks(&["--preset=small", "--devices=4", "--verbose", "run"])).unwrap();
+        assert_eq!(a.usize("devices"), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&toks(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(&toks(&["--preset", "t", "--bogus", "1"])).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundational substrates built in-repo (crates.io is unreachable in
+//! this environment; see DESIGN.md §3.1 and §8 for the substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

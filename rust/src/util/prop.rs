@@ -1,0 +1,155 @@
+//! Mini property-testing substrate (proptest is unreachable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `cases` random inputs through
+//! `prop`; on failure it performs greedy shrinking via the value's
+//! `Shrink` impl and panics with the minimal counterexample. The Python
+//! side uses real `hypothesis`; this covers the Rust invariants listed in
+//! DESIGN.md §6.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // shrink one element
+        for i in 0..self.len().min(8) {
+            for s in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(0x0DC_5EED);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property `{name}` failed (case {case}/{cases})\n  counterexample: {min_input:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &P) -> (T, String)
+where
+    T: Shrink + Clone + Debug,
+    P: Fn(&T) -> Result<(), String>,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    'outer: for _ in 0..200 {
+        for cand in input.shrink() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+/// Generator helpers.
+pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let n = rng.range(min_len as i64, max_len as i64) as usize;
+    (0..n).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("rev-rev", 50, |r| vec_of(r, 0, 20, |r| r.below(100) as usize), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if w == *v {
+                Ok(())
+            } else {
+                Err("rev∘rev != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-small`")]
+    fn failing_property_shrinks() {
+        check("always-small", 200, |r| vec_of(r, 0, 30, |r| r.below(1000) as usize), |v| {
+            if v.iter().sum::<usize>() < 500 {
+                Ok(())
+            } else {
+                Err(format!("sum {} too big", v.iter().sum::<usize>()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_usize_descends() {
+        assert!(10usize.shrink().iter().all(|&s| s < 10));
+        assert!(0usize.shrink().is_empty());
+    }
+}

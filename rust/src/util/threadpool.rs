@@ -1,0 +1,76 @@
+//! Scoped worker-pool substrate (tokio is unreachable offline; the
+//! training engine wants deterministic OS threads anyway — one per
+//! simulated device — and the simulator sweeps want simple fan-out).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` closures on up to `workers` threads; returns results in
+/// submission order. Panics in jobs propagate.
+pub fn scoped_map<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let queue: Arc<Mutex<Vec<(usize, F)>>> = Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
+
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, f)) => {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        out.into_iter().map(|o| o.expect("job did not report")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..20).map(|i| move || i * i).collect();
+        let out = scoped_map(4, jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_ok() {
+        let out = scoped_map(1, vec![|| 1, || 2]);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panics_propagate() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
+        scoped_map(2, jobs);
+    }
+}

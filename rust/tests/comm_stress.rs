@@ -1,0 +1,152 @@
+//! Integration: stress tests on the communication backends — both
+//! schemes must compute the identical reduction regardless of timing,
+//! arrival order, or per-device push counts (ODC).
+
+use odc::comm::backend::{CommBackend, ParamStore};
+use odc::comm::{CollectiveComm, OdcComm};
+use std::sync::Arc;
+
+fn make_backend(which: usize, params: &Arc<ParamStore>, world: usize) -> Arc<dyn CommBackend> {
+    if which == 0 {
+        Arc::new(CollectiveComm::new(Arc::clone(params), world))
+    } else {
+        Arc::new(OdcComm::new(Arc::clone(params), world))
+    }
+}
+
+/// Run one synthetic minibatch (3 micros/device, deterministic grads +
+/// weights) and return the reassembled full gradient per layer.
+fn run_minibatch(which: usize, world: usize, layer_lens: &[usize]) -> Vec<Vec<f32>> {
+    let params = Arc::new(ParamStore::new(layer_lens, world));
+    let backend = make_backend(which, &params, world);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for dev in 0..world {
+            let backend = Arc::clone(&backend);
+            let store = Arc::clone(&params);
+            handles.push(s.spawn(move || {
+                for _micro in 0..3 {
+                    for (l, p) in store.layers.iter().enumerate() {
+                        let grad: Vec<f32> =
+                            (0..p.padded_len()).map(|i| ((dev + 1) * (i + 1) % 17) as f32).collect();
+                        let w = ((dev + l) % 3) as f32 * 0.5 + 0.5;
+                        backend.reduce_grad(dev, l, &grad, w);
+                    }
+                }
+                backend.end_minibatch(dev);
+                let mut shards = Vec::new();
+                for (l, p) in store.layers.iter().enumerate() {
+                    let mut g = vec![0.0f32; p.shard_len];
+                    backend.take_grad_shard(dev, l, &mut g);
+                    shards.push(g);
+                }
+                backend.end_step(dev);
+                (dev, shards)
+            }));
+        }
+        let mut per_dev: Vec<(usize, Vec<Vec<f32>>)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        per_dev.sort_by_key(|(d, _)| *d);
+        params
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, p)| {
+                let mut full = vec![0.0f32; p.padded_len()];
+                for (dev, shards) in &per_dev {
+                    let r = p.shard_range(*dev);
+                    full[r].copy_from_slice(&shards[l]);
+                }
+                full
+            })
+            .collect()
+    })
+}
+
+#[test]
+fn backends_agree_under_stress() {
+    let layer_lens = vec![37, 64, 101];
+    let world = 4;
+    let a = run_minibatch(0, world, &layer_lens);
+    let b = run_minibatch(1, world, &layer_lens);
+    for (l, (x, y)) in a.iter().zip(&b).enumerate() {
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert!((p - q).abs() < 1e-4, "layer {l} idx {i}: {p} vs {q}");
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_deterministic() {
+    let layer_lens = vec![29];
+    for which in 0..2 {
+        let a = run_minibatch(which, 3, &layer_lens);
+        let b = run_minibatch(which, 3, &layer_lens);
+        assert_eq!(a, b, "backend {which} must be deterministic");
+    }
+}
+
+/// ODC with wildly unequal push counts per device (the LB-Mini regime)
+/// across several minibatches.
+#[test]
+fn odc_unequal_counts_many_minibatches() {
+    let world = 3;
+    let params = Arc::new(ParamStore::new(&[50], world));
+    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let comm = Arc::clone(&comm);
+            s.spawn(move || {
+                for step in 0..5 {
+                    let pushes = 1 + (dev + step) % 4;
+                    for _ in 0..pushes {
+                        comm.reduce_grad(dev, 0, &vec![1.0f32; 51], 1.0);
+                    }
+                    comm.end_minibatch(dev);
+                    let mut g = vec![0.0f32; 17];
+                    comm.take_grad_shard(dev, 0, &mut g);
+                    let want: usize = (0..world).map(|d| 1 + (d + step) % 4).sum();
+                    for &v in &g {
+                        assert!((v - want as f32).abs() < 1e-5, "step {step}: {v} vs {want}");
+                    }
+                    comm.end_step(dev);
+                }
+            });
+        }
+    });
+}
+
+/// Parameter updates published at end_step are visible to the next
+/// minibatch's gathers under both backends.
+#[test]
+fn param_updates_visible_next_step() {
+    let world = 2;
+    for which in 0..2 {
+        let params = Arc::new(ParamStore::new(&[8], world));
+        params.layers[0].init_from(&[1.0; 8]);
+        let backend = make_backend(which, &params, world);
+        let store = Arc::clone(&params);
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let backend = Arc::clone(&backend);
+                let store = Arc::clone(&store);
+                s.spawn(move || {
+                    let p = &store.layers[0];
+                    let mut buf = vec![0.0f32; p.padded_len()];
+                    for step in 0..3 {
+                        backend.gather_params(dev, 0, &mut buf);
+                        assert!(
+                            buf.iter().all(|&x| (x - (1.0 + step as f32)).abs() < 1e-6),
+                            "backend {which} step {step}: saw {buf:?}"
+                        );
+                        backend.reduce_grad(dev, 0, &vec![0.0f32; p.padded_len()], 1.0);
+                        backend.end_minibatch(dev);
+                        let r = p.shard_range(dev);
+                        let newv = vec![2.0 + step as f32; r.len()];
+                        p.buf.write(r.start, &newv);
+                        backend.end_step(dev);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration: the real FSDP engine, end to end through PJRT, on the
+//! `tiny` preset.
+//!
+//! The paper's correctness claim (Appendix F / Fig 14) is that ODC
+//! preserves training semantics exactly: same gradients, same updates,
+//! same loss trajectory as collective FSDP. Here we assert it at small
+//! scale — ODC vs Collective vs a single-device run (the data-parallel
+//! oracle) — all from identical seeds and plans.
+
+use odc::config::{Balancer, CommScheme};
+use odc::engine::trainer::{train, TrainRun, TrainerConfig};
+use std::path::{Path, PathBuf};
+
+fn tiny_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn have_artifacts() -> bool {
+    tiny_dir().join("manifest.json").exists()
+}
+
+fn base_cfg() -> TrainerConfig {
+    let mut c = TrainerConfig::new(tiny_dir());
+    c.world = 2;
+    c.minibs = 2;
+    c.steps = 2;
+    c.seed = 42;
+    c
+}
+
+fn run(scheme: CommScheme, balancer: Balancer, world: usize) -> TrainRun {
+    let mut c = base_cfg();
+    c.scheme = scheme;
+    c.balancer = balancer;
+    c.world = world;
+    train(&c).expect("training run")
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[test]
+fn odc_matches_collective_exactly_in_semantics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let col = run(CommScheme::Collective, Balancer::LbMicro, 2);
+    let odc = run(CommScheme::Odc, Balancer::LbMicro, 2);
+
+    // identical plans + identical math => loss curves match to float noise
+    for (a, b) in col.logs.iter().zip(&odc.logs) {
+        assert_eq!(a.tokens, b.tokens, "token counts must match");
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4,
+            "step {}: collective {} vs odc {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    // final parameters agree (accumulation order may differ => tiny noise)
+    for (l, (pa, pb)) in col.final_params.iter().zip(&odc.final_params).enumerate() {
+        let d = rel_l2(pb, pa);
+        assert!(d < 1e-4, "layer {l}: rel L2 {d}");
+    }
+}
+
+#[test]
+fn multi_device_matches_single_device_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    // world=1 is plain training: DP with global-token-normalized grads
+    // must produce the same updates for any world size — PROVIDED the
+    // microbatch composition is identical (packing offsets select
+    // positional embeddings, so grouping is semantically meaningful).
+    // Pin the world=2 plan and replay it flattened onto one device.
+    let mut multi_cfg = base_cfg();
+    multi_cfg.scheme = CommScheme::Odc;
+    multi_cfg.balancer = Balancer::LbMicro;
+    let plans2 = odc::engine::trainer::plan_preview(&multi_cfg).unwrap();
+    let flat: Vec<odc::balance::packers::Plan> = plans2
+        .iter()
+        .map(|p| odc::balance::packers::Plan {
+            micro: vec![p.micro.iter().flatten().filter(|m| !m.is_empty()).cloned().collect()],
+        })
+        .collect();
+
+    let mut solo_cfg = base_cfg();
+    solo_cfg.world = 1;
+    solo_cfg.minibs = 4; // 1×4 == 2×2 samples per optimizer step
+    solo_cfg.scheme = CommScheme::Odc;
+    solo_cfg.balancer = Balancer::LbMicro;
+    solo_cfg.plan_override = Some(flat);
+    let solo = train(&solo_cfg).unwrap();
+    let multi = run(CommScheme::Odc, Balancer::LbMicro, 2);
+    for (a, b) in solo.logs.iter().zip(&multi.logs) {
+        assert_eq!(a.tokens, b.tokens);
+        assert!((a.loss - b.loss).abs() < 1e-4, "step {}: {} vs {}", a.step, a.loss, b.loss);
+    }
+    for (l, (pa, pb)) in solo.final_params.iter().zip(&multi.final_params).enumerate() {
+        let d = rel_l2(pb, pa);
+        assert!(d < 1e-4, "layer {l}: rel L2 {d}");
+    }
+}
+
+#[test]
+fn initial_loss_is_near_uniform_entropy() {
+    if !have_artifacts() {
+        return;
+    }
+    // Cross-language sanity: random init => per-token CE ~= ln(vocab).
+    // tiny preset vocab = 512 => ln(512) = 6.24.
+    let r = run(CommScheme::Odc, Balancer::LbMini, 2);
+    let l0 = r.logs[0].loss;
+    assert!((5.2..7.3).contains(&l0), "initial loss {l0} should be near ln(512)=6.24");
+}
+
+#[test]
+fn loss_decreases_over_steps() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.steps = 4;
+    c.minibs = 2;
+    c.adam.lr = 3e-3;
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::LbMini;
+    let r = train(&c).unwrap();
+    let first = r.logs.first().unwrap().loss;
+    let last = r.logs.last().unwrap().loss;
+    assert!(last < first, "loss should descend: {first} -> {last}");
+}
+
+#[test]
+fn lb_mini_rejected_under_collective() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::LbMini;
+    assert!(train(&c).is_err());
+}
+
+#[test]
+fn pjrt_shard_ops_match_native_rust() {
+    if !have_artifacts() {
+        return;
+    }
+    // The Rust AdamW loop and the PJRT adam_chunk kernel implement the
+    // same update: a run through each must land on the same parameters.
+    let mut a = base_cfg();
+    a.steps = 1;
+    let mut b = a.clone();
+    b.pjrt_shard_ops = true;
+    let ra = train(&a).unwrap();
+    let rb = train(&b).unwrap();
+    for (l, (pa, pb)) in ra.final_params.iter().zip(&rb.final_params).enumerate() {
+        let d = rel_l2(pb, pa);
+        assert!(d < 5e-5, "layer {l}: rel L2 {d}");
+    }
+}
