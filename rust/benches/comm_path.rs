@@ -1,0 +1,208 @@
+//! Comm-path benchmark: the per-microbatch ODC data path, seed-style
+//! vs zero-copy, with machine-readable output.
+//!
+//! Two modes over the SAME backend, world threads, and layer shapes:
+//!
+//! * `seed`     — the seed trainer's call pattern: every microbatch
+//!                gathers the embed layer once and every block twice
+//!                (forward + backward recompute), each a full-layer
+//!                copy, then pushes one gradient per layer.
+//! * `zerocopy` — the BufferPlan pattern: gathers go through the
+//!                minibatch-scoped `GatherCache` (one real gather per
+//!                layer per MINIBATCH, refcount clones after), same
+//!                gradient pushes.
+//!
+//! Both modes push through the per-(server, client) payload arenas; the
+//! seed global-pool push path no longer exists, so its removal shows up
+//! in the counters (every acquire used to be a scan under ONE global
+//! lock) rather than as a timed before/after.
+//!
+//! Writes `BENCH_hotpath.json` at the repo root so future PRs can track
+//! the perf trajectory: ns/microbatch per mode, ns/gather (direct vs
+//! cached), ns/reduce_grad, and payload-allocation counters proving the
+//! steady state is allocation-free. ODC_BENCH_ITERS scales sampling.
+
+use odc::comm::backend::{CommBackend, ParamStore};
+use odc::comm::{GatherCache, OdcComm};
+use odc::util::bench::Bencher;
+use odc::util::json::Json;
+use std::sync::Arc;
+
+const WORLD: usize = 4;
+const MICROS: usize = 4;
+const MINIBATCHES: usize = 3;
+/// embed + 4 blocks (f32 elements)
+const LAYERS: [usize; 5] = [1 << 19, 1 << 18, 1 << 18, 1 << 18, 1 << 18];
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Seed,
+    ZeroCopy,
+}
+
+/// Run `MINIBATCHES` minibatches of the comm schedule on `world`
+/// threads; returns nothing — timing wraps the whole call.
+fn run_minibatches(comm: &Arc<OdcComm>, params: &Arc<ParamStore>, mode: Mode) {
+    std::thread::scope(|s| {
+        for dev in 0..WORLD {
+            let comm = Arc::clone(comm);
+            let params = Arc::clone(params);
+            s.spawn(move || {
+                let n_blocks = params.n_layers() - 1;
+                let max_padded = params.max_padded_len();
+                let mut scratch = vec![0.0f32; max_padded];
+                let grad = vec![0.5f32; max_padded];
+                let mut gshard = vec![0.0f32; params.layers.iter().map(|p| p.shard_len).max().unwrap()];
+                let mut cache = GatherCache::new(&params, dev, mode == Mode::ZeroCopy);
+                for _mb in 0..MINIBATCHES {
+                    for _m in 0..MICROS {
+                        // forward: embed + blocks
+                        for l in 0..=n_blocks {
+                            gather(&comm, &mut cache, dev, l, &mut scratch, mode);
+                        }
+                        // backward: blocks again + all grads
+                        for l in (1..=n_blocks).rev() {
+                            gather(&comm, &mut cache, dev, l, &mut scratch, mode);
+                            comm.reduce_grad(dev, l, &grad[..params.layers[l].padded_len()], 1.0);
+                        }
+                        comm.reduce_grad(dev, 0, &grad[..params.layers[0].padded_len()], 1.0);
+                    }
+                    comm.end_minibatch(dev);
+                    for l in 0..params.n_layers() {
+                        comm.take_grad_shard(dev, l, &mut gshard[..params.layers[l].shard_len]);
+                    }
+                    comm.end_step(dev);
+                    cache.invalidate();
+                }
+            });
+        }
+    });
+}
+
+fn gather(
+    comm: &OdcComm,
+    cache: &mut GatherCache,
+    dev: usize,
+    layer: usize,
+    scratch: &mut [f32],
+    mode: Mode,
+) {
+    match mode {
+        // seed path: a full-layer copy on every call
+        Mode::Seed => comm.gather_params(dev, layer, scratch),
+        // zero-copy path: one real gather per layer per minibatch
+        Mode::ZeroCopy => {
+            let shared = cache.gather(comm, layer);
+            std::hint::black_box(&shared);
+        }
+    }
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("== comm-path benchmark: seed vs zero-copy ODC data path ==");
+    println!(
+        "   world={WORLD} micros={MICROS} minibatches={MINIBATCHES} layers={:?}\n",
+        LAYERS
+    );
+
+    let params = Arc::new(ParamStore::new(&LAYERS, WORLD));
+    let micro_total = (MINIBATCHES * MICROS) as f64;
+
+    // ---- end-to-end minibatch schedule, per mode -------------------------
+    let comm_seed = Arc::new(OdcComm::new(Arc::clone(&params), WORLD));
+    let r_seed = b.run("commpath_seed_3minibatches", || {
+        run_minibatches(&comm_seed, &params, Mode::Seed)
+    });
+    let seed_ns_per_micro = r_seed.mean_ns / micro_total;
+
+    let comm_zc = Arc::new(OdcComm::new(Arc::clone(&params), WORLD));
+    // warm-up (arena growth + first cache fill happen here, untimed)
+    run_minibatches(&comm_zc, &params, Mode::ZeroCopy);
+    let warm = comm_zc.arena_stats();
+    let r_zc = b.run("commpath_zerocopy_3minibatches", || {
+        run_minibatches(&comm_zc, &params, Mode::ZeroCopy)
+    });
+    let zc_ns_per_micro = r_zc.mean_ns / micro_total;
+    let after = comm_zc.arena_stats();
+
+    let steady_micros = ((b.warmup + b.iters) * MINIBATCHES * MICROS) as f64;
+    let fresh_after_warmup = after.fresh_allocs - warm.fresh_allocs;
+    let acquires_per_micro = (after.acquires - warm.acquires) as f64 / steady_micros;
+    let reduction = 1.0 - zc_ns_per_micro / seed_ns_per_micro;
+
+    // ---- isolated primitives (single device, no thread noise) -----------
+    let pstore = Arc::new(ParamStore::new(&LAYERS, 1));
+    let prim1 = Arc::new(OdcComm::new(Arc::clone(&pstore), 1));
+    let mut scratch = vec![0.0f32; pstore.max_padded_len()];
+    let r_direct = b.run("gather_direct_2MiB", || prim1.gather_params(0, 0, &mut scratch));
+    let mut cache1 = GatherCache::new(&pstore, 0, true);
+    let _ = cache1.gather(prim1.as_ref(), 0); // fill once
+    let r_cached = b.run("gather_cached_2MiB", || {
+        std::hint::black_box(cache1.gather(prim1.as_ref(), 0))
+    });
+    // reduce measured as a full push+drain cycle: a tight reduce-only
+    // loop would race the daemon and measure mailbox backlog, not the
+    // warm path (the arena is back to steady state after each drain)
+    let grad = vec![0.5f32; pstore.layers[0].padded_len()];
+    let mut gs = vec![0.0f32; pstore.layers[0].shard_len];
+    let r_reduce = b.run("reduce_drain_cycle_2MiB", || {
+        prim1.reduce_grad(0, 0, &grad, 1.0);
+        prim1.end_minibatch(0);
+        prim1.take_grad_shard(0, 0, &mut gs);
+        prim1.end_step(0);
+    });
+
+    println!("\n  per-microbatch comm wall: seed {:.3} ms  ->  zerocopy {:.3} ms  ({:.1}% reduction)", seed_ns_per_micro / 1e6, zc_ns_per_micro / 1e6, reduction * 100.0);
+    println!("  payload arenas: {:.1} acquires/microbatch, {} fresh allocs after warm-up", acquires_per_micro, fresh_after_warmup);
+
+    // ---- machine-readable record ----------------------------------------
+    let json = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("generated_by", Json::str("cargo bench --bench comm_path")),
+        (
+            "config",
+            Json::obj(vec![
+                ("world", Json::num(WORLD as f64)),
+                ("micros_per_minibatch", Json::num(MICROS as f64)),
+                ("minibatches_per_iter", Json::num(MINIBATCHES as f64)),
+                ("layer_elems", Json::arr(LAYERS.iter().map(|&l| Json::num(l as f64)).collect())),
+                ("bench_iters", Json::num(b.iters as f64)),
+            ]),
+        ),
+        (
+            "per_microbatch",
+            Json::obj(vec![
+                ("seed_ns", Json::num(seed_ns_per_micro)),
+                ("zerocopy_ns", Json::num(zc_ns_per_micro)),
+                ("reduction_pct", Json::num(reduction * 100.0)),
+                ("payload_acquires", Json::num(acquires_per_micro)),
+                ("payload_fresh_allocs_after_warmup", Json::num(fresh_after_warmup as f64)),
+            ]),
+        ),
+        (
+            "primitives",
+            Json::obj(vec![
+                ("gather_direct_ns", Json::num(r_direct.mean_ns)),
+                ("gather_cached_ns", Json::num(r_cached.mean_ns)),
+                ("reduce_drain_cycle_ns", Json::num(r_reduce.mean_ns)),
+            ]),
+        ),
+        (
+            "notes",
+            Json::str(
+                "Both modes push gradients through the per-(server,client) payload \
+                 arenas; the seed's single global-Mutex payload pool was removed, so \
+                 every `payload_acquires` per microbatch used to be a capacity scan \
+                 under one contended lock and is now an uncontended per-pair pop. \
+                 `seed_ns` reproduces the seed gather schedule (embed once + every \
+                 block twice per microbatch); `zerocopy_ns` is the GatherCache \
+                 schedule (each layer once per minibatch).",
+            ),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    std::fs::write(path, json.dump() + "\n").expect("writing BENCH_hotpath.json");
+    println!("\n  wrote {path}");
+}

@@ -1,14 +1,18 @@
 //! L3 hot-path microbenchmarks (the §Perf targets): planner cost, the
 //! simulator inner loop, KK partitioning, and the comm backends' data
-//! path. Uses the in-repo bench harness (criterion is unavailable
-//! offline). ODC_BENCH_ITERS to increase sampling.
+//! path — including the zero-copy pieces (minibatch-scoped gather
+//! cache, per-pair payload arenas). Uses the in-repo bench harness
+//! (criterion is unavailable offline). ODC_BENCH_ITERS to increase
+//! sampling. The machine-readable perf record is emitted by the
+//! companion `comm_path` bench (BENCH_hotpath.json).
 
 use odc::balance::cost::CostModel;
 use odc::balance::kk::karmarkar_karp;
 use odc::balance::packers::plan_run;
-use odc::comm::backend::ParamStore;
+use odc::comm::backend::{CommBackend, ParamStore};
 use odc::comm::primbench::{bench_primitive, Primitive};
 use odc::comm::shared::SharedBuf;
+use odc::comm::{GatherCache, OdcComm};
 use odc::config::{Balancer, Dataset, ExperimentConfig, PaperModel};
 use odc::sim::run::{simulate, SimConfig};
 use odc::util::bench::Bencher;
@@ -57,6 +61,34 @@ fn main() {
             println!("{:<44} {:>10.3} ms/op   ({:.2} GB/s, {} dev)", format!("prim_{}_{world}dev", r.name), r.secs * 1e3, r.gbps, world);
         }
     }
+
+    // zero-copy hot path: cached gather vs seed per-call gather, and the
+    // arena-backed reduce push (proves the §6.2 caching + Appendix B
+    // buffer wins at engine scale)
+    // (single device+daemon so the drain below can't block on peers)
+    let params = Arc::new(ParamStore::new(&[1 << 20], 1));
+    let comm = OdcComm::new(Arc::clone(&params), 1);
+    let mut direct = vec![0.0f32; params.layers[0].padded_len()];
+    b.run("gather_direct_4MiB", || comm.gather_params(0, 0, &mut direct));
+    let mut cache = GatherCache::new(&params, 0, true);
+    let _ = cache.gather(&comm, 0); // one real gather per minibatch…
+    b.run("gather_cached_4MiB", || std::hint::black_box(cache.gather(&comm, 0)));
+    // one full reduce+drain cycle per iteration: the arena is back to
+    // steady state after every end_minibatch, so the counters below
+    // measure the warm path (bounded in-flight), not producer backlog
+    let grad = vec![0.5f32; params.layers[0].padded_len()];
+    let mut gshard = vec![0.0f32; params.layers[0].shard_len];
+    b.run("reduce_drain_cycle_4MiB", || {
+        comm.reduce_grad(0, 0, &grad, 1.0);
+        comm.end_minibatch(0);
+        comm.take_grad_shard(0, 0, &mut gshard);
+        comm.end_step(0);
+    });
+    let stats = comm.arena_stats();
+    println!(
+        "{:<44} {:>10} acquires, {} fresh allocs (warm push path)",
+        "odc_payload_arena_counters", stats.acquires, stats.fresh_allocs
+    );
 
     // param store construction (allocation cost at trainer startup)
     b.run("paramstore_new_13M", || ParamStore::new(&[4_200_000, 790_000, 790_000, 790_000, 790_000], 4));

@@ -1,0 +1,173 @@
+//! Per-(server, client) payload arenas — the paper's preallocated
+//! per-client RDMA buffers (Appendix B), landed in the real backend.
+//!
+//! The seed implementation pooled push payloads in ONE global
+//! `Mutex<Vec<Vec<f32>>>`: every `reduce_grad` from every client took
+//! the same lock and linearly scanned for a buffer of sufficient
+//! capacity — O(pool) under a contended lock, on the hottest path in
+//! the system. An arena instead belongs to exactly one (server, client)
+//! pair, so:
+//!
+//! * a client's `acquire` only ever contends with the one daemon
+//!   returning that client's own consumed buffers — never with other
+//!   clients (the paper's point: per-client buffers make concurrent
+//!   pushes independent);
+//! * slots are preallocated per layer at that layer's `shard_range`
+//!   length (plus one max-sized spare for daemon lag), so `acquire` is
+//!   a best-fit pick over ~layers+1 uncontended entries +
+//!   `extend_from_slice`, never a heap allocation in steady state;
+//! * in-flight payloads per pair are bounded by one minibatch's pushes
+//!   (`end_minibatch` fully drains every daemon before any device can
+//!   start the next minibatch), so the arena stops growing after
+//!   warm-up — asserted by the `comm_stress` integration tests via the
+//!   [`ArenaStats`] counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cumulative counters over one arena (or summed over a matrix of them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Buffers handed out (one per gradient piece pushed).
+    pub acquires: u64,
+    /// Acquires that had to heap-allocate because the arena was empty.
+    /// Steady state after warm-up: this stops increasing.
+    pub fresh_allocs: u64,
+    /// Buffers currently resident (preallocated + returned).
+    pub resident: u64,
+}
+
+impl ArenaStats {
+    pub fn merge(&mut self, other: ArenaStats) {
+        self.acquires += other.acquires;
+        self.fresh_allocs += other.fresh_allocs;
+        self.resident += other.resident;
+    }
+}
+
+/// A preallocated payload buffer pool owned by one (server, client) pair.
+pub struct PayloadArena {
+    /// Free buffers, heterogeneous capacities (one per layer + spares).
+    slots: Mutex<Vec<Vec<f32>>>,
+    acquires: AtomicU64,
+    fresh_allocs: AtomicU64,
+}
+
+impl PayloadArena {
+    /// Arena preallocating one empty buffer per entry of `caps` (f32
+    /// capacities) — callers pass one shard length per layer plus any
+    /// headroom spares.
+    pub fn new(caps: &[usize]) -> Self {
+        PayloadArena {
+            slots: Mutex::new(caps.iter().map(|&c| Vec::with_capacity(c)).collect()),
+            acquires: AtomicU64::new(0),
+            fresh_allocs: AtomicU64::new(0),
+        }
+    }
+
+    /// Take an EMPTY buffer with capacity for at least `len` elements —
+    /// best fit, so a small request never consumes a large layer's slot
+    /// — and let the caller fill it with `extend_from_slice` (no
+    /// zero-fill, no reallocation). Falls back to a fresh allocation
+    /// (counted) only when no slot fits.
+    pub fn acquire(&self, len: usize) -> Vec<f32> {
+        self.acquires.fetch_add(1, Ordering::Relaxed);
+        let mut slots = self.slots.lock().unwrap();
+        let best = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        if let Some(i) = best {
+            let mut b = slots.swap_remove(i);
+            drop(slots);
+            b.clear();
+            return b;
+        }
+        drop(slots);
+        self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(len)
+    }
+
+    /// Return a consumed buffer (daemon side). Never shrinks; the arena
+    /// grows to the historical in-flight maximum and then stays flat.
+    pub fn release(&self, buf: Vec<f32>) {
+        self.slots.lock().unwrap().push(buf);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            acquires: self.acquires.load(Ordering::Relaxed),
+            fresh_allocs: self.fresh_allocs.load(Ordering::Relaxed),
+            resident: self.slots.lock().unwrap().len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_within_prealloc_never_allocates() {
+        let a = PayloadArena::new(&[64, 64, 16]);
+        for _ in 0..100 {
+            let mut b1 = a.acquire(64);
+            let b2 = a.acquire(16);
+            b1.extend_from_slice(&[1.0; 64]);
+            a.release(b1);
+            a.release(b2);
+        }
+        let s = a.stats();
+        assert_eq!(s.acquires, 200);
+        assert_eq!(s.fresh_allocs, 0, "double-buffered use must stay inside the prealloc");
+        assert_eq!(s.resident, 3);
+    }
+
+    #[test]
+    fn overflow_allocates_then_stabilizes() {
+        let a = PayloadArena::new(&[8, 8]);
+        // burst of 5 in flight: 3 fresh allocations, once
+        let held: Vec<_> = (0..5).map(|_| a.acquire(8)).collect();
+        for b in held {
+            a.release(b);
+        }
+        assert_eq!(a.stats().fresh_allocs, 3);
+        assert_eq!(a.stats().resident, 5);
+        // same burst again: the grown arena absorbs it, no new allocs
+        let held: Vec<_> = (0..5).map(|_| a.acquire(8)).collect();
+        for b in held {
+            a.release(b);
+        }
+        assert_eq!(a.stats().fresh_allocs, 3, "arena must not grow after warm-up");
+    }
+
+    #[test]
+    fn acquire_is_best_fit() {
+        // a small request must not consume a large layer's slot
+        let a = PayloadArena::new(&[4, 100]);
+        let small = a.acquire(3);
+        assert!(small.capacity() < 100, "small request took the large slot");
+        let large = a.acquire(50);
+        assert!(large.capacity() >= 100);
+        assert_eq!(a.stats().fresh_allocs, 0);
+        a.release(small);
+        a.release(large);
+    }
+
+    #[test]
+    fn acquired_buffers_are_empty_with_capacity() {
+        let a = PayloadArena::new(&[32]);
+        let mut b = a.acquire(10);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 32);
+        b.extend_from_slice(&[2.0; 10]);
+        let ptr = b.as_ptr();
+        a.release(b);
+        // round-trips reuse the same allocation
+        let b2 = a.acquire(10);
+        assert!(b2.is_empty());
+        assert_eq!(b2.as_ptr(), ptr);
+    }
+}

@@ -49,6 +49,16 @@ pub trait CommBackend: Send + Sync {
     /// `out`. FSDP all-gather / ODC gather.
     fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]);
 
+    /// Whether `gather_params` results may be cached for the remainder
+    /// of the minibatch (paper §6.2 parameter caching). True only for
+    /// one-sided backends: params are phase-immutable for everyone, but
+    /// a collective gather is ALSO a rendezvous, so eliding one would
+    /// change the synchronization structure (and desynchronize the
+    /// barrier schedule). Default: not cacheable.
+    fn gathers_cacheable(&self) -> bool {
+        false
+    }
+
     /// Contribute a full-layer gradient with aggregation weight `weight`.
     /// FSDP reduce-scatter / ODC scatter-accumulate. `grad` has the
     /// layer's PADDED length (tail zeros).

@@ -1,0 +1,190 @@
+//! Minibatch-scoped parameter-gather cache — the paper's §6.2 parameter
+//! caching optimization, landed in the REAL trainer (the simulator's
+//! `hierarchical_gather` models the same idea analytically).
+//!
+//! Parameters are immutable from the `end_step` barrier until the next
+//! optimizer phase (the phase discipline documented in
+//! [`crate::comm::shared`]), so within one minibatch every gather of a
+//! layer returns identical bytes. The seed trainer nevertheless
+//! re-gathered every block layer twice per MICROBATCH (forward +
+//! backward recompute); with `m` microbatches that is `2m` full-layer
+//! copies where one suffices. The cache gathers each layer at most once
+//! per minibatch into an `Arc<[f32]>` slot and hands out refcount
+//! clones — zero-copy for every subsequent use, including handing the
+//! same block straight to PJRT via [`crate::runtime::Input::F32Shared`].
+//!
+//! The cache is only legal for backends whose `gather_params` is
+//! one-sided ([`CommBackend::gathers_cacheable`]): under `Collective`
+//! every gather is a whole-world rendezvous, so skipping one would both
+//! change the synchronization structure being measured and desynchronize
+//! the barrier schedule. A disabled cache still owns the reusable
+//! buffers (steady-state allocation-free) but performs the backend
+//! gather on every call, preserving the seed call sequence exactly.
+
+use super::backend::{CommBackend, ParamStore};
+use std::sync::Arc;
+
+/// Counters proving cache behaviour in tests and benches.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Calls answered from the cache (no backend gather, no copy).
+    pub hits: u64,
+    /// Calls that performed a real backend gather.
+    pub misses: u64,
+    /// Buffer allocations (first touch per layer; steady state: none).
+    pub fresh_allocs: u64,
+}
+
+struct Slot {
+    /// Reusable gather target; `None` only before first use.
+    buf: Option<Arc<[f32]>>,
+    /// Whether `buf` holds this minibatch's gather of the layer.
+    valid: bool,
+}
+
+/// Per-device-thread gather cache (single-threaded by construction: each
+/// device owns one, mirroring per-device cache memory on a real node).
+pub struct GatherCache {
+    dev: usize,
+    enabled: bool,
+    padded_lens: Vec<usize>,
+    slots: Vec<Slot>,
+    stats: CacheStats,
+}
+
+impl GatherCache {
+    pub fn new(params: &ParamStore, dev: usize, enabled: bool) -> Self {
+        let padded_lens: Vec<usize> = params.layers.iter().map(|l| l.padded_len()).collect();
+        GatherCache {
+            dev,
+            enabled,
+            slots: padded_lens.iter().map(|_| Slot { buf: None, valid: false }).collect(),
+            padded_lens,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The full padded parameters of `layer`, gathering through
+    /// `backend` only on a miss (or always, when disabled). The returned
+    /// `Arc` aliases the cache slot: dropping it before the next
+    /// minibatch keeps the slot uniquely owned and reusable in place.
+    pub fn gather(&mut self, backend: &dyn CommBackend, layer: usize) -> Arc<[f32]> {
+        let slot = &mut self.slots[layer];
+        if self.enabled && slot.valid {
+            self.stats.hits += 1;
+            return Arc::clone(slot.buf.as_ref().expect("valid slot holds a buffer"));
+        }
+        // Reuse the slot allocation when uniquely owned; otherwise (a
+        // caller still holds last minibatch's Arc) allocate fresh.
+        let mut buf = match slot.buf.take() {
+            Some(b) if Arc::strong_count(&b) == 1 => b,
+            _ => {
+                self.stats.fresh_allocs += 1;
+                vec![0.0f32; self.padded_lens[layer]].into()
+            }
+        };
+        backend.gather_params(self.dev, layer, Arc::get_mut(&mut buf).expect("uniquely owned"));
+        self.stats.misses += 1;
+        let out = Arc::clone(&buf);
+        slot.buf = Some(buf);
+        slot.valid = self.enabled;
+        out
+    }
+
+    /// Invalidate every slot. Call right after `end_step`: owners have
+    /// republished their shards, so cached bytes are stale.
+    pub fn invalidate(&mut self) {
+        for slot in &mut self.slots {
+            slot.valid = false;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::OdcComm;
+
+    fn store(lens: &[usize], world: usize) -> Arc<ParamStore> {
+        let params = Arc::new(ParamStore::new(lens, world));
+        for (l, p) in params.layers.iter().enumerate() {
+            let vals: Vec<f32> = (0..p.logical_len).map(|i| (l * 1000 + i) as f32).collect();
+            p.init_from(&vals);
+        }
+        params
+    }
+
+    #[test]
+    fn cached_gather_is_bit_identical_to_direct() {
+        let params = store(&[10, 7], 2);
+        let comm = OdcComm::new(Arc::clone(&params), 2);
+        let mut cache = GatherCache::new(&params, 0, true);
+        for layer in 0..2 {
+            let mut direct = vec![0.0f32; params.layers[layer].padded_len()];
+            comm.gather_params(0, layer, &mut direct);
+            for _ in 0..3 {
+                let cached = cache.gather(&comm, layer);
+                assert_eq!(&cached[..], &direct[..], "layer {layer}");
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "one real gather per layer");
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.fresh_allocs, 2, "one buffer per layer, ever");
+    }
+
+    #[test]
+    fn invalidate_rereads_updated_params() {
+        let params = store(&[6], 1);
+        let comm = OdcComm::new(Arc::clone(&params), 1);
+        let mut cache = GatherCache::new(&params, 0, true);
+        let before = cache.gather(&comm, 0);
+        assert_eq!(before[0], 0.0);
+        drop(before);
+        params.layers[0].init_from(&[9.0; 6]);
+        // without invalidation: stale by design (params "immutable")
+        assert_eq!(cache.gather(&comm, 0)[0], 0.0);
+        cache.invalidate();
+        assert_eq!(cache.gather(&comm, 0)[0], 9.0);
+        // slot allocation was reused, not reallocated
+        assert_eq!(cache.stats().fresh_allocs, 1);
+    }
+
+    #[test]
+    fn disabled_cache_gathers_every_call_but_reuses_buffer() {
+        let params = store(&[8], 2);
+        let comm = OdcComm::new(Arc::clone(&params), 2);
+        let mut cache = GatherCache::new(&params, 1, false);
+        for _ in 0..5 {
+            let g = cache.gather(&comm, 0);
+            assert_eq!(g[0], 0.0);
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 5, "disabled cache must preserve the seed gather sequence");
+        assert_eq!(s.fresh_allocs, 1, "but still reuse its buffer");
+    }
+
+    #[test]
+    fn outstanding_reference_forces_fresh_alloc_not_corruption() {
+        let params = store(&[4], 1);
+        let comm = OdcComm::new(Arc::clone(&params), 1);
+        let mut cache = GatherCache::new(&params, 0, true);
+        let held = cache.gather(&comm, 0);
+        let snapshot: Vec<f32> = held.to_vec();
+        cache.invalidate();
+        params.layers[0].init_from(&[5.0; 4]);
+        let fresh = cache.gather(&comm, 0);
+        assert_eq!(&held[..], &snapshot[..], "held Arc must never be mutated underneath");
+        assert_eq!(fresh[0], 5.0);
+        assert_eq!(cache.stats().fresh_allocs, 2);
+    }
+}

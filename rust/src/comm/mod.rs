@@ -10,17 +10,27 @@
 //!   per-layer barriers.
 //! * [`odc`] — the paper's backend: gather / scatter-accumulate with one
 //!   barrier per minibatch.
+//! * [`arena`] — preallocated per-(server, client) payload arenas (the
+//!   paper's Appendix B per-client RDMA buffers): the ODC push path is
+//!   allocation-free and uncontended in steady state.
+//! * [`gather_cache`] — minibatch-scoped parameter-gather cache (§6.2
+//!   parameter caching) for one-sided backends: each layer is gathered
+//!   once per minibatch and shared zero-copy from then on.
 //! * [`backend`] — the `CommBackend` trait the engine drives.
 //! * [`primbench`] — the Fig 11 primitive bandwidth benchmark.
 
+pub mod arena;
 pub mod backend;
 pub mod collective;
+pub mod gather_cache;
 pub mod odc;
 pub mod primbench;
 pub mod shared;
 pub mod topology;
 pub mod volume;
 
+pub use arena::{ArenaStats, PayloadArena};
 pub use backend::CommBackend;
 pub use collective::CollectiveComm;
+pub use gather_cache::{CacheStats, GatherCache};
 pub use odc::OdcComm;

@@ -2,7 +2,10 @@
 //!
 //! * `gather_params` is a **one-sided read** of each owner's parameter
 //!   window — no barrier, no participation of the owner (the CUDA-IPC /
-//!   NVSHMEM `get_mem` analogue).
+//!   NVSHMEM `get_mem` analogue). Because it is one-sided and params are
+//!   phase-immutable, gathers are also **cacheable** per minibatch
+//!   ([`CommBackend::gathers_cacheable`] returns true; the engine's
+//!   [`crate::comm::gather_cache::GatherCache`] exploits it — §6.2).
 //! * `reduce_grad` is **scatter-accumulate**: the client splits its
 //!   full-layer gradient by owner and pushes each piece into the owner's
 //!   mailbox (the `put_mem` + notify analogue, Appendix B). A per-device
@@ -15,19 +18,26 @@
 //!   progress completely independently within a minibatch (Figure 2),
 //!   including running *different microbatch counts* (LB-Mini).
 //!
-//! Buffering matches Appendix B: each (server, client) pair has its own
-//! in-flight payloads (here: owned `Vec`s moving through the channel),
-//! so concurrent pushes from different clients never alias, and requests
-//! from a single client are serialized.
+//! Buffering matches Appendix B exactly: each (server, client) pair owns
+//! a preallocated [`PayloadArena`] sized by `shard_range` — the paper's
+//! per-client RDMA buffers — so concurrent pushes from different clients
+//! never alias, never contend on a shared lock, and never allocate in
+//! steady state. The daemon returns each consumed payload to its pair's
+//! arena; `end_minibatch` drains every daemon before any device can
+//! advance, which bounds in-flight payloads per pair to one minibatch's
+//! pushes and therefore bounds arena growth (see `comm_stress`).
 
+use super::arena::{ArenaStats, PayloadArena};
 use super::backend::{CommBackend, ParamStore};
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 
 enum Msg {
-    /// One gradient piece for this server's shard of `layer`.
-    Accum { layer: usize, weight: f32, data: Vec<f32> },
+    /// One gradient piece for this server's shard of `layer`, pushed by
+    /// `client`; `data` returns to the (server, client) arena once
+    /// accumulated.
+    Accum { layer: usize, weight: f32, client: usize, data: Vec<f32> },
     /// A client has finished every microbatch of the current minibatch.
     Done,
     /// The colocated worker asks for the completed accumulators; the
@@ -40,31 +50,37 @@ pub struct OdcComm {
     world: usize,
     params: Arc<ParamStore>,
     /// Mailbox senders, one per server device. A Mutex serializes sends
-    /// from concurrent clients (channel send is cheap; the paper's
-    /// per-client buffers make pushes to one server independent — the
-    /// lock here only orders enqueue, not the transfer).
+    /// from concurrent clients (channel send is cheap; the per-client
+    /// arenas make the payloads themselves independent — the lock here
+    /// only orders enqueue, not the transfer).
     mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
     /// Grads returned by the local daemon at the minibatch boundary.
     taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
     barrier: Barrier,
     daemons: Mutex<Vec<JoinHandle<()>>>,
-    /// Payload buffer pool (§Perf): daemons return consumed push buffers
-    /// here so clients reuse them instead of allocating per push — the
-    /// analogue of the paper's preallocated per-client RDMA buffers.
-    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    /// Payload arenas indexed `[server][client]` (Appendix B: one
+    /// preallocated buffer set per client per server).
+    arenas: Vec<Vec<Arc<PayloadArena>>>,
 }
 
 impl OdcComm {
     pub fn new(params: Arc<ParamStore>, world: usize) -> Self {
         let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
-        let pool: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(Vec::new()));
+        // One full microbatch of a client pushes one piece per layer to
+        // each server, so prealloc one buffer per layer's shard length,
+        // plus a max-sized spare for the daemon lagging one message.
+        let mut caps = shard_lens.clone();
+        caps.push(shard_lens.iter().copied().max().unwrap_or(0));
+        let arenas: Vec<Vec<Arc<PayloadArena>>> = (0..world)
+            .map(|_server| (0..world).map(|_client| Arc::new(PayloadArena::new(&caps))).collect())
+            .collect();
         let mut mailbox = Vec::with_capacity(world);
         let mut daemons = Vec::with_capacity(world);
-        for _dev in 0..world {
+        for server in 0..world {
             let (tx, rx) = mpsc::channel::<Msg>();
             let lens = shard_lens.clone();
-            let pool_ = Arc::clone(&pool);
-            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, world, pool_)));
+            let row: Vec<Arc<PayloadArena>> = arenas[server].iter().map(Arc::clone).collect();
+            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, world, row)));
             mailbox.push(Mutex::new(tx));
         }
         OdcComm {
@@ -74,39 +90,36 @@ impl OdcComm {
             taken: (0..world).map(|_| Mutex::new(None)).collect(),
             barrier: Barrier::new(world),
             daemons: Mutex::new(daemons),
-            pool,
-        }
-    }
-
-    /// Grab a pooled payload buffer of exactly `len` elements (contents
-    /// arbitrary — caller overwrites).
-    fn payload(&self, len: usize) -> Vec<f32> {
-        let mut pool = self.pool.lock().unwrap();
-        if let Some(pos) = pool.iter().position(|b| b.capacity() >= len) {
-            let mut b = pool.swap_remove(pos);
-            // SAFETY-free resize: contents are fully overwritten by the
-            // caller's copy_from_slice before the buffer is read.
-            b.resize(len, 0.0);
-            b
-        } else {
-            vec![0.0; len]
+            arenas,
         }
     }
 
     fn send(&self, server: usize, msg: Msg) {
         self.mailbox[server].lock().unwrap().send(msg).expect("daemon alive");
     }
+
+    /// Summed payload-arena counters (tests / benches): proves the push
+    /// path is allocation-free after warm-up.
+    pub fn arena_stats(&self) -> ArenaStats {
+        let mut total = ArenaStats::default();
+        for row in &self.arenas {
+            for a in row {
+                total.merge(a.stats());
+            }
+        }
+        total
+    }
 }
 
 /// The accumulation daemon: single-threaded state machine owning the
-/// device's gradient accumulators.
+/// device's gradient accumulators. `arenas` is this server's row of the
+/// pair matrix, indexed by client.
 fn daemon_loop(
     rx: mpsc::Receiver<Msg>,
     shard_lens: Vec<usize>,
     world: usize,
-    pool: Arc<Mutex<Vec<Vec<f32>>>>,
+    arenas: Vec<Arc<PayloadArena>>,
 ) {
-    const POOL_CAP: usize = 64;
     let fresh = |lens: &[usize]| -> Vec<Vec<f32>> { lens.iter().map(|&l| vec![0.0; l]).collect() };
     let mut acc = fresh(&shard_lens);
     let mut done = 0usize;
@@ -117,17 +130,14 @@ fn daemon_loop(
             Err(_) => return,
         };
         match msg {
-            Msg::Accum { layer, weight, data } => {
+            Msg::Accum { layer, weight, client, data } => {
                 let a = &mut acc[layer];
                 debug_assert_eq!(a.len(), data.len());
                 for (x, &g) in a.iter_mut().zip(&data) {
                     *x += weight * g;
                 }
-                // recycle the payload buffer for future pushes
-                let mut p = pool.lock().unwrap();
-                if p.len() < POOL_CAP {
-                    p.push(data);
-                }
+                // return the payload to its (server, client) arena
+                arenas[client].release(data);
             }
             Msg::Done => done += 1,
             Msg::Flush { reply } => flush = Some(reply),
@@ -157,18 +167,24 @@ impl CommBackend for OdcComm {
         p.buf.read(0, &mut out[..n]);
     }
 
+    fn gathers_cacheable(&self) -> bool {
+        // One-sided + phase-immutable params: a gather at any point of
+        // the minibatch returns identical bytes, and skipping one never
+        // desynchronizes anything (there is nothing to rendezvous with).
+        true
+    }
+
     fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
         let p = &self.params.layers[layer];
         debug_assert_eq!(grad.len(), p.padded_len());
         if weight == 0.0 {
             return; // idle slot: ODC has nothing to send and nothing to wait for
         }
-        let _ = dev;
         for server in 0..self.world {
             let r = p.shard_range(server);
-            let mut data = self.payload(r.len());
-            data.copy_from_slice(&grad[r]);
-            self.send(server, Msg::Accum { layer, weight, data });
+            let mut data = self.arenas[server][dev].acquire(r.len());
+            data.extend_from_slice(&grad[r]);
+            self.send(server, Msg::Accum { layer, weight, client: dev, data });
         }
     }
 
@@ -228,6 +244,7 @@ mod tests {
             comm.gather_params(0, 0, &mut out);
             assert_eq!(out, vals);
         }
+        assert!(comm.gathers_cacheable());
     }
 
     #[test]
@@ -320,5 +337,36 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn arena_fully_drained_after_minibatch() {
+        // After end_minibatch on every device, every pushed payload has
+        // been accumulated and returned: resident == prealloc + fresh.
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[6, 10], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        let initial = comm.arena_stats().resident;
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for l in 0..2 {
+                        comm.reduce_grad(dev, l, &vec![1.0; params_padded(&comm, l)], 1.0);
+                    }
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 5];
+                    comm.take_grad_shard(dev, 1, &mut shard);
+                    comm.end_step(dev);
+                });
+            }
+        });
+        let s = comm.arena_stats();
+        assert_eq!(s.acquires, (world * world * 2) as u64);
+        assert_eq!(s.resident, initial + s.fresh_allocs, "all payloads must return home");
+    }
+
+    fn params_padded(comm: &OdcComm, layer: usize) -> usize {
+        comm.params.layers[layer].padded_len()
     }
 }

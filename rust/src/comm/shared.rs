@@ -14,10 +14,34 @@
 //! * ODC mailboxes transfer ownership through a channel, so a message's
 //!   payload is never aliased.
 //!
+//! ## The phase timeline (what downstream optimizations may assume)
+//!
+//! ```text
+//!  end_step ──────────────── end_minibatch ────────────── end_step
+//!     │   microbatch phase        │     optimizer phase      │
+//!     │   params READ-ONLY        │     params WRITTEN,      │
+//!     │   (gathers, pushes)       │     owner-shard-disjoint │
+//! ```
+//!
+//! Two subsystems lean on this timeline beyond plain read/write safety:
+//!
+//! * [`super::gather_cache::GatherCache`] (§6.2 parameter caching):
+//!   because parameter windows cannot change between two `end_step`
+//!   barriers, any gather of a layer taken during the microbatch phase
+//!   is valid — bit-identical — for the REST of that minibatch. The
+//!   cache must be invalidated at `end_step` (owners republish), and is
+//!   only legal for one-sided backends (see
+//!   [`super::backend::CommBackend::gathers_cacheable`]).
+//! * [`super::arena::PayloadArena`] (Appendix B per-client buffers):
+//!   `end_minibatch` drains every daemon before any device enters the
+//!   next microbatch phase, so a pair's in-flight payloads are bounded
+//!   by a single minibatch's pushes — arenas stop growing after warm-up.
+//!
 //! Violating the discipline is a logic bug in the coordinator, not in
 //! this substrate — mirroring how real RDMA gives you no protection
 //! either. The engine's integration tests (engine vs single-device
-//! oracle, Collective vs ODC equivalence) are the guard.
+//! oracle, Collective vs ODC equivalence, cached-vs-uncached gather
+//! bit-equality) are the guard.
 
 use std::cell::UnsafeCell;
 

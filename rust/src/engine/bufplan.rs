@@ -1,0 +1,222 @@
+//! Per-device buffer plan: every recurring allocation of the training
+//! hot path, owned in one place and recycled across layers, microbatches
+//! and minibatches.
+//!
+//! The seed `run_microbatch` made 16+ full-tensor `to_vec()`/`clone()`
+//! calls per microbatch (gathered layers, activations, tokens, segment
+//! ids, masks) because every PJRT call took owned `Vec`s. The plan
+//! replaces all of them with `Arc<[T]>` buffers that are:
+//!
+//! * **shared** into PJRT calls via [`Input::F32Shared`]-style variants
+//!   (refcount clone, no copy), and
+//! * **recycled** once uniquely owned again (the compute service drops
+//!   its clones before replying, see `runtime::service`), so the steady
+//!   state performs no heap allocation at all.
+//!
+//! Contents:
+//! * [`SlicePool`] — a free-list of `Arc<[T]>` buffers keyed by length;
+//!   `adopt` moves fresh data into a recycled allocation, `recycle`
+//!   returns a uniquely-owned buffer to the list.
+//! * [`BufferPlan`] — the per-device bundle: the minibatch-scoped
+//!   [`GatherCache`], gradient staging (`grad_pad`, `gshard`), and the
+//!   activation / token pools plus the forward activation stack.
+
+use crate::comm::backend::ParamStore;
+use crate::comm::GatherCache;
+use std::sync::Arc;
+
+/// Free-list of reusable `Arc<[T]>` buffers. Single-threaded (one per
+/// device thread); `recycle` only accepts uniquely-owned buffers, so
+/// `adopt` can safely overwrite list entries in place.
+pub struct SlicePool<T> {
+    free: Vec<Arc<[T]>>,
+    cap: usize,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl<T: Copy> SlicePool<T> {
+    /// Pool retaining at most `cap` free buffers.
+    pub fn new(cap: usize) -> Self {
+        SlicePool { free: Vec::with_capacity(cap), cap, allocs: 0, reuses: 0 }
+    }
+
+    /// Move `v`'s contents into a shared buffer, reusing a free
+    /// same-length allocation when available (copy, no alloc) and
+    /// falling back to a fresh `Arc` (counted) otherwise.
+    pub fn adopt(&mut self, v: Vec<T>) -> Arc<[T]> {
+        if let Some(pos) =
+            self.free.iter().position(|a| a.len() == v.len() && Arc::strong_count(a) == 1)
+        {
+            let mut a = self.free.swap_remove(pos);
+            Arc::get_mut(&mut a).expect("uniquely owned free-list entry").copy_from_slice(&v);
+            self.reuses += 1;
+            return a;
+        }
+        self.allocs += 1;
+        v.into()
+    }
+
+    /// Return a buffer to the pool. Drops the buffer when other clones
+    /// are still outstanding; when the pool is full, evicts the OLDEST
+    /// entry instead of rejecting the new one, so a shifting length
+    /// working set (e.g. microbatches moving to a different sequence
+    /// bucket) re-warms the pool rather than permanently bypassing it.
+    pub fn recycle(&mut self, a: Arc<[T]>) {
+        if Arc::strong_count(&a) != 1 || self.cap == 0 {
+            return;
+        }
+        if self.free.len() == self.cap {
+            self.free.remove(0);
+        }
+        self.free.push(a);
+    }
+
+    /// (fresh allocations, in-place reuses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.allocs, self.reuses)
+    }
+}
+
+/// All recurring per-device buffers of the training loop.
+pub struct BufferPlan {
+    /// Minibatch-scoped parameter gathers (enabled only when the backend
+    /// reports `gathers_cacheable`).
+    pub cache: GatherCache,
+    /// Padded full-layer gradient staging (reduce_grad input).
+    pub grad_pad: Vec<f32>,
+    /// Owned-shard gradient staging (take_grad_shard target).
+    pub gshard: Vec<f32>,
+    /// Activation / mask buffers (f32), recycled across microbatches.
+    pub f32_pool: SlicePool<f32>,
+    /// Token / segment / target buffers (i32), recycled likewise.
+    pub i32_pool: SlicePool<i32>,
+    /// Forward activation stack of the microbatch in flight (block
+    /// inputs saved for the backward recompute).
+    pub acts: Vec<Arc<[f32]>>,
+}
+
+impl BufferPlan {
+    pub fn new(params: &ParamStore, dev: usize, cache_enabled: bool) -> Self {
+        let max_padded = params.max_padded_len();
+        let max_shard = params.layers.iter().map(|p| p.shard_len).max().unwrap_or(0);
+        let n_layers = params.n_layers();
+        // Live f32 buffers per microbatch: one activation per block, the
+        // current x, the mask, plus slack for in-flight adoption.
+        let f32_cap = 2 * (n_layers + 2);
+        // Live i32 buffers: tokens, segments, targets (+ slack).
+        let i32_cap = 2 * 3;
+        BufferPlan {
+            cache: GatherCache::new(params, dev, cache_enabled),
+            grad_pad: vec![0.0; max_padded],
+            gshard: vec![0.0; max_shard],
+            f32_pool: SlicePool::new(f32_cap),
+            i32_pool: SlicePool::new(i32_cap),
+            acts: Vec::with_capacity(n_layers),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommBackend, OdcComm};
+
+    #[test]
+    fn pool_reuses_same_length_buffers() {
+        let mut pool: SlicePool<f32> = SlicePool::new(4);
+        let a = pool.adopt(vec![1.0, 2.0, 3.0]);
+        let ptr = a.as_ptr();
+        pool.recycle(a);
+        let b = pool.adopt(vec![4.0, 5.0, 6.0]);
+        assert_eq!(b.as_ptr(), ptr, "same-length adopt must reuse the allocation");
+        assert_eq!(&b[..], &[4.0, 5.0, 6.0]);
+        assert_eq!(pool.stats(), (1, 1));
+    }
+
+    #[test]
+    fn pool_allocates_on_length_mismatch() {
+        let mut pool: SlicePool<i32> = SlicePool::new(4);
+        let a = pool.adopt(vec![1, 2]);
+        pool.recycle(a);
+        let b = pool.adopt(vec![1, 2, 3]);
+        assert_eq!(&b[..], &[1, 2, 3]);
+        assert_eq!(pool.stats().0, 2);
+    }
+
+    #[test]
+    fn pool_refuses_aliased_recycle() {
+        let mut pool: SlicePool<f32> = SlicePool::new(4);
+        let a = pool.adopt(vec![1.0; 8]);
+        let alias = Arc::clone(&a);
+        pool.recycle(a); // dropped, not pooled: alias outstanding
+        let b = pool.adopt(vec![2.0; 8]);
+        assert_ne!(b.as_ptr(), alias.as_ptr());
+        assert_eq!(alias[0], 1.0, "outstanding clone untouched");
+    }
+
+    #[test]
+    fn pool_bounds_retention() {
+        let mut pool: SlicePool<f32> = SlicePool::new(2);
+        for _ in 0..5 {
+            let a = pool.adopt(vec![0.0; 4]);
+            let b = pool.adopt(vec![0.0; 4]);
+            let c = pool.adopt(vec![0.0; 4]);
+            pool.recycle(a);
+            pool.recycle(b);
+            pool.recycle(c); // third drops: pool cap is 2
+        }
+        assert!(pool.free.len() <= 2);
+    }
+
+    #[test]
+    fn full_pool_evicts_oldest_instead_of_seizing() {
+        // Regression: a pool filled with stale lengths must adapt when
+        // the working set's length changes, not allocate forever.
+        let mut pool: SlicePool<f32> = SlicePool::new(2);
+        for len in [3usize, 4] {
+            let a = pool.adopt(vec![0.0; len]);
+            pool.recycle(a);
+        }
+        // pool now full with lengths {3, 4}; switch the working set to 5
+        for _ in 0..3 {
+            let a = pool.adopt(vec![0.0; 5]);
+            pool.recycle(a);
+        }
+        let allocs_before = pool.stats().0;
+        let a = pool.adopt(vec![1.0; 5]);
+        pool.recycle(a);
+        assert_eq!(pool.stats().0, allocs_before, "len-5 entries must be served from the pool");
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut pool: SlicePool<f32> = SlicePool::new(8);
+        // warm-up round allocates
+        let warm: Vec<_> = (0..4).map(|_| pool.adopt(vec![0.0; 16])).collect();
+        for a in warm {
+            pool.recycle(a);
+        }
+        let (allocs_after_warmup, _) = pool.stats();
+        // steady state: same working set, zero new allocations
+        for _ in 0..50 {
+            let round: Vec<_> = (0..4).map(|i| pool.adopt(vec![i as f32; 16])).collect();
+            for a in round {
+                pool.recycle(a);
+            }
+        }
+        assert_eq!(pool.stats().0, allocs_after_warmup, "steady state must not allocate");
+    }
+
+    #[test]
+    fn buffer_plan_shapes_match_store() {
+        let params = Arc::new(ParamStore::new(&[10, 6, 6], 2));
+        let comm = OdcComm::new(Arc::clone(&params), 2);
+        let mut plan = BufferPlan::new(&params, 0, comm.gathers_cacheable());
+        assert_eq!(plan.grad_pad.len(), params.max_padded_len());
+        assert_eq!(plan.gshard.len(), 5);
+        assert!(plan.cache.enabled());
+        let g = plan.cache.gather(&comm, 0);
+        assert_eq!(g.len(), params.layers[0].padded_len());
+    }
+}

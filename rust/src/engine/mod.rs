@@ -5,10 +5,17 @@
 //!
 //! All model math executes through the PJRT artifacts (L2/L1); the
 //! engine owns only coordination + the sharded AdamW server step.
+//!
+//! The hot path is zero-copy: every device thread owns a
+//! [`bufplan::BufferPlan`] holding its gather cache, gradient staging
+//! and recycled activation buffers, and hands tensors to PJRT as shared
+//! `Arc` slices instead of cloned `Vec`s.
 
+pub mod bufplan;
 pub mod memory;
 pub mod optimizer;
 pub mod packing;
 pub mod trainer;
 
+pub use bufplan::{BufferPlan, SlicePool};
 pub use trainer::{train, StepLog, TrainerConfig};

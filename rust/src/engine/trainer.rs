@@ -16,6 +16,20 @@
 //! Under `Collective`, every gather/reduce is a barrier (per-layer
 //! lockstep); under `Odc` devices free-run to `end_minibatch`, which is
 //! what lets LB-Mini give devices different microbatch counts.
+//!
+//! ## Zero-copy hot path
+//!
+//! Each device thread owns a [`BufferPlan`]: a minibatch-scoped
+//! [`GatherCache`](crate::comm::GatherCache) (ODC gathers each layer
+//! once per MINIBATCH instead of twice per microbatch — §6.2), recycled
+//! `Arc` activation/token buffers, and persistent gradient staging.
+//! Tensors reach PJRT as shared slices ([`Input::shared_f32`] et al.),
+//! so the steady-state loop performs no host-side tensor copies beyond
+//! the unavoidable host→device uploads, and no heap allocation. Whether
+//! caching is legal is the backend's call
+//! ([`CommBackend::gathers_cacheable`]); under `Collective` the cache
+//! runs disabled and reproduces the seed gather/barrier sequence
+//! exactly.
 
 use crate::balance::cost::CostModel;
 use crate::balance::packers::{plan_run, Plan};
@@ -24,6 +38,7 @@ use crate::comm::{CollectiveComm, OdcComm};
 use crate::config::{Balancer, CommScheme};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
+use crate::engine::bufplan::BufferPlan;
 use crate::engine::optimizer::{AdamConfig, AdamState};
 use crate::engine::packing::pack_micro;
 use crate::runtime::{ComputeService, Input, Manifest};
@@ -51,6 +66,10 @@ pub struct TrainerConfig {
     pub pjrt_shard_ops: bool,
     /// Sequence-length distribution (scaled into the bucket range).
     pub len_sigma: f64,
+    /// Minibatch-scoped parameter-gather caching (§6.2). Only takes
+    /// effect on backends reporting `gathers_cacheable` (ODC); the
+    /// equivalence tests toggle it to pin cached == uncached bytes.
+    pub gather_cache: bool,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -71,6 +90,7 @@ impl TrainerConfig {
             adam: AdamConfig::default(),
             pjrt_shard_ops: false,
             len_sigma: 0.8,
+            gather_cache: true,
             plan_override: None,
         }
     }
@@ -229,13 +249,12 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     let man = &ctx.man;
     let dev = ctx.dev;
     let n_layers = man.n_layers;
-    let embed_pad = ctx.params.layers[0].padded_len();
-    let block_pad = ctx.params.layers[1].padded_len();
 
-    // reusable buffers
-    let mut emb_buf = vec![0.0f32; embed_pad];
-    let mut flat_buf = vec![0.0f32; block_pad];
-    let mut grad_pad = vec![0.0f32; embed_pad.max(block_pad)];
+    // All recurring buffers live in the plan; caching is a backend
+    // capability (ODC yes, Collective no — a collective gather is a
+    // rendezvous and must run on every seed call site).
+    let use_cache = ctx.cfg.gather_cache && ctx.backend.gathers_cacheable();
+    let mut bufs = BufferPlan::new(&ctx.params, dev, use_cache);
 
     // local master copy of owned shards + Adam state
     let mut shards: Vec<Vec<f32>> = ctx
@@ -250,7 +269,14 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         })
         .collect();
     let mut adam: Vec<AdamState> = shards.iter().map(|s| AdamState::new(s.len())).collect();
-    let mut gshard = vec![0.0f32; ctx.params.layers.iter().map(|p| p.shard_len).max().unwrap()];
+    // Chunk staging for the PJRT validation path (reused across all
+    // layers and steps; empty and never touched when the native Rust
+    // AdamW loop runs).
+    let mut adam_stage: Vec<Arc<[f32]>> = if ctx.cfg.pjrt_shard_ops {
+        (0..5).map(|i| vec![0.0f32; if i < 4 { man.chunk } else { 7 }].into()).collect()
+    } else {
+        Vec::new()
+    };
 
     for (step, plan) in ctx.plans.iter().enumerate() {
         let t0 = Instant::now();
@@ -264,10 +290,10 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         for m in 0..m_count {
             let micro = my.get(m).map(|v| v.as_slice()).unwrap_or(&[]);
             if micro.is_empty() {
-                idle_participation(&ctx, n_layers, &mut emb_buf, &mut flat_buf, &mut grad_pad)?;
+                idle_participation(&ctx, n_layers, &mut bufs)?;
                 continue;
             }
-            run_microbatch(&ctx, step, micro, &mut emb_buf, &mut flat_buf, &mut grad_pad)?;
+            run_microbatch(&ctx, &mut bufs, step, micro)?;
         }
 
         ctx.backend.end_minibatch(dev);
@@ -276,10 +302,10 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         let ntok = ctx.tok_count[step].load(Ordering::SeqCst).max(1) as f32;
         for l in 0..=n_layers {
             let p = &ctx.params.layers[l];
-            let g = &mut gshard[..p.shard_len];
+            let g = &mut bufs.gshard[..p.shard_len];
             ctx.backend.take_grad_shard(dev, l, g);
             if ctx.cfg.pjrt_shard_ops {
-                pjrt_adam_step(&ctx, l, &mut shards[l], g, &mut adam[l], ntok)?;
+                pjrt_adam_step(&ctx, &mut shards[l], g, &mut adam[l], ntok, &mut adam_stage)?;
             } else {
                 for x in g.iter_mut() {
                     *x /= ntok;
@@ -290,6 +316,8 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
             p.buf.write(r.start, &shards[l]);
         }
         ctx.backend.end_step(dev);
+        // Params republished at the barrier: cached gathers are stale.
+        bufs.cache.invalidate();
         if dev == 0 {
             *ctx.wall[step].lock().unwrap() = t0.elapsed().as_secs_f64();
         }
@@ -297,89 +325,124 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     Ok(())
 }
 
-/// Forward + backward of one packed microbatch through PJRT.
+/// Forward + backward of one packed microbatch through PJRT, zero-copy:
+/// gathered layers and saved activations are `Arc` slices shared into
+/// every call; the only owned-`Vec` handoff left is `dx`, which moves
+/// (not clones) through the backward chain.
 fn run_microbatch(
     ctx: &DeviceCtx,
+    bufs: &mut BufferPlan,
     step: usize,
     micro: &[usize],
-    emb_buf: &mut [f32],
-    flat_buf: &mut [f32],
-    grad_pad: &mut [f32],
 ) -> Result<()> {
     let man = &ctx.man;
     let dev = ctx.dev;
     let n_layers = man.n_layers;
+    let backend = ctx.backend.as_ref();
     let refs: Vec<&Sample> = micro.iter().map(|&i| &ctx.samples[i]).collect();
     let packed = pack_micro(&refs, &man.seq_buckets)?;
     let s = packed.seq;
     ctx.tok_count[step].fetch_add(packed.real_tokens as u64, Ordering::SeqCst);
 
+    // Adopt the packed tensors into recycled shared buffers: after
+    // warm-up these are in-place copies, and every PJRT call below
+    // shares them by refcount instead of cloning.
+    let tokens = bufs.i32_pool.adopt(packed.tokens);
+    let seg = bufs.i32_pool.adopt(packed.seg);
+    let targets = bufs.i32_pool.adopt(packed.targets);
+    let mask = bufs.f32_pool.adopt(packed.mask);
+
     // ---- forward ----
-    ctx.backend.gather_params(dev, 0, emb_buf);
-    let emb = &emb_buf[..man.embed_params];
+    let emb = bufs.cache.gather(backend, 0);
     let mut out = ctx.svc.call(
         &format!("embed_fwd_s{s}"),
-        vec![Input::F32(emb.to_vec()), Input::I32(packed.tokens.clone())],
+        vec![Input::shared_f32(&emb, man.embed_params), Input::shared_i32_all(&tokens)],
     )?;
-    let mut x = out.swap_remove(0);
+    let mut x = bufs.f32_pool.adopt(out.swap_remove(0));
 
-    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    debug_assert!(bufs.acts.is_empty(), "activation stack leaked from a previous microbatch");
     for l in 1..=n_layers {
-        ctx.backend.gather_params(dev, l, flat_buf);
-        let flat = &flat_buf[..man.block_params];
+        let flat = bufs.cache.gather(backend, l);
         let mut out = ctx.svc.call(
             &format!("block_fwd_s{s}"),
-            vec![Input::F32(flat.to_vec()), Input::F32(x.clone()), Input::I32(packed.seg.clone())],
+            vec![
+                Input::shared_f32(&flat, man.block_params),
+                Input::shared_f32_all(&x),
+                Input::shared_i32_all(&seg),
+            ],
         )?;
-        acts.push(std::mem::replace(&mut x, out.swap_remove(0)));
+        let next = bufs.f32_pool.adopt(out.swap_remove(0));
+        bufs.acts.push(std::mem::replace(&mut x, next));
     }
 
-    let out = ctx.svc.call(
+    let mut out = ctx.svc.call(
         &format!("loss_head_s{s}"),
         vec![
-            Input::F32(emb.to_vec()),
-            Input::F32(x.clone()),
-            Input::I32(packed.targets.clone()),
-            Input::F32(packed.mask.clone()),
+            Input::shared_f32(&emb, man.embed_params),
+            Input::shared_f32_all(&x),
+            Input::shared_i32_all(&targets),
+            Input::shared_f32_all(&mask),
         ],
     )?;
-    let (loss_sum, _ntok, mut dx, demb_head) =
-        (out[0][0] as f64, out[1][0] as f64, out[2].clone(), out[3].clone());
-    *ctx.loss_sum[step].lock().unwrap() += loss_sum;
+    // outputs: [loss_sum, ntok, dx, demb_head]
+    let demb_head = out.pop().ok_or_else(|| anyhow!("loss_head: missing demb output"))?;
+    let mut dx = out.pop().ok_or_else(|| anyhow!("loss_head: missing dx output"))?;
+    let _ntok = out.pop();
+    let loss_sum = out.pop().ok_or_else(|| anyhow!("loss_head: missing loss output"))?;
+    *ctx.loss_sum[step].lock().unwrap() += loss_sum[0] as f64;
+    bufs.f32_pool.recycle(x);
 
     // ---- backward (recompute per layer from saved inputs) ----
     for l in (1..=n_layers).rev() {
-        ctx.backend.gather_params(dev, l, flat_buf);
-        let flat = &flat_buf[..man.block_params];
-        let out = ctx.svc.call(
+        let flat = bufs.cache.gather(backend, l);
+        let act = bufs.acts.pop().expect("activation for block l-1");
+        let mut out = ctx.svc.call(
             &format!("block_bwd_s{s}"),
             vec![
-                Input::F32(flat.to_vec()),
-                Input::F32(acts[l - 1].clone()),
-                Input::I32(packed.seg.clone()),
+                Input::shared_f32(&flat, man.block_params),
+                Input::shared_f32_all(&act),
+                Input::shared_i32_all(&seg),
                 Input::F32(dx),
             ],
         )?;
-        dx = out[0].clone();
+        bufs.f32_pool.recycle(act);
+        dx = out.swap_remove(0);
+        let dflat = out.pop().ok_or_else(|| anyhow!("block_bwd: missing grad output"))?;
         let p = &ctx.params.layers[l];
-        let gp = &mut grad_pad[..p.padded_len()];
-        gp[..man.block_params].copy_from_slice(&out[1]);
+        let gp = &mut bufs.grad_pad[..p.padded_len()];
+        gp[..man.block_params].copy_from_slice(&dflat);
         gp[man.block_params..].fill(0.0);
         ctx.backend.reduce_grad(dev, l, gp, 1.0);
     }
 
     // embedding gradient: head (tied weights) + input scatter-add
-    let out = ctx.svc.call(
+    let mut out = ctx.svc.call(
         &format!("embed_bwd_s{s}"),
-        vec![Input::I32(packed.tokens.clone()), Input::F32(dx)],
+        vec![Input::shared_i32_all(&tokens), Input::F32(dx)],
     )?;
+    let demb_in = out.swap_remove(0);
+    if demb_head.len() != man.embed_params || demb_in.len() != man.embed_params {
+        return Err(anyhow!(
+            "embed grad size mismatch: head {} / input {} vs embed_params {}",
+            demb_head.len(),
+            demb_in.len(),
+            man.embed_params
+        ));
+    }
     let p = &ctx.params.layers[0];
-    let gp = &mut grad_pad[..p.padded_len()];
-    for (i, slot) in gp[..man.embed_params].iter_mut().enumerate() {
-        *slot = demb_head[i] + out[0][i];
+    let gp = &mut bufs.grad_pad[..p.padded_len()];
+    for (slot, (h, i)) in gp[..man.embed_params].iter_mut().zip(demb_head.iter().zip(&demb_in)) {
+        *slot = h + i;
     }
     gp[man.embed_params..].fill(0.0);
     ctx.backend.reduce_grad(dev, 0, gp, 1.0);
+
+    // Return the microbatch tensors to their pools (uniquely owned
+    // again: the service drops its input clones before replying).
+    bufs.i32_pool.recycle(tokens);
+    bufs.i32_pool.recycle(seg);
+    bufs.i32_pool.recycle(targets);
+    bufs.f32_pool.recycle(mask);
     Ok(())
 }
 
@@ -387,43 +450,44 @@ fn run_microbatch(
 /// same barrier sequence as a real microbatch — gathers in forward, then
 /// gather+reduce per layer in backward, then the embed reduce — with a
 /// zero-weight contribution. Under ODC this is a no-op by construction.
-fn idle_participation(
-    ctx: &DeviceCtx,
-    n_layers: usize,
-    emb_buf: &mut [f32],
-    flat_buf: &mut [f32],
-    grad_pad: &mut [f32],
-) -> Result<()> {
+/// Gathers route through the (disabled) cache so the call sequence and
+/// buffer reuse match `run_microbatch` one-for-one.
+fn idle_participation(ctx: &DeviceCtx, n_layers: usize, bufs: &mut BufferPlan) -> Result<()> {
     if matches!(ctx.cfg.scheme, CommScheme::Odc) {
         return Ok(());
     }
     let dev = ctx.dev;
-    ctx.backend.gather_params(dev, 0, emb_buf);
+    let backend = ctx.backend.as_ref();
+    let _ = bufs.cache.gather(backend, 0);
     for l in 1..=n_layers {
-        ctx.backend.gather_params(dev, l, flat_buf);
+        let _ = bufs.cache.gather(backend, l);
     }
     for l in (1..=n_layers).rev() {
-        ctx.backend.gather_params(dev, l, flat_buf);
+        let _ = bufs.cache.gather(backend, l);
         let p = &ctx.params.layers[l];
-        grad_pad[..p.padded_len()].fill(0.0);
-        ctx.backend.reduce_grad(dev, l, &grad_pad[..p.padded_len()], 0.0);
+        bufs.grad_pad[..p.padded_len()].fill(0.0);
+        ctx.backend.reduce_grad(dev, l, &bufs.grad_pad[..p.padded_len()], 0.0);
     }
     let p = &ctx.params.layers[0];
-    grad_pad[..p.padded_len()].fill(0.0);
-    ctx.backend.reduce_grad(dev, 0, &grad_pad[..p.padded_len()], 0.0);
+    bufs.grad_pad[..p.padded_len()].fill(0.0);
+    ctx.backend.reduce_grad(dev, 0, &bufs.grad_pad[..p.padded_len()], 0.0);
     Ok(())
 }
 
 /// Validation path: scale + AdamW through the PJRT chunk kernels
 /// (`accum_chunk` is exercised by the scatter-accumulate tests; here we
-/// run `adam_chunk` over the shard in fixed-size chunks).
+/// run `adam_chunk` over the shard in fixed-size chunks). `stage` holds
+/// five reusable shared buffers owned by `device_main` — four chunk
+/// tensors (p, m, v, g) plus the 7-element hyperparameter vector — and
+/// is rewritten in place each call: the service drops its clones before
+/// replying, so the buffers are uniquely owned again between calls.
 fn pjrt_adam_step(
     ctx: &DeviceCtx,
-    _layer: usize,
     p: &mut [f32],
     g: &mut [f32],
     st: &mut AdamState,
     ntok: f32,
+    stage: &mut [Arc<[f32]>],
 ) -> Result<()> {
     for x in g.iter_mut() {
         *x /= ntok;
@@ -431,22 +495,28 @@ fn pjrt_adam_step(
     st.t += 1;
     let (bc1, bc2) = st.bias_corrections(&ctx.cfg.adam);
     let a = &ctx.cfg.adam;
-    let hp = vec![a.lr, a.beta1, a.beta2, a.eps, a.weight_decay, bc1, bc2];
+    let (chunks, hp) = stage.split_at_mut(4);
+    Arc::get_mut(&mut hp[0])
+        .expect("hp buffer uniquely owned between calls")
+        .copy_from_slice(&[a.lr, a.beta1, a.beta2, a.eps, a.weight_decay, bc1, bc2]);
     let c = ctx.man.chunk;
     let mut off = 0;
     while off < p.len() {
         let n = c.min(p.len() - off);
-        let mut pc = vec![0.0f32; c];
-        let mut mc = vec![0.0f32; c];
-        let mut vc = vec![0.0f32; c];
-        let mut gc = vec![0.0f32; c];
-        pc[..n].copy_from_slice(&p[off..off + n]);
-        mc[..n].copy_from_slice(&st.m[off..off + n]);
-        vc[..n].copy_from_slice(&st.v[off..off + n]);
-        gc[..n].copy_from_slice(&g[off..off + n]);
+        for (buf, src) in chunks.iter_mut().zip([&p[off..off + n], &st.m[off..off + n], &st.v[off..off + n], &g[off..off + n]]) {
+            let dst = Arc::get_mut(buf).expect("stage buffer uniquely owned between calls");
+            dst[..n].copy_from_slice(src);
+            dst[n..].fill(0.0);
+        }
         let out = ctx.svc.call(
             "adam_chunk",
-            vec![Input::F32(pc), Input::F32(mc), Input::F32(vc), Input::F32(gc), Input::F32(hp.clone())],
+            vec![
+                Input::shared_f32_all(&chunks[0]),
+                Input::shared_f32_all(&chunks[1]),
+                Input::shared_f32_all(&chunks[2]),
+                Input::shared_f32_all(&chunks[3]),
+                Input::shared_f32_all(&hp[0]),
+            ],
         )?;
         p[off..off + n].copy_from_slice(&out[0][..n]);
         st.m[off..off + n].copy_from_slice(&out[1][..n]);

@@ -16,6 +16,30 @@
 //!   (`python/compile/kernels/`), verified against pure-jnp oracles.
 //!
 //! Python never runs on the training hot path.
+//!
+//! ## The zero-copy buffer subsystem
+//!
+//! The per-microbatch compute/comm path is steady-state allocation-free
+//! and host-copy-free, built from four pieces that all lean on the
+//! phase discipline documented in [`comm::shared`]:
+//!
+//! * [`comm::arena::PayloadArena`] — preallocated per-(server, client)
+//!   push-payload buffers (the paper's Appendix B per-client RDMA
+//!   buffers): `reduce_grad` under ODC never allocates and never
+//!   contends with other clients.
+//! * [`comm::gather_cache::GatherCache`] — minibatch-scoped parameter
+//!   gathers (§6.2 caching): one-sided backends gather each layer once
+//!   per minibatch; every further use is an `Arc` refcount clone.
+//! * [`engine::bufplan::BufferPlan`] — the per-device bundle of all
+//!   recurring trainer buffers (gather cache, gradient staging,
+//!   recycled activation/token pools).
+//! * [`runtime::Input::F32Shared`] / [`runtime::SharedSlice`] — shared
+//!   PJRT inputs: the compute service uploads straight from the
+//!   engine's `Arc` windows and releases them before replying, so
+//!   callers recycle buffers in place.
+//!
+//! `cargo bench --bench comm_path` measures the win and records it in
+//! `BENCH_hotpath.json` at the repo root.
 
 pub mod balance;
 pub mod comm;

@@ -88,7 +88,8 @@ fn main() -> anyhow::Result<()> {
             let r = simulate(&SimConfig::new(exp));
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
-            println!("  bubble rate      : {:.2}%", 100.0 * r.bubble_rate);
+            println!("  bubble rate      : {}", odc::report::pct(r.bubble_rate));
+            println!("  device util      : {}", odc::report::pct(r.device_utilization));
             println!(
                 "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
                 r.mean_minibatch_s, r.minibatches, r.samples

@@ -65,6 +65,12 @@ pub fn pct_delta(ours: f64, baseline: f64) -> String {
     format!("({}{:.0}%)", if pct >= 0.0 { "+" } else { "" }, pct)
 }
 
+/// Format a 0..=1 fraction as a percentage cell ("87.3%") — used by
+/// the sim CLI's bubble-rate and device-utilization lines.
+pub fn pct(frac: f64) -> String {
+    format!("{:.1}%", 100.0 * frac)
+}
+
 /// An ASCII sparkline-style histogram for Fig 7 style distribution plots.
 pub fn ascii_hist(counts: &[usize], width: usize) -> String {
     let max = counts.iter().copied().max().unwrap_or(1).max(1);
@@ -103,6 +109,13 @@ mod tests {
     fn pct_delta_formats() {
         assert_eq!(pct_delta(1.36, 1.0), "(+36%)");
         assert_eq!(pct_delta(0.95, 1.0), "(-5%)");
+    }
+
+    #[test]
+    fn pct_formats_fraction() {
+        assert_eq!(pct(0.873), "87.3%");
+        assert_eq!(pct(1.0), "100.0%");
+        assert_eq!(pct(0.0), "0.0%");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 pub mod manifest;
 pub mod service;
+pub mod xla_stub;
 
 pub use manifest::Manifest;
-pub use service::{ComputeService, Input};
+pub use service::{ComputeService, Input, SharedSlice};

@@ -8,20 +8,52 @@
 //! serializes kernel launches on a stream; on this single-core testbed
 //! it costs nothing.
 //!
-//! Input/output payloads cross the channel as plain `Vec<f32>`/`Vec<i32>`
-//! (Literals are also thread-bound); the service builds literals, runs
-//! the executable, and decomposes the tuple reply.
+//! ## Zero-copy inputs
+//!
+//! Payloads cross the channel either as owned `Vec`s ([`Input::F32`] /
+//! [`Input::I32`] — the caller is done with the data) or as shared
+//! [`SharedSlice`]s ([`Input::F32Shared`] / [`Input::I32Shared`]) —
+//! `Arc`-backed windows that let the engine hand the SAME gathered
+//! parameter block or activation buffer to many consecutive calls with
+//! no host-side copy. The service reads the slice directly into the
+//! device buffer (`buffer_from_host_buffer`) and drops its clone of the
+//! `Arc` BEFORE replying, so when `call` returns the caller observes a
+//! refcount of 1 again and can recycle the buffer in place.
 
 use super::manifest::{ArtifactSpec, DType, Manifest};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
+
+// Offline build: the PJRT bindings are provided by the in-tree stub
+// (see its module docs for how to swap the real `xla` crate back in).
+use crate::runtime::xla_stub as xla;
+
+/// A shared window over an `Arc`-backed tensor: `data[start..start+len]`.
+/// Cloning is refcount-only; the payload is never copied.
+#[derive(Clone, Debug)]
+pub struct SharedSlice<T> {
+    pub data: Arc<[T]>,
+    pub start: usize,
+    pub len: usize,
+}
+
+impl<T> SharedSlice<T> {
+    pub fn as_slice(&self) -> &[T] {
+        &self.data[self.start..self.start + self.len]
+    }
+}
 
 /// One tensor argument.
 #[derive(Clone, Debug)]
 pub enum Input {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Borrowed view of a shared f32 tensor (gathered params, activations).
+    F32Shared(SharedSlice<f32>),
+    /// Borrowed view of a shared i32 tensor (tokens, segment ids).
+    I32Shared(SharedSlice<i32>),
 }
 
 impl Input {
@@ -29,7 +61,25 @@ impl Input {
         match self {
             Input::F32(v) => v.len(),
             Input::I32(v) => v.len(),
+            Input::F32Shared(s) => s.len,
+            Input::I32Shared(s) => s.len,
         }
+    }
+
+    /// Share the first `len` elements of an `Arc` tensor (zero-copy).
+    pub fn shared_f32(data: &Arc<[f32]>, len: usize) -> Input {
+        debug_assert!(len <= data.len());
+        Input::F32Shared(SharedSlice { data: Arc::clone(data), start: 0, len })
+    }
+
+    /// Share a whole `Arc` f32 tensor (zero-copy).
+    pub fn shared_f32_all(data: &Arc<[f32]>) -> Input {
+        Input::shared_f32(data, data.len())
+    }
+
+    /// Share a whole `Arc` i32 tensor (zero-copy).
+    pub fn shared_i32_all(data: &Arc<[i32]>) -> Input {
+        Input::I32Shared(SharedSlice { data: Arc::clone(data), start: 0, len: data.len() })
     }
 }
 
@@ -87,6 +137,10 @@ impl ComputeService {
     }
 
     /// Execute `artifact` with `inputs`; returns all outputs as f32 vecs.
+    ///
+    /// Synchronous: by the time this returns, the service has dropped
+    /// every `Arc` clone inside `inputs` (the drop happens-before the
+    /// reply send), so shared buffers are uniquely owned again.
     pub fn call(&self, artifact: &str, inputs: Vec<Input>) -> Result<Vec<Vec<f32>>> {
         let (reply, rrx) = mpsc::channel();
         self.tx
@@ -124,8 +178,13 @@ fn service_main(man: Manifest, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Resu
         match msg {
             Msg::Shutdown => return,
             Msg::Call(req) => {
-                let result = run_one(&client, &exes, &req);
-                let _ = req.reply.send(result);
+                let Request { artifact, inputs, reply } = req;
+                let result = run_one(&client, &exes, &artifact, &inputs);
+                // Release shared-input refcounts BEFORE the reply: the
+                // caller recycles its Arc buffers as soon as `call`
+                // returns, relying on observing strong_count == 1.
+                drop(inputs);
+                let _ = reply.send(result);
             }
         }
     }
@@ -134,36 +193,45 @@ fn service_main(man: Manifest, rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Resu
 fn run_one(
     client: &xla::PjRtClient,
     exes: &BTreeMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
-    req: &Request,
+    artifact: &str,
+    inputs: &[Input],
 ) -> Result<Vec<Vec<f32>>> {
-    let (spec, exe) = exes.get(&req.artifact).ok_or(anyhow!("unknown artifact `{}`", req.artifact))?;
-    if req.inputs.len() != spec.inputs.len() {
-        return Err(anyhow!("{}: expected {} inputs, got {}", req.artifact, spec.inputs.len(), req.inputs.len()));
+    let (spec, exe) = exes.get(artifact).ok_or(anyhow!("unknown artifact `{artifact}`"))?;
+    if inputs.len() != spec.inputs.len() {
+        return Err(anyhow!("{}: expected {} inputs, got {}", artifact, spec.inputs.len(), inputs.len()));
     }
     // §Perf + leak avoidance: host data goes straight to device buffers
     // (`buffer_from_host_buffer`) and runs through `execute_b`. The
     // published crate's literal-based `execute` shim `release()`s every
     // input device buffer without freeing it — a ~50 MB/microbatch leak
     // at engine scale (see EXPERIMENTS.md §Perf) — and pays an extra
-    // host copy through the intermediate Literal.
-    let mut input_bufs = Vec::with_capacity(req.inputs.len());
-    for (ts, input) in spec.inputs.iter().zip(&req.inputs) {
+    // host copy through the intermediate Literal. Shared inputs upload
+    // directly from the engine's Arc windows: the only copy on the whole
+    // input path is the unavoidable host→device one.
+    let mut input_bufs = Vec::with_capacity(inputs.len());
+    for (ts, input) in spec.inputs.iter().zip(inputs) {
         if ts.elems() != input.len() {
-            return Err(anyhow!("{}: input `{}` expects {} elems, got {}", req.artifact, ts.name, ts.elems(), input.len()));
+            return Err(anyhow!("{}: input `{}` expects {} elems, got {}", artifact, ts.name, ts.elems(), input.len()));
         }
         let buf = match (input, &ts.dtype) {
             (Input::F32(v), DType::F32) => client.buffer_from_host_buffer::<f32>(v, &ts.shape, None),
             (Input::I32(v), DType::I32) => client.buffer_from_host_buffer::<i32>(v, &ts.shape, None),
-            _ => return Err(anyhow!("{}: input `{}` dtype mismatch", req.artifact, ts.name)),
+            (Input::F32Shared(s), DType::F32) => {
+                client.buffer_from_host_buffer::<f32>(s.as_slice(), &ts.shape, None)
+            }
+            (Input::I32Shared(s), DType::I32) => {
+                client.buffer_from_host_buffer::<i32>(s.as_slice(), &ts.shape, None)
+            }
+            _ => return Err(anyhow!("{}: input `{}` dtype mismatch", artifact, ts.name)),
         }
-        .map_err(|e| anyhow!("{}: uploading `{}`: {e:?}", req.artifact, ts.name))?;
+        .map_err(|e| anyhow!("{}: uploading `{}`: {e:?}", artifact, ts.name))?;
         input_bufs.push(buf);
     }
-    let bufs = exe.execute_b::<xla::PjRtBuffer>(&input_bufs).map_err(|e| anyhow!("executing {}: {e:?}", req.artifact))?;
+    let bufs = exe.execute_b::<xla::PjRtBuffer>(&input_bufs).map_err(|e| anyhow!("executing {artifact}: {e:?}"))?;
     let tuple = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
     let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
     if parts.len() != spec.outputs.len() {
-        return Err(anyhow!("{}: expected {} outputs, got {}", req.artifact, spec.outputs.len(), parts.len()));
+        return Err(anyhow!("{}: expected {} outputs, got {}", artifact, spec.outputs.len(), parts.len()));
     }
     parts
         .into_iter()
@@ -183,6 +251,35 @@ mod tests {
         } else {
             eprintln!("skipping: run `make artifacts`");
             None
+        }
+    }
+
+    #[test]
+    fn shared_slice_windows_without_copying() {
+        let data: Arc<[f32]> = vec![0.0, 1.0, 2.0, 3.0, 4.0].into();
+        let input = Input::shared_f32(&data, 3);
+        assert_eq!(input.len(), 3);
+        match &input {
+            Input::F32Shared(s) => {
+                assert_eq!(s.as_slice(), &[0.0, 1.0, 2.0]);
+                // zero-copy: the view aliases the same allocation
+                assert!(std::ptr::eq(s.as_slice().as_ptr(), data.as_ptr()));
+            }
+            _ => panic!("expected shared variant"),
+        }
+        assert_eq!(Arc::strong_count(&data), 2);
+        drop(input);
+        assert_eq!(Arc::strong_count(&data), 1);
+    }
+
+    #[test]
+    fn shared_i32_covers_whole_tensor() {
+        let data: Arc<[i32]> = vec![7, 8, 9].into();
+        let input = Input::shared_i32_all(&data);
+        assert_eq!(input.len(), 3);
+        match input {
+            Input::I32Shared(s) => assert_eq!(s.as_slice(), &[7, 8, 9]),
+            _ => panic!("expected shared variant"),
         }
     }
 

@@ -1,0 +1,124 @@
+//! Build-time stub for the `xla` PJRT bindings.
+//!
+//! The container this repo builds in has no crates.io access and no
+//! PJRT runtime, so [`service`](super::service) aliases this module as
+//! `xla`. It mirrors exactly the API surface the service uses — client
+//! construction, HLO loading/compilation, host→device buffer upload,
+//! `execute_b`, and literal decomposition — with identical shapes and
+//! error plumbing, but every entry point fails at [`PjRtClient::cpu`].
+//!
+//! That failure is reachable only when PJRT artifacts exist on disk
+//! (`ComputeService::start` is the sole caller, and every test /
+//! example self-skips when `artifacts/<preset>/manifest.json` is
+//! absent), so an artifact-less build + test run is green end to end.
+//!
+//! To run REAL training on a networked machine: add the `xla` crate to
+//! `Cargo.toml`, delete the `use crate::runtime::xla_stub as xla;`
+//! alias in `service.rs`, and rebuild — no other source changes needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: built against the in-tree xla stub \
+     (offline container). See rust/src/runtime/xla_stub.rs to enable the real backend.";
+
+/// Error type matching the real crate's `{:?}`-formatted usage.
+#[derive(Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// Element types accepted by `buffer_from_host_buffer` / `to_vec`.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct PjRtClient(());
+pub struct PjRtLoadedExecutable(());
+pub struct PjRtBuffer(());
+pub struct Literal(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, XlaError> {
+        unavailable()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        unavailable()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let e = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}

@@ -44,6 +44,11 @@ pub struct RunResult {
     pub bubble_rate: f64,
     /// Mean minibatch wall seconds.
     pub mean_minibatch_s: f64,
+    /// Timeline device utilization: Σ busy / (wall × devices). The
+    /// complement of time lost to barriers, stragglers and the
+    /// optimizer epilogue — the quantity the bubble rate approximates
+    /// from packing alone.
+    pub device_utilization: f64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -89,12 +94,14 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
 
     let d = exp.devices as f64;
     let bubble_rate = if bubble_total > 0.0 { 1.0 - bubble_busy / (d * bubble_total) } else { 0.0 };
-    let _ = total_busy;
+    let device_utilization =
+        if total_wall > 0.0 { (total_busy / (total_wall * d)).clamp(0.0, 1.0) } else { 0.0 };
     RunResult {
         label: exp.label(),
         samples_per_sec_per_device: samples as f64 / (total_wall.max(1e-12) * d),
         bubble_rate,
         mean_minibatch_s: total_wall / plans.len().max(1) as f64,
+        device_utilization,
         minibatches: plans.len(),
         samples,
     }
@@ -227,6 +234,25 @@ mod tests {
             simulate(&hier).samples_per_sec_per_device >= simulate(&flat).samples_per_sec_per_device,
             "hierarchical gather must not hurt"
         );
+    }
+
+    #[test]
+    fn utilization_is_a_meaningful_fraction() {
+        for scheme in [CommScheme::Collective, CommScheme::Odc] {
+            let r = quick(scheme, Balancer::LbMicro, 4);
+            assert!(
+                r.device_utilization > 0.0 && r.device_utilization <= 1.0,
+                "{scheme}: utilization {} out of range",
+                r.device_utilization
+            );
+        }
+    }
+
+    #[test]
+    fn utilization_deterministic_and_reported() {
+        let a = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        let b = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        assert_eq!(a.device_utilization, b.device_utilization);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Integration: stress tests on the communication backends — both
 //! schemes must compute the identical reduction regardless of timing,
-//! arrival order, or per-device push counts (ODC).
+//! arrival order, or per-device push counts (ODC) — plus steady-state
+//! buffer-reuse guarantees on the zero-copy ODC push path (per-pair
+//! payload arenas) and the minibatch-scoped gather cache.
 
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{CollectiveComm, OdcComm};
+use odc::comm::{CollectiveComm, GatherCache, OdcComm};
 use std::sync::Arc;
 
 fn make_backend(which: usize, params: &Arc<ParamStore>, world: usize) -> Arc<dyn CommBackend> {
@@ -113,6 +115,114 @@ fn odc_unequal_counts_many_minibatches() {
             });
         }
     });
+}
+
+/// Steady-state buffer reuse: with per-(server, client) arenas sized at
+/// `layers + 1` buffers per pair, a workload whose per-minibatch pushes
+/// per pair stay within the prealloc must NEVER heap-allocate a
+/// payload — not during warm-up, not ever.
+#[test]
+fn odc_arena_never_allocates_within_prealloc() {
+    let world = 3;
+    // 2 layers => prealloc is 3 buffers per pair; push each layer once
+    // per minibatch (2 in-flight max per pair).
+    let params = Arc::new(ParamStore::new(&[30, 12], world));
+    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let comm = Arc::clone(&comm);
+            let store = Arc::clone(&params);
+            s.spawn(move || {
+                for _step in 0..25 {
+                    for (l, p) in store.layers.iter().enumerate() {
+                        comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                    }
+                    comm.end_minibatch(dev);
+                    let mut g = vec![0.0f32; store.layers[0].shard_len];
+                    comm.take_grad_shard(dev, 0, &mut g);
+                    comm.end_step(dev);
+                }
+            });
+        }
+    });
+    let stats = comm.arena_stats();
+    assert_eq!(stats.acquires, (25 * world * world * 2) as u64);
+    assert_eq!(stats.fresh_allocs, 0, "push path must be allocation-free inside the prealloc");
+}
+
+/// Heavy bursts CAN exceed the prealloc — but growth is bounded by one
+/// minibatch's in-flight pushes per pair (end_minibatch fully drains
+/// every daemon), so the arena stops growing after warm-up no matter
+/// how many minibatches follow.
+#[test]
+fn odc_arena_growth_bounded_and_stops_after_warmup() {
+    let world = 2;
+    let micros = 8; // 8 pushes per pair per minibatch vs prealloc of 2
+    let params = Arc::new(ParamStore::new(&[40], world));
+    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let run_minibatches = |n: usize| {
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for _ in 0..n {
+                        for _ in 0..micros {
+                            comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0);
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 20];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    };
+    run_minibatches(3); // warm-up
+    let warm = comm.arena_stats();
+    let prealloc_per_pair = 2; // 1 layer + 1
+    let bound = (world * world * (micros - prealloc_per_pair)) as u64;
+    assert!(warm.fresh_allocs <= bound, "fresh {} exceeds in-flight bound {bound}", warm.fresh_allocs);
+
+    run_minibatches(20);
+    let after = comm.arena_stats();
+    assert!(
+        after.fresh_allocs <= bound,
+        "arena kept growing after warm-up: {} -> {} (bound {bound})",
+        warm.fresh_allocs,
+        after.fresh_allocs
+    );
+    // every payload is back home after the final drain
+    assert_eq!(after.resident, (world * world * prealloc_per_pair) as u64 + after.fresh_allocs);
+}
+
+/// The minibatch-scoped gather cache returns bytes identical to direct
+/// (seed-path) gathers, for every device, layer, and repetition.
+#[test]
+fn gather_cache_bit_identical_to_direct_gathers() {
+    let world = 4;
+    let layer_lens = vec![37, 64, 101];
+    let params = Arc::new(ParamStore::new(&layer_lens, world));
+    for (l, p) in params.layers.iter().enumerate() {
+        let vals: Vec<f32> = (0..p.logical_len).map(|i| ((l + 1) * (i + 3) % 97) as f32).collect();
+        p.init_from(&vals);
+    }
+    let comm = OdcComm::new(Arc::clone(&params), world);
+    assert!(comm.gathers_cacheable());
+    for dev in 0..world {
+        let mut cache = GatherCache::new(&params, dev, true);
+        for (l, p) in params.layers.iter().enumerate() {
+            let mut direct = vec![0.0f32; p.padded_len()];
+            comm.gather_params(dev, l, &mut direct);
+            for _ in 0..3 {
+                let cached = cache.gather(&comm, l);
+                assert_eq!(&cached[..], &direct[..], "dev {dev} layer {l}");
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses as usize, layer_lens.len(), "one backend gather per layer");
+        assert_eq!(s.hits as usize, 2 * layer_lens.len());
+    }
 }
 
 /// Parameter updates published at end_step are visible to the next

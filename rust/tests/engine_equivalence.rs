@@ -52,6 +52,9 @@ fn odc_matches_collective_exactly_in_semantics() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
+    // NB: ODC runs with the minibatch-scoped gather cache enabled (the
+    // TrainerConfig default), so this doubles as the cached-ODC vs
+    // uncached-Collective equivalence proof.
     let col = run(CommScheme::Collective, Balancer::LbMicro, 2);
     let odc = run(CommScheme::Odc, Balancer::LbMicro, 2);
 
@@ -150,6 +153,63 @@ fn lb_mini_rejected_under_collective() {
     c.scheme = CommScheme::Collective;
     c.balancer = Balancer::LbMini;
     assert!(train(&c).is_err());
+}
+
+#[test]
+fn gather_cache_bit_identical_to_seed_gather_path() {
+    if !have_artifacts() {
+        return;
+    }
+    // Params are immutable within a minibatch, so gathering once per
+    // minibatch (cache on) instead of twice per microbatch (seed path,
+    // cache off) must produce BIT-IDENTICAL training — assert_eq, no
+    // tolerance. Pinned to world=1: a single client gives the daemon a
+    // deterministic accumulation order, isolating exactly the variable
+    // under test (every other source of float noise is absent).
+    let mut cached = base_cfg();
+    cached.world = 1;
+    cached.minibs = 4;
+    cached.scheme = CommScheme::Odc;
+    cached.balancer = Balancer::LbMicro;
+    cached.gather_cache = true;
+    let mut uncached = cached.clone();
+    uncached.gather_cache = false;
+    let a = train(&cached).unwrap();
+    let b = train(&uncached).unwrap();
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}: cached vs uncached loss must be bit-identical", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}: cached vs uncached params must be bit-identical");
+    }
+}
+
+#[test]
+fn gather_cache_equivalent_multi_device() {
+    if !have_artifacts() {
+        return;
+    }
+    // Same comparison at world=2. Daemon arrival order across clients
+    // is scheduling-dependent (float accumulation is not associative),
+    // so this run asserts the seed tests' tolerance rather than
+    // bit-equality — the world=1 test above pins the exact bytes.
+    let mut cached = base_cfg();
+    cached.scheme = CommScheme::Odc;
+    cached.balancer = Balancer::LbMicro;
+    cached.gather_cache = true;
+    let mut uncached = cached.clone();
+    uncached.gather_cache = false;
+    let a = train(&cached).unwrap();
+    let b = train(&uncached).unwrap();
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert!((x.loss - y.loss).abs() < 1e-4, "step {}: {} vs {}", x.step, x.loss, y.loss);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        let d = rel_l2(pb, pa);
+        assert!(d < 1e-4, "layer {l}: rel L2 {d}");
+    }
 }
 
 #[test]

@@ -1,0 +1,212 @@
+//! Minimal, API-compatible subset of the `anyhow` error crate, vendored
+//! so the workspace builds with zero network access.
+//!
+//! Matches real-anyhow semantics for everything the repo uses:
+//!
+//! * [`Error`]: an opaque boxed error with a display message and an
+//!   optional source chain. Like upstream, it deliberately does NOT
+//!   implement `std::error::Error` itself, which is what makes the
+//!   blanket `From<E: std::error::Error>` impl (powering `?`) legal.
+//! * [`Result<T>`] with the `E = Error` default.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] format-style macros.
+//! * [`Context`] for `Result<T, E>` and `Option<T>`.
+//!
+//! `{}` shows the outermost message; `{:?}` shows the cause chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error { msg: ctx.to_string(), source: Some(Box::new(ChainLink(self.msg, self.source))) }
+    }
+}
+
+/// Internal node letting a context-wrapped Error participate in the
+/// std source chain (Error itself cannot, by design).
+struct ChainLink(String, Option<Box<dyn StdError + Send + Sync + 'static>>);
+
+impl fmt::Display for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for ChainLink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for ChainLink {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.1.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source.as_deref().map(|e| e as &(dyn StdError + 'static));
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub trait Context<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn context_wraps_and_debug_shows_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("reading manifest"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing"));
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+        assert_eq!(Some(7u32).context("empty").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} of {}", 1, "2");
+        assert_eq!(e.to_string(), "bad 1 of 2");
+        fn f(x: bool) -> Result<u32> {
+            ensure!(x, "must be true");
+            if !x {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert!(f(false).is_err());
+        assert_eq!(f(true).unwrap(), 1);
+    }
+}
