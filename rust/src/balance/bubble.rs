@@ -47,7 +47,9 @@ pub fn estimate_bubble(plan: &Plan, lens: &[usize], cost: &CostModel, scheme: Co
                 .map(|m| (0..d).map(|dev| micro_cost(dev, m)).fold(0.0, f64::max))
                 .sum()
         }
-        CommScheme::Odc => busy.iter().cloned().fold(0.0, f64::max),
+        // hybrid devices free-run within the minibatch exactly like ODC
+        // (intra-group reduces are mailbox pushes, not barriers)
+        CommScheme::Odc | CommScheme::Hybrid => busy.iter().cloned().fold(0.0, f64::max),
     };
 
     let total = total.max(f64::MIN_POSITIVE);

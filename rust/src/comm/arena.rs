@@ -23,7 +23,7 @@
 //!   [`ArenaStats`] counters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Cumulative counters over one arena (or summed over a matrix of them).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -105,6 +105,58 @@ impl PayloadArena {
     }
 }
 
+/// A dense matrix of per-pair arenas, every entry preallocated with the
+/// same capacity schedule.
+///
+/// One matrix describes one *communication level*: `OdcComm` owns a
+/// (server × client) matrix of global-shard-sized arenas; the hybrid
+/// two-level backend owns a (server × group-local-client) matrix for the
+/// intra-group scatter-accumulate and an (owner × group) matrix for the
+/// cross-group epilogue pieces. Rows belong to the receiving daemon
+/// (which `release`s consumed payloads), columns to the sender (which
+/// `acquire`s) — so every pair stays uncontended exactly as a single
+/// [`PayloadArena`] does.
+pub struct ArenaMatrix {
+    rows: Vec<Vec<Arc<PayloadArena>>>,
+}
+
+impl ArenaMatrix {
+    /// `rows × cols` arenas, each preallocating one buffer per entry of
+    /// `caps` (callers pass one per-layer payload length plus headroom
+    /// spares, exactly as for [`PayloadArena::new`]).
+    pub fn new(rows: usize, cols: usize, caps: &[usize]) -> Self {
+        ArenaMatrix {
+            rows: (0..rows)
+                .map(|_| (0..cols).map(|_| Arc::new(PayloadArena::new(caps))).collect())
+                .collect(),
+        }
+    }
+
+    /// The arena of one (receiver, sender) pair.
+    #[inline]
+    pub fn arena(&self, row: usize, col: usize) -> &PayloadArena {
+        &self.rows[row][col]
+    }
+
+    /// Clones of one row's arenas, in column order — handed to the
+    /// receiving daemon so it can release payloads without touching the
+    /// matrix itself.
+    pub fn row(&self, row: usize) -> Vec<Arc<PayloadArena>> {
+        self.rows[row].iter().map(Arc::clone).collect()
+    }
+
+    /// Summed counters over every pair in the matrix.
+    pub fn stats(&self) -> ArenaStats {
+        let mut total = ArenaStats::default();
+        for row in &self.rows {
+            for a in row {
+                total.merge(a.stats());
+            }
+        }
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +206,32 @@ mod tests {
         assert_eq!(a.stats().fresh_allocs, 0);
         a.release(small);
         a.release(large);
+    }
+
+    #[test]
+    fn matrix_pairs_are_independent() {
+        let m = ArenaMatrix::new(2, 3, &[8, 8]);
+        // draining one pair never touches a neighbour's prealloc
+        let held: Vec<_> = (0..2).map(|_| m.arena(0, 0).acquire(8)).collect();
+        assert_eq!(m.arena(0, 0).stats().resident, 0);
+        assert_eq!(m.arena(0, 1).stats().resident, 2);
+        assert_eq!(m.arena(1, 2).stats().fresh_allocs, 0);
+        for b in held {
+            m.arena(0, 0).release(b);
+        }
+        let s = m.stats();
+        assert_eq!(s.resident, 2 * 3 * 2);
+        assert_eq!(s.acquires, 2);
+        assert_eq!(s.fresh_allocs, 0);
+    }
+
+    #[test]
+    fn matrix_row_clones_release_into_matrix() {
+        let m = ArenaMatrix::new(2, 2, &[4]);
+        let row = m.row(1);
+        let b = m.arena(1, 0).acquire(4);
+        row[0].release(b); // the daemon-side clone is the same arena
+        assert_eq!(m.arena(1, 0).stats().resident, 1);
     }
 
     #[test]

@@ -42,6 +42,42 @@ impl ParamStore {
     }
 }
 
+/// What a backend's `gather_params` is, structurally — and therefore how
+/// long its results may be reused (paper §6.2 parameter caching).
+///
+/// The levels mirror the communication hierarchy rather than being a
+/// plain on/off switch so the engine can reason per level: a two-level
+/// backend's microbatch-phase gathers are cacheable even though its
+/// cross-group epilogue traffic (gradient exchange + replica refresh)
+/// must never be.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherPolicy {
+    /// Every gather is a whole-world rendezvous (Collective): params are
+    /// phase-immutable for everyone, but eliding a gather would change
+    /// the synchronization structure being measured and desynchronize
+    /// the barrier schedule. Never reuse.
+    Rendezvous,
+    /// One-sided reads of phase-immutable params (ODC): any gather taken
+    /// during the microbatch phase is bit-identical for the rest of the
+    /// minibatch. Cacheable until `end_step`.
+    OneSided,
+    /// Two-level (Hybrid): gathers are one-sided intra-group reads of
+    /// the node group's replica — cacheable per minibatch exactly like
+    /// [`GatherPolicy::OneSided`] — while the cross-group epilogue runs
+    /// entirely inside the backend at `end_minibatch`/`end_step` and
+    /// must bypass the cache (the replica refresh is what *invalidates*
+    /// it).
+    TwoLevelIntra,
+}
+
+impl GatherPolicy {
+    /// Whether gather results may be reused for the rest of the
+    /// minibatch (invalidate at `end_step` in every cacheable case).
+    pub fn cacheable(self) -> bool {
+        !matches!(self, GatherPolicy::Rendezvous)
+    }
+}
+
 pub trait CommBackend: Send + Sync {
     fn world(&self) -> usize;
 
@@ -49,14 +85,18 @@ pub trait CommBackend: Send + Sync {
     /// `out`. FSDP all-gather / ODC gather.
     fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]);
 
+    /// Structural classification of `gather_params` — the engine derives
+    /// per-level cacheability from this. Default: rendezvous (uncached).
+    fn gather_policy(&self) -> GatherPolicy {
+        GatherPolicy::Rendezvous
+    }
+
     /// Whether `gather_params` results may be cached for the remainder
-    /// of the minibatch (paper §6.2 parameter caching). True only for
-    /// one-sided backends: params are phase-immutable for everyone, but
-    /// a collective gather is ALSO a rendezvous, so eliding one would
-    /// change the synchronization structure (and desynchronize the
-    /// barrier schedule). Default: not cacheable.
+    /// of the minibatch (paper §6.2 parameter caching). Derived from
+    /// [`CommBackend::gather_policy`]; kept as a convenience for call
+    /// sites that only need the boolean.
     fn gathers_cacheable(&self) -> bool {
-        false
+        self.gather_policy().cacheable()
     }
 
     /// Contribute a full-layer gradient with aggregation weight `weight`.

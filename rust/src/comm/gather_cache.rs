@@ -14,14 +14,21 @@
 //! same block straight to PJRT via [`crate::runtime::Input::F32Shared`].
 //!
 //! The cache is only legal for backends whose `gather_params` is
-//! one-sided ([`CommBackend::gathers_cacheable`]): under `Collective`
-//! every gather is a whole-world rendezvous, so skipping one would both
-//! change the synchronization structure being measured and desynchronize
-//! the barrier schedule. A disabled cache still owns the reusable
-//! buffers (steady-state allocation-free) but performs the backend
-//! gather on every call, preserving the seed call sequence exactly.
+//! one-sided — the backend states this structurally via
+//! [`CommBackend::gather_policy`]. Under `Collective`
+//! ([`GatherPolicy::Rendezvous`]) every gather is a whole-world
+//! rendezvous, so skipping one would both change the synchronization
+//! structure being measured and desynchronize the barrier schedule; a
+//! disabled cache still owns the reusable buffers (steady-state
+//! allocation-free) but performs the backend gather on every call,
+//! preserving the seed call sequence exactly. The two-level hybrid
+//! backend ([`GatherPolicy::TwoLevelIntra`]) caches exactly like ODC for
+//! its intra-group gathers, while its cross-group epilogue (gradient
+//! exchange + replica refresh) runs entirely inside the backend and
+//! never routes through this cache — the refresh at `end_step` is
+//! precisely the event `invalidate` accounts for.
 
-use super::backend::{CommBackend, ParamStore};
+use super::backend::{CommBackend, GatherPolicy, ParamStore};
 use std::sync::Arc;
 
 /// Counters proving cache behaviour in tests and benches.
@@ -46,18 +53,28 @@ struct Slot {
 /// device owns one, mirroring per-device cache memory on a real node).
 pub struct GatherCache {
     dev: usize,
-    enabled: bool,
+    policy: GatherPolicy,
     padded_lens: Vec<usize>,
     slots: Vec<Slot>,
     stats: CacheStats,
 }
 
 impl GatherCache {
+    /// Boolean convenience constructor: `enabled` maps to
+    /// [`GatherPolicy::OneSided`] / [`GatherPolicy::Rendezvous`].
     pub fn new(params: &ParamStore, dev: usize, enabled: bool) -> Self {
+        let policy = if enabled { GatherPolicy::OneSided } else { GatherPolicy::Rendezvous };
+        Self::for_policy(params, dev, policy)
+    }
+
+    /// Cache honouring the backend's structural gather classification
+    /// (pass [`CommBackend::gather_policy`], downgraded to
+    /// `Rendezvous` when the engine disables caching by config).
+    pub fn for_policy(params: &ParamStore, dev: usize, policy: GatherPolicy) -> Self {
         let padded_lens: Vec<usize> = params.layers.iter().map(|l| l.padded_len()).collect();
         GatherCache {
             dev,
-            enabled,
+            policy,
             slots: padded_lens.iter().map(|_| Slot { buf: None, valid: false }).collect(),
             padded_lens,
             stats: CacheStats::default(),
@@ -65,7 +82,12 @@ impl GatherCache {
     }
 
     pub fn enabled(&self) -> bool {
-        self.enabled
+        self.policy.cacheable()
+    }
+
+    /// The per-level cacheability this cache was built with.
+    pub fn policy(&self) -> GatherPolicy {
+        self.policy
     }
 
     /// The full padded parameters of `layer`, gathering through
@@ -73,8 +95,9 @@ impl GatherCache {
     /// `Arc` aliases the cache slot: dropping it before the next
     /// minibatch keeps the slot uniquely owned and reusable in place.
     pub fn gather(&mut self, backend: &dyn CommBackend, layer: usize) -> Arc<[f32]> {
+        let enabled = self.policy.cacheable();
         let slot = &mut self.slots[layer];
-        if self.enabled && slot.valid {
+        if enabled && slot.valid {
             self.stats.hits += 1;
             return Arc::clone(slot.buf.as_ref().expect("valid slot holds a buffer"));
         }
@@ -91,7 +114,7 @@ impl GatherCache {
         self.stats.misses += 1;
         let out = Arc::clone(&buf);
         slot.buf = Some(buf);
-        slot.valid = self.enabled;
+        slot.valid = enabled;
         out
     }
 
@@ -171,6 +194,20 @@ mod tests {
         assert_eq!(s.hits, 0);
         assert_eq!(s.misses, 5, "disabled cache must preserve the seed gather sequence");
         assert_eq!(s.fresh_allocs, 1, "but still reuse its buffer");
+    }
+
+    #[test]
+    fn policy_levels_map_to_cacheability() {
+        let params = store(&[4], 2);
+        for (policy, cached) in [
+            (GatherPolicy::Rendezvous, false),
+            (GatherPolicy::OneSided, true),
+            (GatherPolicy::TwoLevelIntra, true),
+        ] {
+            let cache = GatherCache::for_policy(&params, 0, policy);
+            assert_eq!(cache.enabled(), cached, "{policy:?}");
+            assert_eq!(cache.policy(), policy);
+        }
     }
 
     #[test]

@@ -1,0 +1,666 @@
+//! Hybrid two-level backend — the paper's §6.1 hybrid sharding
+//! (ZeRO++-style) landed in the REAL engine, not just the simulator.
+//!
+//! Layout: params/grads are sharded **within a node group** while
+//! optimizer-state ownership stays sharded **across all devices**:
+//!
+//! * Every group (the [`GroupMap`]'s analogue of a node) holds a full
+//!   **replica** of each layer, laid out identically to the global
+//!   [`ParamStore`] and divided into `group_size` contiguous
+//!   *super-shards*; member `j` of every group owns super-shard `j`.
+//!   Because `world % group_size == 0`, super-shard `j` covers exactly
+//!   the global optimizer shards of devices
+//!   `j*n_groups .. (j+1)*n_groups` — intra- and cross-level ranges
+//!   align with no re-slicing.
+//! * The global `ParamStore` keeps its usual `world`-way sharding: it is
+//!   the **optimizer level**. Device `d` owns global shard `d` exactly
+//!   as under ODC/Collective, so the trainer's sharded-AdamW epilogue is
+//!   unchanged.
+//!
+//! Protocol (two levels, cross-group synchronization ONLY at
+//! `end_minibatch`/`end_step`):
+//!
+//! * `gather_params` — a one-sided **intra-group** read of the group's
+//!   replica. Never leaves the node, which is the entire point of hybrid
+//!   sharding (the NVSwitch/NIC bandwidth asymmetry). One-sided +
+//!   phase-immutable ⇒ cacheable per minibatch
+//!   ([`GatherPolicy::TwoLevelIntra`]).
+//! * `reduce_grad` — intra-group scatter-accumulate: the client splits
+//!   its full-layer gradient into `group_size` super-shards and pushes
+//!   each piece to the owning group member's mailbox (per-(server,
+//!   group-local-client) [`ArenaMatrix`] arenas keep the path
+//!   allocation-free and uncontended). No barrier ⇒ group members may
+//!   run *different microbatch counts* (LB-Mini stays legal).
+//! * `end_minibatch` — two epilogues. **Intra**: the client broadcasts
+//!   `IntraDone` to its group and flushes its own daemon, obtaining the
+//!   group-partial super-shard (the node-level reduce-scatter).
+//!   **Cross**: it slices that super-shard into global optimizer shards
+//!   and pushes each piece to its owner's mailbox — ODC-style one-sided
+//!   pushes over the (owner, group) arena matrix; the owner's daemon
+//!   folds one piece per group per layer. This is the only inter-node
+//!   gradient traffic: `param_bytes/group_size` per device instead of
+//!   ODC's `(world-group_size)·shard` per *microbatch*.
+//! * `end_step` — global barrier (optimizer shards republished), then
+//!   each member refreshes its super-shard of its group's replica from
+//!   the global store (the cross-node param all-gather the simulator's
+//!   `hybrid_step_overhead` prices), then a second barrier so nobody
+//!   gathers a half-fresh replica.
+//!
+//! ## Determinism
+//!
+//! Unlike `OdcComm` (whose daemon accumulates in nondeterministic
+//! arrival order), both hybrid daemons buffer payloads and fold them at
+//! flush time in a **fixed order**: intra pieces by (group-local client
+//! asc, push order), cross pieces by group asc. With a single group the
+//! fold order is exactly the flattened plan order of the devices, so a
+//! single-group hybrid run is **bit-identical** to the single-device
+//! oracle (asserted by `tests/engine_equivalence.rs`); multi-group runs
+//! are deterministic across repetitions (each group's partial is a fold
+//! from zero, so only the cross-level bracketing differs from the
+//! oracle's sequential fold — float noise bounded by the usual
+//! equivalence tolerance).
+//!
+//! Buffering-until-flush is a deliberate memory-for-exactness trade:
+//! eager per-client partial accumulators would cap memory at
+//! O(group_size × layers) but change the float bracketing across
+//! clients (`(P0+P1)` instead of the sequential `((g00+g01)+g10)+g11`),
+//! forfeiting oracle bit-identity. In-flight payloads per pair stay
+//! bounded by one minibatch's pushes — the same bound the ODC arenas
+//! already live with — and the arenas stop growing after warm-up
+//! (asserted under adversarial skew in `comm_stress`).
+
+use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
+use super::backend::{CommBackend, GatherPolicy, ParamStore};
+use super::shared::SharedBuf;
+use super::topology::GroupMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+enum Msg {
+    /// One super-shard gradient piece for this server's intra-group
+    /// shard of `layer`, pushed by group-local `client`; `data` returns
+    /// to the (server, client) intra arena once folded.
+    IntraAccum { layer: usize, weight: f32, client: usize, data: Vec<f32> },
+    /// A group member has finished every microbatch of the minibatch.
+    IntraDone,
+    /// The colocated worker asks for the group-partial super-shards; the
+    /// daemon replies once all `group_size` members are done.
+    IntraFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
+    /// `group`'s partial sum over this owner's global optimizer shard of
+    /// `layer`; `data` returns to the (owner, group) cross arena.
+    CrossAccum { layer: usize, group: usize, data: Vec<f32> },
+    /// A group's covering member has pushed all its pieces to this owner.
+    CrossDone,
+    /// The colocated worker asks for the fully-reduced optimizer shards;
+    /// the daemon replies once all `n_groups` groups delivered.
+    CrossFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Per-daemon mutable state: buffered payloads of the minibatch in
+/// flight, plus completion counters for both levels.
+struct DaemonState {
+    group_size: usize,
+    n_groups: usize,
+    /// Intra super-shard length per layer (`padded_len / group_size`).
+    super_lens: Vec<usize>,
+    /// Global optimizer shard length per layer.
+    shard_lens: Vec<usize>,
+    /// `[layer][group-local client]` → pieces in push order.
+    pending_intra: Vec<Vec<Vec<(f32, Vec<f32>)>>>,
+    intra_done: usize,
+    intra_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
+    /// `[layer][group]` → exactly one partial per minibatch.
+    pending_cross: Vec<Vec<Option<Vec<f32>>>>,
+    cross_done: usize,
+    cross_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
+}
+
+impl DaemonState {
+    fn new(super_lens: Vec<usize>, shard_lens: Vec<usize>, group_size: usize, n_groups: usize) -> Self {
+        let n_layers = super_lens.len();
+        DaemonState {
+            group_size,
+            n_groups,
+            pending_intra: (0..n_layers).map(|_| vec![Vec::new(); group_size]).collect(),
+            pending_cross: (0..n_layers).map(|_| vec![None; n_groups]).collect(),
+            super_lens,
+            shard_lens,
+            intra_done: 0,
+            intra_flush: None,
+            cross_done: 0,
+            cross_flush: None,
+        }
+    }
+
+    /// Fold the intra-level pieces in (client asc, push order) —
+    /// deterministic regardless of arrival interleaving — returning one
+    /// group-partial super-shard per layer and releasing every payload
+    /// to its (server, client) arena.
+    fn fold_intra(&mut self, arenas: &[Arc<PayloadArena>]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.super_lens.len());
+        for (layer, &len) in self.super_lens.iter().enumerate() {
+            let mut acc = vec![0.0f32; len];
+            for client in 0..self.group_size {
+                for (weight, data) in self.pending_intra[layer][client].drain(..) {
+                    debug_assert_eq!(data.len(), len);
+                    for (a, &g) in acc.iter_mut().zip(&data) {
+                        *a += weight * g;
+                    }
+                    arenas[client].release(data);
+                }
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Fold the cross-level partials in group order, returning the
+    /// fully-reduced optimizer shard per layer.
+    fn fold_cross(&mut self, arenas: &[Arc<PayloadArena>]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.shard_lens.len());
+        for (layer, &len) in self.shard_lens.iter().enumerate() {
+            let mut acc = vec![0.0f32; len];
+            for group in 0..self.n_groups {
+                let data = self.pending_cross[layer][group]
+                    .take()
+                    .expect("every group delivers exactly one partial per layer");
+                debug_assert_eq!(data.len(), len);
+                for (a, &g) in acc.iter_mut().zip(&data) {
+                    *a += g;
+                }
+                arenas[group].release(data);
+            }
+            out.push(acc);
+        }
+        out
+    }
+}
+
+/// The two-level accumulation daemon: one per device, serving both the
+/// intra-group scatter-accumulate and the cross-group epilogue for the
+/// shards this device owns at each level.
+fn daemon_loop(
+    rx: mpsc::Receiver<Msg>,
+    mut st: DaemonState,
+    intra_arenas: Vec<Arc<PayloadArena>>,
+    cross_arenas: Vec<Arc<PayloadArena>>,
+) {
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        match msg {
+            Msg::IntraAccum { layer, weight, client, data } => {
+                st.pending_intra[layer][client].push((weight, data));
+            }
+            Msg::IntraDone => st.intra_done += 1,
+            Msg::IntraFlush { reply } => st.intra_flush = Some(reply),
+            Msg::CrossAccum { layer, group, data } => {
+                debug_assert!(st.pending_cross[layer][group].is_none(), "duplicate cross partial");
+                st.pending_cross[layer][group] = Some(data);
+            }
+            Msg::CrossDone => st.cross_done += 1,
+            Msg::CrossFlush { reply } => st.cross_flush = Some(reply),
+            Msg::Shutdown => return,
+        }
+        if st.intra_done == st.group_size {
+            if let Some(reply) = st.intra_flush.take() {
+                let out = st.fold_intra(&intra_arenas);
+                st.intra_done = 0;
+                let _ = reply.send(out);
+            }
+        }
+        if st.cross_done == st.n_groups {
+            if let Some(reply) = st.cross_flush.take() {
+                let out = st.fold_cross(&cross_arenas);
+                st.cross_done = 0;
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+pub struct HybridComm {
+    world: usize,
+    groups: GroupMap,
+    params: Arc<ParamStore>,
+    /// Per-group full-model replicas, `replicas[group][layer]`, each in
+    /// the global padded layout.
+    replicas: Vec<Vec<SharedBuf>>,
+    /// Mailbox senders, one per device (serving both levels).
+    mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
+    /// Fully-reduced optimizer shards returned at the minibatch boundary.
+    taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
+    barrier: Barrier,
+    daemons: Mutex<Vec<JoinHandle<()>>>,
+    /// Intra-level arenas indexed `[server][group-local client]`.
+    intra_arenas: ArenaMatrix,
+    /// Cross-level arenas indexed `[owner][group]`.
+    cross_arenas: ArenaMatrix,
+    /// Per-device scratch for the end_step replica refresh (sized to the
+    /// largest super-shard; steady-state allocation-free).
+    refresh_scratch: Vec<Mutex<Vec<f32>>>,
+}
+
+impl HybridComm {
+    /// Two-level backend over `world` devices in groups of `group_size`.
+    /// Requires `world % group_size == 0` (validate with
+    /// [`GroupMap`]-style checks first when driven from config) and a
+    /// `ParamStore` whose parameters are already initialized — the group
+    /// replicas are seeded from it here.
+    pub fn new(params: Arc<ParamStore>, world: usize, group_size: usize) -> Self {
+        let groups = GroupMap::new(world, group_size);
+        let n_groups = groups.n_groups();
+        let super_lens: Vec<usize> =
+            params.layers.iter().map(|l| l.padded_len() / group_size).collect();
+        let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
+
+        let mut intra_caps = super_lens.clone();
+        intra_caps.push(super_lens.iter().copied().max().unwrap_or(0));
+        let intra_arenas = ArenaMatrix::new(world, group_size, &intra_caps);
+        let mut cross_caps = shard_lens.clone();
+        cross_caps.push(shard_lens.iter().copied().max().unwrap_or(0));
+        let cross_arenas = ArenaMatrix::new(world, n_groups, &cross_caps);
+
+        // Seed every group's replica from the (initialized) global store.
+        let replicas: Vec<Vec<SharedBuf>> = (0..n_groups)
+            .map(|_| {
+                params
+                    .layers
+                    .iter()
+                    .map(|p| {
+                        let buf = SharedBuf::new(p.padded_len());
+                        let mut tmp = vec![0.0f32; p.padded_len()];
+                        p.buf.read(0, &mut tmp);
+                        buf.write(0, &tmp);
+                        buf
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let max_super = super_lens.iter().copied().max().unwrap_or(0);
+        let mut mailbox = Vec::with_capacity(world);
+        let mut daemons = Vec::with_capacity(world);
+        for dev in 0..world {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let st = DaemonState::new(super_lens.clone(), shard_lens.clone(), group_size, n_groups);
+            let intra_row = intra_arenas.row(dev);
+            let cross_row = cross_arenas.row(dev);
+            daemons.push(std::thread::spawn(move || daemon_loop(rx, st, intra_row, cross_row)));
+            mailbox.push(Mutex::new(tx));
+        }
+        HybridComm {
+            world,
+            groups,
+            params,
+            replicas,
+            mailbox,
+            taken: (0..world).map(|_| Mutex::new(None)).collect(),
+            barrier: Barrier::new(world),
+            daemons: Mutex::new(daemons),
+            intra_arenas,
+            cross_arenas,
+            refresh_scratch: (0..world).map(|_| Mutex::new(vec![0.0f32; max_super])).collect(),
+        }
+    }
+
+    fn send(&self, dev: usize, msg: Msg) {
+        self.mailbox[dev].lock().unwrap().send(msg).expect("daemon alive");
+    }
+
+    pub fn group_map(&self) -> GroupMap {
+        self.groups
+    }
+
+    /// Summed intra-level (within-group scatter-accumulate) arena
+    /// counters.
+    pub fn intra_arena_stats(&self) -> ArenaStats {
+        self.intra_arenas.stats()
+    }
+
+    /// Summed cross-level (optimizer-shard epilogue) arena counters.
+    pub fn cross_arena_stats(&self) -> ArenaStats {
+        self.cross_arenas.stats()
+    }
+
+    /// Both levels merged (the `OdcComm::arena_stats` analogue).
+    pub fn arena_stats(&self) -> ArenaStats {
+        let mut total = self.intra_arena_stats();
+        total.merge(self.cross_arena_stats());
+        total
+    }
+}
+
+impl CommBackend for HybridComm {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        // One-sided intra-group read of the group replica: phase
+        // discipline makes the replica immutable during the microbatch
+        // phase (it is only written inside end_step's barrier pair).
+        let buf = &self.replicas[self.groups.group_of(dev)][layer];
+        let n = buf.len().min(out.len());
+        buf.read(0, &mut out[..n]);
+    }
+
+    fn gather_policy(&self) -> GatherPolicy {
+        GatherPolicy::TwoLevelIntra
+    }
+
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        if weight == 0.0 {
+            return; // idle slot: nothing to send, nothing to wait for
+        }
+        let group = self.groups.group_of(dev);
+        let me = self.groups.local_index(dev);
+        let s = p.padded_len() / self.groups.group_size;
+        for j in 0..self.groups.group_size {
+            let server = self.groups.member(group, j);
+            let mut data = self.intra_arenas.arena(server, me).acquire(s);
+            data.extend_from_slice(&grad[j * s..(j + 1) * s]);
+            self.send(server, Msg::IntraAccum { layer, weight, client: me, data });
+        }
+    }
+
+    fn end_minibatch(&self, dev: usize) {
+        let group = self.groups.group_of(dev);
+        let j = self.groups.local_index(dev);
+        let n_groups = self.groups.n_groups();
+
+        // ---- intra epilogue: node-level reduce-scatter completes ----
+        for peer in self.groups.members(group) {
+            self.send(peer, Msg::IntraDone);
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(dev, Msg::IntraFlush { reply: tx });
+        let partial = rx.recv().expect("intra flush");
+
+        // ---- cross epilogue: ship optimizer-shard pieces to owners ----
+        // Super-shard j covers global owners j*n_groups..(j+1)*n_groups;
+        // piece t of the super-shard is owner (j*n_groups + t)'s shard.
+        for (layer, p) in self.params.layers.iter().enumerate() {
+            let k = p.shard_len;
+            for t in 0..n_groups {
+                let owner = j * n_groups + t;
+                let mut data = self.cross_arenas.arena(owner, group).acquire(k);
+                data.extend_from_slice(&partial[layer][t * k..(t + 1) * k]);
+                self.send(owner, Msg::CrossAccum { layer, group, data });
+            }
+        }
+        for t in 0..n_groups {
+            self.send(j * n_groups + t, Msg::CrossDone);
+        }
+
+        // ---- wait for every group's partial of MY optimizer shard ----
+        let (tx, rx) = mpsc::channel();
+        self.send(dev, Msg::CrossFlush { reply: tx });
+        let grads = rx.recv().expect("cross flush");
+        *self.taken[dev].lock().unwrap() = Some(grads);
+    }
+
+    fn take_grad_shard(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        let slot = self.taken[dev].lock().unwrap();
+        let grads = slot.as_ref().expect("take_grad_shard before end_minibatch");
+        out.copy_from_slice(&grads[layer]);
+    }
+
+    fn end_step(&self, dev: usize) {
+        // Barrier 1: every device has republished its optimizer shard
+        // into the global store.
+        self.barrier.wait();
+        // Replica refresh: pull my super-shard of every layer from the
+        // global store into my group's replica — the cross-node param
+        // all-gather the simulator's hybrid_step_overhead prices
+        // ((n_groups-1)/n_groups of these reads cross node boundaries).
+        let group = self.groups.group_of(dev);
+        let j = self.groups.local_index(dev);
+        let mut scratch = self.refresh_scratch[dev].lock().unwrap();
+        for (layer, p) in self.params.layers.iter().enumerate() {
+            let s = p.padded_len() / self.groups.group_size;
+            let buf = &mut scratch[..s];
+            p.buf.read(j * s, buf);
+            self.replicas[group][layer].write(j * s, buf);
+        }
+        drop(scratch);
+        // Barrier 2: nobody gathers until every replica is fresh.
+        self.barrier.wait();
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+impl Drop for HybridComm {
+    fn drop(&mut self) {
+        for dev in 0..self.world {
+            let _ = self.mailbox[dev].lock().unwrap().send(Msg::Shutdown);
+        }
+        for d in self.daemons.lock().unwrap().drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(lens: &[usize], world: usize) -> Arc<ParamStore> {
+        let params = Arc::new(ParamStore::new(lens, world));
+        for (l, p) in params.layers.iter().enumerate() {
+            let vals: Vec<f32> = (0..p.logical_len).map(|i| (l * 1000 + i) as f32).collect();
+            p.init_from(&vals);
+        }
+        params
+    }
+
+    #[test]
+    fn gather_reads_group_replica() {
+        let params = store(&[8], 4);
+        let comm = HybridComm::new(Arc::clone(&params), 4, 2);
+        let mut out = vec![0.0f32; 8];
+        for dev in 0..4 {
+            comm.gather_params(dev, 0, &mut out);
+            let mut want = vec![0.0f32; 8];
+            params.layers[0].read_logical(&mut want);
+            assert_eq!(out, want, "dev {dev}");
+        }
+        assert_eq!(comm.gather_policy(), GatherPolicy::TwoLevelIntra);
+        assert!(comm.gathers_cacheable());
+    }
+
+    /// The two-level reduction computes the same global sum as a flat
+    /// scheme: every device's contribution reaches every owner exactly
+    /// once, through its group's partial.
+    #[test]
+    fn two_level_reduction_sums_across_groups() {
+        let world = 4;
+        let params = Arc::new(ParamStore::new(&[12], world));
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    // device pushes (dev+1) twice — two microbatches
+                    let grad = vec![(dev + 1) as f32; 12];
+                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0f32; 3];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    for &v in &shard {
+                        assert_eq!(v, 20.0); // 2 * (1 + 2 + 3 + 4)
+                    }
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+
+    /// LB-Mini regime: unequal microbatch counts, both within and across
+    /// groups, over several minibatches — correct sums, no deadlock.
+    #[test]
+    fn unequal_counts_across_groups_many_minibatches() {
+        let world = 4;
+        let params = Arc::new(ParamStore::new(&[10], world));
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for step in 0..5 {
+                        let pushes = 1 + (dev + step) % 4;
+                        for _ in 0..pushes {
+                            comm.reduce_grad(dev, 0, &vec![1.0f32; 12], 1.0);
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 3];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        let want: usize = (0..world).map(|d| 1 + (d + step) % 4).sum();
+                        for &v in &g {
+                            assert_eq!(v, want as f32, "step {step}");
+                        }
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_pushes_cross_group() {
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[2], world));
+        // group_size 1: every device its own group — the pure cross path
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 1));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 });
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0f32; 1];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    assert!((shard[0] - 2.5).abs() < 1e-6);
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+
+    /// Replica refresh: optimizer-shard writes published at end_step are
+    /// visible to every group's gathers on the next minibatch.
+    #[test]
+    fn end_step_refreshes_every_replica() {
+        let world = 4;
+        let params = Arc::new(ParamStore::new(&[8], world));
+        params.layers[0].init_from(&[1.0; 8]);
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+        let store = Arc::clone(&params);
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                let store = Arc::clone(&store);
+                s.spawn(move || {
+                    let p = &store.layers[0];
+                    let mut buf = vec![0.0f32; p.padded_len()];
+                    for step in 0..3 {
+                        comm.gather_params(dev, 0, &mut buf);
+                        assert!(
+                            buf.iter().all(|&x| (x - (1.0 + step as f32)).abs() < 1e-6),
+                            "dev {dev} step {step}: saw {buf:?}"
+                        );
+                        comm.end_minibatch(dev); // zero pushes: empty fold
+                        let r = p.shard_range(dev);
+                        p.buf.write(r.start, &vec![2.0 + step as f32; r.len()]);
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Cross-level pieces per (owner, group) pair per minibatch equal
+    /// the layer count, which the prealloc covers — the epilogue never
+    /// heap-allocates. Intra pieces are held until the flush, so within
+    /// one push per layer per minibatch the intra arenas are
+    /// allocation-free too.
+    #[test]
+    fn arenas_allocation_free_within_prealloc() {
+        let world = 4;
+        let params = Arc::new(ParamStore::new(&[30, 12], world));
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                let store = Arc::clone(&params);
+                s.spawn(move || {
+                    for _step in 0..10 {
+                        for (l, p) in store.layers.iter().enumerate() {
+                            comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; store.layers[0].shard_len];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+        let intra = comm.intra_arena_stats();
+        let cross = comm.cross_arena_stats();
+        // per minibatch: every device pushes 2 layers × group_size
+        // intra pieces, and sends 2 layers × n_groups cross pieces
+        assert_eq!(intra.acquires, (10 * world * 2 * 2) as u64);
+        assert_eq!(cross.acquires, (10 * world * 2 * 2) as u64);
+        assert_eq!(intra.fresh_allocs, 0, "intra path must stay inside the prealloc");
+        assert_eq!(cross.fresh_allocs, 0, "cross path must stay inside the prealloc");
+        // all payloads back home after the final drain
+        let total = comm.arena_stats();
+        assert_eq!(total.resident, (world * 2 * 3 + world * 2 * 3) as u64);
+    }
+
+    /// Multi-group runs are deterministic across repetitions: the
+    /// daemons fold buffered pieces in a fixed order, so thread timing
+    /// cannot change a single bit.
+    #[test]
+    fn repeated_runs_bit_identical() {
+        let run = || -> Vec<Vec<f32>> {
+            let world = 4;
+            let params = Arc::new(ParamStore::new(&[17], world));
+            let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for dev in 0..world {
+                    let comm = Arc::clone(&comm);
+                    handles.push(s.spawn(move || {
+                        for m in 0..(1 + dev) {
+                            let grad: Vec<f32> = (0..20)
+                                .map(|i| ((dev * 31 + m * 7 + i) % 13) as f32 * 0.37)
+                                .collect();
+                            comm.reduce_grad(dev, 0, &grad, 1.0);
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 5];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                        g
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "hybrid reduction must be bit-deterministic");
+    }
+}

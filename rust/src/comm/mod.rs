@@ -10,9 +10,15 @@
 //!   per-layer barriers.
 //! * [`odc`] — the paper's backend: gather / scatter-accumulate with one
 //!   barrier per minibatch.
+//! * [`hybrid`] — §6.1 hybrid sharding as a REAL two-level backend:
+//!   params/grads sharded within a topology group (one-sided gathers
+//!   over per-group replicas, intra-group scatter-accumulate), optimizer
+//!   shards across all devices with an ODC-style cross-group epilogue —
+//!   cross-group synchronization only at `end_minibatch`/`end_step`.
 //! * [`arena`] — preallocated per-(server, client) payload arenas (the
-//!   paper's Appendix B per-client RDMA buffers): the ODC push path is
-//!   allocation-free and uncontended in steady state.
+//!   paper's Appendix B per-client RDMA buffers) and the [`ArenaMatrix`]
+//!   generalization the two-level backend indexes per (group, client):
+//!   every push path is allocation-free and uncontended in steady state.
 //! * [`gather_cache`] — minibatch-scoped parameter-gather cache (§6.2
 //!   parameter caching) for one-sided backends: each layer is gathered
 //!   once per minibatch and shared zero-copy from then on.
@@ -23,14 +29,17 @@ pub mod arena;
 pub mod backend;
 pub mod collective;
 pub mod gather_cache;
+pub mod hybrid;
 pub mod odc;
 pub mod primbench;
 pub mod shared;
 pub mod topology;
 pub mod volume;
 
-pub use arena::{ArenaStats, PayloadArena};
-pub use backend::CommBackend;
+pub use arena::{ArenaMatrix, ArenaStats, PayloadArena};
+pub use backend::{CommBackend, GatherPolicy};
 pub use collective::CollectiveComm;
 pub use gather_cache::{CacheStats, GatherCache};
+pub use hybrid::HybridComm;
 pub use odc::OdcComm;
+pub use topology::GroupMap;

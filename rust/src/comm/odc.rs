@@ -27,8 +27,8 @@
 //! advance, which bounds in-flight payloads per pair to one minibatch's
 //! pushes and therefore bounds arena growth (see `comm_stress`).
 
-use super::arena::{ArenaStats, PayloadArena};
-use super::backend::{CommBackend, ParamStore};
+use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
+use super::backend::{CommBackend, GatherPolicy, ParamStore};
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
@@ -60,7 +60,7 @@ pub struct OdcComm {
     daemons: Mutex<Vec<JoinHandle<()>>>,
     /// Payload arenas indexed `[server][client]` (Appendix B: one
     /// preallocated buffer set per client per server).
-    arenas: Vec<Vec<Arc<PayloadArena>>>,
+    arenas: ArenaMatrix,
 }
 
 impl OdcComm {
@@ -71,15 +71,13 @@ impl OdcComm {
         // plus a max-sized spare for the daemon lagging one message.
         let mut caps = shard_lens.clone();
         caps.push(shard_lens.iter().copied().max().unwrap_or(0));
-        let arenas: Vec<Vec<Arc<PayloadArena>>> = (0..world)
-            .map(|_server| (0..world).map(|_client| Arc::new(PayloadArena::new(&caps))).collect())
-            .collect();
+        let arenas = ArenaMatrix::new(world, world, &caps);
         let mut mailbox = Vec::with_capacity(world);
         let mut daemons = Vec::with_capacity(world);
         for server in 0..world {
             let (tx, rx) = mpsc::channel::<Msg>();
             let lens = shard_lens.clone();
-            let row: Vec<Arc<PayloadArena>> = arenas[server].iter().map(Arc::clone).collect();
+            let row = arenas.row(server);
             daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, world, row)));
             mailbox.push(Mutex::new(tx));
         }
@@ -101,13 +99,7 @@ impl OdcComm {
     /// Summed payload-arena counters (tests / benches): proves the push
     /// path is allocation-free after warm-up.
     pub fn arena_stats(&self) -> ArenaStats {
-        let mut total = ArenaStats::default();
-        for row in &self.arenas {
-            for a in row {
-                total.merge(a.stats());
-            }
-        }
-        total
+        self.arenas.stats()
     }
 }
 
@@ -167,11 +159,11 @@ impl CommBackend for OdcComm {
         p.buf.read(0, &mut out[..n]);
     }
 
-    fn gathers_cacheable(&self) -> bool {
+    fn gather_policy(&self) -> GatherPolicy {
         // One-sided + phase-immutable params: a gather at any point of
         // the minibatch returns identical bytes, and skipping one never
         // desynchronizes anything (there is nothing to rendezvous with).
-        true
+        GatherPolicy::OneSided
     }
 
     fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
@@ -182,7 +174,7 @@ impl CommBackend for OdcComm {
         }
         for server in 0..self.world {
             let r = p.shard_range(server);
-            let mut data = self.arenas[server][dev].acquire(r.len());
+            let mut data = self.arenas.arena(server, dev).acquire(r.len());
             data.extend_from_slice(&grad[r]);
             self.send(server, Msg::Accum { layer, weight, client: dev, data });
         }

@@ -23,6 +23,23 @@
 //!     │   (gathers, pushes)       │     owner-shard-disjoint │
 //! ```
 //!
+//! Under the two-level hybrid backend ([`super::hybrid::HybridComm`])
+//! the same timeline holds at BOTH levels, with the epilogues nested:
+//!
+//! ```text
+//!  end_step ─────────────────── end_minibatch ──────────────── end_step
+//!     │   microbatch phase           │ intra │ cross │ optimizer │refresh│
+//!     │   replica READ-ONLY          │ group │ shard │ global    │replica│
+//!     │   (intra gathers, pushes)    │ fold  │ push  │ WRITTEN   │WRITTEN│
+//! ```
+//!
+//! * group replicas are read-only during the microbatch phase and only
+//!   written in the *refresh* sub-phase between `end_step`'s two
+//!   barriers (each member writes its own super-shard — disjoint);
+//! * `end_minibatch` first completes the intra-group fold (group
+//!   rendezvous), then the cross-group shard exchange — the ONLY
+//!   cross-group synchronization outside `end_step`.
+//!
 //! Two subsystems lean on this timeline beyond plain read/write safety:
 //!
 //! * [`super::gather_cache::GatherCache`] (§6.2 parameter caching):

@@ -1,5 +1,12 @@
 //! Cluster topology model: the paper's testbed is A100 nodes with
 //! NVSwitch inside a node and 800 Gbps RoCE RDMA between nodes.
+//!
+//! [`GroupMap`] is the topology's device→node-group assignment in the
+//! exact form the real engine needs: the hybrid two-level backend
+//! ([`crate::comm::HybridComm`]) shards params/grads within a group and
+//! exchanges optimizer-level gradients across groups, so it requires
+//! groups that tile the device set exactly (unlike the analytic
+//! simulator, which tolerates a ragged last node).
 
 /// Bandwidths in bytes/second.
 #[derive(Clone, Copy, Debug)]
@@ -45,6 +52,75 @@ impl Topology {
     pub fn multi_node(&self) -> bool {
         self.nodes() > 1
     }
+
+    /// The device→group assignment of this topology, when the node size
+    /// tiles the device set exactly (the hybrid backend's requirement).
+    pub fn group_map(&self) -> Option<GroupMap> {
+        if self.devices_per_node > 0 && self.devices % self.devices_per_node == 0 {
+            Some(GroupMap::new(self.devices, self.devices_per_node))
+        } else {
+            None
+        }
+    }
+}
+
+/// Device→node-group assignment: `devices` split into contiguous groups
+/// of exactly `group_size` (the real engine's analogue of a node).
+///
+/// Every mapping the two-level protocol needs lives here so the backend,
+/// trainer, and tests agree on one source of truth: which group a device
+/// belongs to, its local index within the group, and the global ids of a
+/// group's members.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupMap {
+    pub devices: usize,
+    pub group_size: usize,
+}
+
+impl GroupMap {
+    /// Panics unless `1 <= group_size <= devices` and the groups tile
+    /// the device set exactly — callers that cannot guarantee this
+    /// (e.g. CLI-driven configs) must validate first.
+    pub fn new(devices: usize, group_size: usize) -> GroupMap {
+        assert!(devices >= 1, "need at least one device");
+        assert!(
+            (1..=devices).contains(&group_size),
+            "group size {group_size} outside 1..={devices}"
+        );
+        assert_eq!(
+            devices % group_size,
+            0,
+            "hybrid groups must tile the device set exactly ({devices} % {group_size} != 0)"
+        );
+        GroupMap { devices, group_size }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.devices / self.group_size
+    }
+
+    #[inline]
+    pub fn group_of(&self, dev: usize) -> usize {
+        dev / self.group_size
+    }
+
+    /// Position of `dev` within its group (0..group_size).
+    #[inline]
+    pub fn local_index(&self, dev: usize) -> usize {
+        dev % self.group_size
+    }
+
+    /// Global device id of member `local` of `group`.
+    #[inline]
+    pub fn member(&self, group: usize, local: usize) -> usize {
+        group * self.group_size + local
+    }
+
+    /// Global device ids of a group's members.
+    pub fn members(&self, group: usize) -> std::ops::Range<usize> {
+        let lo = group * self.group_size;
+        lo..lo + self.group_size
+    }
 }
 
 #[cfg(test)]
@@ -73,5 +149,32 @@ mod tests {
     fn inter_slower_than_intra() {
         let t = Topology::paper(16, 8);
         assert!(t.inter_bw < t.intra_bw / 2.0);
+    }
+
+    #[test]
+    fn group_map_indexing() {
+        let g = GroupMap::new(8, 4);
+        assert_eq!(g.n_groups(), 2);
+        assert_eq!(g.group_of(3), 0);
+        assert_eq!(g.group_of(4), 1);
+        assert_eq!(g.local_index(5), 1);
+        assert_eq!(g.member(1, 3), 7);
+        assert_eq!(g.members(1), 4..8);
+        // degenerate shapes both work: one group, and per-device groups
+        assert_eq!(GroupMap::new(4, 4).n_groups(), 1);
+        assert_eq!(GroupMap::new(4, 1).n_groups(), 4);
+        assert_eq!(GroupMap::new(4, 1).local_index(3), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile the device set exactly")]
+    fn group_map_rejects_ragged_groups() {
+        GroupMap::new(6, 4);
+    }
+
+    #[test]
+    fn topology_exposes_group_map_only_when_exact() {
+        assert_eq!(Topology::paper(32, 8).group_map(), Some(GroupMap::new(32, 8)));
+        assert!(Topology::paper(12, 8).group_map().is_none());
     }
 }

@@ -104,6 +104,22 @@ pub enum CommScheme {
     /// The paper's contribution: p2p gather / scatter-accumulate,
     /// one barrier per minibatch.
     Odc,
+    /// §6.1 two-level hybrid sharding: params/grads sharded within a
+    /// node group (intra-group gathers/reduces), optimizer shards across
+    /// all devices with an ODC-style cross-group epilogue. Devices
+    /// free-run within the minibatch exactly like ODC (LB-Mini legal).
+    Hybrid,
+}
+
+impl CommScheme {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "collective" => Some(CommScheme::Collective),
+            "odc" => Some(CommScheme::Odc),
+            "hybrid" => Some(CommScheme::Hybrid),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for CommScheme {
@@ -111,6 +127,7 @@ impl fmt::Display for CommScheme {
         write!(f, "{}", match self {
             CommScheme::Collective => "Collective",
             CommScheme::Odc => "ODC",
+            CommScheme::Hybrid => "Hybrid",
         })
     }
 }
@@ -243,6 +260,15 @@ mod tests {
         for m in PaperModel::all() {
             assert_eq!(PaperModel::parse(&m.to_string()), Some(m));
         }
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in [CommScheme::Collective, CommScheme::Odc, CommScheme::Hybrid] {
+            assert_eq!(CommScheme::parse(&s.to_string()), Some(s));
+        }
+        assert_eq!(CommScheme::parse("hybrid"), Some(CommScheme::Hybrid));
+        assert_eq!(CommScheme::parse("ring"), None);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //!   [`GatherCache`], gradient staging (`grad_pad`, `gshard`), and the
 //!   activation / token pools plus the forward activation stack.
 
-use crate::comm::backend::ParamStore;
+use crate::comm::backend::{GatherPolicy, ParamStore};
 use crate::comm::GatherCache;
 use std::sync::Arc;
 
@@ -80,8 +80,11 @@ impl<T: Copy> SlicePool<T> {
 
 /// All recurring per-device buffers of the training loop.
 pub struct BufferPlan {
-    /// Minibatch-scoped parameter gathers (enabled only when the backend
-    /// reports `gathers_cacheable`).
+    /// Minibatch-scoped parameter gathers, honouring the backend's
+    /// per-level [`GatherPolicy`]: one-sided (ODC) and two-level intra
+    /// (Hybrid) gathers cache per minibatch; rendezvous (Collective)
+    /// gathers never do. Cross-group epilogue traffic lives inside the
+    /// backend and bypasses this cache entirely.
     pub cache: GatherCache,
     /// Padded full-layer gradient staging (reduce_grad input).
     pub grad_pad: Vec<f32>,
@@ -97,7 +100,10 @@ pub struct BufferPlan {
 }
 
 impl BufferPlan {
-    pub fn new(params: &ParamStore, dev: usize, cache_enabled: bool) -> Self {
+    /// `policy` is the backend's structural gather classification
+    /// ([`crate::comm::CommBackend::gather_policy`]), downgraded to
+    /// [`GatherPolicy::Rendezvous`] when the engine disables caching.
+    pub fn new(params: &ParamStore, dev: usize, policy: GatherPolicy) -> Self {
         let max_padded = params.max_padded_len();
         let max_shard = params.layers.iter().map(|p| p.shard_len).max().unwrap_or(0);
         let n_layers = params.n_layers();
@@ -107,7 +113,7 @@ impl BufferPlan {
         // Live i32 buffers: tokens, segments, targets (+ slack).
         let i32_cap = 2 * 3;
         BufferPlan {
-            cache: GatherCache::new(params, dev, cache_enabled),
+            cache: GatherCache::for_policy(params, dev, policy),
             grad_pad: vec![0.0; max_padded],
             gshard: vec![0.0; max_shard],
             f32_pool: SlicePool::new(f32_cap),
@@ -212,11 +218,22 @@ mod tests {
     fn buffer_plan_shapes_match_store() {
         let params = Arc::new(ParamStore::new(&[10, 6, 6], 2));
         let comm = OdcComm::new(Arc::clone(&params), 2);
-        let mut plan = BufferPlan::new(&params, 0, comm.gathers_cacheable());
+        let mut plan = BufferPlan::new(&params, 0, comm.gather_policy());
         assert_eq!(plan.grad_pad.len(), params.max_padded_len());
         assert_eq!(plan.gshard.len(), 5);
         assert!(plan.cache.enabled());
         let g = plan.cache.gather(&comm, 0);
         assert_eq!(g.len(), params.layers[0].padded_len());
+    }
+
+    #[test]
+    fn buffer_plan_inherits_backend_policy_per_level() {
+        let params = Arc::new(ParamStore::new(&[8, 8], 2));
+        let hybrid = crate::comm::HybridComm::new(Arc::clone(&params), 2, 2);
+        let plan = BufferPlan::new(&params, 0, hybrid.gather_policy());
+        assert_eq!(plan.cache.policy(), GatherPolicy::TwoLevelIntra);
+        assert!(plan.cache.enabled(), "intra-group gathers cache per minibatch");
+        let disabled = BufferPlan::new(&params, 0, GatherPolicy::Rendezvous);
+        assert!(!disabled.cache.enabled());
     }
 }

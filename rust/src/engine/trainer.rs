@@ -17,6 +17,17 @@
 //! lockstep); under `Odc` devices free-run to `end_minibatch`, which is
 //! what lets LB-Mini give devices different microbatch counts.
 //!
+//! Under `Hybrid` (§6.1 two-level sharding) the same free-running loop
+//! drives a two-level protocol: gathers are one-sided reads of the
+//! device's *node-group replica* (intra-group traffic only) and
+//! `reduce_grad` scatter-accumulates within the group, so LB-Mini stays
+//! legal; `end_minibatch` completes the group fold and then exchanges
+//! global optimizer shards across groups (the only inter-group
+//! gradient traffic), and `end_step` republishes optimizer shards and
+//! refreshes every group replica between its two barriers. Group size
+//! comes from [`TrainerConfig::devices_per_node`] and must tile `world`
+//! exactly.
+//!
 //! ## Zero-copy hot path
 //!
 //! Each device thread owns a [`BufferPlan`]: a minibatch-scoped
@@ -33,8 +44,8 @@
 
 use crate::balance::cost::CostModel;
 use crate::balance::packers::{plan_run, Plan};
-use crate::comm::backend::{CommBackend, ParamStore};
-use crate::comm::{CollectiveComm, OdcComm};
+use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
+use crate::comm::{CollectiveComm, HybridComm, OdcComm};
 use crate::config::{Balancer, CommScheme};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
@@ -55,6 +66,10 @@ pub struct TrainerConfig {
     pub artifacts_dir: PathBuf,
     pub world: usize,
     pub scheme: CommScheme,
+    /// Node-group size for `CommScheme::Hybrid` (ignored otherwise).
+    /// 0 means "all devices in one group" (a single node — the paper's
+    /// hybrid default); any other value must divide `world` exactly.
+    pub devices_per_node: usize,
     pub balancer: Balancer,
     /// Samples per minibatch per device.
     pub minibs: usize,
@@ -83,6 +98,7 @@ impl TrainerConfig {
             artifacts_dir: artifacts_dir.into(),
             world: 2,
             scheme: CommScheme::Odc,
+            devices_per_node: 0,
             balancer: Balancer::LbMini,
             minibs: 4,
             steps: 4,
@@ -92,6 +108,16 @@ impl TrainerConfig {
             len_sigma: 0.8,
             gather_cache: true,
             plan_override: None,
+        }
+    }
+
+    /// Resolved hybrid group size: `devices_per_node` with 0 meaning the
+    /// whole world (a single node).
+    pub fn hybrid_group_size(&self) -> usize {
+        if self.devices_per_node == 0 {
+            self.world
+        } else {
+            self.devices_per_node
         }
     }
 }
@@ -132,10 +158,21 @@ pub fn plan_preview(cfg: &TrainerConfig) -> Result<Vec<Plan>> {
 
 /// Train per the config; returns the loss curve and final parameters.
 pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
-    let man = Manifest::load(&cfg.artifacts_dir)?;
+    // Config validation first (none of it needs artifacts on disk).
     if cfg.scheme == CommScheme::Collective && cfg.balancer == Balancer::LbMini {
-        return Err(anyhow!("LB-Mini requires ODC (devices run unequal microbatch counts)"));
+        return Err(anyhow!("LB-Mini requires a barrier-free scheme (devices run unequal microbatch counts)"));
     }
+    if cfg.scheme == CommScheme::Hybrid {
+        let g = cfg.hybrid_group_size();
+        if g == 0 || cfg.world % g != 0 {
+            return Err(anyhow!(
+                "hybrid sharding needs node groups that tile the device set: world {} % devices_per_node {} != 0",
+                cfg.world,
+                g
+            ));
+        }
+    }
+    let man = Manifest::load(&cfg.artifacts_dir)?;
     let host = ComputeService::start(&man)?;
 
     // --- parameters ------------------------------------------------------
@@ -147,6 +184,11 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     let backend: Arc<dyn CommBackend> = match cfg.scheme {
         CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
         CommScheme::Odc => Arc::new(OdcComm::new(Arc::clone(&params), cfg.world)),
+        // NB: constructed after init_from above — HybridComm seeds its
+        // group replicas from the global store.
+        CommScheme::Hybrid => {
+            Arc::new(HybridComm::new(Arc::clone(&params), cfg.world, cfg.hybrid_group_size()))
+        }
     };
 
     // --- data + plan -------------------------------------------------------
@@ -250,11 +292,16 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     let dev = ctx.dev;
     let n_layers = man.n_layers;
 
-    // All recurring buffers live in the plan; caching is a backend
-    // capability (ODC yes, Collective no — a collective gather is a
-    // rendezvous and must run on every seed call site).
-    let use_cache = ctx.cfg.gather_cache && ctx.backend.gathers_cacheable();
-    let mut bufs = BufferPlan::new(&ctx.params, dev, use_cache);
+    // All recurring buffers live in the plan; caching honours the
+    // backend's per-level policy (ODC one-sided and Hybrid intra-group
+    // gathers cache per minibatch; Collective gathers are rendezvous and
+    // must run on every seed call site).
+    let policy = if ctx.cfg.gather_cache {
+        ctx.backend.gather_policy()
+    } else {
+        GatherPolicy::Rendezvous
+    };
+    let mut bufs = BufferPlan::new(&ctx.params, dev, policy);
 
     // local master copy of owned shards + Adam state
     let mut shards: Vec<Vec<f32>> = ctx
@@ -281,10 +328,11 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     for (step, plan) in ctx.plans.iter().enumerate() {
         let t0 = Instant::now();
         let my = &plan.micro[dev];
-        // Collective needs lockstep over the common (padded) count.
+        // Collective needs lockstep over the common (padded) count;
+        // ODC and Hybrid devices free-run over their own slots.
         let m_count = match ctx.cfg.scheme {
             CommScheme::Collective => plan.max_micro_count(),
-            CommScheme::Odc => my.len(),
+            CommScheme::Odc | CommScheme::Hybrid => my.len(),
         };
 
         for m in 0..m_count {
@@ -453,7 +501,7 @@ fn run_microbatch(
 /// Gathers route through the (disabled) cache so the call sequence and
 /// buffer reuse match `run_microbatch` one-for-one.
 fn idle_participation(ctx: &DeviceCtx, n_layers: usize, bufs: &mut BufferPlan) -> Result<()> {
-    if matches!(ctx.cfg.scheme, CommScheme::Odc) {
+    if matches!(ctx.cfg.scheme, CommScheme::Odc | CommScheme::Hybrid) {
         return Ok(());
     }
     let dev = ctx.dev;

@@ -5,11 +5,14 @@
 //!
 //! * **L3 (this crate)** — the paper's coordination contribution: an FSDP
 //!   training engine whose per-layer communication is pluggable between
-//!   `Collective` (all-gather / reduce-scatter, per-layer barriers) and
+//!   `Collective` (all-gather / reduce-scatter, per-layer barriers),
 //!   `Odc` (point-to-point gather / scatter-accumulate, one barrier per
-//!   minibatch), the load-balancing algorithms (LocalSort, LB-Micro,
-//!   LB-Mini, Verl variants), and a discrete-event cluster simulator that
-//!   regenerates every table and figure of the paper at testbed scale.
+//!   minibatch) and `Hybrid` (§6.1 two-level sharding: params/grads
+//!   within a node group, optimizer shards across groups —
+//!   [`comm::HybridComm`]), the load-balancing algorithms (LocalSort,
+//!   LB-Micro, LB-Mini, Verl variants), and a discrete-event cluster
+//!   simulator that regenerates every table and figure of the paper at
+//!   testbed scale.
 //! * **L2** — the JAX transformer (`python/compile/model.py`), AOT-lowered
 //!   once to HLO text and executed from Rust via PJRT.
 //! * **L1** — the Pallas flash-attention + shard-op kernels

@@ -18,11 +18,7 @@ use odc::util::cli::Cli;
 use std::path::Path;
 
 fn parse_scheme(s: &str) -> anyhow::Result<CommScheme> {
-    match s {
-        "odc" => Ok(CommScheme::Odc),
-        "collective" => Ok(CommScheme::Collective),
-        other => anyhow::bail!("unknown scheme `{other}` (odc|collective)"),
-    }
+    CommScheme::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scheme `{s}` (odc|collective|hybrid)"))
 }
 
 fn parse_balancer(s: &str) -> anyhow::Result<Balancer> {
@@ -46,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             let cli = Cli::new("odc sim", "simulate one experiment cell")
                 .opt("model", "1.5b", "1.5b | 7b | 14b | 32b")
                 .opt("dataset", "longalign", "longalign | swesmith | aime")
-                .opt("scheme", "odc", "odc | collective")
+                .opt("scheme", "odc", "odc | collective | hybrid")
                 .opt("balancer", "lb-micro", "local-sort | lb-micro | lb-mini | native")
                 .opt("minibs", "4", "samples per minibatch per device")
                 .opt("devices", "8", "device count")
@@ -94,6 +90,9 @@ fn main() -> anyhow::Result<()> {
                 "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
                 r.mean_minibatch_s, r.minibatches, r.samples
             );
+            if r.hybrid_step_overhead_s > 0.0 {
+                println!("  hybrid step ovh  : {:.3} ms/minibatch (cross-node optimizer exchange)", r.hybrid_step_overhead_s * 1e3);
+            }
         }
         "train" => {
             let cli = Cli::new("odc train", "real FSDP training through PJRT")
@@ -101,7 +100,8 @@ fn main() -> anyhow::Result<()> {
                 .opt("world", "4", "device threads")
                 .opt("minibs", "4", "samples per device per minibatch")
                 .opt("steps", "40", "optimizer steps")
-                .opt("scheme", "odc", "odc | collective")
+                .opt("scheme", "odc", "odc | collective | hybrid")
+                .opt("devices-per-node", "0", "hybrid node-group size (0 = single group)")
                 .opt("balancer", "lb-mini", "local-sort | lb-micro | lb-mini")
                 .opt("lr", "0.003", "AdamW lr")
                 .opt("seed", "0", "rng seed")
@@ -120,6 +120,7 @@ fn main() -> anyhow::Result<()> {
             cfg.minibs = a.usize("minibs");
             cfg.steps = a.usize("steps");
             cfg.scheme = parse_scheme(a.get("scheme"))?;
+            cfg.devices_per_node = a.usize("devices-per-node");
             cfg.balancer = parse_balancer(a.get("balancer"))?;
             cfg.adam.lr = a.f64("lr") as f32;
             cfg.seed = a.u64("seed");

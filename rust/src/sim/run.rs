@@ -49,6 +49,12 @@ pub struct RunResult {
     /// optimizer epilogue — the quantity the bubble rate approximates
     /// from packing alone.
     pub device_utilization: f64,
+    /// Predicted per-minibatch hybrid step overhead (cross-node
+    /// optimizer-state exchange + replica refresh), in seconds; 0 under
+    /// full sharding or on a single node. Reported so the real-engine
+    /// mode of `fig12_hybrid` can print prediction vs measurement side
+    /// by side.
+    pub hybrid_step_overhead_s: f64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -77,6 +83,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         opts,
     );
 
+    let step_overhead = hybrid_overhead(exp, &topo);
     let mut total_wall = 0.0;
     let mut total_busy = 0.0;
     let mut bubble_busy = 0.0;
@@ -84,7 +91,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let mut samples = 0usize;
     for plan in &plans {
         let t = time_minibatch_opt(plan, &lens, exp.model, &cost, exp.scheme, exp.sharding, &topo, cfg.hierarchical_gather);
-        total_wall += t.wall + optimizer_epilogue(exp, &topo);
+        total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead;
         total_busy += t.busy.iter().sum::<f64>();
         let b = estimate_bubble(plan, &lens, &cost, exp.scheme);
         bubble_busy += b.busy.iter().sum::<f64>();
@@ -102,20 +109,24 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         bubble_rate,
         mean_minibatch_s: total_wall / plans.len().max(1) as f64,
         device_utilization,
+        hybrid_step_overhead_s: step_overhead,
         minibatches: plans.len(),
         samples,
     }
 }
 
-/// Per-minibatch epilogue: gradient drain + sharded AdamW (cheap) plus
-/// hybrid sharding's cross-node state exchange when applicable.
-fn optimizer_epilogue(exp: &ExperimentConfig, topo: &Topology) -> f64 {
-    let adam = 0.002; // sharded elementwise update, ~ms-scale
-    let hybrid = match exp.sharding {
-        Sharding::Hybrid => hybrid_step_overhead(exp.model, topo),
-        Sharding::Full => 0.0,
-    };
-    adam + hybrid
+/// Sharded elementwise AdamW epilogue, ~ms-scale.
+const ADAM_EPILOGUE_S: f64 = 0.002;
+
+/// Hybrid sharding's per-minibatch cross-node optimizer-state exchange:
+/// applies both to the legacy `Sharding::Hybrid` analytic toggle and to
+/// the real two-level scheme (`CommScheme::Hybrid`).
+fn hybrid_overhead(exp: &ExperimentConfig, topo: &Topology) -> f64 {
+    if exp.sharding == Sharding::Hybrid || exp.scheme == CommScheme::Hybrid {
+        hybrid_step_overhead(exp.model, topo)
+    } else {
+        0.0
+    }
 }
 
 /// Convenience: simulate a (scheme, balancer) pair against the paper's
@@ -260,5 +271,48 @@ mod tests {
         let r = quick(CommScheme::Odc, Balancer::LbMicro, 4);
         assert_eq!(r.minibatches, 8);
         assert_eq!(r.samples, 8 * 8 * 4);
+    }
+
+    fn multinode_short(scheme: CommScheme) -> RunResult {
+        let exp = ExperimentConfig {
+            model: PaperModel::M1_5B,
+            dataset: Dataset::LongAlign,
+            scheme,
+            balancer: Balancer::LbMicro,
+            sharding: Sharding::Full,
+            minibs: 4,
+            devices: 16,
+            devices_per_node: 8,
+            packing_ratio: 1.0,
+            max_len: 8_192,
+            steps: 8,
+            seed: 5,
+        };
+        simulate(&SimConfig::new(exp))
+    }
+
+    #[test]
+    fn hybrid_scheme_beats_flat_odc_on_short_context_multinode() {
+        // Fig 12's claim: when microbatches are too short to hide ODC's
+        // inter-node traffic, two-level sharding wins despite paying the
+        // optimizer-state exchange at every step.
+        let odc = multinode_short(CommScheme::Odc);
+        let hyb = multinode_short(CommScheme::Hybrid);
+        assert!(
+            hyb.samples_per_sec_per_device > odc.samples_per_sec_per_device,
+            "hybrid {} <= odc {}",
+            hyb.samples_per_sec_per_device,
+            odc.samples_per_sec_per_device
+        );
+    }
+
+    #[test]
+    fn hybrid_step_overhead_reported_multinode_only() {
+        let multi = multinode_short(CommScheme::Hybrid);
+        assert!(multi.hybrid_step_overhead_s > 0.0);
+        let flat = multinode_short(CommScheme::Odc);
+        assert_eq!(flat.hybrid_step_overhead_s, 0.0);
+        let single = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        assert_eq!(single.hybrid_step_overhead_s, 0.0);
     }
 }

@@ -34,8 +34,10 @@ pub fn micro_comm_time_opt(
     hierarchical: bool,
 ) -> f64 {
     let lb = layer_bytes(model);
+    // CommScheme::Hybrid IS two-level sharding regardless of the
+    // `sharding` field (the real backend has no full-shard mode).
     let per_op = match (sharding, scheme, hierarchical) {
-        (Sharding::Hybrid, _, _) => volume::hybrid_layer_op_time(lb, topo),
+        (Sharding::Hybrid, _, _) | (_, CommScheme::Hybrid, _) => volume::hybrid_layer_op_time(lb, topo),
         (Sharding::Full, CommScheme::Odc, true) => volume::hierarchical_layer_op_time(lb, topo),
         (Sharding::Full, odc_or_col, _) => volume::layer_op_time(odc_or_col == CommScheme::Odc, lb, topo),
     };
@@ -47,13 +49,20 @@ pub fn micro_comm_time_opt(
 /// gradients are reduce-scattered across nodes and fresh params
 /// all-gathered back — 2 inter-node passes over the full model.
 pub fn hybrid_step_overhead(model: PaperModel, topo: &Topology) -> f64 {
+    hybrid_step_overhead_bytes(2.0 * model.params(), topo)
+}
+
+/// `hybrid_step_overhead` generalized over raw parameter bytes, so the
+/// real engine (whose tiny presets are not paper models) can ask for
+/// the prediction matching its own parameter count — `fig12_hybrid
+/// --engine` prints this next to the measured step overhead.
+pub fn hybrid_step_overhead_bytes(param_bytes: f64, topo: &Topology) -> f64 {
     if !topo.multi_node() {
         return 0.0;
     }
     let nodes = topo.nodes() as f64;
-    let bytes = 2.0 * model.params();
     // per node NIC moves (nodes-1)/nodes of the model, twice
-    2.0 * (bytes * (nodes - 1.0) / nodes) / (topo.inter_bw * topo.devices_per_node as f64)
+    2.0 * (param_bytes * (nodes - 1.0) / nodes) / (topo.inter_bw * topo.devices_per_node as f64)
 }
 
 /// Result of timing one minibatch.
@@ -72,7 +81,7 @@ pub struct MinibatchTiming {
 fn slot_time(compute: f64, comm: f64, scheme: CommScheme, empty: bool) -> f64 {
     match (scheme, empty) {
         (CommScheme::Collective, true) => comm,
-        (CommScheme::Odc, true) => 0.0,
+        (CommScheme::Odc | CommScheme::Hybrid, true) => 0.0,
         (_, false) => compute.max(comm),
     }
 }
@@ -134,12 +143,13 @@ pub fn time_minibatch_opt(
             }
             t
         }
-        CommScheme::Odc => {
+        CommScheme::Odc | CommScheme::Hybrid => {
             // decoupled progress: each device runs only its own slots
+            // (hybrid reduces are mailbox pushes too — no group lockstep)
             for (dev, b) in busy.iter_mut().enumerate() {
                 for m in 0..plan.micro[dev].len() {
                     let (c, empty) = micro_secs(dev, m);
-                    *b += slot_time(c, comm, CommScheme::Odc, empty);
+                    *b += slot_time(c, comm, scheme, empty);
                 }
             }
             busy.iter().cloned().fold(0.0, f64::max)
@@ -230,5 +240,37 @@ mod tests {
     fn hybrid_overhead_zero_single_node() {
         assert_eq!(hybrid_step_overhead(PaperModel::M7B, &topo8()), 0.0);
         assert!(hybrid_step_overhead(PaperModel::M7B, &Topology::paper(16, 8)) > 0.0);
+    }
+
+    #[test]
+    fn hybrid_scheme_equals_hybrid_sharding_comm() {
+        // CommScheme::Hybrid prices comm exactly like Sharding::Hybrid.
+        let topo = Topology::paper(32, 8);
+        let a = micro_comm_time(PaperModel::M7B, CommScheme::Hybrid, Sharding::Full, &topo);
+        let b = micro_comm_time(PaperModel::M7B, CommScheme::Odc, Sharding::Hybrid, &topo);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hybrid_scheme_decouples_like_odc() {
+        // No per-layer barrier: an empty padded slot costs nothing.
+        let plan = Plan { micro: vec![vec![vec![0], vec![1]], vec![vec![2], vec![]]] };
+        let lens = vec![30_000, 30_000, 30_000];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let th = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Hybrid, Sharding::Hybrid, &topo);
+        let to = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Hybrid, &topo);
+        assert_eq!(th.wall, to.wall);
+        assert_eq!(th.busy, to.busy);
+    }
+
+    #[test]
+    fn overhead_bytes_scales_linearly() {
+        let topo = Topology::paper(16, 8);
+        let one = hybrid_step_overhead_bytes(1e9, &topo);
+        let two = hybrid_step_overhead_bytes(2e9, &topo);
+        assert!(one > 0.0);
+        assert!((two - 2.0 * one).abs() < 1e-12);
+        assert_eq!(hybrid_step_overhead_bytes(1e9, &topo8()), 0.0);
     }
 }

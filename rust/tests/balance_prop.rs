@@ -1,0 +1,188 @@
+//! Property tests over the balancing subsystem (`util::prop`, the
+//! in-repo proptest substrate): partition exactness, planner
+//! determinism, and the LB-Mini-beats-LocalSort spread guarantee the
+//! paper's §5.1 relies on.
+
+use odc::balance::cost::CostModel;
+use odc::balance::kk::karmarkar_karp;
+use odc::balance::packers::{plan_run, Plan};
+use odc::config::{Balancer, PaperModel};
+use odc::util::prop::{check, vec_of};
+use odc::util::rng::Rng;
+
+fn cost() -> CostModel {
+    CostModel::for_model(PaperModel::M1_5B)
+}
+
+/// Flattened, sorted sample indices of a plan set.
+fn all_placed(plans: &[Plan]) -> Vec<usize> {
+    let mut v: Vec<usize> = plans.iter().flat_map(|p| p.all_samples()).collect();
+    v.sort_unstable();
+    v
+}
+
+/// Karmarkar–Karp emits an exact cover: every item index appears in
+/// exactly one partition, for both the free and the equal-size variant.
+#[test]
+fn prop_kk_partitions_are_exact_covers() {
+    check(
+        "kk-exact-cover",
+        80,
+        |r| {
+            let costs = vec_of(r, 0, 40, |r| r.below(100_000) + 1);
+            let k = r.range(1, 9) as u64;
+            (costs, k)
+        },
+        |(costs, k)| {
+            let f: Vec<f64> = costs.iter().map(|&c| c as f64).collect();
+            for eq in [false, true] {
+                let parts = karmarkar_karp(&f, *k as usize, eq);
+                if parts.len() != *k as usize {
+                    return Err(format!("eq={eq}: {} partitions, wanted {k}", parts.len()));
+                }
+                let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+                all.sort_unstable();
+                if all != (0..costs.len()).collect::<Vec<_>>() {
+                    return Err(format!("eq={eq}: not an exact cover of 0..{}", costs.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every balancer's plan set is an exact cover of the global batch:
+/// each sample placed exactly once, across all minibatches, whenever the
+/// batch tiles into whole minibatches (the planners drop ragged tails,
+/// so shrunk inputs that no longer tile are vacuously accepted).
+#[test]
+fn prop_plan_run_exact_cover_all_balancers() {
+    check(
+        "plan-exact-cover",
+        30,
+        |r| {
+            let world = r.range(1, 5) as u64;
+            let minibs = r.range(1, 5) as u64;
+            let steps = r.range(1, 4) as u64;
+            let n = (world * minibs * steps) as usize;
+            let lens: Vec<u64> =
+                (0..n).map(|_| (r.lognormal(8.0, 1.0) as u64).clamp(16, 60_000)).collect();
+            (lens, (world, minibs))
+        },
+        |(lens, (world, minibs))| {
+            let (world, minibs) = (*world as usize, *minibs as usize);
+            let per_step = world * minibs;
+            if per_step == 0 || lens.is_empty() || lens.len() % per_step != 0 {
+                return Ok(()); // shrunk input no longer tiles: vacuous
+            }
+            let lens_u: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
+            let c = cost();
+            for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+                let mut rng = Rng::new(7);
+                let plans = plan_run(b, &lens_u, world, minibs, 65_536, &c, &mut rng);
+                if plans.len() != lens.len() / per_step {
+                    return Err(format!("{b:?}: {} plans for {} minibatches", plans.len(), lens.len() / per_step));
+                }
+                if all_placed(&plans) != (0..lens.len()).collect::<Vec<_>>() {
+                    return Err(format!("{b:?}: plans are not an exact cover"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `plan_run` is a pure function of (inputs, seed): two runs from the
+/// same seed are identical, composition and ordering included.
+#[test]
+fn prop_plan_run_deterministic_under_fixed_seed() {
+    check(
+        "plan-deterministic",
+        25,
+        |r| {
+            let world = r.range(2, 6) as u64;
+            let minibs = r.range(1, 5) as u64;
+            let n = (world * minibs * 2) as usize;
+            let lens: Vec<u64> =
+                (0..n).map(|_| (r.lognormal(8.0, 1.1) as u64).clamp(16, 60_000)).collect();
+            (lens, (world, minibs))
+        },
+        |(lens, (world, minibs))| {
+            let (world, minibs) = (*world as usize, *minibs as usize);
+            if world == 0 || minibs == 0 || lens.is_empty() {
+                return Ok(());
+            }
+            let lens_u: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
+            let c = cost();
+            for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+                let a = plan_run(b, &lens_u, world, minibs, 65_536, &c, &mut Rng::new(123));
+                let bp = plan_run(b, &lens_u, world, minibs, 65_536, &c, &mut Rng::new(123));
+                if a.len() != bp.len()
+                    || a.iter().zip(&bp).any(|(x, y)| x.micro != y.micro)
+                {
+                    return Err(format!("{b:?}: same seed produced different plans"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The §5.1 claim behind LB-Mini: minibatch-level KK balancing never
+/// leaves a worse per-device compute-cost spread than LocalSort's
+/// deal-and-sort (which does not balance at all). Compared as relative
+/// spread (max-min)/max averaged over the run's minibatches, with a 2%
+/// slack for heuristic ties on near-uniform inputs.
+#[test]
+fn prop_lb_mini_spread_never_worse_than_local_sort() {
+    check(
+        "lb-mini-spread",
+        25,
+        |r| {
+            let world = 2 + 2 * r.below(2); // 2 or 4 devices
+            let minibs = r.range(4, 9) as u64;
+            let steps = r.range(1, 4) as u64;
+            let n = (world * minibs * steps) as usize;
+            let lens: Vec<u64> =
+                (0..n).map(|_| (r.lognormal(8.3, 1.1) as u64).clamp(16, 60_000)).collect();
+            (lens, (world, minibs))
+        },
+        |(lens, (world, minibs))| {
+            let (world, minibs) = (*world as usize, *minibs as usize);
+            let per_step = world * minibs;
+            if world < 2 || minibs == 0 || lens.len() < per_step {
+                return Ok(());
+            }
+            let lens_u: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
+            let c = cost();
+            let mini = plan_run(Balancer::LbMini, &lens_u, world, minibs, 65_536, &c, &mut Rng::new(9));
+            let sorted = plan_run(Balancer::LocalSort, &lens_u, world, minibs, 65_536, &c, &mut Rng::new(9));
+            let rel_spread = |plans: &[Plan]| -> f64 {
+                plans
+                    .iter()
+                    .map(|p| {
+                        let busy: Vec<f64> = (0..p.devices())
+                            .map(|d| {
+                                p.device_samples(d).iter().map(|&i| c.sample_cost(lens_u[i])).sum()
+                            })
+                            .collect();
+                        let mx = busy.iter().cloned().fold(f64::MIN, f64::max);
+                        let mn = busy.iter().cloned().fold(f64::MAX, f64::min);
+                        if mx > 0.0 {
+                            (mx - mn) / mx
+                        } else {
+                            0.0
+                        }
+                    })
+                    .sum::<f64>()
+                    / plans.len().max(1) as f64
+            };
+            let (sm, ss) = (rel_spread(&mini), rel_spread(&sorted));
+            if sm <= ss + 0.02 {
+                Ok(())
+            } else {
+                Err(format!("LB-Mini spread {sm:.4} worse than LocalSort {ss:.4}"))
+            }
+        },
+    );
+}

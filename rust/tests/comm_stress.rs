@@ -1,18 +1,25 @@
-//! Integration: stress tests on the communication backends — both
-//! schemes must compute the identical reduction regardless of timing,
-//! arrival order, or per-device push counts (ODC) — plus steady-state
-//! buffer-reuse guarantees on the zero-copy ODC push path (per-pair
-//! payload arenas) and the minibatch-scoped gather cache.
+//! Integration: stress tests on the communication backends — every
+//! scheme must compute the identical reduction regardless of timing,
+//! arrival order, or per-device push counts (ODC / Hybrid) — plus
+//! steady-state buffer-reuse guarantees on the zero-copy push paths
+//! (per-pair payload arenas, at both hybrid levels) and the
+//! minibatch-scoped gather cache.
 
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{CollectiveComm, GatherCache, OdcComm};
+use odc::comm::{CollectiveComm, GatherCache, HybridComm, OdcComm};
 use std::sync::Arc;
 
+/// Backend under test: 0 = Collective, 1 = ODC, 2 = Hybrid with a
+/// single group (all-intra), 3 = Hybrid with per-device groups
+/// (all-cross), 4 = Hybrid with two-device groups (needs world % 2 == 0).
 fn make_backend(which: usize, params: &Arc<ParamStore>, world: usize) -> Arc<dyn CommBackend> {
-    if which == 0 {
-        Arc::new(CollectiveComm::new(Arc::clone(params), world))
-    } else {
-        Arc::new(OdcComm::new(Arc::clone(params), world))
+    match which {
+        0 => Arc::new(CollectiveComm::new(Arc::clone(params), world)),
+        1 => Arc::new(OdcComm::new(Arc::clone(params), world)),
+        2 => Arc::new(HybridComm::new(Arc::clone(params), world, world)),
+        3 => Arc::new(HybridComm::new(Arc::clone(params), world, 1)),
+        4 => Arc::new(HybridComm::new(Arc::clone(params), world, 2)),
+        _ => unreachable!(),
     }
 }
 
@@ -69,10 +76,14 @@ fn backends_agree_under_stress() {
     let layer_lens = vec![37, 64, 101];
     let world = 4;
     let a = run_minibatch(0, world, &layer_lens);
-    let b = run_minibatch(1, world, &layer_lens);
-    for (l, (x, y)) in a.iter().zip(&b).enumerate() {
-        for (i, (p, q)) in x.iter().zip(y).enumerate() {
-            assert!((p - q).abs() < 1e-4, "layer {l} idx {i}: {p} vs {q}");
+    // every other scheme — ODC and all three hybrid group shapes — must
+    // produce the same reduction as the collective baseline
+    for which in 1..=4 {
+        let b = run_minibatch(which, world, &layer_lens);
+        for (l, (x, y)) in a.iter().zip(&b).enumerate() {
+            for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                assert!((p - q).abs() < 1e-4, "backend {which} layer {l} idx {i}: {p} vs {q}");
+            }
         }
     }
 }
@@ -80,7 +91,8 @@ fn backends_agree_under_stress() {
 #[test]
 fn repeated_runs_deterministic() {
     let layer_lens = vec![29];
-    for which in 0..2 {
+    // world 3: collective, odc, hybrid/1-group, hybrid/per-device groups
+    for which in 0..=3 {
         let a = run_minibatch(which, 3, &layer_lens);
         let b = run_minibatch(which, 3, &layer_lens);
         assert_eq!(a, b, "backend {which} must be deterministic");
@@ -226,11 +238,13 @@ fn gather_cache_bit_identical_to_direct_gathers() {
 }
 
 /// Parameter updates published at end_step are visible to the next
-/// minibatch's gathers under both backends.
+/// minibatch's gathers under every backend — for hybrid this pins the
+/// replica refresh: the write lands in the GLOBAL store, and gathers
+/// read the group replicas, so staleness here means a broken refresh.
 #[test]
 fn param_updates_visible_next_step() {
     let world = 2;
-    for which in 0..2 {
+    for which in 0..=4 {
         let params = Arc::new(ParamStore::new(&[8], world));
         params.layers[0].init_from(&[1.0; 8]);
         let backend = make_backend(which, &params, world);
@@ -258,5 +272,133 @@ fn param_updates_visible_next_step() {
                 });
             }
         });
+    }
+}
+
+/// Hybrid under maximally skewed per-device microbatch counts (one
+/// device pushes 8× the others — the adversarial LB-Mini regime): the
+/// reduction stays exact across groups, and BOTH arena levels stop
+/// growing after warm-up. In-flight intra payloads per (server, client)
+/// pair are bounded by one minibatch's pushes (the daemons buffer until
+/// the flush); cross payloads per (owner, group) pair are bounded by the
+/// layer count, which the prealloc covers outright.
+#[test]
+fn hybrid_skewed_counts_arena_growth_stops_after_warmup() {
+    let world = 4;
+    let group_size = 2;
+    let layers = [30usize, 12];
+    let params = Arc::new(ParamStore::new(&layers, world));
+    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, group_size));
+    let micros = |dev: usize| if dev == 0 { 8 } else { 1 };
+    let run_minibatches = |n: usize| {
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                let store = Arc::clone(&params);
+                s.spawn(move || {
+                    for _ in 0..n {
+                        for _m in 0..micros(dev) {
+                            for (l, p) in store.layers.iter().enumerate() {
+                                comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                            }
+                        }
+                        comm.end_minibatch(dev);
+                        let total: usize = (0..world).map(micros).sum();
+                        for (l, p) in store.layers.iter().enumerate() {
+                            let mut g = vec![0.0f32; p.shard_len];
+                            comm.take_grad_shard(dev, l, &mut g);
+                            for &v in &g {
+                                assert_eq!(v, total as f32, "layer {l}");
+                            }
+                        }
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    };
+    run_minibatches(2); // warm-up: arenas grow to the per-minibatch max
+    let warm = comm.arena_stats();
+    // intra in-flight bound per (server, client) pair: client's pushes
+    // per minibatch (micros × layers) minus the prealloc (layers + 1)
+    let intra_bound: usize = (0..world)
+        .map(|c| group_size * (micros(c) * layers.len()).saturating_sub(layers.len() + 1))
+        .sum();
+    assert!(
+        warm.fresh_allocs <= intra_bound as u64,
+        "fresh {} exceeds in-flight bound {intra_bound}",
+        warm.fresh_allocs
+    );
+    assert_eq!(
+        comm.cross_arena_stats().fresh_allocs,
+        0,
+        "cross epilogue must stay inside the prealloc"
+    );
+
+    run_minibatches(20);
+    let after = comm.arena_stats();
+    assert_eq!(
+        after.fresh_allocs, warm.fresh_allocs,
+        "arenas kept growing after warm-up: {} -> {}",
+        warm.fresh_allocs, after.fresh_allocs
+    );
+    // every payload is back home after the final drain
+    let prealloc = (world * group_size + world * (world / group_size)) * (layers.len() + 1);
+    assert_eq!(after.resident, prealloc as u64 + after.fresh_allocs);
+}
+
+/// The minibatch-scoped gather cache over hybrid group membership:
+/// cached bytes are bit-identical to direct replica reads for every
+/// device of every group, and stay correct across an end_step replica
+/// refresh (invalidate → re-gather sees the republished params).
+#[test]
+fn hybrid_gather_cache_bit_identical_across_groups() {
+    let world = 4;
+    let layer_lens = vec![37, 64, 101];
+    let params = Arc::new(ParamStore::new(&layer_lens, world));
+    for (l, p) in params.layers.iter().enumerate() {
+        let vals: Vec<f32> = (0..p.logical_len).map(|i| ((l + 1) * (i + 3) % 97) as f32).collect();
+        p.init_from(&vals);
+    }
+    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+    assert!(comm.gathers_cacheable());
+    for dev in 0..world {
+        let mut cache = GatherCache::for_policy(&params, dev, comm.gather_policy());
+        for (l, p) in params.layers.iter().enumerate() {
+            let mut direct = vec![0.0f32; p.padded_len()];
+            comm.gather_params(dev, l, &mut direct);
+            for _ in 0..3 {
+                let cached = cache.gather(comm.as_ref(), l);
+                assert_eq!(&cached[..], &direct[..], "dev {dev} layer {l}");
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses as usize, layer_lens.len(), "one replica read per layer");
+        assert_eq!(s.hits as usize, 2 * layer_lens.len());
+    }
+
+    // One optimizer cycle republishes params; invalidated caches must
+    // see the refreshed replicas on every device.
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let comm = Arc::clone(&comm);
+            let store = Arc::clone(&params);
+            s.spawn(move || {
+                comm.end_minibatch(dev); // zero pushes: empty fold
+                let p = &store.layers[0];
+                let r = p.shard_range(dev);
+                p.buf.write(r.start, &vec![7.0f32; r.len()]);
+                comm.end_step(dev);
+            });
+        }
+    });
+    for dev in 0..world {
+        let mut cache = GatherCache::for_policy(&params, dev, comm.gather_policy());
+        cache.invalidate();
+        let g = cache.gather(comm.as_ref(), 0);
+        assert!(
+            g.iter().all(|&x| x == 7.0),
+            "dev {dev}: replica refresh not visible through the cache"
+        );
     }
 }
