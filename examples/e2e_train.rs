@@ -31,11 +31,9 @@ fn main() -> anyhow::Result<()> {
         anyhow::bail!("no artifacts at {dir:?} — run `make artifacts` (or `make artifacts-m100`)");
     }
 
-    let balancer = match args.get("balancer") {
-        "local-sort" => Balancer::LocalSort,
-        "lb-micro" => Balancer::LbMicro,
-        "lb-mini" => Balancer::LbMini,
-        other => anyhow::bail!("unknown balancer {other}"),
+    let balancer = match Balancer::parse(args.get("balancer")) {
+        Some(b) => b,
+        None => anyhow::bail!("unknown balancer {}", args.get("balancer")),
     };
     let schemes: Vec<CommScheme> = match args.get("scheme") {
         "odc" => vec![CommScheme::Odc],

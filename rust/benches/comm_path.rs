@@ -63,9 +63,9 @@ fn run_minibatches(comm: &Arc<OdcComm>, params: &Arc<ParamStore>, mode: Mode) {
                         // backward: blocks again + all grads
                         for l in (1..=n_blocks).rev() {
                             gather(&comm, &mut cache, dev, l, &mut scratch, mode);
-                            comm.reduce_grad(dev, l, &grad[..params.layers[l].padded_len()], 1.0);
+                            comm.reduce_grad(dev, l, &grad[..params.layers[l].padded_len()], 1.0, (_mb * MICROS + _m) as u64);
                         }
-                        comm.reduce_grad(dev, 0, &grad[..params.layers[0].padded_len()], 1.0);
+                        comm.reduce_grad(dev, 0, &grad[..params.layers[0].padded_len()], 1.0, (_mb * MICROS + _m) as u64);
                     }
                     comm.end_minibatch(dev);
                     for l in 0..params.n_layers() {
@@ -147,7 +147,7 @@ fn main() {
     let grad = vec![0.5f32; pstore.layers[0].padded_len()];
     let mut gs = vec![0.0f32; pstore.layers[0].shard_len];
     let r_reduce = b.run("reduce_drain_cycle_2MiB", || {
-        prim1.reduce_grad(0, 0, &grad, 1.0);
+        prim1.reduce_grad(0, 0, &grad, 1.0, 0);
         prim1.end_minibatch(0);
         prim1.take_grad_shard(0, 0, &mut gs);
         prim1.end_step(0);

@@ -79,7 +79,7 @@ fn main() {
     let grad = vec![0.5f32; params.layers[0].padded_len()];
     let mut gshard = vec![0.0f32; params.layers[0].shard_len];
     b.run("reduce_drain_cycle_4MiB", || {
-        comm.reduce_grad(0, 0, &grad, 1.0);
+        comm.reduce_grad(0, 0, &grad, 1.0, 0);
         comm.end_minibatch(0);
         comm.take_grad_shard(0, 0, &mut gshard);
         comm.end_step(0);

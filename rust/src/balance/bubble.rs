@@ -11,6 +11,7 @@
 //! * **ODC**: devices only sync at the minibatch end: T = max_d Σ_m c(m, d).
 
 use super::cost::CostModel;
+use super::dispatch::{lpt_order, pull_schedule};
 use super::packers::Plan;
 use crate::config::CommScheme;
 
@@ -49,6 +50,65 @@ pub fn estimate_bubble(plan: &Plan, lens: &[usize], cost: &CostModel, scheme: Co
         }
         // hybrid devices free-run within the minibatch exactly like ODC
         // (intra-group reduces are mailbox pushes, not barriers)
+        CommScheme::Odc | CommScheme::Hybrid => busy.iter().cloned().fold(0.0, f64::max),
+    };
+
+    let total = total.max(f64::MIN_POSITIVE);
+    let bubble_rate = 1.0 - busy.iter().sum::<f64>() / (d as f64 * total);
+    BubbleReport { total, busy, bubble_rate }
+}
+
+/// `estimate_bubble` generalized over the straggler scenario and the
+/// dispatch policy, so the simulator's bubble rate and its
+/// `dispatch_wait_s` tell one consistent story. `speeds` scales each
+/// device's compute by `1/speed` (empty = homogeneous, the seed
+/// behaviour); `queue` replays the plan's microbatches through the
+/// greedy LPT pull schedule ([`pull_schedule`] — the engine's
+/// `WorkQueue` dynamics) instead of the static placement. Still
+/// compute-only: communication stays the timeline simulator's job.
+pub fn estimate_bubble_dispatch(
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    scheme: CommScheme,
+    speeds: &[f64],
+    queue: bool,
+) -> BubbleReport {
+    if speeds.is_empty() && !queue {
+        return estimate_bubble(plan, lens, cost, scheme);
+    }
+    let d = plan.devices();
+    let inv = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
+    let micro_cost = |dev: usize, m: usize| -> f64 {
+        match plan.micro[dev].get(m) {
+            Some(mb) if !mb.is_empty() => {
+                let ls: Vec<usize> = mb.iter().map(|&i| lens[i]).collect();
+                cost.micro_cost(&ls)
+            }
+            _ => 0.0,
+        }
+    };
+
+    let busy: Vec<f64> = if queue {
+        debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
+        let order = lpt_order(plan, lens, cost);
+        pull_schedule(order.len(), d, |i, dev| {
+            let (od, om) = order[i];
+            micro_cost(od, om) * inv(dev)
+        })
+    } else {
+        (0..d)
+            .map(|dev| (0..plan.micro[dev].len()).map(|m| micro_cost(dev, m)).sum::<f64>() * inv(dev))
+            .collect()
+    };
+
+    let total = match scheme {
+        CommScheme::Collective => {
+            let m_max = plan.max_micro_count();
+            (0..m_max)
+                .map(|m| (0..d).map(|dev| micro_cost(dev, m) * inv(dev)).fold(0.0, f64::max))
+                .sum()
+        }
         CommScheme::Odc | CommScheme::Hybrid => busy.iter().cloned().fold(0.0, f64::max),
     };
 
@@ -168,6 +228,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dispatch_variant_matches_seed_estimator_when_unperturbed() {
+        let (plan, lens) = hand_plan();
+        let c = cost();
+        for scheme in [CommScheme::Collective, CommScheme::Odc] {
+            let a = estimate_bubble(&plan, &lens, &c, scheme);
+            let b = estimate_bubble_dispatch(&plan, &lens, &c, scheme, &[], false);
+            assert_eq!(a.total, b.total);
+            assert_eq!(a.busy, b.busy);
+            assert_eq!(a.bubble_rate, b.bubble_rate);
+        }
+    }
+
+    #[test]
+    fn straggler_inflates_static_bubble_and_queue_recovers_it() {
+        // 8 equal singleton micros dealt 4+4; device 0 at quarter speed.
+        // Static: dev0's column takes 4× while dev1 idles => large
+        // bubble. Queue: dev1 absorbs most micros => smaller bubble.
+        let plan = Plan {
+            micro: vec![(0..4).map(|i| vec![i]).collect(), (4..8).map(|i| vec![i]).collect()],
+        };
+        let lens = vec![10_000usize; 8];
+        let c = cost();
+        let speeds = [0.25, 1.0];
+        let uniform = estimate_bubble_dispatch(&plan, &lens, &c, CommScheme::Odc, &[], false);
+        let stat = estimate_bubble_dispatch(&plan, &lens, &c, CommScheme::Odc, &speeds, false);
+        let queue = estimate_bubble_dispatch(&plan, &lens, &c, CommScheme::Odc, &speeds, true);
+        assert!(stat.bubble_rate > uniform.bubble_rate, "straggler must show up in the bubble rate");
+        assert!(queue.bubble_rate < stat.bubble_rate, "queue {} should shrink static bubble {}", queue.bubble_rate, stat.bubble_rate);
     }
 
     #[test]

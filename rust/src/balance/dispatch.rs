@@ -1,0 +1,348 @@
+//! The dispatch layer: WHO runs each packed microbatch, decided either
+//! before the step (static plans) or at runtime (work-stealing pulls).
+//!
+//! The packers ([`super::packers`]) decide *composition* — which samples
+//! share a microbatch — which is semantically meaningful (packing
+//! offsets select positional embeddings). Dispatch decides *placement*,
+//! which is semantically FREE under a barrier-free comm scheme: ODC and
+//! Hybrid devices only rendezvous at `end_minibatch`, so any device may
+//! run any microbatch at any time. A static plan can only balance
+//! *predicted* cost; a runtime queue also absorbs cost-model error and
+//! straggling/heterogeneous devices (the paper's "simpler and more
+//! effective load balancing at the minibatch level", pushed to runtime).
+//!
+//! Two implementations of [`Dispatcher`]:
+//!
+//! * [`StaticDispatch`] — replays a [`Plan`] exactly: device `d` pulls
+//!   its own row in slot order. Under `Collective` the rows are padded
+//!   to the common microbatch count so every device joins the identical
+//!   barrier sequence (the seed engine's behaviour, verbatim).
+//! * [`WorkQueue`] — packs once, dispatches at runtime: every non-empty
+//!   microbatch of the plan goes into one shared pool, pre-sorted by
+//!   descending predicted cost (LPT — longest processing time first),
+//!   and free-running devices pull from an atomic cursor whenever they
+//!   finish their previous microbatch. Lock-free on the pull path; a
+//!   straggling device simply pulls less often and the fast devices
+//!   absorb the remainder.
+//!
+//! ## Determinism: the global microbatch id
+//!
+//! Every assignment carries the microbatch's **global id**: its position
+//! in the canonical flattening of the plan (device ascending, slot
+//! ascending) — a pure function of the plan, independent of which device
+//! ends up running it or when. The one-sided backends
+//! ([`crate::comm::OdcComm`] / [`crate::comm::HybridComm`]) buffer
+//! gradient pieces and fold them **in id order** at the minibatch flush,
+//! so the reduction is bit-identical to the single-device oracle
+//! replaying the flattened plan — under ANY dispatch interleaving,
+//! static or queue, uniform or skewed devices (asserted end-to-end by
+//! `tests/engine_equivalence.rs`). One scoped exception: multi-group
+//! Hybrid under queue dispatch folds cross-group partials whose
+//! membership depends on runtime placement — exact and
+//! tolerance-equivalent, but not bit-reproducible (see
+//! [`crate::comm::HybridComm`]'s determinism notes).
+
+use super::cost::CostModel;
+use super::packers::Plan;
+use crate::config::{Balancer, CommScheme};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One dispatched unit of work: a packed microbatch plus the fold key.
+#[derive(Clone, Debug)]
+pub struct MicroAssignment {
+    /// Global microbatch id within the minibatch — position in the
+    /// canonical (device asc, slot asc) flattening of the plan. The
+    /// comm backends key the gradient fold on this, NOT on arrival
+    /// order, so placement and timing cannot change a single bit.
+    pub id: u64,
+    /// Global sample indices packed into this microbatch. Empty for a
+    /// padded collective slot (the device must still join the barrier
+    /// sequence via the engine's idle participation).
+    pub samples: Arc<[usize]>,
+}
+
+/// A minibatch's work source: each device thread loops on `next_micro`
+/// until it returns `None`, then proceeds to `end_minibatch`.
+pub trait Dispatcher: Send + Sync {
+    /// The next microbatch for `device`, or `None` when the device is
+    /// done with this minibatch. Never blocks.
+    fn next_micro(&self, device: usize) -> Option<MicroAssignment>;
+
+    /// Total assignments this dispatcher serves across all devices
+    /// (padded empty slots included).
+    fn total_micros(&self) -> usize;
+
+    /// Human-readable dispatch-policy name (reports/logs).
+    fn name(&self) -> &'static str;
+}
+
+/// Canonical per-device assignment rows for a plan: ids assigned in
+/// (device asc, slot asc) order over every slot, empty slots included.
+fn canonical_rows(plan: &Plan) -> Vec<Vec<MicroAssignment>> {
+    let mut rows = Vec::with_capacity(plan.micro.len());
+    let mut id = 0u64;
+    for row in &plan.micro {
+        let mut out = Vec::with_capacity(row.len());
+        for m in row {
+            out.push(MicroAssignment { id, samples: m.clone().into() });
+            id += 1;
+        }
+        rows.push(out);
+    }
+    rows
+}
+
+/// Static dispatch: the seed engine's fixed per-device plan, behind the
+/// [`Dispatcher`] seam.
+pub struct StaticDispatch {
+    rows: Vec<Vec<MicroAssignment>>,
+    cursors: Vec<AtomicUsize>,
+    total: usize,
+}
+
+impl StaticDispatch {
+    /// `pad_to_common` replays the Collective contract: every device is
+    /// served the common (maximum) slot count, with empty assignments
+    /// past its own row so the barrier schedule stays in lockstep.
+    pub fn new(plan: &Plan, pad_to_common: bool) -> Self {
+        let mut rows = canonical_rows(plan);
+        if pad_to_common {
+            let m_max = plan.max_micro_count();
+            let mut pad_id = rows.iter().map(|r| r.len()).sum::<usize>() as u64;
+            for row in rows.iter_mut() {
+                while row.len() < m_max {
+                    row.push(MicroAssignment { id: pad_id, samples: Vec::<usize>::new().into() });
+                    pad_id += 1;
+                }
+            }
+        }
+        let total = rows.iter().map(|r| r.len()).sum();
+        let cursors = (0..rows.len()).map(|_| AtomicUsize::new(0)).collect();
+        StaticDispatch { rows, cursors, total }
+    }
+}
+
+impl Dispatcher for StaticDispatch {
+    fn next_micro(&self, device: usize) -> Option<MicroAssignment> {
+        let pos = self.cursors[device].fetch_add(1, Ordering::Relaxed);
+        self.rows[device].get(pos).cloned()
+    }
+
+    fn total_micros(&self) -> usize {
+        self.total
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// The canonical pull order of a plan's non-empty microbatches under
+/// LPT dispatch: indices into the (device asc, slot asc) flattening,
+/// sorted by descending predicted cost, ties broken by flattened
+/// position — a pure function of (plan, lens, cost).
+pub fn lpt_order(plan: &Plan, lens: &[usize], cost: &CostModel) -> Vec<(usize, usize)> {
+    let mut order: Vec<(f64, usize, usize)> = Vec::new();
+    for (d, row) in plan.micro.iter().enumerate() {
+        for (m, micro) in row.iter().enumerate() {
+            if micro.is_empty() {
+                continue;
+            }
+            let c: f64 = micro.iter().map(|&i| cost.sample_cost(lens[i])).sum();
+            order.push((c, d, m));
+        }
+    }
+    // descending cost; (d, m) tie-break keeps the order deterministic
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then_with(|| (a.1, a.2).cmp(&(b.1, b.2))));
+    order.into_iter().map(|(_, d, m)| (d, m)).collect()
+}
+
+/// Work-stealing dispatch: one shared LPT-ordered pool of the plan's
+/// microbatches, pulled through an atomic cursor by whichever device
+/// frees up first. The plan's device dimension only contributes the
+/// canonical fold ids; placement is decided entirely at runtime.
+pub struct WorkQueue {
+    pool: Vec<MicroAssignment>,
+    cursor: AtomicUsize,
+}
+
+impl WorkQueue {
+    pub fn new(plan: &Plan, lens: &[usize], cost: &CostModel) -> Self {
+        let rows = canonical_rows(plan);
+        let pool = lpt_order(plan, lens, cost)
+            .into_iter()
+            .map(|(d, m)| rows[d][m].clone())
+            .collect();
+        WorkQueue { pool, cursor: AtomicUsize::new(0) }
+    }
+
+    /// The pull order as sample lists — the single-device replay an
+    /// oracle run would execute (tests build a world-1 [`Plan`] from
+    /// this to pin composition).
+    pub fn pull_order(&self) -> Vec<Vec<usize>> {
+        self.pool.iter().map(|a| a.samples.to_vec()).collect()
+    }
+}
+
+impl Dispatcher for WorkQueue {
+    fn next_micro(&self, _device: usize) -> Option<MicroAssignment> {
+        let pos = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.pool.get(pos).cloned()
+    }
+
+    fn total_micros(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "queue"
+    }
+}
+
+/// The dispatcher a (balancer, scheme) pair gets for one minibatch plan.
+/// `Balancer::Queue` runs the shared work queue (legal because its
+/// validity was checked at config time: never under `Collective`); every
+/// other balancer replays its plan statically, padded to the common
+/// count under `Collective`.
+pub fn make_dispatcher(
+    balancer: Balancer,
+    scheme: CommScheme,
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+) -> Arc<dyn Dispatcher> {
+    match balancer {
+        Balancer::Queue => {
+            debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
+            Arc::new(WorkQueue::new(plan, lens, cost))
+        }
+        _ => Arc::new(StaticDispatch::new(plan, scheme == CommScheme::Collective)),
+    }
+}
+
+/// THE greedy pull-scheduling kernel: item `i` (in pull order) runs on
+/// the device with the lowest accumulated busy time (lowest index on
+/// ties), occupying it for `duration(i, device)`. This is the engine's
+/// queue-pull dynamics on an analytic clock — the single definition the
+/// timeline simulator, the bubble estimator and the makespan tests all
+/// share, so the priced model and the property-tested model cannot
+/// diverge. Returns the final per-device busy times.
+pub fn pull_schedule(n: usize, world: usize, mut duration: impl FnMut(usize, usize) -> f64) -> Vec<f64> {
+    assert!(world > 0);
+    let mut busy = vec![0.0f64; world];
+    for item in 0..n {
+        let mut d = 0;
+        for (k, &b) in busy.iter().enumerate().skip(1) {
+            if b < busy[d] {
+                d = k;
+            }
+        }
+        busy[d] += duration(item, d);
+    }
+    busy
+}
+
+/// Makespan of serving `costs` (in pull order) to `world` devices via
+/// [`pull_schedule`]. `speeds` are relative device speeds (empty =
+/// uniform); a micro of cost `c` occupies device `d` for
+/// `c / speeds[d]`.
+pub fn pull_makespan(costs: &[f64], world: usize, speeds: &[f64]) -> f64 {
+    let inv = |d: usize| 1.0 / speeds.get(d).copied().unwrap_or(1.0);
+    pull_schedule(costs.len(), world, |i, d| costs[i] * inv(d)).into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PaperModel;
+
+    fn cost() -> CostModel {
+        CostModel::for_model(PaperModel::M1_5B)
+    }
+
+    /// dev0: two micros, dev1: one micro + (unpadded) nothing.
+    fn plan() -> (Plan, Vec<usize>) {
+        let plan = Plan { micro: vec![vec![vec![0], vec![1, 2]], vec![vec![3]]] };
+        let lens = vec![50_000, 8_000, 7_000, 30_000];
+        (plan, lens)
+    }
+
+    #[test]
+    fn static_serves_rows_in_order_with_canonical_ids() {
+        let (plan, _) = plan();
+        let d = StaticDispatch::new(&plan, false);
+        assert_eq!(d.total_micros(), 3);
+        let a0 = d.next_micro(0).unwrap();
+        let a1 = d.next_micro(0).unwrap();
+        assert!(d.next_micro(0).is_none());
+        let b0 = d.next_micro(1).unwrap();
+        assert!(d.next_micro(1).is_none());
+        assert_eq!((a0.id, a1.id, b0.id), (0, 1, 2));
+        assert_eq!(&a1.samples[..], &[1, 2]);
+        assert_eq!(&b0.samples[..], &[3]);
+    }
+
+    #[test]
+    fn static_pads_to_common_count_for_collective() {
+        let (plan, _) = plan();
+        let d = StaticDispatch::new(&plan, true);
+        assert_eq!(d.total_micros(), 4);
+        let _ = d.next_micro(1).unwrap();
+        let pad = d.next_micro(1).unwrap();
+        assert!(pad.samples.is_empty(), "second slot of device 1 is a padded barrier slot");
+        assert!(d.next_micro(1).is_none());
+    }
+
+    #[test]
+    fn queue_pulls_lpt_order_exactly_once() {
+        let (plan, lens) = plan();
+        let c = cost();
+        let q = WorkQueue::new(&plan, &lens, &c);
+        assert_eq!(q.total_micros(), 3);
+        // costs: micro(id 0)=50k sample (largest), id 2=[3] (30k), id 1=[1,2] (15k)
+        let ids: Vec<u64> = std::iter::from_fn(|| q.next_micro(0)).map(|a| a.id).collect();
+        assert_eq!(ids, vec![0, 2, 1], "pull order is LPT, ids stay canonical");
+        assert!(q.next_micro(0).is_none(), "drained queue stays drained");
+    }
+
+    #[test]
+    fn queue_ids_are_plan_canonical_not_pull_positions() {
+        let (plan, lens) = plan();
+        let q = WorkQueue::new(&plan, &lens, &cost());
+        let mut served: Vec<(u64, Vec<usize>)> =
+            std::iter::from_fn(|| q.next_micro(0)).map(|a| (a.id, a.samples.to_vec())).collect();
+        served.sort_by_key(|(id, _)| *id);
+        let want: Vec<Vec<usize>> = vec![vec![0], vec![1, 2], vec![3]];
+        assert_eq!(served.into_iter().map(|(_, s)| s).collect::<Vec<_>>(), want);
+    }
+
+    #[test]
+    fn make_dispatcher_picks_policy() {
+        let (plan, lens) = plan();
+        let c = cost();
+        let q = make_dispatcher(Balancer::Queue, CommScheme::Odc, &plan, &lens, &c);
+        assert_eq!(q.name(), "queue");
+        let s = make_dispatcher(Balancer::LbMini, CommScheme::Odc, &plan, &lens, &c);
+        assert_eq!(s.name(), "static");
+    }
+
+    #[test]
+    fn pull_makespan_matches_hand_schedule() {
+        // jobs 8,1,1,1,1,1,1 on 2 devices: LPT parks the 8 alone => 8;
+        // worst order stacks it on a warm device => 11.
+        let lpt = [8.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let spt = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 8.0];
+        assert_eq!(pull_makespan(&lpt, 2, &[]), 8.0);
+        assert_eq!(pull_makespan(&spt, 2, &[]), 11.0);
+    }
+
+    #[test]
+    fn pull_makespan_respects_device_speeds() {
+        // one job of cost 4 on a half-speed device takes 8
+        assert_eq!(pull_makespan(&[4.0], 1, &[0.5]), 8.0);
+        // two jobs, speeds [1, 0.5]: both start free; job1 -> dev0 (4),
+        // job2 -> dev1 at half speed (8)
+        assert_eq!(pull_makespan(&[4.0, 4.0], 2, &[1.0, 0.5]), 8.0);
+    }
+}

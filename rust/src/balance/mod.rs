@@ -1,4 +1,5 @@
-//! Load balancing: the paper's packing algorithms (§4, Appendix C).
+//! Load balancing: the paper's packing algorithms (§4, Appendix C) plus
+//! the dispatch layer that decides placement at runtime.
 //!
 //! * [`cost`] — the O(s) + O(s²) per-sample compute-cost model that both
 //!   the packers and the simulator share.
@@ -6,14 +7,52 @@
 //!   `karmarkar_karp`, with the `equal_size` variant).
 //! * [`packers`] — LocalSort, LB-Micro, LB-Mini and verl's native
 //!   two-level strategy (Listings 1–3).
+//! * [`dispatch`] — the [`Dispatcher`] seam between a packed [`Plan`]
+//!   and the devices that execute it: static replay or the shared
+//!   work-stealing [`WorkQueue`].
 //! * [`bubble`] — the idle-time estimator behind Tables 4 and 6.
+//!
+//! ## Static vs dynamic dispatch
+//!
+//! A *static* plan fixes placement before the step from **predicted**
+//! cost: it cannot react to cost-model error, OS jitter, or a slow
+//! device. The free-running property of the one-sided comm schemes (no
+//! barrier until `end_minibatch`) makes placement a runtime degree of
+//! freedom: `Balancer::Queue` packs once (LB-Mini composition), then
+//! lets devices pull microbatches LPT-first from one shared queue, so a
+//! 4×-slower device simply pulls ~4× fewer microbatches and nobody
+//! stalls. Gradient folds are keyed by **global microbatch id** (see
+//! [`dispatch`]), so every dispatch interleaving — static or queue,
+//! uniform or skewed — produces bit-identical training under ODC and
+//! single-group Hybrid. The one scoped exception: multi-group Hybrid
+//! under Queue routes each microbatch's gradient through the *pulling*
+//! device's group, so the cross-group float bracketing is
+//! placement-dependent — exact as a sum and within the equivalence
+//! tolerance, but not bit-reproducible across runs (documented in
+//! [`crate::comm::HybridComm`]).
+//!
+//! ### Legality: Balancer × CommScheme
+//!
+//! | Balancer   | Collective | ODC | Hybrid | why |
+//! |------------|------------|-----|--------|-----|
+//! | LocalSort  | ✓          | ✓   | ✓      | equal microbatch counts by construction |
+//! | LB-Micro   | ✓          | ✓   | ✓      | packs with a synchronized k (equal counts) |
+//! | Native     | ✓          | ✓   | ✓      | verl's scheme, synchronized k per step |
+//! | LB-Mini    | ✗          | ✓   | ✓      | unequal per-device counts: a per-layer rendezvous would deadlock/stall |
+//! | Queue      | ✗          | ✓   | ✓      | placement decided at runtime: the barrier schedule cannot be known in advance |
+//!
+//! The two ✗ cells are rejected at config validation
+//! ([`crate::config::Balancer::legal_under`] — the trainer and the sim
+//! CLI both enforce it) rather than discovered as a deadlock at runtime.
 
 pub mod bubble;
 pub mod cost;
+pub mod dispatch;
 pub mod kk;
 pub mod packers;
 
-pub use bubble::{estimate_bubble, BubbleReport};
+pub use bubble::{estimate_bubble, estimate_bubble_dispatch, BubbleReport};
 pub use cost::CostModel;
+pub use dispatch::{make_dispatcher, Dispatcher, MicroAssignment, StaticDispatch, WorkQueue};
 pub use kk::karmarkar_karp;
 pub use packers::{plan_run, Plan};

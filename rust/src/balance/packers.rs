@@ -38,14 +38,29 @@ impl Plan {
         self.micro.iter().map(|d| d.len()).max().unwrap_or(0)
     }
 
-    /// All sample indices placed on device d.
-    pub fn device_samples(&self, d: usize) -> Vec<usize> {
-        self.micro[d].iter().flatten().copied().collect()
+    /// All sample indices placed on device d — borrows, no allocation
+    /// (the seed returned a fresh `Vec` on every call, which simulator
+    /// and spread metrics hit in per-minibatch loops).
+    pub fn device_samples(&self, d: usize) -> impl Iterator<Item = usize> + '_ {
+        self.micro[d].iter().flatten().copied()
     }
 
-    /// Every sample index in the plan (sorted) — partition check helper.
+    /// Every sample index in the plan, in (device, slot, position)
+    /// order — allocation-free.
+    pub fn iter_samples(&self) -> impl Iterator<Item = usize> + '_ {
+        self.micro.iter().flatten().flatten().copied()
+    }
+
+    /// Number of samples placed in the plan — allocation-free.
+    pub fn sample_count(&self) -> usize {
+        self.micro.iter().flatten().map(|m| m.len()).sum()
+    }
+
+    /// Every sample index in the plan (sorted) — partition check helper
+    /// for tests; sorting forces the allocation, so hot paths should use
+    /// [`Plan::iter_samples`] / [`Plan::sample_count`] instead.
     pub fn all_samples(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.micro.iter().flatten().flatten().copied().collect();
+        let mut v: Vec<usize> = self.iter_samples().collect();
         v.sort_unstable();
         v
     }
@@ -168,7 +183,11 @@ pub fn plan_run_opts(
             .into_iter()
             .map(|mb| plan_lb_micro(&mb, lens, world, max_tokens, cost))
             .collect(),
-        Balancer::LbMini => chunk_minibatches(&order, per_step)
+        // Queue packs exactly like LB-Mini (the "pack once" step);
+        // whether devices then replay the plan statically or pull from
+        // the shared runtime queue is the dispatch layer's decision
+        // (`balance::dispatch::make_dispatcher`), not the packer's.
+        Balancer::LbMini | Balancer::Queue => chunk_minibatches(&order, per_step)
             .into_iter()
             .map(|mb| plan_lb_mini(&mb, lens, world, max_tokens, cost, opts.lb_mini_equal_size))
             .collect(),
@@ -349,10 +368,37 @@ mod tests {
     #[test]
     fn all_balancers_produce_valid_partitions() {
         let (lens, cost, mut rng) = setup(64, 3);
-        for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+        for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative, Balancer::Queue] {
             let plans = plan_run(b, &lens, 4, 4, 65_536, &cost, &mut rng);
             assert!(!plans.is_empty(), "{b:?}");
             check_plan_partition(&plans, 4, 4);
+        }
+    }
+
+    #[test]
+    fn queue_packs_identically_to_lb_mini() {
+        // Queue is a dispatch policy, not a packing policy: same seed,
+        // same microbatch composition as LB-Mini, bit for bit.
+        let (lens, cost, _) = setup(64, 19);
+        let mini = plan_run(Balancer::LbMini, &lens, 4, 4, 65_536, &cost, &mut Rng::new(3));
+        let queue = plan_run(Balancer::Queue, &lens, 4, 4, 65_536, &cost, &mut Rng::new(3));
+        assert_eq!(mini.len(), queue.len());
+        for (a, b) in mini.iter().zip(&queue) {
+            assert_eq!(a.micro, b.micro);
+        }
+    }
+
+    #[test]
+    fn plan_iterators_match_owned_views() {
+        let (lens, cost, mut rng) = setup(32, 23);
+        let plans = plan_run(Balancer::LbMini, &lens, 4, 4, 65_536, &cost, &mut rng);
+        for p in &plans {
+            assert_eq!(p.sample_count(), p.iter_samples().count());
+            let mut via_iter: Vec<usize> = p.iter_samples().collect();
+            via_iter.sort_unstable();
+            assert_eq!(via_iter, p.all_samples());
+            let per_dev: usize = (0..p.devices()).map(|d| p.device_samples(d).count()).sum();
+            assert_eq!(per_dev, p.sample_count());
         }
     }
 
@@ -434,7 +480,7 @@ mod tests {
                 .iter()
                 .map(|p| {
                     let busy: Vec<f64> = (0..p.devices())
-                        .map(|d| p.device_samples(d).iter().map(|&i| cost.sample_cost(lens[i])).sum())
+                        .map(|d| p.device_samples(d).map(|i| cost.sample_cost(lens[i])).sum())
                         .collect();
                     let mx = busy.iter().cloned().fold(f64::MIN, f64::max);
                     let mn = busy.iter().cloned().fold(f64::MAX, f64::min);
@@ -483,7 +529,7 @@ mod tests {
                 let lens_u: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
                 let cost = CostModel::for_model(PaperModel::M1_5B);
                 let mut rng = Rng::new(1);
-                for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative] {
+                for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative, Balancer::Queue] {
                     let plans = plan_run(b, &lens_u, *world as usize, *minibs as usize, 65_536, &cost, &mut rng);
                     let mut seen: Vec<usize> = plans.iter().flat_map(|p| p.all_samples()).collect();
                     let n = seen.len();

@@ -5,10 +5,11 @@
 //!
 //! ```text
 //! for each minibatch:
-//!   for each local microbatch (collective: padded to equal count):
+//!   for each dispatched microbatch (static plan or runtime queue pull;
+//!                                   collective: padded to equal count):
 //!     for layer in 0..L:        gather_params(dev, layer, buf)   # fwd
 //!     for layer in (0..L).rev:  gather_params(dev, layer, buf)   # bwd
-//!                               reduce_grad(dev, layer, grad, w)
+//!                               reduce_grad(dev, layer, grad, w, micro)
 //!   end_minibatch(dev)                 # grads complete after this
 //!   for layer in 0..L: take_grad_shard(dev, layer, g); adam; write shard
 //!   end_step(dev)                      # params republished
@@ -102,7 +103,16 @@ pub trait CommBackend: Send + Sync {
     /// Contribute a full-layer gradient with aggregation weight `weight`.
     /// FSDP reduce-scatter / ODC scatter-accumulate. `grad` has the
     /// layer's PADDED length (tail zeros).
-    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32);
+    ///
+    /// `micro` is the GLOBAL microbatch id within the current minibatch
+    /// (`balance::dispatch::MicroAssignment::id`): the one-sided
+    /// backends buffer contributions and fold them in `micro` order at
+    /// the flush, so the reduction is bit-identical to a single device
+    /// replaying the microbatches in id order — regardless of which
+    /// device ran which microbatch, or when (the property that makes
+    /// work-stealing dispatch semantically free). `Collective` folds
+    /// synchronously inside its barriers and ignores the id.
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, micro: u64);
 
     /// Blocks until every device's gradients for this minibatch are fully
     /// accumulated (ODC: until all clients pushed + daemon drained;

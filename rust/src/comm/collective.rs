@@ -55,7 +55,10 @@ impl CommBackend for CollectiveComm {
         self.barrier.wait();
     }
 
-    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+    // The fold happens synchronously inside the barrier pair in (peer
+    // asc) order — the barrier schedule IS the ordering, so the global
+    // microbatch id is irrelevant here.
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, _micro: u64) {
         let p = &self.params.layers[layer];
         debug_assert_eq!(grad.len(), p.padded_len());
         // publish my contribution
@@ -117,7 +120,7 @@ mod tests {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
                     let grad = vec![(dev + 1) as f32; 9];
-                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.reduce_grad(dev, 0, &grad, 1.0, 0);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 3];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -160,7 +163,7 @@ mod tests {
                 s.spawn(move || {
                     let grad = vec![1.0f32; 4];
                     let w = if dev == 0 { 0.25 } else { 0.75 };
-                    comm.reduce_grad(dev, 0, &grad, w);
+                    comm.reduce_grad(dev, 0, &grad, w, 0);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 2];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -181,7 +184,7 @@ mod tests {
             for dev in 0..world {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
-                    comm.reduce_grad(dev, 0, &[1.0; 4], 1.0);
+                    comm.reduce_grad(dev, 0, &[1.0; 4], 1.0, 0);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 2];
                     comm.take_grad_shard(dev, 0, &mut shard);

@@ -48,17 +48,25 @@
 //!
 //! ## Determinism
 //!
-//! Unlike `OdcComm` (whose daemon accumulates in nondeterministic
-//! arrival order), both hybrid daemons buffer payloads and fold them at
-//! flush time in a **fixed order**: intra pieces by (group-local client
-//! asc, push order), cross pieces by group asc. With a single group the
-//! fold order is exactly the flattened plan order of the devices, so a
-//! single-group hybrid run is **bit-identical** to the single-device
-//! oracle (asserted by `tests/engine_equivalence.rs`); multi-group runs
-//! are deterministic across repetitions (each group's partial is a fold
-//! from zero, so only the cross-level bracketing differs from the
-//! oracle's sequential fold — float noise bounded by the usual
-//! equivalence tolerance).
+//! Both hybrid daemons buffer payloads and fold them at flush time in a
+//! **fixed order**: intra pieces by (global microbatch id asc,
+//! group-local client asc) — the dispatch layer's canonical plan order
+//! ([`crate::balance::dispatch`]), a pure function of the plan that no
+//! placement or timing can perturb — and cross pieces by group asc.
+//! With a single group the id order is exactly the flattened plan order,
+//! so a single-group hybrid run is **bit-identical** to the
+//! single-device oracle (asserted by `tests/engine_equivalence.rs`) —
+//! under static AND work-queue dispatch, including skewed device speeds.
+//! Multi-group runs are deterministic across repetitions under STATIC
+//! dispatch (each group's partial is a fold from zero, so only the
+//! cross-level bracketing differs from the oracle's sequential fold —
+//! float noise bounded by the usual equivalence tolerance). Under
+//! work-queue dispatch with multiple groups, WHICH group computes a
+//! microbatch's partial is decided by runtime pull timing, so the
+//! cross-level bracketing is placement-dependent: still exact as a sum
+//! and within the equivalence tolerance, but NOT bit-reproducible
+//! across runs — the one Queue combination where timing can move
+//! low-order bits (see the legality notes in `balance`'s module docs).
 //!
 //! Buffering-until-flush is a deliberate memory-for-exactness trade:
 //! eager per-client partial accumulators would cap memory at
@@ -79,9 +87,10 @@ use std::thread::JoinHandle;
 
 enum Msg {
     /// One super-shard gradient piece for this server's intra-group
-    /// shard of `layer`, pushed by group-local `client`; `data` returns
-    /// to the (server, client) intra arena once folded.
-    IntraAccum { layer: usize, weight: f32, client: usize, data: Vec<f32> },
+    /// shard of `layer`, pushed by group-local `client` for global
+    /// microbatch `micro` (the fold key); `data` returns to the
+    /// (server, client) intra arena once folded.
+    IntraAccum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
     /// A group member has finished every microbatch of the minibatch.
     IntraDone,
     /// The colocated worker asks for the group-partial super-shards; the
@@ -98,6 +107,14 @@ enum Msg {
     Shutdown,
 }
 
+/// One buffered intra-level piece awaiting the id-keyed group fold.
+struct IntraPiece {
+    micro: u64,
+    client: usize,
+    weight: f32,
+    data: Vec<f32>,
+}
+
 /// Per-daemon mutable state: buffered payloads of the minibatch in
 /// flight, plus completion counters for both levels.
 struct DaemonState {
@@ -107,8 +124,8 @@ struct DaemonState {
     super_lens: Vec<usize>,
     /// Global optimizer shard length per layer.
     shard_lens: Vec<usize>,
-    /// `[layer][group-local client]` → pieces in push order.
-    pending_intra: Vec<Vec<Vec<(f32, Vec<f32>)>>>,
+    /// `[layer]` → buffered pieces, folded id-keyed at the flush.
+    pending_intra: Vec<Vec<IntraPiece>>,
     intra_done: usize,
     intra_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
     /// `[layer][group]` → exactly one partial per minibatch.
@@ -123,7 +140,7 @@ impl DaemonState {
         DaemonState {
             group_size,
             n_groups,
-            pending_intra: (0..n_layers).map(|_| vec![Vec::new(); group_size]).collect(),
+            pending_intra: (0..n_layers).map(|_| Vec::new()).collect(),
             pending_cross: (0..n_layers).map(|_| vec![None; n_groups]).collect(),
             super_lens,
             shard_lens,
@@ -134,22 +151,25 @@ impl DaemonState {
         }
     }
 
-    /// Fold the intra-level pieces in (client asc, push order) —
-    /// deterministic regardless of arrival interleaving — returning one
-    /// group-partial super-shard per layer and releasing every payload
-    /// to its (server, client) arena.
+    /// Fold the intra-level pieces in (global microbatch id asc, client
+    /// asc) order — the canonical plan order, deterministic regardless
+    /// of arrival interleaving AND of which device ran which microbatch
+    /// — returning one group-partial super-shard per layer and releasing
+    /// every payload to its (server, client) arena. Stable sort: a
+    /// same-key tie can only come from one client's sequential pushes,
+    /// whose channel-FIFO order is preserved.
     fn fold_intra(&mut self, arenas: &[Arc<PayloadArena>]) -> Vec<Vec<f32>> {
         let mut out = Vec::with_capacity(self.super_lens.len());
         for (layer, &len) in self.super_lens.iter().enumerate() {
+            let pieces = &mut self.pending_intra[layer];
+            pieces.sort_by(|a, b| (a.micro, a.client).cmp(&(b.micro, b.client)));
             let mut acc = vec![0.0f32; len];
-            for client in 0..self.group_size {
-                for (weight, data) in self.pending_intra[layer][client].drain(..) {
-                    debug_assert_eq!(data.len(), len);
-                    for (a, &g) in acc.iter_mut().zip(&data) {
-                        *a += weight * g;
-                    }
-                    arenas[client].release(data);
+            for p in pieces.drain(..) {
+                debug_assert_eq!(p.data.len(), len);
+                for (a, &g) in acc.iter_mut().zip(&p.data) {
+                    *a += p.weight * g;
                 }
+                arenas[p.client].release(p.data);
             }
             out.push(acc);
         }
@@ -193,8 +213,8 @@ fn daemon_loop(
             Err(_) => return,
         };
         match msg {
-            Msg::IntraAccum { layer, weight, client, data } => {
-                st.pending_intra[layer][client].push((weight, data));
+            Msg::IntraAccum { layer, micro, weight, client, data } => {
+                st.pending_intra[layer].push(IntraPiece { micro, client, weight, data });
             }
             Msg::IntraDone => st.intra_done += 1,
             Msg::IntraFlush { reply } => st.intra_flush = Some(reply),
@@ -353,7 +373,7 @@ impl CommBackend for HybridComm {
         GatherPolicy::TwoLevelIntra
     }
 
-    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, micro: u64) {
         let p = &self.params.layers[layer];
         debug_assert_eq!(grad.len(), p.padded_len());
         if weight == 0.0 {
@@ -366,7 +386,7 @@ impl CommBackend for HybridComm {
             let server = self.groups.member(group, j);
             let mut data = self.intra_arenas.arena(server, me).acquire(s);
             data.extend_from_slice(&grad[j * s..(j + 1) * s]);
-            self.send(server, Msg::IntraAccum { layer, weight, client: me, data });
+            self.send(server, Msg::IntraAccum { layer, micro, weight, client: me, data });
         }
     }
 
@@ -492,8 +512,8 @@ mod tests {
                 s.spawn(move || {
                     // device pushes (dev+1) twice — two microbatches
                     let grad = vec![(dev + 1) as f32; 12];
-                    comm.reduce_grad(dev, 0, &grad, 1.0);
-                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.reduce_grad(dev, 0, &grad, 1.0, (2 * dev) as u64);
+                    comm.reduce_grad(dev, 0, &grad, 1.0, (2 * dev + 1) as u64);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0f32; 3];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -519,8 +539,8 @@ mod tests {
                 s.spawn(move || {
                     for step in 0..5 {
                         let pushes = 1 + (dev + step) % 4;
-                        for _ in 0..pushes {
-                            comm.reduce_grad(dev, 0, &vec![1.0f32; 12], 1.0);
+                        for m in 0..pushes {
+                            comm.reduce_grad(dev, 0, &vec![1.0f32; 12], 1.0, (4 * dev + m) as u64);
                         }
                         comm.end_minibatch(dev);
                         let mut g = vec![0.0f32; 3];
@@ -546,7 +566,7 @@ mod tests {
             for dev in 0..world {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
-                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 });
+                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 }, dev as u64);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0f32; 1];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -606,7 +626,7 @@ mod tests {
                 s.spawn(move || {
                     for _step in 0..10 {
                         for (l, p) in store.layers.iter().enumerate() {
-                            comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                            comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0, dev as u64);
                         }
                         comm.end_minibatch(dev);
                         let mut g = vec![0.0f32; store.layers[0].shard_len];
@@ -647,7 +667,7 @@ mod tests {
                             let grad: Vec<f32> = (0..20)
                                 .map(|i| ((dev * 31 + m * 7 + i) % 13) as f32 * 0.37)
                                 .collect();
-                            comm.reduce_grad(dev, 0, &grad, 1.0);
+                            comm.reduce_grad(dev, 0, &grad, 1.0, (8 * dev + m) as u64);
                         }
                         comm.end_minibatch(dev);
                         let mut g = vec![0.0f32; 5];

@@ -16,16 +16,35 @@
 //!   to every server; a server's gradients are complete once all `world`
 //!   clients are done and its mailbox is drained. Devices therefore
 //!   progress completely independently within a minibatch (Figure 2),
-//!   including running *different microbatch counts* (LB-Mini).
+//!   including running *different microbatch counts* (LB-Mini) or
+//!   pulling microbatches from a shared runtime queue
+//!   ([`crate::balance::dispatch::WorkQueue`]).
+//!
+//! ## Determinism: the id-keyed fold
+//!
+//! The daemon does NOT accumulate in arrival order (float addition is
+//! not associative, so arrival order would leak thread scheduling into
+//! the training bytes). It buffers every piece with its **global
+//! microbatch id** (`reduce_grad`'s `micro` argument) and folds at the
+//! `end_minibatch` flush in (id, client) order — a pure function of the
+//! plan, independent of placement and timing. Any dispatch interleaving
+//! — static or work-stealing, uniform or straggling devices — is
+//! therefore bit-identical to a single device replaying the
+//! microbatches in id order (`tests/engine_equivalence.rs` pins this
+//! against the oracle; `tests/comm_stress.rs` scrambles push order
+//! directly). Buffering until the flush trades bounded memory (one
+//! minibatch's pushes per pair, the bound the arenas already live with)
+//! for exactness, the same trade [`super::hybrid`] documents.
 //!
 //! Buffering matches Appendix B exactly: each (server, client) pair owns
 //! a preallocated [`PayloadArena`] sized by `shard_range` — the paper's
 //! per-client RDMA buffers — so concurrent pushes from different clients
 //! never alias, never contend on a shared lock, and never allocate in
 //! steady state. The daemon returns each consumed payload to its pair's
-//! arena; `end_minibatch` drains every daemon before any device can
-//! advance, which bounds in-flight payloads per pair to one minibatch's
-//! pushes and therefore bounds arena growth (see `comm_stress`).
+//! arena at the fold; `end_minibatch` drains every daemon before any
+//! device can advance, which bounds in-flight payloads per pair to one
+//! minibatch's pushes and therefore bounds arena growth (see
+//! `comm_stress`).
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
 use super::backend::{CommBackend, GatherPolicy, ParamStore};
@@ -35,9 +54,10 @@ use std::thread::JoinHandle;
 
 enum Msg {
     /// One gradient piece for this server's shard of `layer`, pushed by
-    /// `client`; `data` returns to the (server, client) arena once
-    /// accumulated.
-    Accum { layer: usize, weight: f32, client: usize, data: Vec<f32> },
+    /// `client` for global microbatch `micro`; buffered until the flush
+    /// (the fold is keyed by `micro`, not arrival), then `data` returns
+    /// to the (server, client) arena.
+    Accum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
     /// A client has finished every microbatch of the current minibatch.
     Done,
     /// The colocated worker asks for the completed accumulators; the
@@ -103,17 +123,42 @@ impl OdcComm {
     }
 }
 
-/// The accumulation daemon: single-threaded state machine owning the
-/// device's gradient accumulators. `arenas` is this server's row of the
-/// pair matrix, indexed by client.
+/// One buffered gradient piece awaiting the minibatch fold.
+struct Piece {
+    micro: u64,
+    client: usize,
+    weight: f32,
+    data: Vec<f32>,
+}
+
+/// Fold one layer's buffered pieces in (micro id asc, client asc) order
+/// — a pure function of the plan, blind to arrival interleaving — and
+/// release every payload to its (server, client) arena. The sort is
+/// stable, so same-key pieces (possible only from one client's
+/// sequential pushes) keep their channel-FIFO order.
+fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>]) -> Vec<f32> {
+    pieces.sort_by(|a, b| (a.micro, a.client).cmp(&(b.micro, b.client)));
+    let mut acc = vec![0.0f32; len];
+    for p in pieces.drain(..) {
+        debug_assert_eq!(acc.len(), p.data.len());
+        for (x, &g) in acc.iter_mut().zip(&p.data) {
+            *x += p.weight * g;
+        }
+        arenas[p.client].release(p.data);
+    }
+    acc
+}
+
+/// The accumulation daemon: single-threaded state machine buffering the
+/// minibatch's gradient pieces and folding them id-keyed at the flush.
+/// `arenas` is this server's row of the pair matrix, indexed by client.
 fn daemon_loop(
     rx: mpsc::Receiver<Msg>,
     shard_lens: Vec<usize>,
     world: usize,
     arenas: Vec<Arc<PayloadArena>>,
 ) {
-    let fresh = |lens: &[usize]| -> Vec<Vec<f32>> { lens.iter().map(|&l| vec![0.0; l]).collect() };
-    let mut acc = fresh(&shard_lens);
+    let mut pending: Vec<Vec<Piece>> = shard_lens.iter().map(|_| Vec::new()).collect();
     let mut done = 0usize;
     let mut flush: Option<mpsc::Sender<Vec<Vec<f32>>>> = None;
     loop {
@@ -122,14 +167,8 @@ fn daemon_loop(
             Err(_) => return,
         };
         match msg {
-            Msg::Accum { layer, weight, client, data } => {
-                let a = &mut acc[layer];
-                debug_assert_eq!(a.len(), data.len());
-                for (x, &g) in a.iter_mut().zip(&data) {
-                    *x += weight * g;
-                }
-                // return the payload to its (server, client) arena
-                arenas[client].release(data);
+            Msg::Accum { layer, micro, weight, client, data } => {
+                pending[layer].push(Piece { micro, client, weight, data });
             }
             Msg::Done => done += 1,
             Msg::Flush { reply } => flush = Some(reply),
@@ -137,7 +176,11 @@ fn daemon_loop(
         }
         if done == world {
             if let Some(reply) = flush.take() {
-                let out = std::mem::replace(&mut acc, fresh(&shard_lens));
+                let out: Vec<Vec<f32>> = pending
+                    .iter_mut()
+                    .zip(&shard_lens)
+                    .map(|(pieces, &len)| fold_layer(pieces, len, &arenas))
+                    .collect();
                 done = 0;
                 let _ = reply.send(out);
             }
@@ -166,7 +209,7 @@ impl CommBackend for OdcComm {
         GatherPolicy::OneSided
     }
 
-    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32) {
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, micro: u64) {
         let p = &self.params.layers[layer];
         debug_assert_eq!(grad.len(), p.padded_len());
         if weight == 0.0 {
@@ -176,7 +219,7 @@ impl CommBackend for OdcComm {
             let r = p.shard_range(server);
             let mut data = self.arenas.arena(server, dev).acquire(r.len());
             data.extend_from_slice(&grad[r]);
-            self.send(server, Msg::Accum { layer, weight, client: dev, data });
+            self.send(server, Msg::Accum { layer, micro, weight, client: dev, data });
         }
     }
 
@@ -250,8 +293,8 @@ mod tests {
                 s.spawn(move || {
                     // device pushes (dev+1) twice with weight 1 — two microbatches
                     let grad = vec![(dev + 1) as f32; 9];
-                    comm.reduce_grad(dev, 0, &grad, 1.0);
-                    comm.reduce_grad(dev, 0, &grad, 1.0);
+                    comm.reduce_grad(dev, 0, &grad, 1.0, (2 * dev) as u64);
+                    comm.reduce_grad(dev, 0, &grad, 1.0, (2 * dev + 1) as u64);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 3];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -276,8 +319,8 @@ mod tests {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
                     let pushes = if dev == 0 { 3 } else { 1 };
-                    for _ in 0..pushes {
-                        comm.reduce_grad(dev, 0, &[1.0; 4], 1.0);
+                    for m in 0..pushes {
+                        comm.reduce_grad(dev, 0, &[1.0; 4], 1.0, (4 * dev + m) as u64);
                     }
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 2];
@@ -299,7 +342,7 @@ mod tests {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
                     for step in 1..=2 {
-                        comm.reduce_grad(dev, 0, &[step as f32; 4], 1.0);
+                        comm.reduce_grad(dev, 0, &[step as f32; 4], 1.0, dev as u64);
                         comm.end_minibatch(dev);
                         let mut shard = vec![0.0; 2];
                         comm.take_grad_shard(dev, 0, &mut shard);
@@ -320,7 +363,7 @@ mod tests {
             for dev in 0..world {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
-                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 });
+                    comm.reduce_grad(dev, 0, &[1.0, 1.0], if dev == 0 { 0.5 } else { 2.0 }, dev as u64);
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 1];
                     comm.take_grad_shard(dev, 0, &mut shard);
@@ -344,7 +387,7 @@ mod tests {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
                     for l in 0..2 {
-                        comm.reduce_grad(dev, l, &vec![1.0; params_padded(&comm, l)], 1.0);
+                        comm.reduce_grad(dev, l, &vec![1.0; params_padded(&comm, l)], 1.0, dev as u64);
                     }
                     comm.end_minibatch(dev);
                     let mut shard = vec![0.0; 5];
@@ -360,5 +403,45 @@ mod tests {
 
     fn params_padded(comm: &OdcComm, layer: usize) -> usize {
         comm.params.layers[layer].padded_len()
+    }
+
+    /// The fold is keyed by global microbatch id, not arrival: pushing
+    /// the same (micro, grad) pieces in a scrambled order produces
+    /// bit-identical shards. The values are chosen so an arrival-order
+    /// fold WOULD differ: in f32, (1e8 + 1) - 1e8 = 0 but
+    /// (-1e8 + 1e8) + 1 = 1.
+    #[test]
+    fn fold_keyed_by_micro_id_not_push_order() {
+        let world = 2;
+        let run = |push_order: &[(usize, u64, f32)]| -> Vec<Vec<f32>> {
+            let params = Arc::new(ParamStore::new(&[4], world));
+            let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+            // all pushes from this thread: arrival order == call order
+            for &(client, micro, val) in push_order {
+                comm.reduce_grad(client, 0, &[val; 4], 1.0, micro);
+            }
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for dev in 0..world {
+                    let comm = Arc::clone(&comm);
+                    handles.push(s.spawn(move || {
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 2];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                        g
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        // micro 0 = 1e8 (client 0), micro 1 = 1.0 (client 1), micro 2 = -1e8 (client 0)
+        let in_order = run(&[(0, 0, 1e8), (1, 1, 1.0), (0, 2, -1e8)]);
+        let scrambled = run(&[(0, 2, -1e8), (0, 0, 1e8), (1, 1, 1.0)]);
+        assert_eq!(in_order, scrambled, "push order must not change a bit");
+        // id-order fold: (1e8 + 1.0) + (-1e8) == 0.0 in f32
+        for shard in &in_order {
+            assert_eq!(shard, &vec![0.0f32; 2]);
+        }
     }
 }

@@ -81,7 +81,7 @@ pub fn bench_primitive(prim: Primitive, world: usize, elems: usize, iters: usize
                             backend.gather_params(dev, 0, &mut out);
                         }
                         Primitive::ReduceScatter | Primitive::ScatterAccumulate => {
-                            backend.reduce_grad(dev, 0, &grad, 1.0);
+                            backend.reduce_grad(dev, 0, &grad, 1.0, dev as u64);
                             backend.end_minibatch(dev);
                             backend.take_grad_shard(dev, 0, &mut shard);
                             backend.end_step(dev);

@@ -132,7 +132,9 @@ impl fmt::Display for CommScheme {
     }
 }
 
-/// Load-balancing algorithm (§5.1 and Appendix C).
+/// Load-balancing algorithm (§5.1 and Appendix C) — or, for
+/// [`Balancer::Queue`], the runtime dispatch policy layered on top of
+/// LB-Mini's packing (see `balance::dispatch`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Balancer {
     /// Sort by length on each device, no packing (LongAlign-style).
@@ -143,6 +145,37 @@ pub enum Balancer {
     LbMini,
     /// verl's native two-level partitioning (Listing 2) — RL baseline.
     VerlNative,
+    /// Dynamic dispatch (barrier-free schemes only): LB-Mini packing,
+    /// then a shared work queue that free-running devices pull from at
+    /// runtime in LPT order — placement follows ACTUAL device progress
+    /// instead of predicted cost, absorbing cost-model error and
+    /// stragglers.
+    Queue,
+}
+
+impl Balancer {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "local-sort" | "localsort" => Some(Balancer::LocalSort),
+            "lb-micro" | "lbmicro" => Some(Balancer::LbMicro),
+            "lb-mini" | "lbmini" => Some(Balancer::LbMini),
+            "native" | "verl-native" | "verl" => Some(Balancer::VerlNative),
+            "queue" | "work-queue" => Some(Balancer::Queue),
+            _ => None,
+        }
+    }
+
+    /// Whether this balancer may run under `scheme`. The per-layer
+    /// rendezvous of `Collective` forces equal microbatch counts per
+    /// device, which LB-Mini's unequal counts and the work queue's
+    /// runtime placement both violate; the barrier-free schemes accept
+    /// everything (see the legality table in `balance`'s module docs).
+    pub fn legal_under(self, scheme: CommScheme) -> bool {
+        match self {
+            Balancer::LbMini | Balancer::Queue => scheme != CommScheme::Collective,
+            Balancer::LocalSort | Balancer::LbMicro | Balancer::VerlNative => true,
+        }
+    }
 }
 
 impl fmt::Display for Balancer {
@@ -152,6 +185,7 @@ impl fmt::Display for Balancer {
             Balancer::LbMicro => "LB-Micro",
             Balancer::LbMini => "LB-Mini",
             Balancer::VerlNative => "Native",
+            Balancer::Queue => "Queue",
         })
     }
 }
@@ -212,6 +246,20 @@ impl ExperimentConfig {
             PaperModel::M14B => 16,
             PaperModel::M32B => 32,
         }
+    }
+
+    /// Cross-field validity: balancer × scheme legality (the simulator
+    /// asserts this; the real trainer rejects the same combinations in
+    /// `engine::trainer::train`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.balancer.legal_under(self.scheme) {
+            return Err(format!(
+                "{} requires a barrier-free comm scheme: {}'s per-layer rendezvous needs equal \
+                 microbatch counts on every device",
+                self.balancer, self.scheme
+            ));
+        }
+        Ok(())
     }
 
     /// Token budget for one microbatch.
@@ -276,6 +324,38 @@ mod tests {
         assert_eq!(ExperimentConfig::paper_devices(PaperModel::M1_5B), 8);
         assert_eq!(ExperimentConfig::paper_devices(PaperModel::M14B), 16);
         assert_eq!(ExperimentConfig::paper_devices(PaperModel::M32B), 32);
+    }
+
+    #[test]
+    fn balancer_parse_roundtrip() {
+        for b in [Balancer::LocalSort, Balancer::LbMicro, Balancer::LbMini, Balancer::VerlNative, Balancer::Queue] {
+            let cli_name = match b {
+                Balancer::LocalSort => "local-sort",
+                Balancer::LbMicro => "lb-micro",
+                Balancer::LbMini => "lb-mini",
+                Balancer::VerlNative => "native",
+                Balancer::Queue => "queue",
+            };
+            assert_eq!(Balancer::parse(cli_name), Some(b));
+        }
+        assert_eq!(Balancer::parse("round-robin"), None);
+    }
+
+    #[test]
+    fn queue_and_lb_mini_illegal_under_collective_only() {
+        for b in [Balancer::LbMini, Balancer::Queue] {
+            assert!(!b.legal_under(CommScheme::Collective));
+            assert!(b.legal_under(CommScheme::Odc));
+            assert!(b.legal_under(CommScheme::Hybrid));
+        }
+        assert!(Balancer::LbMicro.legal_under(CommScheme::Collective));
+        let mut g = ExperimentConfig::golden();
+        g.balancer = Balancer::Queue;
+        g.scheme = CommScheme::Collective;
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("barrier-free"), "unexpected message: {err}");
+        g.scheme = CommScheme::Odc;
+        assert!(g.validate().is_ok());
     }
 
     #[test]

@@ -4,18 +4,32 @@
 //!
 //! ```text
 //! per device, per minibatch:
-//!   for each local microbatch (collective: padded to the common count):
+//!   while let Some(micro) = dispatcher.next_micro(dev):   # pull loop
+//!     # static dispatch: dev's own plan row, slot order
+//!     #   (collective: padded to the common count)
+//!     # queue dispatch:  next LPT-ordered microbatch from the shared
+//!     #   pool — whichever device frees up first takes it
 //!     gather(embed) ─ gather(block l) … ─ block_fwd …   # forward
 //!     loss_head → dx
-//!     for l = L..1: gather(block l) ─ block_bwd ─ reduce_grad(l)
-//!     reduce_grad(embed)
+//!     for l = L..1: gather(block l) ─ block_bwd ─ reduce_grad(l, micro.id)
+//!     reduce_grad(embed, micro.id)
 //!   end_minibatch          # ODC: the ONLY rendezvous
 //!   sharded AdamW on owned shards; republish; end_step
 //! ```
 //!
 //! Under `Collective`, every gather/reduce is a barrier (per-layer
 //! lockstep); under `Odc` devices free-run to `end_minibatch`, which is
-//! what lets LB-Mini give devices different microbatch counts.
+//! what lets LB-Mini give devices different microbatch counts — and
+//! what makes runtime placement (`Balancer::Queue`) legal at all: the
+//! dispatcher seam ([`crate::balance::dispatch`]) decides WHO runs each
+//! packed microbatch, while the id-keyed gradient fold in the one-sided
+//! backends keeps every interleaving bit-identical to the single-device
+//! oracle (ODC and single-group Hybrid; multi-group Hybrid under Queue
+//! is tolerance-equivalent only — see [`crate::comm::HybridComm`]).
+//! [`TrainerConfig::device_speed`] emulates a heterogeneous /
+//! straggling fleet (a relative-speed sleep multiplier on every
+//! microbatch-phase compute call), which queue dispatch absorbs by
+//! letting fast devices pull the straggler's share.
 //!
 //! Under `Hybrid` (§6.1 two-level sharding) the same free-running loop
 //! drives a two-level protocol: gathers are one-sided reads of the
@@ -43,6 +57,7 @@
 //! exactly.
 
 use crate::balance::cost::CostModel;
+use crate::balance::dispatch::{make_dispatcher, Dispatcher, MicroAssignment};
 use crate::balance::packers::{plan_run, Plan};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::{CollectiveComm, HybridComm, OdcComm};
@@ -58,7 +73,7 @@ use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
@@ -85,6 +100,13 @@ pub struct TrainerConfig {
     /// effect on backends reporting `gathers_cacheable` (ODC); the
     /// equivalence tests toggle it to pin cached == uncached bytes.
     pub gather_cache: bool,
+    /// Per-device relative compute speed — the straggler/heterogeneity
+    /// scenario. Empty means a homogeneous fleet; otherwise one entry
+    /// per device, `1.0` = nominal and `0.25` = a 4×-slower device
+    /// (every microbatch-phase PJRT call sleeps `1/speed - 1` times its
+    /// own measured duration afterwards). Timing-only: training bytes
+    /// are unaffected under every dispatch policy.
+    pub device_speed: Vec<f64>,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -107,6 +129,7 @@ impl TrainerConfig {
             pjrt_shard_ops: false,
             len_sigma: 0.8,
             gather_cache: true,
+            device_speed: Vec::new(),
             plan_override: None,
         }
     }
@@ -159,8 +182,25 @@ pub fn plan_preview(cfg: &TrainerConfig) -> Result<Vec<Plan>> {
 /// Train per the config; returns the loss curve and final parameters.
 pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     // Config validation first (none of it needs artifacts on disk).
-    if cfg.scheme == CommScheme::Collective && cfg.balancer == Balancer::LbMini {
-        return Err(anyhow!("LB-Mini requires a barrier-free scheme (devices run unequal microbatch counts)"));
+    if !cfg.balancer.legal_under(cfg.scheme) {
+        return Err(anyhow!(
+            "{} requires a barrier-free scheme: Collective's per-layer rendezvous needs equal \
+             microbatch counts on every device (LB-Mini runs unequal counts; Queue decides \
+             placement at runtime)",
+            cfg.balancer
+        ));
+    }
+    if !cfg.device_speed.is_empty() {
+        if cfg.device_speed.len() != cfg.world {
+            return Err(anyhow!(
+                "device_speed needs one entry per device: got {} for world {}",
+                cfg.device_speed.len(),
+                cfg.world
+            ));
+        }
+        if cfg.device_speed.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err(anyhow!("device_speed entries must be finite and > 0"));
+        }
     }
     if cfg.scheme == CommScheme::Hybrid {
         let g = cfg.hybrid_group_size();
@@ -219,6 +259,13 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
         return Err(anyhow!("plan device count does not match world size"));
     }
 
+    // --- dispatch layer ----------------------------------------------------
+    // One dispatcher per minibatch, shared by all device threads: static
+    // plan replay, or the work-stealing queue under Balancer::Queue.
+    let dispatchers: Arc<Vec<Arc<dyn Dispatcher>>> = Arc::new(
+        plans.iter().map(|p| make_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost)).collect(),
+    );
+
     // --- shared step metrics ----------------------------------------------
     let tok_count: Arc<Vec<AtomicU64>> = Arc::new((0..cfg.steps).map(|_| AtomicU64::new(0)).collect());
     let loss_sum: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
@@ -228,6 +275,10 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
         for dev in 0..cfg.world {
+            let slow_extra = match cfg.device_speed.get(dev) {
+                Some(&s) => (1.0 / s - 1.0).max(0.0),
+                None => 0.0,
+            };
             let ctx = DeviceCtx {
                 dev,
                 cfg: cfg.clone(),
@@ -235,11 +286,12 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 svc: host.handle(),
                 backend: Arc::clone(&backend),
                 params: Arc::clone(&params),
-                plans: Arc::clone(&plans),
+                dispatchers: Arc::clone(&dispatchers),
                 samples: Arc::clone(&samples),
                 tok_count: Arc::clone(&tok_count),
                 loss_sum: Arc::clone(&loss_sum),
                 wall: Arc::clone(&wall),
+                slow_extra,
             };
             handles.push(s.spawn(move || device_main(ctx)));
         }
@@ -280,11 +332,35 @@ struct DeviceCtx {
     svc: ComputeService,
     backend: Arc<dyn CommBackend>,
     params: Arc<ParamStore>,
-    plans: Arc<Vec<Plan>>,
+    /// One per minibatch, shared by every device thread.
+    dispatchers: Arc<Vec<Arc<dyn Dispatcher>>>,
     samples: Arc<Vec<Sample>>,
     tok_count: Arc<Vec<AtomicU64>>,
     loss_sum: Arc<Vec<Mutex<f64>>>,
     wall: Arc<Vec<Mutex<f64>>>,
+    /// Straggler emulation: extra sleep per compute call, as a multiple
+    /// of the call's own duration (`1/speed - 1`; 0 = nominal device).
+    slow_extra: f64,
+}
+
+impl DeviceCtx {
+    /// The microbatch-phase compute wrapper: every forward/backward PJRT
+    /// call routes through here so [`TrainerConfig::device_speed`] can
+    /// emulate a slow or heterogeneous device by sleeping a multiple of
+    /// the call's own measured duration. Sleeps perturb timing only —
+    /// the id-keyed gradient fold keeps the training bytes identical.
+    fn compute(&self, name: &str, inputs: Vec<Input>) -> Result<Vec<Vec<f32>>> {
+        if self.slow_extra <= 0.0 {
+            return self.svc.call(name, inputs);
+        }
+        let t0 = Instant::now();
+        let out = self.svc.call(name, inputs)?;
+        let pad = t0.elapsed().mul_f64(self.slow_extra);
+        if pad > Duration::ZERO {
+            std::thread::sleep(pad);
+        }
+        Ok(out)
+    }
 }
 
 fn device_main(ctx: DeviceCtx) -> Result<()> {
@@ -325,23 +401,20 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         Vec::new()
     };
 
-    for (step, plan) in ctx.plans.iter().enumerate() {
+    for step in 0..ctx.dispatchers.len() {
         let t0 = Instant::now();
-        let my = &plan.micro[dev];
-        // Collective needs lockstep over the common (padded) count;
-        // ODC and Hybrid devices free-run over their own slots.
-        let m_count = match ctx.cfg.scheme {
-            CommScheme::Collective => plan.max_micro_count(),
-            CommScheme::Odc | CommScheme::Hybrid => my.len(),
-        };
-
-        for m in 0..m_count {
-            let micro = my.get(m).map(|v| v.as_slice()).unwrap_or(&[]);
-            if micro.is_empty() {
+        // The dispatch pull loop: static dispatch serves this device its
+        // own plan row (Collective: padded to the common count so the
+        // barrier schedule stays in lockstep); queue dispatch serves the
+        // next LPT-ordered microbatch from the shared pool to whichever
+        // free-running device asks first.
+        let disp = ctx.dispatchers[step].as_ref();
+        while let Some(a) = disp.next_micro(dev) {
+            if a.samples.is_empty() {
                 idle_participation(&ctx, n_layers, &mut bufs)?;
                 continue;
             }
-            run_microbatch(&ctx, &mut bufs, step, micro)?;
+            run_microbatch(&ctx, &mut bufs, step, &a)?;
         }
 
         ctx.backend.end_minibatch(dev);
@@ -373,20 +446,23 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     Ok(())
 }
 
-/// Forward + backward of one packed microbatch through PJRT, zero-copy:
-/// gathered layers and saved activations are `Arc` slices shared into
-/// every call; the only owned-`Vec` handoff left is `dx`, which moves
-/// (not clones) through the backward chain.
+/// Forward + backward of one dispatched microbatch through PJRT,
+/// zero-copy: gathered layers and saved activations are `Arc` slices
+/// shared into every call; the only owned-`Vec` handoff left is `dx`,
+/// which moves (not clones) through the backward chain. Every gradient
+/// push carries the assignment's global microbatch id — the fold key
+/// that makes the result independent of dispatch order.
 fn run_microbatch(
     ctx: &DeviceCtx,
     bufs: &mut BufferPlan,
     step: usize,
-    micro: &[usize],
+    a: &MicroAssignment,
 ) -> Result<()> {
     let man = &ctx.man;
     let dev = ctx.dev;
     let n_layers = man.n_layers;
     let backend = ctx.backend.as_ref();
+    let micro: &[usize] = &a.samples;
     let refs: Vec<&Sample> = micro.iter().map(|&i| &ctx.samples[i]).collect();
     let packed = pack_micro(&refs, &man.seq_buckets)?;
     let s = packed.seq;
@@ -402,7 +478,7 @@ fn run_microbatch(
 
     // ---- forward ----
     let emb = bufs.cache.gather(backend, 0);
-    let mut out = ctx.svc.call(
+    let mut out = ctx.compute(
         &format!("embed_fwd_s{s}"),
         vec![Input::shared_f32(&emb, man.embed_params), Input::shared_i32_all(&tokens)],
     )?;
@@ -411,7 +487,7 @@ fn run_microbatch(
     debug_assert!(bufs.acts.is_empty(), "activation stack leaked from a previous microbatch");
     for l in 1..=n_layers {
         let flat = bufs.cache.gather(backend, l);
-        let mut out = ctx.svc.call(
+        let mut out = ctx.compute(
             &format!("block_fwd_s{s}"),
             vec![
                 Input::shared_f32(&flat, man.block_params),
@@ -423,7 +499,7 @@ fn run_microbatch(
         bufs.acts.push(std::mem::replace(&mut x, next));
     }
 
-    let mut out = ctx.svc.call(
+    let mut out = ctx.compute(
         &format!("loss_head_s{s}"),
         vec![
             Input::shared_f32(&emb, man.embed_params),
@@ -444,7 +520,7 @@ fn run_microbatch(
     for l in (1..=n_layers).rev() {
         let flat = bufs.cache.gather(backend, l);
         let act = bufs.acts.pop().expect("activation for block l-1");
-        let mut out = ctx.svc.call(
+        let mut out = ctx.compute(
             &format!("block_bwd_s{s}"),
             vec![
                 Input::shared_f32(&flat, man.block_params),
@@ -460,11 +536,11 @@ fn run_microbatch(
         let gp = &mut bufs.grad_pad[..p.padded_len()];
         gp[..man.block_params].copy_from_slice(&dflat);
         gp[man.block_params..].fill(0.0);
-        ctx.backend.reduce_grad(dev, l, gp, 1.0);
+        ctx.backend.reduce_grad(dev, l, gp, 1.0, a.id);
     }
 
     // embedding gradient: head (tied weights) + input scatter-add
-    let mut out = ctx.svc.call(
+    let mut out = ctx.compute(
         &format!("embed_bwd_s{s}"),
         vec![Input::shared_i32_all(&tokens), Input::F32(dx)],
     )?;
@@ -483,7 +559,7 @@ fn run_microbatch(
         *slot = h + i;
     }
     gp[man.embed_params..].fill(0.0);
-    ctx.backend.reduce_grad(dev, 0, gp, 1.0);
+    ctx.backend.reduce_grad(dev, 0, gp, 1.0, a.id);
 
     // Return the microbatch tensors to their pools (uniquely owned
     // again: the service drops its input clones before replying).
@@ -514,11 +590,11 @@ fn idle_participation(ctx: &DeviceCtx, n_layers: usize, bufs: &mut BufferPlan) -
         let _ = bufs.cache.gather(backend, l);
         let p = &ctx.params.layers[l];
         bufs.grad_pad[..p.padded_len()].fill(0.0);
-        ctx.backend.reduce_grad(dev, l, &bufs.grad_pad[..p.padded_len()], 0.0);
+        ctx.backend.reduce_grad(dev, l, &bufs.grad_pad[..p.padded_len()], 0.0, 0);
     }
     let p = &ctx.params.layers[0];
     bufs.grad_pad[..p.padded_len()].fill(0.0);
-    ctx.backend.reduce_grad(dev, 0, &bufs.grad_pad[..p.padded_len()], 0.0);
+    ctx.backend.reduce_grad(dev, 0, &bufs.grad_pad[..p.padded_len()], 0.0, 0);
     Ok(())
 }
 

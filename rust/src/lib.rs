@@ -10,9 +10,13 @@
 //!   minibatch) and `Hybrid` (§6.1 two-level sharding: params/grads
 //!   within a node group, optimizer shards across groups —
 //!   [`comm::HybridComm`]), the load-balancing algorithms (LocalSort,
-//!   LB-Micro, LB-Mini, Verl variants), and a discrete-event cluster
-//!   simulator that regenerates every table and figure of the paper at
-//!   testbed scale.
+//!   LB-Micro, LB-Mini, Verl variants) plus the pluggable dispatch
+//!   layer ([`balance::dispatch`]: static plan replay or work-stealing
+//!   queue pulls, bit-identical under any interleaving via the
+//!   id-keyed gradient fold), and a discrete-event cluster simulator
+//!   that regenerates every table and figure of the paper at testbed
+//!   scale — including straggler/heterogeneous-fleet scenarios
+//!   (`device_speed` in both the trainer and the sim).
 //! * **L2** — the JAX transformer (`python/compile/model.py`), AOT-lowered
 //!   once to HLO text and executed from Rust via PJRT.
 //! * **L1** — the Pallas flash-attention + shard-op kernels

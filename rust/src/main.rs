@@ -22,13 +22,24 @@ fn parse_scheme(s: &str) -> anyhow::Result<CommScheme> {
 }
 
 fn parse_balancer(s: &str) -> anyhow::Result<Balancer> {
-    match s {
-        "local-sort" => Ok(Balancer::LocalSort),
-        "lb-micro" => Ok(Balancer::LbMicro),
-        "lb-mini" => Ok(Balancer::LbMini),
-        "native" => Ok(Balancer::VerlNative),
-        other => anyhow::bail!("unknown balancer `{other}`"),
+    Balancer::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown balancer `{s}` (local-sort|lb-micro|lb-mini|native|queue)"))
+}
+
+/// Parse `--device-speed` — empty for a homogeneous fleet, else a
+/// comma-separated relative speed per device ("0.25,1,1,1" = one 4×
+/// straggler).
+fn parse_device_speed(s: &str) -> anyhow::Result<Vec<f64>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
     }
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--device-speed expects comma-separated numbers, got `{x}`"))
+        })
+        .collect()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -43,13 +54,14 @@ fn main() -> anyhow::Result<()> {
                 .opt("model", "1.5b", "1.5b | 7b | 14b | 32b")
                 .opt("dataset", "longalign", "longalign | swesmith | aime")
                 .opt("scheme", "odc", "odc | collective | hybrid")
-                .opt("balancer", "lb-micro", "local-sort | lb-micro | lb-mini | native")
+                .opt("balancer", "lb-micro", "local-sort | lb-micro | lb-mini | native | queue")
                 .opt("minibs", "4", "samples per minibatch per device")
                 .opt("devices", "8", "device count")
                 .opt("packing-ratio", "1.0", "microbatch budget / max len")
                 .opt("max-len", "0", "override max sequence length (0 = dataset default)")
                 .opt("steps", "16", "minibatches to simulate")
                 .opt("seed", "0", "rng seed")
+                .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1,1,1 (empty = uniform)")
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -81,11 +93,30 @@ fn main() -> anyhow::Result<()> {
                 steps: a.usize("steps"),
                 seed: a.u64("seed"),
             };
-            let r = simulate(&SimConfig::new(exp));
+            if let Err(e) = exp.validate() {
+                eprintln!("invalid configuration: {e}");
+                std::process::exit(2);
+            }
+            let device_speed = parse_device_speed(a.get("device-speed"))?;
+            anyhow::ensure!(
+                device_speed.is_empty() || device_speed.len() == exp.devices,
+                "--device-speed needs one entry per device: got {} for {} devices",
+                device_speed.len(),
+                exp.devices
+            );
+            let mut sim_cfg = SimConfig::new(exp);
+            sim_cfg.device_speed = device_speed;
+            let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
             println!("  bubble rate      : {}", odc::report::pct(r.bubble_rate));
-            println!("  device util      : {}", odc::report::pct(r.device_utilization));
+            let total_device_s = r.mean_minibatch_s * r.minibatches as f64 * sim_cfg.exp.devices as f64;
+            println!(
+                "  device util      : {}   dispatch wait {:.3}s ({} of device-time)",
+                odc::report::pct(r.device_utilization),
+                r.dispatch_wait_s,
+                odc::report::pct(if total_device_s > 0.0 { r.dispatch_wait_s / total_device_s } else { 0.0 })
+            );
             println!(
                 "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
                 r.mean_minibatch_s, r.minibatches, r.samples
@@ -102,9 +133,10 @@ fn main() -> anyhow::Result<()> {
                 .opt("steps", "40", "optimizer steps")
                 .opt("scheme", "odc", "odc | collective | hybrid")
                 .opt("devices-per-node", "0", "hybrid node-group size (0 = single group)")
-                .opt("balancer", "lb-mini", "local-sort | lb-micro | lb-mini")
+                .opt("balancer", "lb-mini", "local-sort | lb-micro | lb-mini | queue")
                 .opt("lr", "0.003", "AdamW lr")
                 .opt("seed", "0", "rng seed")
+                .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1 (empty = uniform)")
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -125,6 +157,7 @@ fn main() -> anyhow::Result<()> {
             cfg.adam.lr = a.f64("lr") as f32;
             cfg.seed = a.u64("seed");
             cfg.pjrt_shard_ops = a.flag("pjrt-shard-ops");
+            cfg.device_speed = parse_device_speed(a.get("device-speed"))?;
             let run = train(&cfg)?;
             for log in &run.logs {
                 println!(

@@ -7,6 +7,7 @@
 //! while compute grows as O(s²), so long microbatches hide comm).
 
 use crate::balance::cost::CostModel;
+use crate::balance::dispatch::{lpt_order, pull_schedule};
 use crate::balance::packers::Plan;
 use crate::comm::topology::Topology;
 use crate::comm::volume;
@@ -111,9 +112,38 @@ pub fn time_minibatch_opt(
     topo: &Topology,
     hierarchical: bool,
 ) -> MinibatchTiming {
+    time_minibatch_dispatch(plan, lens, model, cost, scheme, sharding, topo, hierarchical, &[], false)
+}
+
+/// The general timing entry point: `time_minibatch_opt` plus the
+/// straggler/heterogeneity scenario and the dispatch policy.
+///
+/// * `speeds` — per-device relative compute speed (`1.0` = nominal,
+///   `0.25` = a 4× straggler; empty = homogeneous). Compute stretches by
+///   `1/speed`; communication is the network's time and does not.
+/// * `queue` — price dynamic work-stealing dispatch
+///   (`Balancer::Queue`): the plan's microbatches are pulled LPT-first
+///   by whichever device frees up earliest (the engine's
+///   `WorkQueue` dynamics on the cost model) instead of replaying the
+///   static placement. Only meaningful for barrier-free schemes — the
+///   config layer rejects `Queue`×`Collective` before simulation.
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_dispatch(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    speeds: &[f64],
+    queue: bool,
+) -> MinibatchTiming {
     let d = plan.devices();
     let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
     let m_max = plan.max_micro_count();
+    let inv_speed = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
 
     let micro_secs = |dev: usize, m: usize| -> (f64, bool) {
         match plan.micro[dev].get(m) {
@@ -126,6 +156,23 @@ pub fn time_minibatch_opt(
         }
     };
 
+    if queue {
+        debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
+        // Work-stealing pull: LPT order over ALL of the plan's
+        // microbatches, each served by the device that frees up
+        // earliest (`pull_schedule` — the same kernel the makespan
+        // property tests pin) — a straggler pulls less often and the
+        // fast devices absorb its share at microbatch granularity.
+        let order = lpt_order(plan, lens, cost);
+        let busy = pull_schedule(order.len(), d, |i, dev| {
+            let (od, om) = order[i];
+            let (c, _) = micro_secs(od, om);
+            slot_time(c * inv_speed(dev), comm, scheme, false)
+        });
+        let wall = busy.iter().cloned().fold(0.0, f64::max);
+        return MinibatchTiming { wall, busy };
+    }
+
     let mut busy = vec![0.0f64; d];
     let wall = match scheme {
         CommScheme::Collective => {
@@ -135,7 +182,7 @@ pub fn time_minibatch_opt(
                 let mut step = 0.0f64;
                 for (dev, b) in busy.iter_mut().enumerate() {
                     let (c, empty) = micro_secs(dev, m);
-                    let s = slot_time(c, comm, CommScheme::Collective, empty);
+                    let s = slot_time(c * inv_speed(dev), comm, CommScheme::Collective, empty);
                     *b += s;
                     step = step.max(s);
                 }
@@ -149,7 +196,7 @@ pub fn time_minibatch_opt(
             for (dev, b) in busy.iter_mut().enumerate() {
                 for m in 0..plan.micro[dev].len() {
                     let (c, empty) = micro_secs(dev, m);
-                    *b += slot_time(c, comm, scheme, empty);
+                    *b += slot_time(c * inv_speed(dev), comm, scheme, empty);
                 }
             }
             busy.iter().cloned().fold(0.0, f64::max)
@@ -262,6 +309,87 @@ mod tests {
         let to = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Hybrid, &topo);
         assert_eq!(th.wall, to.wall);
         assert_eq!(th.busy, to.busy);
+    }
+
+    #[test]
+    fn device_speed_stretches_compute_not_comm() {
+        let (plan, lens) = skew_plan();
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let base = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[], false,
+        );
+        let skew = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[0.25, 1.0], false,
+        );
+        // device 0 holds the long (compute-bound) sample: 4× slower
+        assert!((skew.busy[0] - 4.0 * base.busy[0]).abs() < 1e-9 * skew.busy[0]);
+        assert_eq!(skew.busy[1], base.busy[1]);
+        assert!(skew.wall >= base.wall);
+    }
+
+    #[test]
+    fn empty_speeds_match_seed_timing_exactly() {
+        let (plan, lens) = skew_plan();
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        for scheme in [CommScheme::Collective, CommScheme::Odc] {
+            let a = time_minibatch(&plan, &lens, PaperModel::M1_5B, &c, scheme, Sharding::Full, &topo);
+            let b = time_minibatch_dispatch(
+                &plan, &lens, PaperModel::M1_5B, &c, scheme, Sharding::Full, &topo, false, &[], false,
+            );
+            assert_eq!(a.wall, b.wall);
+            assert_eq!(a.busy, b.busy);
+        }
+    }
+
+    #[test]
+    fn queue_dispatch_cuts_idle_under_straggler() {
+        // 8 equal-cost singleton micros statically dealt 4+4 over 2
+        // devices; device 0 runs at quarter speed. Static: dev0 takes
+        // 4×4c while dev1 idles after 4c. Queue: dev1 absorbs most
+        // micros and idle shrinks.
+        let plan = Plan {
+            micro: vec![
+                (0..4).map(|i| vec![i]).collect(),
+                (4..8).map(|i| vec![i]).collect(),
+            ],
+        };
+        let lens = vec![30_000usize; 8];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let speeds = [0.25, 1.0];
+        let stat = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &speeds, false,
+        );
+        let dyn_ = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &speeds, true,
+        );
+        let idle = |t: &MinibatchTiming| t.busy.iter().map(|b| t.wall - b).sum::<f64>();
+        assert!(dyn_.wall < stat.wall, "queue {} should beat static {}", dyn_.wall, stat.wall);
+        assert!(idle(&dyn_) < idle(&stat), "queue idle {} should be below static idle {}", idle(&dyn_), idle(&stat));
+    }
+
+    #[test]
+    fn queue_dispatch_homogeneous_not_worse_than_static_lpt_balance() {
+        // Uniform devices: queue = LPT list scheduling, which cannot be
+        // worse than the static deal on this symmetric plan.
+        let plan = Plan {
+            micro: vec![
+                vec![vec![0], vec![1], vec![2]],
+                vec![vec![3]],
+            ],
+        };
+        let lens = vec![20_000, 20_000, 20_000, 20_000];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let stat = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[], false,
+        );
+        let dyn_ = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[], true,
+        );
+        assert!(dyn_.wall <= stat.wall + 1e-12, "queue rebalances the 3-vs-1 deal");
     }
 
     #[test]

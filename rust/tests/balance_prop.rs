@@ -162,9 +162,7 @@ fn prop_lb_mini_spread_never_worse_than_local_sort() {
                     .iter()
                     .map(|p| {
                         let busy: Vec<f64> = (0..p.devices())
-                            .map(|d| {
-                                p.device_samples(d).iter().map(|&i| c.sample_cost(lens_u[i])).sum()
-                            })
+                            .map(|d| p.device_samples(d).map(|i| c.sample_cost(lens_u[i])).sum())
                             .collect();
                         let mx = busy.iter().cloned().fold(f64::MIN, f64::max);
                         let mn = busy.iter().cloned().fold(f64::MAX, f64::min);

@@ -34,12 +34,12 @@ fn run_minibatch(which: usize, world: usize, layer_lens: &[usize]) -> Vec<Vec<f3
             let backend = Arc::clone(&backend);
             let store = Arc::clone(&params);
             handles.push(s.spawn(move || {
-                for _micro in 0..3 {
+                for micro in 0..3 {
                     for (l, p) in store.layers.iter().enumerate() {
                         let grad: Vec<f32> =
                             (0..p.padded_len()).map(|i| ((dev + 1) * (i + 1) % 17) as f32).collect();
                         let w = ((dev + l) % 3) as f32 * 0.5 + 0.5;
-                        backend.reduce_grad(dev, l, &grad, w);
+                        backend.reduce_grad(dev, l, &grad, w, (3 * dev + micro) as u64);
                     }
                 }
                 backend.end_minibatch(dev);
@@ -112,8 +112,8 @@ fn odc_unequal_counts_many_minibatches() {
             s.spawn(move || {
                 for step in 0..5 {
                     let pushes = 1 + (dev + step) % 4;
-                    for _ in 0..pushes {
-                        comm.reduce_grad(dev, 0, &vec![1.0f32; 51], 1.0);
+                    for m in 0..pushes {
+                        comm.reduce_grad(dev, 0, &vec![1.0f32; 51], 1.0, (4 * dev + m) as u64);
                     }
                     comm.end_minibatch(dev);
                     let mut g = vec![0.0f32; 17];
@@ -147,7 +147,7 @@ fn odc_arena_never_allocates_within_prealloc() {
             s.spawn(move || {
                 for _step in 0..25 {
                     for (l, p) in store.layers.iter().enumerate() {
-                        comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                        comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0, dev as u64);
                     }
                     comm.end_minibatch(dev);
                     let mut g = vec![0.0f32; store.layers[0].shard_len];
@@ -178,8 +178,8 @@ fn odc_arena_growth_bounded_and_stops_after_warmup() {
                 let comm = Arc::clone(&comm);
                 s.spawn(move || {
                     for _ in 0..n {
-                        for _ in 0..micros {
-                            comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0);
+                        for m in 0..micros {
+                            comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0, (micros * dev + m) as u64);
                         }
                         comm.end_minibatch(dev);
                         let mut g = vec![0.0f32; 20];
@@ -206,6 +206,58 @@ fn odc_arena_growth_bounded_and_stops_after_warmup() {
     );
     // every payload is back home after the final drain
     assert_eq!(after.resident, (world * world * prealloc_per_pair) as u64 + after.fresh_allocs);
+}
+
+/// The id-keyed fold ignores push order: pushing the same set of
+/// (micro, client, grad) pieces in ANY sequence yields bit-identical
+/// shards on every one-sided backend. The values are chosen so an
+/// arrival-order fold WOULD differ bitwise ((1e8 + 1) - 1e8 = 0 in f32,
+/// but (-1e8 + 1e8) + 1 = 1), so this pins exactly the property that
+/// makes work-stealing dispatch semantically free.
+#[test]
+fn id_keyed_fold_ignores_push_order() {
+    let world = 2;
+    // (client, micro, value): three microbatches, client 0 ran two of them
+    let pieces: [(usize, u64, f32); 3] = [(0, 0, 1e8), (1, 1, 1.0), (0, 2, -1e8)];
+    // ODC and single-group Hybrid (the all-intra path) — the two
+    // backends whose daemons fold id-keyed
+    for which in [1usize, 2] {
+        let run = |order: &[usize]| -> Vec<Vec<f32>> {
+            let params = Arc::new(ParamStore::new(&[4], world));
+            let backend = make_backend(which, &params, world);
+            // every push from this thread: arrival order == `order`
+            for &k in order {
+                let (client, micro, val) = pieces[k];
+                backend.reduce_grad(client, 0, &[val; 4], 1.0, micro);
+            }
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for dev in 0..world {
+                    let backend = Arc::clone(&backend);
+                    handles.push(s.spawn(move || {
+                        backend.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 2];
+                        backend.take_grad_shard(dev, 0, &mut g);
+                        backend.end_step(dev);
+                        g
+                    }));
+                }
+                let mut out: Vec<(usize, Vec<f32>)> =
+                    handles.into_iter().enumerate().map(|(d, h)| (d, h.join().unwrap())).collect();
+                out.sort_by_key(|(d, _)| *d);
+                out.into_iter().map(|(_, g)| g).collect()
+            })
+        };
+        let in_order = run(&[0, 1, 2]);
+        for order in [[2, 0, 1], [1, 2, 0], [2, 1, 0]] {
+            let scrambled = run(&order);
+            assert_eq!(in_order, scrambled, "backend {which}, order {order:?}");
+        }
+        // id-order fold: (1e8 + 1.0) + (-1e8) == 0.0 in f32
+        for (d, shard) in in_order.iter().enumerate() {
+            assert_eq!(shard, &vec![0.0f32; 2], "backend {which} dev {d}");
+        }
+    }
 }
 
 /// The minibatch-scoped gather cache returns bytes identical to direct
@@ -262,7 +314,7 @@ fn param_updates_visible_next_step() {
                             buf.iter().all(|&x| (x - (1.0 + step as f32)).abs() < 1e-6),
                             "backend {which} step {step}: saw {buf:?}"
                         );
-                        backend.reduce_grad(dev, 0, &vec![0.0f32; p.padded_len()], 1.0);
+                        backend.reduce_grad(dev, 0, &vec![0.0f32; p.padded_len()], 1.0, dev as u64);
                         backend.end_minibatch(dev);
                         let r = p.shard_range(dev);
                         let newv = vec![2.0 + step as f32; r.len()];
@@ -299,7 +351,7 @@ fn hybrid_skewed_counts_arena_growth_stops_after_warmup() {
                     for _ in 0..n {
                         for _m in 0..micros(dev) {
                             for (l, p) in store.layers.iter().enumerate() {
-                                comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0);
+                                comm.reduce_grad(dev, l, &vec![1.0f32; p.padded_len()], 1.0, (8 * dev + _m) as u64);
                             }
                         }
                         comm.end_minibatch(dev);

@@ -194,10 +194,11 @@ fn gather_cache_equivalent_multi_device() {
     if !have_artifacts() {
         return;
     }
-    // Same comparison at world=2. Daemon arrival order across clients
-    // is scheduling-dependent (float accumulation is not associative),
-    // so this run asserts the seed tests' tolerance rather than
-    // bit-equality — the world=1 test above pins the exact bytes.
+    // Same comparison at world=2. Since the id-keyed fold landed, ODC's
+    // daemon folds in canonical plan order regardless of arrival, so
+    // even the multi-client run is BIT-comparable — assert_eq, no
+    // tolerance (the seed version of this test allowed 1e-4 because the
+    // fold order was arrival-dependent).
     let mut cached = base_cfg();
     cached.scheme = CommScheme::Odc;
     cached.balancer = Balancer::LbMicro;
@@ -208,11 +209,10 @@ fn gather_cache_equivalent_multi_device() {
     let b = train(&uncached).unwrap();
     for (x, y) in a.logs.iter().zip(&b.logs) {
         assert_eq!(x.tokens, y.tokens);
-        assert!((x.loss - y.loss).abs() < 1e-4, "step {}: {} vs {}", x.step, x.loss, y.loss);
+        assert_eq!(x.loss, y.loss, "step {}: {} vs {}", x.step, x.loss, y.loss);
     }
     for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
-        let d = rel_l2(pb, pa);
-        assert!(d < 1e-4, "layer {l}: rel L2 {d}");
+        assert_eq!(pa, pb, "layer {l}: cached vs uncached must be bit-identical");
     }
 }
 
@@ -387,6 +387,104 @@ fn hybrid_gather_cache_bit_identical() {
     for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
         assert_eq!(pa, pb, "layer {l}: cached vs uncached must be bit-identical");
     }
+}
+
+/// The pinned world=2 Queue-packed plans (LB-Mini composition) plus the
+/// single-device oracle replaying them flattened in canonical (device
+/// asc, slot asc) id order — the order the id-keyed fold reproduces
+/// under ANY dispatch interleaving.
+fn queue_plans_and_oracle() -> Option<(Vec<Plan>, TrainRun)> {
+    let mut pin = base_cfg();
+    pin.scheme = CommScheme::Odc;
+    pin.balancer = Balancer::Queue;
+    let plans2 = plan_preview(&pin).unwrap();
+    let flat: Vec<Plan> = plans2
+        .iter()
+        .map(|p| Plan { micro: vec![p.micro.iter().flatten().filter(|m| !m.is_empty()).cloned().collect()] })
+        .collect();
+    let mut solo_cfg = base_cfg();
+    solo_cfg.world = 1;
+    solo_cfg.minibs = 4; // 1×4 == 2×2 samples per optimizer step
+    solo_cfg.scheme = CommScheme::Odc;
+    solo_cfg.balancer = Balancer::LbMicro;
+    solo_cfg.plan_override = Some(flat);
+    let solo = try_train(&solo_cfg)?;
+    Some((plans2, solo))
+}
+
+/// THE DynDispatch acceptance case: work-queue dispatch while one
+/// device runs 4× slow. Placement is decided at runtime by whichever
+/// device pulls first — yet the id-keyed fold makes the run
+/// BIT-identical in loss and parameters to the single-device oracle,
+/// for both one-sided backends. assert_eq, no tolerance.
+#[test]
+fn queue_dispatch_bit_identical_to_oracle_under_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    let Some((plans2, solo)) = queue_plans_and_oracle() else { return };
+    for (scheme, label) in [(CommScheme::Odc, "queue×odc"), (CommScheme::Hybrid, "queue×hybrid")] {
+        let mut c = base_cfg();
+        c.scheme = scheme;
+        c.balancer = Balancer::Queue;
+        c.devices_per_node = 0;
+        c.device_speed = vec![0.25, 1.0]; // device 0 is a 4× straggler
+        c.plan_override = Some(plans2.clone());
+        let Some(r) = try_train(&c) else { return };
+        for (a, b) in solo.logs.iter().zip(&r.logs) {
+            assert_eq!(a.tokens, b.tokens, "{label} step {}", a.step);
+            assert_eq!(a.loss, b.loss, "{label} step {}: loss must be bit-identical to the oracle", a.step);
+        }
+        for (l, (pa, pb)) in solo.final_params.iter().zip(&r.final_params).enumerate() {
+            assert_eq!(pa, pb, "{label} layer {l}: params must be bit-identical to the oracle");
+        }
+    }
+}
+
+/// Queue dispatch is repeatable: two runs under the same skew give the
+/// same bits even though the realized placements may differ — the fold
+/// key is the plan, not the schedule.
+#[test]
+fn queue_dispatch_deterministic_across_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::Queue;
+    c.device_speed = vec![1.0, 0.25];
+    let Some(a) = try_train(&c) else { return };
+    let Some(b) = try_train(&c) else { return };
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}");
+    }
+}
+
+/// Queue×Collective is a config error (runtime placement cannot honour
+/// a fixed barrier schedule) — rejected before artifacts are touched.
+#[test]
+fn queue_rejected_under_collective() {
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::Queue;
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+}
+
+/// Malformed device_speed vectors are config errors too.
+#[test]
+fn device_speed_validated() {
+    let mut c = base_cfg();
+    c.device_speed = vec![1.0]; // world is 2
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("one entry per device"), "unexpected error: {err}");
+    c.device_speed = vec![1.0, 0.0];
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("finite and > 0"), "unexpected error: {err}");
 }
 
 /// Config validation runs before artifacts are touched, so this holds
