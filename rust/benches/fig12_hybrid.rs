@@ -21,7 +21,7 @@ use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, S
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::report::{pct_delta, Table};
 use odc::sim::run::{simulate, SimConfig};
-use odc::sim::timeline::hybrid_step_overhead_bytes;
+use odc::sim::timeline::{hybrid_step_overhead_bytes, recovery_epilogue_bytes};
 use std::path::Path;
 
 fn cell(scheme: CommScheme, bal: Balancer, sharding: Sharding, minibs: usize, devices: usize) -> ExperimentConfig {
@@ -157,6 +157,26 @@ fn engine_mode() {
         measured * 1e3
     );
     println!("(prediction prices the paper topology's NICs; the engine moves shared memory — compare shapes, not absolutes)");
+
+    // ---- ElasticWorld: predicted vs measured recovery overhead ----
+    // One crash (device 1, minibatch 1, before its 2nd pull) under
+    // Queue×ODC: the sim prices the successor's state re-read + orphan
+    // re-dispatch (recovery_epilogue_bytes over the tiny model's f32
+    // bytes); the trainer measures the same recovery work end to end
+    // (orphan daemon flush, shard adoption, optimizer catch-up).
+    let mut fcfg = mk(CommScheme::Odc, Balancer::Queue, 0);
+    fcfg.fail_at = vec![(1, 1, 1)];
+    match train(&fcfg) {
+        Ok(r) => {
+            let predicted_rec = recovery_epilogue_bytes(4.0 * man.total_params as f64, world, &topo, 1);
+            println!(
+                "elastic recovery overhead (1 crash):  sim-predicted {:.3} ms  |  engine-measured {:.3} ms",
+                predicted_rec * 1e3,
+                r.recovery_s * 1e3
+            );
+        }
+        Err(e) => println!("fig12 --engine: elastic run unavailable ({e}); skipping recovery row."),
+    }
 }
 
 fn main() {

@@ -45,8 +45,9 @@
 use super::cost::CostModel;
 use super::packers::Plan;
 use crate::config::{Balancer, CommScheme};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// One dispatched unit of work: a packed microbatch plus the fold key.
 #[derive(Clone, Debug)]
@@ -66,8 +67,19 @@ pub struct MicroAssignment {
 /// until it returns `None`, then proceeds to `end_minibatch`.
 pub trait Dispatcher: Send + Sync {
     /// The next microbatch for `device`, or `None` when the device is
-    /// done with this minibatch. Never blocks.
+    /// done with this minibatch. Never blocks — EXCEPT under an elastic
+    /// wrapper ([`ElasticDispatch`]), where a drained survivor briefly
+    /// waits for a scheduled crash to resolve so orphaned work cannot
+    /// be abandoned.
     fn next_micro(&self, device: usize) -> Option<MicroAssignment>;
+
+    /// `device` crashed: re-enqueue its in-flight assignment (pulled
+    /// but never run) and anything still reserved for it, for surviving
+    /// pullers. Exactly-once stays intact — completed microbatches were
+    /// already delivered and are NOT re-enqueued. Default: no-op (the
+    /// plain dispatchers have no failure concept; the engine only
+    /// reports failures through the elastic wrapper).
+    fn report_failed(&self, _device: usize) {}
 
     /// Total assignments this dispatcher serves across all devices
     /// (padded empty slots included).
@@ -200,6 +212,145 @@ impl Dispatcher for WorkQueue {
     }
 }
 
+/// Elastic wrapper around any inner dispatcher: the ElasticWorld seam
+/// where a crashed device's work is recovered and a dormant (not yet
+/// joined) device's share is redistributed.
+///
+/// * Every assignment served is recorded **in-flight** for its puller;
+///   the puller's next call implicitly completes it (the trainer's pull
+///   loop is synchronous). `report_failed(device)` moves the device's
+///   in-flight assignment — pulled at the crash point, never run — to
+///   the front of a shared **orphan queue**, and (for row-based inners,
+///   i.e. static plans) drains the device's unpulled row behind it.
+///   Survivors serve orphans before pulling their own source, so the
+///   LPT-ish order is preserved and every microbatch runs exactly once.
+/// * A survivor that drains its source while a scheduled crash is still
+///   unresolved WAITS (condvar) instead of returning `None`: the
+///   crasher's orphans may still appear, and abandoning them would
+///   deadlock the minibatch fold. A scheduled crasher itself never
+///   waits — its `None` lets the trainer resolve the crash at drain
+///   time ("crash at the k-th pull, or at the minibatch's end if fewer
+///   pulls happen", so the membership schedule always holds).
+/// * Exactly-once is asserted end-to-end by `tests/elastic_prop.rs`.
+pub struct ElasticDispatch {
+    inner: Arc<dyn Dispatcher>,
+    /// Whether the inner dispatcher reserves work per device row
+    /// (static plans) — then a failed/absent device's row must be
+    /// drained into the orphan queue; a shared-pool inner (WorkQueue)
+    /// needs no draining, survivors pull the pool directly.
+    row_based: bool,
+    /// Devices scheduled to crash during this minibatch.
+    crasher: Vec<bool>,
+    state: Mutex<ElasticState>,
+    cond: Condvar,
+}
+
+struct ElasticState {
+    in_flight: Vec<Option<MicroAssignment>>,
+    orphans: VecDeque<MicroAssignment>,
+    resolved: Vec<bool>,
+    unresolved: usize,
+}
+
+impl ElasticDispatch {
+    /// Wrap `inner` for one minibatch. `crasher[d]` = device d crashes
+    /// during this minibatch; `absent[d]` = device d contributes
+    /// nothing (not yet joined, or dead since an earlier step) — its
+    /// row (if any) is orphaned immediately.
+    pub fn new(inner: Arc<dyn Dispatcher>, crasher: Vec<bool>, absent: &[bool], row_based: bool) -> Self {
+        let world = crasher.len();
+        assert_eq!(absent.len(), world);
+        let mut orphans = VecDeque::new();
+        if row_based {
+            for (dev, &gone) in absent.iter().enumerate() {
+                if gone {
+                    while let Some(a) = inner.next_micro(dev) {
+                        if !a.samples.is_empty() {
+                            orphans.push_back(a);
+                        }
+                    }
+                }
+            }
+        }
+        let unresolved = crasher.iter().filter(|&&c| c).count();
+        ElasticDispatch {
+            inner,
+            row_based,
+            crasher,
+            state: Mutex::new(ElasticState {
+                in_flight: vec![None; world],
+                orphans,
+                resolved: vec![false; world],
+                unresolved,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+}
+
+impl Dispatcher for ElasticDispatch {
+    fn next_micro(&self, device: usize) -> Option<MicroAssignment> {
+        {
+            // The previous assignment (if any) completed; orphans first,
+            // so recovered work is never starved behind fresh pulls.
+            let mut st = self.state.lock().unwrap();
+            st.in_flight[device] = None;
+            if let Some(a) = st.orphans.pop_front() {
+                st.in_flight[device] = Some(a.clone());
+                return Some(a);
+            }
+        }
+        if let Some(a) = self.inner.next_micro(device) {
+            let mut st = self.state.lock().unwrap();
+            st.in_flight[device] = Some(a.clone());
+            return Some(a);
+        }
+        // Source drained: leave only once no scheduled crash can still
+        // orphan work. The crasher itself leaves immediately (the
+        // trainer resolves it via report_failed).
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(a) = st.orphans.pop_front() {
+                st.in_flight[device] = Some(a.clone());
+                return Some(a);
+            }
+            if st.unresolved == 0 || self.crasher[device] {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    fn report_failed(&self, device: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(a) = st.in_flight[device].take() {
+            // pulled at the crash point, never run: next in line
+            st.orphans.push_front(a);
+        }
+        if self.row_based {
+            // the rest of the dead device's statically reserved row
+            while let Some(a) = self.inner.next_micro(device) {
+                if !a.samples.is_empty() {
+                    st.orphans.push_back(a);
+                }
+            }
+        }
+        if self.crasher[device] && !st.resolved[device] {
+            st.resolved[device] = true;
+            st.unresolved -= 1;
+        }
+        self.cond.notify_all();
+    }
+
+    fn total_micros(&self) -> usize {
+        self.inner.total_micros()
+    }
+
+    fn name(&self) -> &'static str {
+        "elastic"
+    }
+}
+
 /// The dispatcher a (balancer, scheme) pair gets for one minibatch plan.
 /// `Balancer::Queue` runs the shared work queue (legal because its
 /// validity was checked at config time: never under `Collective`); every
@@ -221,6 +372,29 @@ pub fn make_dispatcher(
     }
 }
 
+/// [`make_dispatcher`] plus the ElasticWorld wrapper: when this
+/// minibatch has scheduled crashers or absent devices, the inner
+/// dispatcher is wrapped in [`ElasticDispatch`] so their work is
+/// orphaned and re-pulled by survivors; otherwise the plain dispatcher
+/// is returned untouched (zero overhead for static membership).
+pub fn make_elastic_dispatcher(
+    balancer: Balancer,
+    scheme: CommScheme,
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    crasher: &[bool],
+    absent: &[bool],
+) -> Arc<dyn Dispatcher> {
+    let inner = make_dispatcher(balancer, scheme, plan, lens, cost);
+    if crasher.iter().any(|&c| c) || absent.iter().any(|&a| a) {
+        let row_based = balancer != Balancer::Queue;
+        Arc::new(ElasticDispatch::new(inner, crasher.to_vec(), absent, row_based))
+    } else {
+        inner
+    }
+}
+
 /// THE greedy pull-scheduling kernel: item `i` (in pull order) runs on
 /// the device with the lowest accumulated busy time (lowest index on
 /// ties), occupying it for `duration(i, device)`. This is the engine's
@@ -228,16 +402,41 @@ pub fn make_dispatcher(
 /// timeline simulator, the bubble estimator and the makespan tests all
 /// share, so the priced model and the property-tested model cannot
 /// diverge. Returns the final per-device busy times.
-pub fn pull_schedule(n: usize, world: usize, mut duration: impl FnMut(usize, usize) -> f64) -> Vec<f64> {
+pub fn pull_schedule(n: usize, world: usize, duration: impl FnMut(usize, usize) -> f64) -> Vec<f64> {
+    let mut budget = vec![usize::MAX; world];
+    pull_schedule_budgeted(n, world, &mut budget, duration)
+}
+
+/// [`pull_schedule`] with a per-device pull budget — the ElasticWorld
+/// failover variant: a dead device has budget 0, a device crashing
+/// mid-minibatch has exactly its completed pull count, everyone else is
+/// unbounded. Item `i` runs on the earliest-free device with budget
+/// remaining (lowest index on ties — the same rule as the unbudgeted
+/// kernel, which delegates here), consuming one unit. Keeping one
+/// definition means failure-step pricing cannot diverge from
+/// healthy-step pricing or from the property-tested makespan model.
+pub fn pull_schedule_budgeted(
+    n: usize,
+    world: usize,
+    budget: &mut [usize],
+    mut duration: impl FnMut(usize, usize) -> f64,
+) -> Vec<f64> {
     assert!(world > 0);
+    assert_eq!(budget.len(), world);
     let mut busy = vec![0.0f64; world];
     for item in 0..n {
-        let mut d = 0;
-        for (k, &b) in busy.iter().enumerate().skip(1) {
-            if b < busy[d] {
-                d = k;
+        let mut pick: Option<usize> = None;
+        for d in 0..world {
+            if budget[d] == 0 {
+                continue;
+            }
+            match pick {
+                Some(p) if busy[d] >= busy[p] => {}
+                _ => pick = Some(d),
             }
         }
+        let d = pick.expect("at least one device with pull budget left");
+        budget[d] -= 1;
         busy[d] += duration(item, d);
     }
     busy
@@ -325,6 +524,51 @@ mod tests {
         assert_eq!(q.name(), "queue");
         let s = make_dispatcher(Balancer::LbMini, CommScheme::Odc, &plan, &lens, &c);
         assert_eq!(s.name(), "static");
+    }
+
+    #[test]
+    fn elastic_wrapper_reenqueues_failed_work() {
+        let (plan, lens) = plan();
+        let c = cost();
+        let inner = make_dispatcher(Balancer::Queue, CommScheme::Odc, &plan, &lens, &c);
+        let d = ElasticDispatch::new(inner, vec![true, false], &[false, false], false);
+        // device 0 pulls the costliest micro, then crashes holding it
+        let a = d.next_micro(0).unwrap();
+        d.report_failed(0);
+        // device 1 gets the orphan FIRST, then the rest — exactly once
+        let ids: Vec<u64> = std::iter::from_fn(|| d.next_micro(1)).map(|x| x.id).collect();
+        assert_eq!(ids[0], a.id, "the orphaned in-flight assignment is served next");
+        let mut all = ids;
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2], "every microbatch exactly once across the crash");
+    }
+
+    #[test]
+    fn elastic_wrapper_drains_absent_static_rows() {
+        let (plan, _lens) = plan();
+        let inner: Arc<dyn Dispatcher> = Arc::new(StaticDispatch::new(&plan, false));
+        let d = ElasticDispatch::new(inner, vec![false, false], &[false, true], true);
+        // device 1 is absent (not yet joined): its whole row is orphaned
+        // at construction, and device 0 serves orphans before its own row
+        let ids: Vec<u64> = std::iter::from_fn(|| d.next_micro(0)).map(|x| x.id).collect();
+        let mut all = ids;
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2], "the absent device's share is redistributed");
+    }
+
+    #[test]
+    fn elastic_wrapper_crash_at_drain_resolves() {
+        let (plan, lens) = plan();
+        let c = cost();
+        let inner = make_dispatcher(Balancer::Queue, CommScheme::Odc, &plan, &lens, &c);
+        let d = ElasticDispatch::new(inner, vec![true, false], &[false, false], false);
+        // the crasher itself drains the queue without hitting its fail
+        // pull: it gets None immediately (never waits on itself)...
+        while d.next_micro(0).is_some() {}
+        // ...and its drain-time report resolves the pending crash so
+        // survivors stop waiting and leave.
+        d.report_failed(0);
+        assert!(d.next_micro(1).is_none());
     }
 
     #[test]

@@ -44,6 +44,18 @@
 //! The two ✗ cells are rejected at config validation
 //! ([`crate::config::Balancer::legal_under`] — the trainer and the sim
 //! CLI both enforce it) rather than discovered as a deadlock at runtime.
+//!
+//! ### Elastic membership
+//!
+//! The same freedom extends to the fleet itself: under an ElasticWorld
+//! schedule ([`crate::comm::membership`]) each minibatch's dispatcher
+//! is wrapped in [`ElasticDispatch`], which re-enqueues a crashed
+//! device's in-flight and reserved microbatches for surviving pullers
+//! (`Dispatcher::report_failed`) and redistributes an absent device's
+//! share — exactly-once either way, and bit-identical thanks to the
+//! id-keyed fold. Elastic knobs are likewise ✗ under Collective: one
+//! dead rank deadlocks a per-layer barrier schedule, which is the
+//! paradigm contrast the failure scenario exists to measure.
 
 pub mod bubble;
 pub mod cost;
@@ -53,6 +65,9 @@ pub mod packers;
 
 pub use bubble::{estimate_bubble, estimate_bubble_dispatch, BubbleReport};
 pub use cost::CostModel;
-pub use dispatch::{make_dispatcher, Dispatcher, MicroAssignment, StaticDispatch, WorkQueue};
+pub use dispatch::{
+    make_dispatcher, make_elastic_dispatcher, Dispatcher, ElasticDispatch, MicroAssignment,
+    StaticDispatch, WorkQueue,
+};
 pub use kk::karmarkar_karp;
 pub use packers::{plan_run, Plan};

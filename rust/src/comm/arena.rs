@@ -96,6 +96,15 @@ impl PayloadArena {
         self.slots.lock().unwrap().push(buf);
     }
 
+    /// Free every resident buffer: the pair's client is gone for good
+    /// (ElasticWorld device failure), so its prealloc is dead weight.
+    /// The counters keep their history; `resident` drops to 0. A retired
+    /// arena still works if ever used again — acquires just fall through
+    /// to fresh allocations.
+    pub fn retire(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+
     pub fn stats(&self) -> ArenaStats {
         ArenaStats {
             acquires: self.acquires.load(Ordering::Relaxed),

@@ -20,18 +20,35 @@
 //! mailbox pushes, so the ONLY synchronization is `end_minibatch` /
 //! `end_step` (Figure 2).
 
+use super::membership::OptReplica;
 use super::shared::ShardedParam;
 use std::sync::Arc;
 
 /// Parameter store shared by engine and backends: one sharded flat
 /// vector per layer (layer 0 = embedding, 1..=L = blocks).
+///
+/// Alongside the parameter windows it holds the **replicated optimizer
+/// moments** ([`OptReplica`], one per layer in the same padded layout)
+/// — the classical PS fault-tolerance substrate: shard owners publish
+/// their Adam state every step, so a rendezvous successor or a late
+/// joiner recovers the exact bytes (see [`super::membership`]).
 pub struct ParamStore {
     pub layers: Vec<Arc<ShardedParam>>,
+    /// Replicated Adam `m`/`v` windows, indexed like `layers`. Zeroed
+    /// at construction — which IS the correct step-0 state. Written
+    /// only under elastic membership schedules (a static run never
+    /// reads them back, so its optimizer phase skips the publish; the
+    /// zero-filled windows themselves are lazily paged and cost no
+    /// steady-state traffic).
+    pub opt: Vec<Arc<OptReplica>>,
 }
 
 impl ParamStore {
     pub fn new(layer_lens: &[usize], world: usize) -> Self {
-        ParamStore { layers: layer_lens.iter().map(|&l| Arc::new(ShardedParam::new(l, world))).collect() }
+        let layers: Vec<Arc<ShardedParam>> =
+            layer_lens.iter().map(|&l| Arc::new(ShardedParam::new(l, world))).collect();
+        let opt = layers.iter().map(|l| Arc::new(OptReplica::new(l.padded_len()))).collect();
+        ParamStore { layers, opt }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -129,4 +146,26 @@ pub trait CommBackend: Send + Sync {
 
     /// Human-readable scheme name (reports/logs).
     fn name(&self) -> &'static str;
+
+    // ---- ElasticWorld hooks (see `comm::membership`) -------------------
+    //
+    // Only meaningful on one-sided backends constructed with a
+    // non-static membership schedule; config validation guarantees the
+    // engine never calls them on `Collective` (whose per-layer
+    // rendezvous cannot survive a dead rank — the structural contrast
+    // the elastic scenario exists to measure).
+
+    /// Complete the current minibatch for an orphaned shard: flush its
+    /// (still-running) daemon so the caller can `take_grad_shard(shard,
+    /// ..)` the fold. Called by the rendezvous successor between its own
+    /// `end_minibatch` and `end_step`, once per orphaned shard per step.
+    fn flush_shard(&self, _shard: usize) {
+        unreachable!("flush_shard requires a one-sided backend with elastic membership")
+    }
+
+    /// Block a late joiner until its join step's boundary: every barrier
+    /// round of earlier steps has completed, so the parameter windows
+    /// and replicated optimizer state it is about to read are settled.
+    /// No-op for founding members and static schedules.
+    fn await_join(&self, _dev: usize) {}
 }

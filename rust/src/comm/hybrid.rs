@@ -68,6 +68,18 @@
 //! across runs — the one Queue combination where timing can move
 //! low-order bits (see the legality notes in `balance`'s module docs).
 //!
+//! ## Elastic membership
+//!
+//! Under a non-static [`Membership`] schedule the recovery rules of
+//! [`super::membership`] apply at BOTH levels: the intra fold quorum is
+//! the group's live member count, a dead/dormant member's intra flush +
+//! cross pushes + replica-refresh slice are driven by its in-group
+//! rendezvous driver ([`Membership::driven_by`]), its global optimizer
+//! shard is adopted by the global ring successor via
+//! [`CommBackend::flush_shard`], and the `end_step` barrier pair
+//! follows the live quorum. Every group must keep one completing
+//! member per step ([`Membership::validate_groups`]).
+//!
 //! Buffering-until-flush is a deliberate memory-for-exactness trade:
 //! eager per-client partial accumulators would cap memory at
 //! O(group_size × layers) but change the float bracketing across
@@ -79,10 +91,12 @@
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
 use super::backend::{CommBackend, GatherPolicy, ParamStore};
+use super::membership::{Membership, MembershipBarrier};
 use super::shared::SharedBuf;
 use super::topology::GroupMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 enum Msg {
@@ -120,6 +134,13 @@ struct IntraPiece {
 struct DaemonState {
     group_size: usize,
     n_groups: usize,
+    /// Elastic schedule: the intra fold's quorum is the group's live
+    /// member count at the daemon's own minibatch index.
+    membership: Arc<Membership>,
+    /// First global device id of this daemon's node group.
+    group_start: usize,
+    /// This daemon's minibatch index (increments at each intra fold).
+    intra_mb: usize,
     /// Intra super-shard length per layer (`padded_len / group_size`).
     super_lens: Vec<usize>,
     /// Global optimizer shard length per layer.
@@ -135,11 +156,21 @@ struct DaemonState {
 }
 
 impl DaemonState {
-    fn new(super_lens: Vec<usize>, shard_lens: Vec<usize>, group_size: usize, n_groups: usize) -> Self {
+    fn new(
+        super_lens: Vec<usize>,
+        shard_lens: Vec<usize>,
+        membership: Arc<Membership>,
+        group_start: usize,
+        group_size: usize,
+        n_groups: usize,
+    ) -> Self {
         let n_layers = super_lens.len();
         DaemonState {
             group_size,
             n_groups,
+            membership,
+            group_start,
+            intra_mb: 0,
             pending_intra: (0..n_layers).map(|_| Vec::new()).collect(),
             pending_cross: (0..n_layers).map(|_| vec![None; n_groups]).collect(),
             super_lens,
@@ -149,6 +180,14 @@ impl DaemonState {
             cross_done: 0,
             cross_flush: None,
         }
+    }
+
+    /// Intra fold quorum for the current minibatch: group members that
+    /// complete it (a member crashing mid-minibatch, or not yet joined,
+    /// never sends `IntraDone` and is not waited for).
+    fn expected_intra(&self) -> usize {
+        self.membership
+            .expected_done_among(self.group_start..self.group_start + self.group_size, self.intra_mb)
     }
 
     /// Fold the intra-level pieces in (global microbatch id asc, client
@@ -162,7 +201,7 @@ impl DaemonState {
         let mut out = Vec::with_capacity(self.super_lens.len());
         for (layer, &len) in self.super_lens.iter().enumerate() {
             let pieces = &mut self.pending_intra[layer];
-            pieces.sort_by(|a, b| (a.micro, a.client).cmp(&(b.micro, b.client)));
+            pieces.sort_by_key(|p| (p.micro, p.client));
             let mut acc = vec![0.0f32; len];
             for p in pieces.drain(..) {
                 debug_assert_eq!(p.data.len(), len);
@@ -226,10 +265,18 @@ fn daemon_loop(
             Msg::CrossFlush { reply } => st.cross_flush = Some(reply),
             Msg::Shutdown => return,
         }
-        if st.intra_done == st.group_size {
+        if st.intra_done == st.expected_intra() {
             if let Some(reply) = st.intra_flush.take() {
                 let out = st.fold_intra(&intra_arenas);
+                // A group member that crashed during this minibatch has
+                // pushed its last piece: release its arena column.
+                for (local, arena) in intra_arenas.iter().enumerate() {
+                    if st.membership.fails_during(st.group_start + local, st.intra_mb) {
+                        arena.retire();
+                    }
+                }
                 st.intra_done = 0;
+                st.intra_mb += 1;
                 let _ = reply.send(out);
             }
         }
@@ -252,9 +299,16 @@ pub struct HybridComm {
     replicas: Vec<Vec<SharedBuf>>,
     /// Mailbox senders, one per device (serving both levels).
     mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
-    /// Fully-reduced optimizer shards returned at the minibatch boundary.
+    /// Fully-reduced optimizer shards returned at the minibatch boundary
+    /// (written by the owner, or by a rendezvous successor's
+    /// `flush_shard` for an orphaned shard).
     taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
-    barrier: Barrier,
+    barrier: MembershipBarrier,
+    membership: Arc<Membership>,
+    /// Per-device current step (advanced at `end_step`; a joiner fast-
+    /// forwards in `await_join`) — selects the membership row that
+    /// decides whose group-level epilogue duties this device drives.
+    step_ctr: Vec<AtomicUsize>,
     daemons: Mutex<Vec<JoinHandle<()>>>,
     /// Intra-level arenas indexed `[server][group-local client]`.
     intra_arenas: ArenaMatrix,
@@ -272,6 +326,22 @@ impl HybridComm {
     /// `ParamStore` whose parameters are already initialized — the group
     /// replicas are seeded from it here.
     pub fn new(params: Arc<ParamStore>, world: usize, group_size: usize) -> Self {
+        HybridComm::with_membership(params, Arc::new(Membership::all_live(world)), group_size)
+    }
+
+    /// Two-level backend over an elastic membership schedule (see
+    /// [`crate::comm::membership`]): intra-group fold quorums, the
+    /// step barrier pair, epilogue driving for dead/dormant members and
+    /// replica-refresh adoption all follow the schedule. Requires every
+    /// group to keep a completing member at every step
+    /// ([`Membership::validate_groups`] — the trainer checks). With a
+    /// static schedule this is exactly [`HybridComm::new`].
+    pub fn with_membership(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+    ) -> Self {
+        let world = membership.world();
         let groups = GroupMap::new(world, group_size);
         let n_groups = groups.n_groups();
         let super_lens: Vec<usize> =
@@ -307,7 +377,14 @@ impl HybridComm {
         let mut daemons = Vec::with_capacity(world);
         for dev in 0..world {
             let (tx, rx) = mpsc::channel::<Msg>();
-            let st = DaemonState::new(super_lens.clone(), shard_lens.clone(), group_size, n_groups);
+            let st = DaemonState::new(
+                super_lens.clone(),
+                shard_lens.clone(),
+                Arc::clone(&membership),
+                groups.group_of(dev) * group_size,
+                group_size,
+                n_groups,
+            );
             let intra_row = intra_arenas.row(dev);
             let cross_row = cross_arenas.row(dev);
             daemons.push(std::thread::spawn(move || daemon_loop(rx, st, intra_row, cross_row)));
@@ -320,11 +397,34 @@ impl HybridComm {
             replicas,
             mailbox,
             taken: (0..world).map(|_| Mutex::new(None)).collect(),
-            barrier: Barrier::new(world),
+            barrier: MembershipBarrier::new(Arc::clone(&membership), 2),
+            membership,
+            step_ctr: (0..world).map(|_| AtomicUsize::new(0)).collect(),
             daemons: Mutex::new(daemons),
             intra_arenas,
             cross_arenas,
             refresh_scratch: (0..world).map(|_| Mutex::new(vec![0.0f32; max_super])).collect(),
+        }
+    }
+
+    /// The cross-group epilogue for super-shard `j` of `group`: slice
+    /// the group-partial into global optimizer shards and push each
+    /// piece to its owner's mailbox, then notify the owners. Called by
+    /// the member owning `j` — or, when that member is dead or not yet
+    /// joined, by its in-group rendezvous driver on its behalf.
+    fn cross_push(&self, group: usize, j: usize, partial: &[Vec<f32>]) {
+        let n_groups = self.groups.n_groups();
+        for (layer, p) in self.params.layers.iter().enumerate() {
+            let k = p.shard_len;
+            for t in 0..n_groups {
+                let owner = j * n_groups + t;
+                let mut data = self.cross_arenas.arena(owner, group).acquire(k);
+                data.extend_from_slice(&partial[layer][t * k..(t + 1) * k]);
+                self.send(owner, Msg::CrossAccum { layer, group, data });
+            }
+        }
+        for t in 0..n_groups {
+            self.send(j * n_groups + t, Msg::CrossDone);
         }
     }
 
@@ -391,9 +491,9 @@ impl CommBackend for HybridComm {
     }
 
     fn end_minibatch(&self, dev: usize) {
+        let step = self.step_ctr[dev].load(Ordering::Relaxed);
         let group = self.groups.group_of(dev);
         let j = self.groups.local_index(dev);
-        let n_groups = self.groups.n_groups();
 
         // ---- intra epilogue: node-level reduce-scatter completes ----
         for peer in self.groups.members(group) {
@@ -406,17 +506,19 @@ impl CommBackend for HybridComm {
         // ---- cross epilogue: ship optimizer-shard pieces to owners ----
         // Super-shard j covers global owners j*n_groups..(j+1)*n_groups;
         // piece t of the super-shard is owner (j*n_groups + t)'s shard.
-        for (layer, p) in self.params.layers.iter().enumerate() {
-            let k = p.shard_len;
-            for t in 0..n_groups {
-                let owner = j * n_groups + t;
-                let mut data = self.cross_arenas.arena(owner, group).acquire(k);
-                data.extend_from_slice(&partial[layer][t * k..(t + 1) * k]);
-                self.send(owner, Msg::CrossAccum { layer, group, data });
-            }
-        }
-        for t in 0..n_groups {
-            self.send(j * n_groups + t, Msg::CrossDone);
+        self.cross_push(group, j, &partial);
+
+        // ---- drive dead/dormant group members' epilogues ----
+        // Their daemons hold real group partials (every member's pushes
+        // scatter to ALL the group's super-shards), but nobody is left
+        // to flush them or ship the pieces: the in-group rendezvous
+        // driver does, BEFORE blocking on its own cross flush — every
+        // owner's cross quorum stays whole and nothing deadlocks.
+        for m in self.membership.driven_by(dev, self.groups.members(group), step) {
+            let (tx, rx) = mpsc::channel();
+            self.send(m, Msg::IntraFlush { reply: tx });
+            let pm = rx.recv().expect("driven intra flush");
+            self.cross_push(group, self.groups.local_index(m), &pm);
         }
 
         // ---- wait for every group's partial of MY optimizer shard ----
@@ -433,25 +535,55 @@ impl CommBackend for HybridComm {
     }
 
     fn end_step(&self, dev: usize) {
-        // Barrier 1: every device has republished its optimizer shard
-        // into the global store.
+        let step = self.step_ctr[dev].fetch_add(1, Ordering::Relaxed);
+        // Barrier 1: every live device has republished its optimizer
+        // shard into the global store (quorum = the step's completers).
         self.barrier.wait();
         // Replica refresh: pull my super-shard of every layer from the
         // global store into my group's replica — the cross-node param
         // all-gather the simulator's hybrid_step_overhead prices
         // ((n_groups-1)/n_groups of these reads cross node boundaries).
+        // A dead or dormant member's slice is refreshed by its in-group
+        // driver: live members gather the WHOLE replica, so every slice
+        // must stay fresh no matter who owns it.
         let group = self.groups.group_of(dev);
-        let j = self.groups.local_index(dev);
         let mut scratch = self.refresh_scratch[dev].lock().unwrap();
-        for (layer, p) in self.params.layers.iter().enumerate() {
-            let s = p.padded_len() / self.groups.group_size;
-            let buf = &mut scratch[..s];
-            p.buf.read(j * s, buf);
-            self.replicas[group][layer].write(j * s, buf);
+        let mut locals = vec![self.groups.local_index(dev)];
+        for m in self.membership.driven_by(dev, self.groups.members(group), step) {
+            locals.push(self.groups.local_index(m));
+        }
+        for j in locals {
+            for (layer, p) in self.params.layers.iter().enumerate() {
+                let s = p.padded_len() / self.groups.group_size;
+                let buf = &mut scratch[..s];
+                p.buf.read(j * s, buf);
+                self.replicas[group][layer].write(j * s, buf);
+            }
         }
         drop(scratch);
         // Barrier 2: nobody gathers until every replica is fresh.
         self.barrier.wait();
+    }
+
+    fn flush_shard(&self, shard: usize) {
+        // The global rendezvous successor adopts the orphaned shard:
+        // the dead device's daemon still received every group's cross
+        // pieces (its in-group driver shipped the ones the dead worker
+        // would have), so its cross quorum completes like any other.
+        let (tx, rx) = mpsc::channel();
+        self.send(shard, Msg::CrossFlush { reply: tx });
+        let grads = rx.recv().expect("orphan cross flush");
+        *self.taken[shard].lock().unwrap() = Some(grads);
+    }
+
+    fn await_join(&self, dev: usize) {
+        let join = self.membership.joins_at(dev);
+        // Fast-forward the step counter past the steps sat out, then
+        // block until the join boundary: the previous step's refresh
+        // barrier has completed, so the group replica (and the
+        // replicated optimizer state about to be read) are settled.
+        self.step_ctr[dev].store(join, Ordering::Relaxed);
+        self.barrier.await_step_start(join);
     }
 
     fn name(&self) -> &'static str {

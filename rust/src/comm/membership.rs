@@ -1,0 +1,520 @@
+//! ElasticWorld: fault-tolerant elastic membership for the one-sided
+//! backends — the classical parameter-server property that collective
+//! FSDP structurally cannot offer (one dead rank deadlocks the next
+//! all-gather, while a dead PS client simply stops pushing).
+//!
+//! ## Failure model
+//!
+//! A device is a *worker* (its pull/compute thread) plus a *shard
+//! server* (the accumulation daemon owning its parameter/optimizer
+//! shard). A **crash** kills the worker mid-minibatch: it stops pulling
+//! microbatches, never sends its end-of-minibatch `Done`, and never
+//! reaches another barrier. The shard server is infrastructure — like a
+//! real PS server process it survives the worker (its state is exactly
+//! the replicated store the paradigm is built around), and a surviving
+//! worker *adopts* it. A **join** is the reverse transition: a device
+//! that sat out the early steps enters at a minibatch boundary, takes
+//! its shard back from the adopter, and recovers its optimizer state
+//! from the replicated store.
+//!
+//! The schedule is declared up front ([`Membership::with_schedule`],
+//! driven by `TrainerConfig::fail_at` / `join_at`), which keeps every
+//! recovery decision a *pure function of (device, step)* — no
+//! heartbeat races, no two survivors adopting the same shard, and the
+//! same rendezvous answer on every thread. The runtime dynamics (which
+//! microbatches the dead device actually held, who re-runs them) stay
+//! dynamic in the dispatch layer
+//! ([`crate::balance::dispatch::ElasticDispatch`]).
+//!
+//! ## Recovery timeline (one failure, ODC)
+//!
+//! ```text
+//!  step s (fail step)
+//!  ─ worker d crashes between pulls ──────────────────────────────────
+//!    d's completed micros: already pushed, kept in every daemon's
+//!      id-keyed buffer (exactly-once: they are NOT re-run)
+//!    d's in-flight + unpulled micros: orphaned to the dispatch layer,
+//!      re-pulled by survivors (exactly-once: they run exactly once)
+//!  ─ end_minibatch ───────────────────────────────────────────────────
+//!    every daemon folds with `expected_done(s)` clients (d dropped
+//!      from the fold quorum); d's payload arenas are released
+//!  ─ optimizer phase ─────────────────────────────────────────────────
+//!    rendezvous successor = first completing device after d in ring
+//!      order ([`Membership::owner_of`]) flushes d's daemon
+//!      (`CommBackend::flush_shard`), recovers d's shard params + Adam
+//!      moments from the replicated store ([`OptReplica`], written by
+//!      every owner every step), and applies the update for BOTH shards
+//!  ─ end_step ────────────────────────────────────────────────────────
+//!    barrier quorum shrinks to the live membership
+//!      ([`MembershipBarrier`]); steps > s repeat the adoption
+//! ```
+//!
+//! A join at step `j` is the mirror image: the joiner blocks on
+//! [`MembershipBarrier::await_step_start`] until step `j-1` fully
+//! ends, reads its shard's params + moments from the replicated store
+//! (bit-identical to what the adopter just published), and the
+//! ownership map flips back — making a late join bit-identical to a
+//! fresh run at the larger world size (pinned by
+//! `tests/engine_equivalence.rs`).
+//!
+//! Because the one-sided daemons fold gradient pieces keyed by global
+//! microbatch id — never by arrival or placement — re-running a dead
+//! device's microbatches on survivors cannot move a single bit: the
+//! elastic run reduces exactly what the healthy run reduces.
+
+use super::shared::SharedBuf;
+use std::sync::{Condvar, Mutex};
+
+/// The elastic membership schedule: which devices are alive at which
+/// step, and the deterministic rendezvous rule deciding who serves a
+/// dead or not-yet-joined device's shard.
+///
+/// Terminology used throughout:
+/// * a device **completes** step `s` when it runs the step end to end
+///   (reaches `end_minibatch` and `end_step`);
+/// * a device **fails during** step `s` when it crashes mid-minibatch
+///   in `s`: it may contribute early pushes but completes only steps
+///   `< s`;
+/// * a device is **absent** at step `s` when it has not yet joined or
+///   failed in an earlier step — it contributes nothing at all.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    world: usize,
+    /// First step each device participates in (0 = founding member).
+    join_step: Vec<usize>,
+    /// `Some(s)` = the device crashes during step `s`.
+    fail_step: Vec<Option<usize>>,
+}
+
+impl Membership {
+    /// The trivial schedule: every device alive for every step.
+    pub fn all_live(world: usize) -> Membership {
+        Membership { world, join_step: vec![0; world], fail_step: vec![None; world] }
+    }
+
+    /// Membership from join/fail events. `joins` are `(device, step)` —
+    /// the device's first participating step; `fails` are `(device,
+    /// step)` — the step the device crashes during. Structural errors
+    /// (out-of-range device, duplicates, fail before join) are caught
+    /// here; step-coverage errors need the run length and are caught by
+    /// [`Membership::validate`].
+    pub fn with_schedule(
+        world: usize,
+        joins: &[(usize, usize)],
+        fails: &[(usize, usize)],
+    ) -> Result<Membership, String> {
+        let mut m = Membership::all_live(world);
+        for &(dev, step) in joins {
+            if dev >= world {
+                return Err(format!("join device {dev} out of range (world {world})"));
+            }
+            if step == 0 {
+                // 0 is the founding-membership sentinel: accepting it as
+                // an "event" would make duplicate detection
+                // order-dependent.
+                return Err(format!(
+                    "device {dev} joins at step 0 — that is the founding membership; drop the event"
+                ));
+            }
+            if m.join_step[dev] != 0 {
+                return Err(format!("device {dev} has more than one join event"));
+            }
+            m.join_step[dev] = step;
+        }
+        for &(dev, step) in fails {
+            if dev >= world {
+                return Err(format!("fail device {dev} out of range (world {world})"));
+            }
+            if m.fail_step[dev].is_some() {
+                return Err(format!("device {dev} has more than one fail event"));
+            }
+            if step < m.join_step[dev] {
+                return Err(format!("device {dev} fails at step {step} before joining"));
+            }
+            m.fail_step[dev] = Some(step);
+        }
+        Ok(m)
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// No joins and no fails: the schedule degenerates to the seed
+    /// engine's fixed world.
+    pub fn is_static(&self) -> bool {
+        self.join_step.iter().all(|&j| j == 0) && self.fail_step.iter().all(|f| f.is_none())
+    }
+
+    /// First step `dev` participates in (0 = founding member).
+    pub fn joins_at(&self, dev: usize) -> usize {
+        self.join_step[dev]
+    }
+
+    /// Whether `dev` crashes mid-minibatch during `step`.
+    pub fn fails_during(&self, dev: usize, step: usize) -> bool {
+        self.fail_step[dev] == Some(step)
+    }
+
+    /// Whether `dev` runs `step` end to end (reaches both the
+    /// minibatch fold quorum and the step barrier).
+    pub fn completes(&self, dev: usize, step: usize) -> bool {
+        self.join_step[dev] <= step && !matches!(self.fail_step[dev], Some(f) if step >= f)
+    }
+
+    /// Whether `dev` contributes nothing at all to `step`: not yet
+    /// joined, or already dead before the step started. (A device
+    /// failing DURING `step` is not absent — it pulls until it crashes.)
+    pub fn absent(&self, dev: usize, step: usize) -> bool {
+        self.join_step[dev] > step || self.fail_step[dev].is_some_and(|f| f < step)
+    }
+
+    /// Fold/barrier quorum for `step`: how many devices complete it.
+    pub fn expected_done(&self, step: usize) -> usize {
+        (0..self.world).filter(|&d| self.completes(d, step)).count()
+    }
+
+    /// Quorum restricted to a contiguous device range (a hybrid node
+    /// group): how many of `devs` complete `step`.
+    pub fn expected_done_among(&self, devs: std::ops::Range<usize>, step: usize) -> usize {
+        devs.filter(|&d| self.completes(d, step)).count()
+    }
+
+    /// Lowest-id device completing `step` (well-defined whenever
+    /// [`Membership::validate`] passed).
+    pub fn first_completing(&self, step: usize) -> usize {
+        (0..self.world).find(|&d| self.completes(d, step)).expect("at least one live device")
+    }
+
+    /// THE rendezvous rule: who serves shard `shard` at `step`. The
+    /// shard's own device when it completes the step; otherwise the
+    /// first completing device after it in ring order — a pure function
+    /// of (shard, step) every thread computes identically, so exactly
+    /// one survivor adopts an orphaned shard and none race for it.
+    pub fn owner_of(&self, shard: usize, step: usize) -> usize {
+        for k in 0..self.world {
+            let d = (shard + k) % self.world;
+            if self.completes(d, step) {
+                return d;
+            }
+        }
+        panic!("no completing device at step {step} (validate the schedule first)")
+    }
+
+    /// Shards `dev` serves at `step`: its own plus any adopted via the
+    /// ring rule. Empty when `dev` does not complete the step.
+    pub fn shards_owned_by(&self, dev: usize, step: usize) -> Vec<usize> {
+        if !self.completes(dev, step) {
+            return Vec::new();
+        }
+        (0..self.world).filter(|&s| self.owner_of(s, step) == dev).collect()
+    }
+
+    /// Ring-scoped variant of the rendezvous rule: the members of
+    /// `devs` (a contiguous range — a hybrid node group, or the whole
+    /// world) that do NOT complete `step` and whose first completing
+    /// ring successor *within the range* is `me`. These are the peers
+    /// whose group-level epilogue duties `me` drives.
+    pub fn driven_by(&self, me: usize, devs: std::ops::Range<usize>, step: usize) -> Vec<usize> {
+        let base = devs.start;
+        let n = devs.len();
+        devs.filter(|&m| {
+                if self.completes(m, step) {
+                    return false;
+                }
+                // first completing member after m in the range's ring
+                for k in 1..n {
+                    let d = base + (m - base + k) % n;
+                    if self.completes(d, step) {
+                        return d == me;
+                    }
+                }
+                false
+            })
+            .collect()
+    }
+
+    /// Run-length checks: every step of `0..steps` must keep at least
+    /// one completing device (someone has to drive recovery and the
+    /// barriers), and every scheduled event must land inside the run.
+    pub fn validate(&self, steps: usize) -> Result<(), String> {
+        for (dev, &j) in self.join_step.iter().enumerate() {
+            if j >= steps && j != 0 {
+                return Err(format!("device {dev} joins at step {j}, beyond the {steps}-step run"));
+            }
+        }
+        for (dev, f) in self.fail_step.iter().enumerate() {
+            if let Some(f) = f {
+                if *f >= steps {
+                    return Err(format!(
+                        "device {dev} fails at step {f}, beyond the {steps}-step run"
+                    ));
+                }
+            }
+        }
+        for step in 0..steps {
+            if self.expected_done(step) == 0 {
+                return Err(format!("no device completes step {step}: nothing can drive recovery"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Group-tiled variant of [`Membership::validate`] for the hybrid
+    /// backend: every node group needs a completing member at every
+    /// step, because intra-group duties (the group fold, the cross
+    /// pushes of a dead member's super-shard, the replica refresh) can
+    /// only be adopted within the group that holds the replica.
+    pub fn validate_groups(&self, group_size: usize, steps: usize) -> Result<(), String> {
+        if group_size == 0 || self.world % group_size != 0 {
+            return Err(format!("group size {group_size} does not tile world {}", self.world));
+        }
+        for g in 0..self.world / group_size {
+            let devs = g * group_size..(g + 1) * group_size;
+            for step in 0..steps {
+                if self.expected_done_among(devs.clone(), step) == 0 {
+                    return Err(format!(
+                        "node group {g} has no completing member at step {step}: its replica \
+                         and super-shards would be unrecoverable"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A barrier whose per-round quorum follows the membership schedule: a
+/// crashed device never arrives (and is not waited for), a joiner is
+/// counted from its join step on. `rounds_per_step` maps barrier rounds
+/// to steps (ODC's `end_step` waits once per step, Hybrid's twice).
+pub struct MembershipBarrier {
+    membership: std::sync::Arc<Membership>,
+    rounds_per_step: usize,
+    state: Mutex<BarrierState>,
+    cond: Condvar,
+}
+
+struct BarrierState {
+    /// Completed rounds so far (monotone; round `r` belongs to step
+    /// `r / rounds_per_step`).
+    round: usize,
+    arrived: usize,
+}
+
+impl MembershipBarrier {
+    pub fn new(membership: std::sync::Arc<Membership>, rounds_per_step: usize) -> Self {
+        assert!(rounds_per_step >= 1);
+        MembershipBarrier {
+            membership,
+            rounds_per_step,
+            state: Mutex::new(BarrierState { round: 0, arrived: 0 }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Arrive at the current round; blocks until the round's quorum
+    /// (the devices completing its step) has arrived.
+    pub fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        let round = st.round;
+        st.arrived += 1;
+        let expected = self.membership.expected_done(round / self.rounds_per_step);
+        if st.arrived >= expected {
+            st.arrived = 0;
+            st.round += 1;
+            self.cond.notify_all();
+        } else {
+            while st.round == round {
+                st = self.cond.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Block until every barrier round of steps `< step` has completed,
+    /// WITHOUT arriving — the joiner's entry synchronization: after
+    /// this returns, step `step - 1`'s parameters (and replicated
+    /// optimizer state) are fully republished and nothing is mid-phase.
+    pub fn await_step_start(&self, step: usize) {
+        let target = step * self.rounds_per_step;
+        let mut st = self.state.lock().unwrap();
+        while st.round < target {
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+}
+
+/// Replicated per-layer optimizer moments (classical PS fault
+/// tolerance): every shard owner publishes its Adam `m`/`v` windows
+/// after each step, so a rendezvous successor (or a late joiner) can
+/// recover the exact state and continue bit-identically.
+///
+/// Laid out like the parameter windows (padded, `shard_len * world`),
+/// under the same phase discipline: written only in the optimizer
+/// phase by the shard's unique owner, read only by the next owner
+/// after an ownership handoff that a barrier round separates.
+pub struct OptReplica {
+    pub m: SharedBuf,
+    pub v: SharedBuf,
+}
+
+impl OptReplica {
+    pub fn new(padded_len: usize) -> Self {
+        OptReplica { m: SharedBuf::new(padded_len), v: SharedBuf::new(padded_len) }
+    }
+
+    /// Owner-side replication: publish the shard's moments at `offset`.
+    pub fn publish(&self, offset: usize, m: &[f32], v: &[f32]) {
+        self.m.write(offset, m);
+        self.v.write(offset, v);
+    }
+
+    /// Successor/joiner-side recovery: read the shard's moments back.
+    pub fn recover(&self, offset: usize, m: &mut [f32], v: &mut [f32]) {
+        self.m.read(offset, m);
+        self.v.read(offset, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn static_schedule_is_all_live() {
+        let m = Membership::all_live(4);
+        assert!(m.is_static());
+        for step in 0..5 {
+            assert_eq!(m.expected_done(step), 4);
+            for d in 0..4 {
+                assert!(m.completes(d, step));
+                assert!(!m.absent(d, step));
+                assert_eq!(m.owner_of(d, step), d);
+                assert_eq!(m.shards_owned_by(d, step), vec![d]);
+            }
+        }
+    }
+
+    #[test]
+    fn fail_shrinks_quorum_and_reowns_shard() {
+        let m = Membership::with_schedule(4, &[], &[(1, 2)]).unwrap();
+        assert!(!m.is_static());
+        // steps 0..2: everyone completes
+        assert_eq!(m.expected_done(1), 4);
+        assert!(m.completes(1, 1));
+        // step 2: device 1 fails DURING it — participates, never completes
+        assert!(m.fails_during(1, 2));
+        assert!(!m.completes(1, 2));
+        assert!(!m.absent(1, 2));
+        assert_eq!(m.expected_done(2), 3);
+        // step 3+: gone entirely
+        assert!(m.absent(1, 3));
+        // ring successor 2 adopts shard 1 from the fail step on
+        assert_eq!(m.owner_of(1, 2), 2);
+        assert_eq!(m.shards_owned_by(2, 2), vec![1, 2]);
+        assert_eq!(m.shards_owned_by(1, 2), Vec::<usize>::new());
+        assert_eq!(m.first_completing(2), 0);
+    }
+
+    #[test]
+    fn ring_rule_wraps() {
+        let m = Membership::with_schedule(3, &[], &[(2, 0)]).unwrap();
+        // shard 2's successor wraps to device 0
+        assert_eq!(m.owner_of(2, 0), 0);
+        assert_eq!(m.shards_owned_by(0, 0), vec![0, 2]);
+    }
+
+    #[test]
+    fn join_flips_ownership_back() {
+        let m = Membership::with_schedule(2, &[(1, 2)], &[]).unwrap();
+        assert!(m.absent(1, 0));
+        assert_eq!(m.expected_done(1), 1);
+        assert_eq!(m.owner_of(1, 1), 0, "pre-join the founding member adopts the shard");
+        assert_eq!(m.expected_done(2), 2);
+        assert_eq!(m.owner_of(1, 2), 1, "ownership reverts at the join boundary");
+        assert_eq!(m.joins_at(1), 2);
+    }
+
+    #[test]
+    fn driven_by_is_scoped_to_the_range() {
+        // world 4 in groups of 2; device 1 fails during step 0
+        let m = Membership::with_schedule(4, &[], &[(1, 0)]).unwrap();
+        assert_eq!(m.driven_by(0, 0..2, 0), vec![1], "group peer adopts the duties");
+        assert_eq!(m.driven_by(2, 2..4, 0), Vec::<usize>::new());
+        assert_eq!(m.driven_by(0, 0..4, 0), vec![1]);
+        assert_eq!(m.driven_by(2, 0..4, 0), Vec::<usize>::new(), "ring stops at the first completer");
+    }
+
+    #[test]
+    fn schedule_validation_catches_structural_errors() {
+        assert!(Membership::with_schedule(2, &[(5, 1)], &[]).is_err());
+        assert!(Membership::with_schedule(2, &[(1, 0)], &[]).is_err(), "join at step 0 is not an event");
+        assert!(Membership::with_schedule(2, &[], &[(0, 0), (0, 1)]).is_err());
+        assert!(Membership::with_schedule(2, &[(1, 3)], &[(1, 1)]).is_err(), "fail before join");
+        let all_dead = Membership::with_schedule(2, &[], &[(0, 1), (1, 1)]).unwrap();
+        let err = all_dead.validate(3).unwrap_err();
+        assert!(err.contains("no device completes"), "unexpected: {err}");
+        let late = Membership::with_schedule(2, &[], &[(0, 9)]).unwrap();
+        assert!(late.validate(3).is_err());
+    }
+
+    #[test]
+    fn group_validation_needs_a_live_member_per_group() {
+        let m = Membership::with_schedule(4, &[], &[(2, 1), (3, 1)]).unwrap();
+        assert!(m.validate(3).is_ok(), "globally fine: group 0 survives");
+        let err = m.validate_groups(2, 3).unwrap_err();
+        assert!(err.contains("no completing member"), "unexpected: {err}");
+        assert!(m.validate_groups(4, 3).is_ok(), "one big group keeps a live member");
+    }
+
+    #[test]
+    fn barrier_shrinks_to_live_quorum() {
+        // world 3, device 2 fails during step 0: rounds complete with 2
+        // arrivals from step 0 on — no deadlock waiting for the dead.
+        let m = Arc::new(Membership::with_schedule(3, &[], &[(2, 0)]).unwrap());
+        let b = Arc::new(MembershipBarrier::new(Arc::clone(&m), 1));
+        std::thread::scope(|s| {
+            for _dev in 0..2 {
+                let b = Arc::clone(&b);
+                s.spawn(move || {
+                    for _step in 0..3 {
+                        b.wait();
+                    }
+                });
+            }
+        });
+        // and a late observer sees all three rounds done
+        b.await_step_start(3);
+    }
+
+    #[test]
+    fn barrier_admits_joiner_at_its_step() {
+        let m = Arc::new(Membership::with_schedule(2, &[(1, 1)], &[]).unwrap());
+        let b = Arc::new(MembershipBarrier::new(Arc::clone(&m), 1));
+        std::thread::scope(|s| {
+            let b0 = Arc::clone(&b);
+            s.spawn(move || {
+                // founding member: steps 0, 1
+                b0.wait();
+                b0.wait();
+            });
+            let b1 = Arc::clone(&b);
+            s.spawn(move || {
+                // joiner: blocks until step 0 fully ends, then arrives
+                b1.await_step_start(1);
+                b1.wait();
+            });
+        });
+    }
+
+    #[test]
+    fn opt_replica_roundtrip() {
+        let r = OptReplica::new(8);
+        r.publish(2, &[1.0, 2.0], &[3.0, 4.0]);
+        let (mut m, mut v) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        r.recover(2, &mut m, &mut v);
+        assert_eq!(m, vec![1.0, 2.0]);
+        assert_eq!(v, vec![3.0, 4.0]);
+    }
+}

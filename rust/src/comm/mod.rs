@@ -22,6 +22,11 @@
 //! * [`gather_cache`] — minibatch-scoped parameter-gather cache (§6.2
 //!   parameter caching) for one-sided backends: each layer is gathered
 //!   once per minibatch and shared zero-copy from then on.
+//! * [`membership`] — ElasticWorld: fault-tolerant elastic membership
+//!   for the one-sided backends (device crash mid-minibatch, join at a
+//!   minibatch boundary, deterministic rendezvous shard takeover,
+//!   replicated optimizer state) — the classical PS property collective
+//!   FSDP structurally cannot offer.
 //! * [`backend`] — the `CommBackend` trait the engine drives.
 //! * [`primbench`] — the Fig 11 primitive bandwidth benchmark.
 
@@ -30,6 +35,7 @@ pub mod backend;
 pub mod collective;
 pub mod gather_cache;
 pub mod hybrid;
+pub mod membership;
 pub mod odc;
 pub mod primbench;
 pub mod shared;
@@ -41,5 +47,6 @@ pub use backend::{CommBackend, GatherPolicy};
 pub use collective::CollectiveComm;
 pub use gather_cache::{CacheStats, GatherCache};
 pub use hybrid::HybridComm;
+pub use membership::{Membership, MembershipBarrier, OptReplica};
 pub use odc::OdcComm;
 pub use topology::GroupMap;

@@ -13,12 +13,21 @@
 //!   notifications without occupying compute — drains the mailbox and
 //!   accumulates into the owned shard.
 //! * The ONLY rendezvous is `end_minibatch`: a client broadcasts `Done`
-//!   to every server; a server's gradients are complete once all `world`
-//!   clients are done and its mailbox is drained. Devices therefore
-//!   progress completely independently within a minibatch (Figure 2),
-//!   including running *different microbatch counts* (LB-Mini) or
-//!   pulling microbatches from a shared runtime queue
+//!   to every server; a server's gradients are complete once the step's
+//!   live quorum of clients is done and its mailbox is drained. Devices
+//!   therefore progress completely independently within a minibatch
+//!   (Figure 2), including running *different microbatch counts*
+//!   (LB-Mini) or pulling microbatches from a shared runtime queue
 //!   ([`crate::balance::dispatch::WorkQueue`]).
+//! * Under an elastic membership schedule
+//!   ([`crate::comm::membership`]) the daemons double as persistent
+//!   *shard servers*: a crashed worker's daemon keeps accumulating, the
+//!   fold quorum and `end_step` barrier shrink to the live set, the
+//!   dead client's arenas are retired at its fail-step fold, and the
+//!   rendezvous successor adopts the orphaned shard via
+//!   [`CommBackend::flush_shard`]. Collective has no counterpart — one
+//!   dead rank deadlocks its per-layer barriers, which is exactly the
+//!   PS-vs-collective contrast the elastic scenario measures.
 //!
 //! ## Determinism: the id-keyed fold
 //!
@@ -48,8 +57,9 @@
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
 use super::backend::{CommBackend, GatherPolicy, ParamStore};
+use super::membership::{Membership, MembershipBarrier};
 use std::sync::mpsc;
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 enum Msg {
@@ -74,9 +84,12 @@ pub struct OdcComm {
     /// arenas make the payloads themselves independent — the lock here
     /// only orders enqueue, not the transfer).
     mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
-    /// Grads returned by the local daemon at the minibatch boundary.
+    /// Grads returned by the local daemon at the minibatch boundary
+    /// (written by the owner's `end_minibatch`, or by a rendezvous
+    /// successor's `flush_shard` when the owner is dead or dormant).
     taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
-    barrier: Barrier,
+    barrier: MembershipBarrier,
+    membership: Arc<Membership>,
     daemons: Mutex<Vec<JoinHandle<()>>>,
     /// Payload arenas indexed `[server][client]` (Appendix B: one
     /// preallocated buffer set per client per server).
@@ -85,6 +98,16 @@ pub struct OdcComm {
 
 impl OdcComm {
     pub fn new(params: Arc<ParamStore>, world: usize) -> Self {
+        OdcComm::with_membership(params, Arc::new(Membership::all_live(world)))
+    }
+
+    /// ODC over an elastic membership schedule (see
+    /// [`crate::comm::membership`]): daemons fold with the per-step
+    /// live quorum, the step barrier shrinks and grows with it, and a
+    /// dead client's payload arenas are released at its fail-step fold.
+    /// With a static schedule this is exactly [`OdcComm::new`].
+    pub fn with_membership(params: Arc<ParamStore>, membership: Arc<Membership>) -> Self {
+        let world = membership.world();
         let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
         // One full microbatch of a client pushes one piece per layer to
         // each server, so prealloc one buffer per layer's shard length,
@@ -98,7 +121,8 @@ impl OdcComm {
             let (tx, rx) = mpsc::channel::<Msg>();
             let lens = shard_lens.clone();
             let row = arenas.row(server);
-            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, world, row)));
+            let members = Arc::clone(&membership);
+            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, members, row)));
             mailbox.push(Mutex::new(tx));
         }
         OdcComm {
@@ -106,7 +130,8 @@ impl OdcComm {
             params,
             mailbox,
             taken: (0..world).map(|_| Mutex::new(None)).collect(),
-            barrier: Barrier::new(world),
+            barrier: MembershipBarrier::new(Arc::clone(&membership), 1),
+            membership,
             daemons: Mutex::new(daemons),
             arenas,
         }
@@ -137,7 +162,7 @@ struct Piece {
 /// stable, so same-key pieces (possible only from one client's
 /// sequential pushes) keep their channel-FIFO order.
 fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>]) -> Vec<f32> {
-    pieces.sort_by(|a, b| (a.micro, a.client).cmp(&(b.micro, b.client)));
+    pieces.sort_by_key(|p| (p.micro, p.client));
     let mut acc = vec![0.0f32; len];
     for p in pieces.drain(..) {
         debug_assert_eq!(acc.len(), p.data.len());
@@ -152,14 +177,24 @@ fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>])
 /// The accumulation daemon: single-threaded state machine buffering the
 /// minibatch's gradient pieces and folding them id-keyed at the flush.
 /// `arenas` is this server's row of the pair matrix, indexed by client.
+///
+/// The daemon is the device's *shard server* and outlives the device's
+/// worker thread (the PS fault model: server state survives a client
+/// crash). It counts its own minibatch index and flushes when the
+/// membership's per-step quorum of `Done`s has arrived — a crashed
+/// client is simply no longer waited for, while its already-buffered
+/// pieces (completed microbatches) stay in the fold for exactly-once
+/// delivery. At the crash step's flush the dead client's payload
+/// arenas are retired.
 fn daemon_loop(
     rx: mpsc::Receiver<Msg>,
     shard_lens: Vec<usize>,
-    world: usize,
+    membership: Arc<Membership>,
     arenas: Vec<Arc<PayloadArena>>,
 ) {
     let mut pending: Vec<Vec<Piece>> = shard_lens.iter().map(|_| Vec::new()).collect();
     let mut done = 0usize;
+    let mut mb = 0usize;
     let mut flush: Option<mpsc::Sender<Vec<Vec<f32>>>> = None;
     loop {
         let msg = match rx.recv() {
@@ -174,14 +209,20 @@ fn daemon_loop(
             Msg::Flush { reply } => flush = Some(reply),
             Msg::Shutdown => return,
         }
-        if done == world {
+        if done == membership.expected_done(mb) {
             if let Some(reply) = flush.take() {
                 let out: Vec<Vec<f32>> = pending
                     .iter_mut()
                     .zip(&shard_lens)
                     .map(|(pieces, &len)| fold_layer(pieces, len, &arenas))
                     .collect();
+                for (client, arena) in arenas.iter().enumerate() {
+                    if membership.fails_during(client, mb) {
+                        arena.retire();
+                    }
+                }
                 done = 0;
+                mb += 1;
                 let _ = reply.send(out);
             }
         }
@@ -242,8 +283,26 @@ impl CommBackend for OdcComm {
     }
 
     fn end_step(&self, _dev: usize) {
-        // The single global barrier per step: params republished.
+        // The single global barrier per step: params republished. The
+        // quorum follows the membership schedule (a dead device is not
+        // waited for; a joiner is counted from its join step).
         self.barrier.wait();
+    }
+
+    fn flush_shard(&self, shard: usize) {
+        // The rendezvous successor drives the orphaned shard server's
+        // flush. Safe to call after the caller's own `end_minibatch`
+        // returned: every live client has broadcast `Done` to ALL
+        // daemons by then, so the orphan's quorum is (or will shortly
+        // be) met and the reply cannot deadlock.
+        let (tx, rx) = mpsc::channel();
+        self.send(shard, Msg::Flush { reply: tx });
+        let grads = rx.recv().expect("orphan daemon flush");
+        *self.taken[shard].lock().unwrap() = Some(grads);
+    }
+
+    fn await_join(&self, dev: usize) {
+        self.barrier.await_step_start(self.membership.joins_at(dev));
     }
 
     fn name(&self) -> &'static str {

@@ -31,6 +31,22 @@
 //! microbatch-phase compute call), which queue dispatch absorbs by
 //! letting fast devices pull the straggler's share.
 //!
+//! [`TrainerConfig::fail_at`] / [`TrainerConfig::join_at`] push the
+//! same decoupling to its logical end — **ElasticWorld** (see
+//! [`crate::comm::membership`]): a device can crash mid-minibatch or
+//! join at a minibatch boundary, and the step still completes
+//! correctly. Survivors re-pull the dead device's unfinished
+//! microbatches (exactly-once, via the elastic dispatch wrapper), the
+//! one-sided daemons drop it from the fold quorum, its optimizer shard
+//! is adopted by a deterministic ring successor with state recovered
+//! from the replicated store, and the `end_minibatch`/`end_step`
+//! quorums shrink to the live membership. The id-keyed fold makes the
+//! recovered run bit-identical to the healthy one; `Collective`
+//! rejects both knobs at validation (a dead rank deadlocks its
+//! per-layer barriers — the paradigm contrast the scenario measures).
+//! [`TrainRun::recovery_s`] reports the measured recovery overhead,
+//! mirrored by the simulator's `RunResult::recovery_s` prediction.
+//!
 //! Under `Hybrid` (§6.1 two-level sharding) the same free-running loop
 //! drives a two-level protocol: gathers are one-sided reads of the
 //! device's *node-group replica* (intra-group traffic only) and
@@ -57,9 +73,10 @@
 //! exactly.
 
 use crate::balance::cost::CostModel;
-use crate::balance::dispatch::{make_dispatcher, Dispatcher, MicroAssignment};
+use crate::balance::dispatch::{make_dispatcher, make_elastic_dispatcher, Dispatcher, MicroAssignment};
 use crate::balance::packers::{plan_run, Plan};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
+use crate::comm::membership::Membership;
 use crate::comm::{CollectiveComm, HybridComm, OdcComm};
 use crate::config::{Balancer, CommScheme};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
@@ -107,6 +124,23 @@ pub struct TrainerConfig {
     /// own measured duration afterwards). Timing-only: training bytes
     /// are unaffected under every dispatch policy.
     pub device_speed: Vec<f64>,
+    /// ElasticWorld fault injection: `(device, step, micro)` — the
+    /// device crashes during minibatch `step`, immediately before
+    /// running its `micro`-th pulled microbatch of that step (or at the
+    /// minibatch's end if it pulls fewer — either way it never reaches
+    /// `end_minibatch`, so the membership schedule is exact). Survivors
+    /// re-pull its unfinished work, its shard is adopted by the
+    /// deterministic ring successor with state recovered from the
+    /// replicated store, and barriers shrink to the live set. Requires
+    /// a barrier-free scheme — Collective is rejected at validation,
+    /// which is the point of the comparison. See `comm::membership`.
+    pub fail_at: Vec<(usize, usize, usize)>,
+    /// ElasticWorld joins: `(device, step)` — the device sits out steps
+    /// `< step` (its share redistributed, its shard served by the ring
+    /// successor) and enters at the minibatch boundary, recovering
+    /// params + optimizer moments from the replicated store. A join is
+    /// bit-identical to a fresh run at the full world size.
+    pub join_at: Vec<(usize, usize)>,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -130,6 +164,8 @@ impl TrainerConfig {
             len_sigma: 0.8,
             gather_cache: true,
             device_speed: Vec::new(),
+            fail_at: Vec::new(),
+            join_at: Vec::new(),
             plan_override: None,
         }
     }
@@ -161,6 +197,13 @@ pub struct TrainRun {
     /// tests and checkpoint-style inspection.
     pub final_params: Vec<Vec<f32>>,
     pub scheme: CommScheme,
+    /// Total device-seconds spent on ElasticWorld recovery work:
+    /// orphan-daemon flushes + adopted-shard state recovery and
+    /// optimizer updates (rendezvous successors), and join
+    /// synchronization + state refresh (late joiners). 0.0 for a
+    /// static membership. The sim's `RunResult::recovery_s` predicts
+    /// this (fig12-style predicted-vs-measured reporting).
+    pub recovery_s: f64,
 }
 
 /// The plans `train` would generate for this config (same seeding path).
@@ -212,6 +255,26 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
             ));
         }
     }
+    // --- elastic membership (ElasticWorld, see comm::membership) ----------
+    let fails: Vec<(usize, usize)> = cfg.fail_at.iter().map(|&(d, s, _)| (d, s)).collect();
+    let membership = Arc::new(
+        Membership::with_schedule(cfg.world, &cfg.join_at, &fails).map_err(|e| anyhow!("{e}"))?,
+    );
+    if !membership.is_static() {
+        if cfg.scheme == CommScheme::Collective {
+            return Err(anyhow!(
+                "fail_at/join_at require a barrier-free scheme: one dead rank deadlocks \
+                 Collective's per-layer all-gather rendezvous, while a dead PS client just \
+                 stops pushing — the structural contrast the elastic scenario measures"
+            ));
+        }
+        membership.validate(cfg.steps).map_err(|e| anyhow!("{e}"))?;
+        if cfg.scheme == CommScheme::Hybrid {
+            membership
+                .validate_groups(cfg.hybrid_group_size(), cfg.steps)
+                .map_err(|e| anyhow!("{e}"))?;
+        }
+    }
     let man = Manifest::load(&cfg.artifacts_dir)?;
     let host = ComputeService::start(&man)?;
 
@@ -223,12 +286,16 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     }
     let backend: Arc<dyn CommBackend> = match cfg.scheme {
         CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
-        CommScheme::Odc => Arc::new(OdcComm::new(Arc::clone(&params), cfg.world)),
+        CommScheme::Odc => {
+            Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)))
+        }
         // NB: constructed after init_from above — HybridComm seeds its
         // group replicas from the global store.
-        CommScheme::Hybrid => {
-            Arc::new(HybridComm::new(Arc::clone(&params), cfg.world, cfg.hybrid_group_size()))
-        }
+        CommScheme::Hybrid => Arc::new(HybridComm::with_membership(
+            Arc::clone(&params),
+            Arc::clone(&membership),
+            cfg.hybrid_group_size(),
+        )),
     };
 
     // --- data + plan -------------------------------------------------------
@@ -261,15 +328,33 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
 
     // --- dispatch layer ----------------------------------------------------
     // One dispatcher per minibatch, shared by all device threads: static
-    // plan replay, or the work-stealing queue under Balancer::Queue.
+    // plan replay, or the work-stealing queue under Balancer::Queue. An
+    // elastic membership wraps each minibatch's dispatcher so a crashed
+    // device's unfinished assignments are orphaned to survivors and an
+    // absent device's share is redistributed (exactly-once either way).
     let dispatchers: Arc<Vec<Arc<dyn Dispatcher>>> = Arc::new(
-        plans.iter().map(|p| make_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost)).collect(),
+        plans
+            .iter()
+            .enumerate()
+            .map(|(step, p)| {
+                if membership.is_static() {
+                    make_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost)
+                } else {
+                    let crasher: Vec<bool> =
+                        (0..cfg.world).map(|d| membership.fails_during(d, step)).collect();
+                    let absent: Vec<bool> =
+                        (0..cfg.world).map(|d| membership.absent(d, step)).collect();
+                    make_elastic_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost, &crasher, &absent)
+                }
+            })
+            .collect(),
     );
 
     // --- shared step metrics ----------------------------------------------
     let tok_count: Arc<Vec<AtomicU64>> = Arc::new((0..cfg.steps).map(|_| AtomicU64::new(0)).collect());
     let loss_sum: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
     let wall: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
+    let recovery: Arc<Mutex<f64>> = Arc::new(Mutex::new(0.0));
 
     // --- device threads ----------------------------------------------------
     std::thread::scope(|s| -> Result<()> {
@@ -286,11 +371,13 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 svc: host.handle(),
                 backend: Arc::clone(&backend),
                 params: Arc::clone(&params),
+                membership: Arc::clone(&membership),
                 dispatchers: Arc::clone(&dispatchers),
                 samples: Arc::clone(&samples),
                 tok_count: Arc::clone(&tok_count),
                 loss_sum: Arc::clone(&loss_sum),
                 wall: Arc::clone(&wall),
+                recovery: Arc::clone(&recovery),
                 slow_extra,
             };
             handles.push(s.spawn(move || device_main(ctx)));
@@ -322,7 +409,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
             out
         })
         .collect();
-    Ok(TrainRun { logs, final_params, scheme: cfg.scheme })
+    let recovery_s = *recovery.lock().unwrap();
+    Ok(TrainRun { logs, final_params, scheme: cfg.scheme, recovery_s })
 }
 
 struct DeviceCtx {
@@ -332,12 +420,17 @@ struct DeviceCtx {
     svc: ComputeService,
     backend: Arc<dyn CommBackend>,
     params: Arc<ParamStore>,
+    /// The elastic membership schedule (all-live when `fail_at`/`join_at`
+    /// are empty): drives shard ownership, barriers, and fold quorums.
+    membership: Arc<Membership>,
     /// One per minibatch, shared by every device thread.
     dispatchers: Arc<Vec<Arc<dyn Dispatcher>>>,
     samples: Arc<Vec<Sample>>,
     tok_count: Arc<Vec<AtomicU64>>,
     loss_sum: Arc<Vec<Mutex<f64>>>,
     wall: Arc<Vec<Mutex<f64>>>,
+    /// Summed recovery device-seconds (see `TrainRun::recovery_s`).
+    recovery: Arc<Mutex<f64>>,
     /// Straggler emulation: extra sleep per compute call, as a multiple
     /// of the call's own duration (`1/speed - 1`; 0 = nominal device).
     slow_extra: f64,
@@ -363,10 +456,41 @@ impl DeviceCtx {
     }
 }
 
+/// Owner-side optimizer state of one shard: master parameter copy plus
+/// Adam moments. Normally each device holds exactly one (its own
+/// shard); under elastic membership a rendezvous successor additionally
+/// holds one per adopted shard, recovered from the replicated store.
+struct ShardSlot {
+    params: Vec<Vec<f32>>,
+    adam: Vec<AdamState>,
+}
+
+/// Build (or recover) the owner-side state of `shard` as of `step`'s
+/// optimizer phase: parameters from the store, Adam moments from the
+/// replicated [`crate::comm::OptReplica`] windows (zeroed at
+/// construction — exactly `AdamState::new` at step 0), step counter =
+/// completed steps. Bit-exact: the previous owner published precisely
+/// these bytes at the end of step `step - 1`.
+fn recover_slot(params: &ParamStore, shard: usize, step: usize) -> ShardSlot {
+    let mut slot = ShardSlot { params: Vec::new(), adam: Vec::new() };
+    for (l, p) in params.layers.iter().enumerate() {
+        let r = p.shard_range(shard);
+        let mut v = vec![0.0f32; r.len()];
+        p.buf.read(r.start, &mut v);
+        slot.params.push(v);
+        let mut st = AdamState::new(r.len());
+        params.opt[l].recover(r.start, &mut st.m, &mut st.v);
+        st.t = step as u32;
+        slot.adam.push(st);
+    }
+    slot
+}
+
 fn device_main(ctx: DeviceCtx) -> Result<()> {
     let man = &ctx.man;
     let dev = ctx.dev;
     let n_layers = man.n_layers;
+    let steps = ctx.dispatchers.len();
 
     // All recurring buffers live in the plan; caching honours the
     // backend's per-level policy (ODC one-sided and Hybrid intra-group
@@ -379,19 +503,25 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     };
     let mut bufs = BufferPlan::new(&ctx.params, dev, policy);
 
-    // local master copy of owned shards + Adam state
-    let mut shards: Vec<Vec<f32>> = ctx
-        .params
-        .layers
-        .iter()
-        .map(|p| {
-            let r = p.shard_range(dev);
-            let mut v = vec![0.0f32; r.len()];
-            p.buf.read(r.start, &mut v);
-            v
-        })
-        .collect();
-    let mut adam: Vec<AdamState> = shards.iter().map(|s| AdamState::new(s.len())).collect();
+    // Late joiner: sit out the early steps (the membership schedule
+    // already routed our share to survivors), then enter exactly at the
+    // join boundary, once the previous step's parameters and replicated
+    // optimizer state are fully republished.
+    let join = ctx.membership.joins_at(dev);
+    if join > 0 {
+        // The sit-out wait is NOT recovery work (it scales with the
+        // join step, not with recovery) — only the state refresh after
+        // entry is, and the optimizer loop below times it.
+        ctx.backend.await_join(dev);
+    }
+
+    // Owner-side optimizer state per shard, recovered lazily the first
+    // step this device serves the shard. Static membership: exactly one
+    // slot (our own), built at step 0 from the freshly initialized
+    // store and the zeroed moment replicas — the seed behaviour, bit
+    // for bit.
+    let mut slots: Vec<Option<ShardSlot>> = (0..ctx.cfg.world).map(|_| None).collect();
+
     // Chunk staging for the PJRT validation path (reused across all
     // layers and steps; empty and never touched when the native Rust
     // AdamW loop runs).
@@ -401,7 +531,12 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         Vec::new()
     };
 
-    for step in 0..ctx.dispatchers.len() {
+    // ElasticWorld fault injection: the (step, pull index) this worker
+    // crashes at, if any.
+    let my_fail: Option<(usize, usize)> =
+        ctx.cfg.fail_at.iter().find(|f| f.0 == dev).map(|f| (f.1, f.2));
+
+    for step in join..steps {
         let t0 = Instant::now();
         // The dispatch pull loop: static dispatch serves this device its
         // own plan row (Collective: padded to the common count so the
@@ -409,37 +544,102 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         // next LPT-ordered microbatch from the shared pool to whichever
         // free-running device asks first.
         let disp = ctx.dispatchers[step].as_ref();
+        let mut pulls = 0usize;
+        let mut crashed = false;
         while let Some(a) = disp.next_micro(dev) {
+            if my_fail == Some((step, pulls)) {
+                // Simulated crash: the pulled-but-unrun assignment is
+                // orphaned for survivors; this worker vanishes without
+                // reaching the fold quorum or another barrier. Its
+                // daemon lives on as a shard server until the
+                // rendezvous successor adopts it (comm::membership).
+                disp.report_failed(dev);
+                crashed = true;
+                break;
+            }
+            pulls += 1;
             if a.samples.is_empty() {
                 idle_participation(&ctx, n_layers, &mut bufs)?;
                 continue;
             }
             run_microbatch(&ctx, &mut bufs, step, &a)?;
         }
+        if !crashed && matches!(my_fail, Some((s, _)) if s == step) {
+            // Scheduled to crash this step but the work ran dry first:
+            // crash at the minibatch's end instead (still before the
+            // fold quorum), keeping the membership schedule exact.
+            disp.report_failed(dev);
+            crashed = true;
+        }
+        if crashed {
+            return Ok(());
+        }
 
         ctx.backend.end_minibatch(dev);
 
-        // ---- server role: sharded AdamW on owned shards ----
+        // ---- server role: sharded AdamW on every shard this device
+        // serves at this step — its own, plus any adopted from a dead
+        // (or not-yet-joined) peer via the rendezvous rule ----
         let ntok = ctx.tok_count[step].load(Ordering::SeqCst).max(1) as f32;
-        for l in 0..=n_layers {
-            let p = &ctx.params.layers[l];
-            let g = &mut bufs.gshard[..p.shard_len];
-            ctx.backend.take_grad_shard(dev, l, g);
-            if ctx.cfg.pjrt_shard_ops {
-                pjrt_adam_step(&ctx, &mut shards[l], g, &mut adam[l], ntok, &mut adam_stage)?;
-            } else {
-                for x in g.iter_mut() {
-                    *x /= ntok;
-                }
-                adam[l].step(&ctx.cfg.adam, &mut shards[l], g);
+        let owned = ctx.membership.shards_owned_by(dev, step);
+        let replicate = !ctx.membership.is_static();
+        for &shard in &owned {
+            // Recovery work = the ownership HANDOFF itself: the step a
+            // peer's shard is first adopted (orphan flush + state
+            // re-read), or our own first step back after a join (the
+            // replica refresh path). Serving an adopted shard on later
+            // steps is the new steady state, not recovery — this keeps
+            // the measurement one-shot per event, the same quantity the
+            // sim's recovery_epilogue_s predicts.
+            let recovering =
+                (shard != dev && slots[shard].is_none()) || (join > 0 && step == join && shard == dev);
+            let t_rec = recovering.then(Instant::now);
+            if shard != dev {
+                // complete the orphaned shard server's minibatch fold
+                ctx.backend.flush_shard(shard);
             }
-            let r = p.shard_range(dev);
-            p.buf.write(r.start, &shards[l]);
+            if slots[shard].is_none() {
+                slots[shard] = Some(recover_slot(&ctx.params, shard, step));
+            }
+            let slot = slots[shard].as_mut().expect("slot just ensured");
+            for l in 0..=n_layers {
+                let p = &ctx.params.layers[l];
+                let g = &mut bufs.gshard[..p.shard_len];
+                ctx.backend.take_grad_shard(shard, l, g);
+                if ctx.cfg.pjrt_shard_ops {
+                    pjrt_adam_step(&ctx, &mut slot.params[l], g, &mut slot.adam[l], ntok, &mut adam_stage)?;
+                } else {
+                    for x in g.iter_mut() {
+                        *x /= ntok;
+                    }
+                    slot.adam[l].step(&ctx.cfg.adam, &mut slot.params[l], g);
+                }
+                let r = p.shard_range(shard);
+                p.buf.write(r.start, &slot.params[l]);
+                // Classical PS replication: publish the moments so a
+                // successor or a returning joiner recovers exact state.
+                // Elastic schedules only — under a static membership
+                // nothing can ever read them back, so the steady-state
+                // optimizer phase stays a single shard write.
+                if replicate {
+                    ctx.params.opt[l].publish(r.start, &slot.adam[l].m, &slot.adam[l].v);
+                }
+            }
+            if let Some(t) = t_rec {
+                *ctx.recovery.lock().unwrap() += t.elapsed().as_secs_f64();
+            }
+        }
+        // Ownership can revert at a join boundary: drop slots no longer
+        // served so a stale copy can never be written back.
+        for (s, slot) in slots.iter_mut().enumerate() {
+            if !owned.contains(&s) {
+                *slot = None;
+            }
         }
         ctx.backend.end_step(dev);
         // Params republished at the barrier: cached gathers are stale.
         bufs.cache.invalidate();
-        if dev == 0 {
+        if ctx.membership.first_completing(step) == dev {
             *ctx.wall[step].lock().unwrap() = t0.elapsed().as_secs_f64();
         }
     }

@@ -16,7 +16,11 @@
 //!   id-keyed gradient fold), and a discrete-event cluster simulator
 //!   that regenerates every table and figure of the paper at testbed
 //!   scale — including straggler/heterogeneous-fleet scenarios
-//!   (`device_speed` in both the trainer and the sim).
+//!   (`device_speed` in both the trainer and the sim) and ElasticWorld
+//!   fault-tolerant elastic membership ([`comm::membership`]: device
+//!   crash mid-minibatch, join at a minibatch boundary, deterministic
+//!   shard takeover with replicated optimizer state — `fail_at` /
+//!   `join_at` in both the trainer and the sim).
 //! * **L2** — the JAX transformer (`python/compile/model.py`), AOT-lowered
 //!   once to HLO text and executed from Rust via PJRT.
 //! * **L1** — the Pallas flash-attention + shard-op kernels

@@ -42,6 +42,42 @@ fn parse_device_speed(s: &str) -> anyhow::Result<Vec<f64>> {
         .collect()
 }
 
+/// Parse a comma-separated list of colon-separated usize tuples of
+/// fixed arity ("0:1:2,3:0:0") — the shared grammar of the elastic
+/// event flags. Empty input = no events.
+fn parse_event_tuples(s: &str, arity: usize, what: &str) -> anyhow::Result<Vec<Vec<usize>>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|tuple| {
+            let nums: Vec<usize> = tuple
+                .trim()
+                .split(':')
+                .map(|p| p.parse::<usize>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| anyhow::anyhow!("{what}, got `{tuple}`"))?;
+            anyhow::ensure!(nums.len() == arity, "{what}, got `{tuple}`");
+            Ok(nums)
+        })
+        .collect()
+}
+
+/// Parse `--fail-at` — comma-separated `device:step:micro` triples
+/// ("0:1:2" = device 0 crashes during minibatch 1, immediately before
+/// its 3rd pulled microbatch).
+fn parse_fail_at(s: &str) -> anyhow::Result<Vec<(usize, usize, usize)>> {
+    let tuples = parse_event_tuples(s, 3, "--fail-at expects device:step:micro")?;
+    Ok(tuples.into_iter().map(|t| (t[0], t[1], t[2])).collect())
+}
+
+/// Parse `--join-at` — comma-separated `device:step` pairs ("3:2" =
+/// device 3 sits out steps 0–1 and joins at the step-2 boundary).
+fn parse_join_at(s: &str) -> anyhow::Result<Vec<(usize, usize)>> {
+    let tuples = parse_event_tuples(s, 2, "--join-at expects device:step")?;
+    Ok(tuples.into_iter().map(|t| (t[0], t[1])).collect())
+}
+
 fn main() -> anyhow::Result<()> {
     odc::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +98,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("steps", "16", "minibatches to simulate")
                 .opt("seed", "0", "rng seed")
                 .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1,1,1 (empty = uniform)")
+                .opt("fail-at", "", "crash events device:step:micro, e.g. 0:1:2 (empty = none)")
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -104,8 +141,17 @@ fn main() -> anyhow::Result<()> {
                 device_speed.len(),
                 exp.devices
             );
+            let fail_at = parse_fail_at(a.get("fail-at"))?;
+            if !fail_at.is_empty() && exp.scheme == CommScheme::Collective {
+                eprintln!(
+                    "invalid configuration: --fail-at requires a barrier-free scheme \
+                     (one dead rank deadlocks collective's per-layer barriers)"
+                );
+                std::process::exit(2);
+            }
             let mut sim_cfg = SimConfig::new(exp);
             sim_cfg.device_speed = device_speed;
+            sim_cfg.fail_at = fail_at;
             let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
@@ -124,6 +170,14 @@ fn main() -> anyhow::Result<()> {
             if r.hybrid_step_overhead_s > 0.0 {
                 println!("  hybrid step ovh  : {:.3} ms/minibatch (cross-node optimizer exchange)", r.hybrid_step_overhead_s * 1e3);
             }
+            if !sim_cfg.fail_at.is_empty() {
+                println!(
+                    "  recovery         : {:.3} ms predicted (state re-read + orphan re-dispatch, {} failure{})",
+                    r.recovery_s * 1e3,
+                    sim_cfg.fail_at.len(),
+                    if sim_cfg.fail_at.len() == 1 { "" } else { "s" }
+                );
+            }
         }
         "train" => {
             let cli = Cli::new("odc train", "real FSDP training through PJRT")
@@ -137,6 +191,8 @@ fn main() -> anyhow::Result<()> {
                 .opt("lr", "0.003", "AdamW lr")
                 .opt("seed", "0", "rng seed")
                 .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1 (empty = uniform)")
+                .opt("fail-at", "", "crash events device:step:micro, e.g. 0:1:2 (empty = none)")
+                .opt("join-at", "", "join events device:step, e.g. 3:2 (empty = none)")
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -158,11 +214,21 @@ fn main() -> anyhow::Result<()> {
             cfg.seed = a.u64("seed");
             cfg.pjrt_shard_ops = a.flag("pjrt-shard-ops");
             cfg.device_speed = parse_device_speed(a.get("device-speed"))?;
+            cfg.fail_at = parse_fail_at(a.get("fail-at"))?;
+            cfg.join_at = parse_join_at(a.get("join-at"))?;
+            let elastic = !cfg.fail_at.is_empty() || !cfg.join_at.is_empty();
             let run = train(&cfg)?;
             for log in &run.logs {
                 println!(
                     "step {:>4}  loss {:>8.4}  tokens {:>8}  wall {:>7.3}s",
                     log.step, log.loss, log.tokens, log.wall_s
+                );
+            }
+            if elastic {
+                println!(
+                    "recovery_s {:.6}  (measured ElasticWorld recovery overhead: orphan flushes, \
+                     shard adoption, join refresh)",
+                    run.recovery_s
                 );
             }
         }

@@ -11,7 +11,9 @@ use crate::balance::packers::{plan_run_opts, PackOpts};
 use crate::comm::topology::Topology;
 use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use crate::data::distributions::sample_lengths;
-use crate::sim::timeline::{hybrid_step_overhead, time_minibatch_dispatch};
+use crate::sim::timeline::{
+    hybrid_step_overhead, recovery_epilogue_s, time_minibatch_dispatch, time_minibatch_failover,
+};
 use crate::util::rng::Rng;
 
 /// Simulation-specific knobs on top of the experiment cell.
@@ -26,12 +28,27 @@ pub struct SimConfig {
     /// perturbation mirroring `TrainerConfig::device_speed` (`1.0` =
     /// nominal, `0.25` = a 4× straggler; empty = homogeneous fleet).
     pub device_speed: Vec<f64>,
+    /// ElasticWorld failure scenario, mirroring `TrainerConfig::fail_at`:
+    /// `(device, step, micro)` — the device crashes during minibatch
+    /// `step` after completing `micro` pulls. Its unfinished micros are
+    /// re-dispatched to survivors at runtime and a priced recovery
+    /// epilogue (state re-read + orphan re-dispatch) lands on that
+    /// step's wall; later steps run on the shrunken world. Barrier-free
+    /// schemes only — `simulate` panics under Collective, exactly like
+    /// the trainer's validation error.
+    pub fail_at: Vec<(usize, usize, usize)>,
 }
 
 impl SimConfig {
     pub fn new(exp: ExperimentConfig) -> Self {
         let rl_mode = exp_is_rl(&exp);
-        SimConfig { exp, rl_mode, hierarchical_gather: false, device_speed: Vec::new() }
+        SimConfig {
+            exp,
+            rl_mode,
+            hierarchical_gather: false,
+            device_speed: Vec::new(),
+            fail_at: Vec::new(),
+        }
     }
 }
 
@@ -69,6 +86,14 @@ pub struct RunResult {
     /// "bubble time" whose rate `device_utilization` approximates —
     /// what `Balancer::Queue` exists to shrink under skewed devices.
     pub dispatch_wait_s: f64,
+    /// Predicted ElasticWorld recovery overhead (state re-read from the
+    /// replicated store + orphan re-dispatch), summed over `fail_at`
+    /// events and included in the wall; 0 without failures. The real
+    /// trainer measures the same quantity as `TrainRun::recovery_s` —
+    /// fig12-style predicted-vs-measured reporting. (The packing-based
+    /// `bubble_rate` still describes the healthy schedule; failure
+    /// steps are priced by the failover pull model.)
+    pub recovery_s: f64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -82,6 +107,33 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let exp = &cfg.exp;
     if let Err(e) = exp.validate() {
         panic!("invalid experiment cell: {e}");
+    }
+    if !cfg.device_speed.is_empty() {
+        assert_eq!(
+            cfg.device_speed.len(),
+            exp.devices,
+            "device_speed needs one entry per device"
+        );
+        assert!(
+            cfg.device_speed.iter().all(|s| s.is_finite() && *s > 0.0),
+            "device_speed entries must be finite and > 0"
+        );
+    }
+    if !cfg.fail_at.is_empty() {
+        assert!(
+            exp.scheme != CommScheme::Collective,
+            "invalid experiment cell: fail_at requires a barrier-free scheme (one dead rank \
+             deadlocks Collective's per-layer all-gather rendezvous)"
+        );
+        for &(dev, step, _) in &cfg.fail_at {
+            assert!(dev < exp.devices, "fail_at device {dev} out of range");
+            assert!(step < exp.steps, "fail_at step {step} out of range");
+        }
+        let mut devs: Vec<usize> = cfg.fail_at.iter().map(|f| f.0).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        assert_eq!(devs.len(), cfg.fail_at.len(), "one fail_at event per device");
+        assert!(devs.len() < exp.devices, "at least one device must survive");
     }
     let queue_dispatch = exp.balancer == Balancer::Queue;
     let cost = CostModel::for_model(exp.model);
@@ -111,25 +163,68 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let mut dispatch_wait = 0.0;
     let mut bubble_busy = 0.0;
     let mut bubble_total = 0.0;
+    let mut recovery_total = 0.0;
+    let mut dead = vec![false; exp.devices];
     let mut samples = 0usize;
-    for plan in &plans {
-        let t = time_minibatch_dispatch(
-            plan,
-            &lens,
-            exp.model,
-            &cost,
-            exp.scheme,
-            exp.sharding,
-            &topo,
-            cfg.hierarchical_gather,
-            &cfg.device_speed,
-            queue_dispatch,
-        );
-        total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead;
+    for (step, plan) in plans.iter().enumerate() {
+        let fails_now: Vec<(usize, usize)> =
+            cfg.fail_at.iter().filter(|f| f.1 == step).map(|f| (f.0, f.2)).collect();
+        let elastic = !fails_now.is_empty() || dead.iter().any(|&x| x);
+        let t = if elastic {
+            time_minibatch_failover(
+                plan,
+                &lens,
+                exp.model,
+                &cost,
+                exp.scheme,
+                exp.sharding,
+                &topo,
+                cfg.hierarchical_gather,
+                &cfg.device_speed,
+                &dead,
+                &fails_now,
+            )
+        } else {
+            time_minibatch_dispatch(
+                plan,
+                &lens,
+                exp.model,
+                &cost,
+                exp.scheme,
+                exp.sharding,
+                &topo,
+                cfg.hierarchical_gather,
+                &cfg.device_speed,
+                queue_dispatch,
+            )
+        };
+        // Idle time counts devices alive at the step's start (a device
+        // failing mid-minibatch was alive; a long-dead one has no seat).
+        dispatch_wait += t
+            .busy
+            .iter()
+            .enumerate()
+            .filter(|&(dev, _)| !dead[dev])
+            .map(|(_, b)| (t.wall - b).max(0.0))
+            .sum::<f64>();
+        // Recovery epilogue: the successor re-reads the dead owner's
+        // replicated state and re-dispatches its orphaned micros. The
+        // orphan count is estimated from the static plan row (under
+        // Queue the actual count depends on runtime pull interleaving);
+        // a device whose work ran dry before its fail pull orphans
+        // nothing and pays only the state re-read.
+        let mut step_recovery = 0.0;
+        for &(fdev, pulls) in &fails_now {
+            let orphans = plan.micro[fdev].len().saturating_sub(pulls);
+            step_recovery += recovery_epilogue_s(exp.model, exp.devices, &topo, orphans);
+            dead[fdev] = true;
+        }
+        recovery_total += step_recovery;
+        total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead + step_recovery;
         total_busy += t.busy.iter().sum::<f64>();
-        dispatch_wait += t.busy.iter().map(|b| (t.wall - b).max(0.0)).sum::<f64>();
         // Speed- and dispatch-aware packing estimate, so the bubble
-        // rate and dispatch_wait_s tell one consistent story.
+        // rate and dispatch_wait_s tell one consistent story (failure
+        // steps: the estimate still describes the healthy schedule).
         let b = estimate_bubble_dispatch(plan, &lens, &cost, exp.scheme, &cfg.device_speed, queue_dispatch);
         bubble_busy += b.busy.iter().sum::<f64>();
         bubble_total += b.total;
@@ -148,6 +243,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         device_utilization,
         hybrid_step_overhead_s: step_overhead,
         dispatch_wait_s: dispatch_wait,
+        recovery_s: recovery_total,
         minibatches: plans.len(),
         samples,
     }
@@ -404,6 +500,57 @@ mod tests {
         let b = skewed(Balancer::Queue);
         assert_eq!(a.dispatch_wait_s, b.dispatch_wait_s);
         assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
+    }
+
+    fn elastic(fail_at: Vec<(usize, usize, usize)>) -> RunResult {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Odc;
+        exp.balancer = Balancer::LbMini;
+        exp.devices = 4;
+        exp.devices_per_node = 4;
+        exp.minibs = 4;
+        exp.steps = 6;
+        exp.seed = 7;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fail_at = fail_at;
+        simulate(&cfg)
+    }
+
+    #[test]
+    fn failure_costs_throughput_and_reports_recovery() {
+        let healthy = elastic(vec![]);
+        assert_eq!(healthy.recovery_s, 0.0);
+        let failed = elastic(vec![(0, 2, 1)]);
+        assert!(failed.recovery_s > 0.0, "a failure must price a recovery epilogue");
+        assert!(
+            failed.samples_per_sec_per_device < healthy.samples_per_sec_per_device,
+            "losing a device must cost throughput: {} vs {}",
+            failed.samples_per_sec_per_device,
+            healthy.samples_per_sec_per_device
+        );
+        assert_eq!(failed.samples, healthy.samples, "every sample still trains exactly once");
+        assert_eq!(failed.minibatches, healthy.minibatches, "all steps complete");
+    }
+
+    #[test]
+    fn failure_scenario_deterministic() {
+        let a = elastic(vec![(1, 1, 0)]);
+        let b = elastic(vec![(1, 1, 0)]);
+        assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
+        assert_eq!(a.recovery_s, b.recovery_s);
+        assert_eq!(a.dispatch_wait_s, b.dispatch_wait_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "barrier-free")]
+    fn fail_at_under_collective_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Collective;
+        exp.balancer = Balancer::LbMicro;
+        exp.steps = 2;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fail_at = vec![(0, 1, 0)];
+        let _ = simulate(&cfg);
     }
 
     #[test]

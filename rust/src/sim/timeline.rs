@@ -7,7 +7,7 @@
 //! while compute grows as O(s²), so long microbatches hide comm).
 
 use crate::balance::cost::CostModel;
-use crate::balance::dispatch::{lpt_order, pull_schedule};
+use crate::balance::dispatch::{lpt_order, pull_schedule, pull_schedule_budgeted};
 use crate::balance::packers::Plan;
 use crate::comm::topology::Topology;
 use crate::comm::volume;
@@ -64,6 +64,28 @@ pub fn hybrid_step_overhead_bytes(param_bytes: f64, topo: &Topology) -> f64 {
     let nodes = topo.nodes() as f64;
     // per node NIC moves (nodes-1)/nodes of the model, twice
     2.0 * (param_bytes * (nodes - 1.0) / nodes) / (topo.inter_bw * topo.devices_per_node as f64)
+}
+
+/// ElasticWorld recovery epilogue, generalized over raw parameter bytes
+/// (the real engine's tiny presets are not paper models — fig12-style
+/// predicted-vs-measured comparison needs its own byte count): the
+/// rendezvous successor re-reads the dead owner's shard state from the
+/// replicated store — parameters plus both Adam moment windows, three
+/// shard-sized transfers — and re-dispatches each orphaned microbatch
+/// (one op-setup latency apiece).
+pub fn recovery_epilogue_bytes(
+    param_bytes: f64,
+    world: usize,
+    topo: &Topology,
+    orphans: usize,
+) -> f64 {
+    let shard = param_bytes / world.max(1) as f64;
+    3.0 * shard / topo.intra_bw + orphans as f64 * topo.latency
+}
+
+/// [`recovery_epilogue_bytes`] for a paper model (bf16 parameters).
+pub fn recovery_epilogue_s(model: PaperModel, world: usize, topo: &Topology, orphans: usize) -> f64 {
+    recovery_epilogue_bytes(2.0 * model.params(), world, topo, orphans)
 }
 
 /// Result of timing one minibatch.
@@ -203,6 +225,54 @@ pub fn time_minibatch_dispatch(
         }
     };
 
+    MinibatchTiming { wall, busy }
+}
+
+/// Price one minibatch under elastic membership (the sim mirror of the
+/// engine's ElasticWorld scenario): `dead[d]` devices are gone before
+/// the minibatch starts — their share redistributed — and each entry of
+/// `fails` is `(device, pulls)`: the device crashes during this
+/// minibatch after completing `pulls` microbatches. The schedule is
+/// the greedy earliest-free pull model over the plan's microbatches:
+/// exact for `Balancer::Queue` (the engine's WorkQueue dynamics), and
+/// an optimistic lower bound for static balancers, whose survivors
+/// under `ElasticDispatch` only steal orphaned work — the sim lets
+/// them rebalance everything. Only meaningful for barrier-free schemes
+/// (config validation rejects elastic × Collective). The recovery
+/// epilogue itself is priced separately by [`recovery_epilogue_s`].
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_failover(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    speeds: &[f64],
+    dead: &[bool],
+    fails: &[(usize, usize)],
+) -> MinibatchTiming {
+    debug_assert!(scheme != CommScheme::Collective, "elastic × Collective is rejected at config validation");
+    let d = plan.devices();
+    let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
+    let inv_speed = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
+    let order = lpt_order(plan, lens, cost);
+    // Per-device pull budget: dead devices pull nothing; a device
+    // failing during this minibatch completes exactly its scheduled
+    // pull count before crashing (its orphans land on survivors).
+    let mut budget: Vec<usize> =
+        (0..d).map(|dev| if dead.get(dev).copied().unwrap_or(false) { 0 } else { order.len() }).collect();
+    for &(fdev, pulls) in fails {
+        budget[fdev] = budget[fdev].min(pulls);
+    }
+    let busy = pull_schedule_budgeted(order.len(), d, &mut budget, |item, dev| {
+        let (od, om) = order[item];
+        let ls: Vec<usize> = plan.micro[od][om].iter().map(|&si| lens[si]).collect();
+        slot_time(cost.seconds(cost.micro_cost(&ls)) * inv_speed(dev), comm, scheme, false)
+    });
+    let wall = busy.iter().cloned().fold(0.0, f64::max);
     MinibatchTiming { wall, busy }
 }
 
@@ -390,6 +460,53 @@ mod tests {
             &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[], true,
         );
         assert!(dyn_.wall <= stat.wall + 1e-12, "queue rebalances the 3-vs-1 deal");
+    }
+
+    #[test]
+    fn failover_redistributes_dead_device_work() {
+        // 4 equal micros dealt 2+2; device 0 dead before the minibatch:
+        // everything lands on device 1, wall doubles vs the healthy run.
+        let plan = Plan { micro: vec![vec![vec![0], vec![1]], vec![vec![2], vec![3]]] };
+        let lens = vec![30_000usize; 4];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let healthy = time_minibatch_dispatch(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[], true,
+        );
+        let t = time_minibatch_failover(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[],
+            &[true, false], &[],
+        );
+        assert_eq!(t.busy[0], 0.0, "a dead device does no work");
+        assert!((t.wall - 2.0 * healthy.wall).abs() < 1e-9, "{} vs 2x {}", t.wall, healthy.wall);
+    }
+
+    #[test]
+    fn failover_mid_minibatch_keeps_completed_pulls() {
+        // Device 0 completes exactly one pull before crashing: its busy
+        // time is one slot (the work it already delivered is kept —
+        // exactly-once), device 1 absorbs the remaining three.
+        let plan = Plan { micro: vec![vec![vec![0], vec![1]], vec![vec![2], vec![3]]] };
+        let lens = vec![30_000usize; 4];
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let t = time_minibatch_failover(
+            &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false, &[],
+            &[false, false], &[(0, 1)],
+        );
+        assert!(t.busy[0] > 0.0);
+        assert!((t.busy[1] - 3.0 * t.busy[0]).abs() < 1e-9, "{} vs 3x {}", t.busy[1], t.busy[0]);
+        assert_eq!(t.wall, t.busy[1]);
+    }
+
+    #[test]
+    fn recovery_epilogue_scales_with_state_and_orphans() {
+        let topo = topo8();
+        let base = recovery_epilogue_bytes(1e9, 4, &topo, 0);
+        assert!(base > 0.0);
+        assert!((recovery_epilogue_bytes(2e9, 4, &topo, 0) - 2.0 * base).abs() < 1e-12);
+        assert!(recovery_epilogue_bytes(1e9, 4, &topo, 5) > base);
+        assert!(recovery_epilogue_s(PaperModel::M1_5B, 8, &topo, 1) > 0.0);
     }
 
     #[test]

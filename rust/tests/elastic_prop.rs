@@ -1,0 +1,273 @@
+//! Chaos property test: ElasticWorld under randomized device failure.
+//!
+//! Kills a random device at a random microbatch pull of a random step,
+//! under work-queue dispatch × {ODC, Hybrid}, and asserts the recovery
+//! contract end to end at the backend + dispatcher level (no PJRT, no
+//! artifacts — this suite always runs):
+//!
+//! * **exactly-once** — every microbatch of every minibatch executes
+//!   exactly once, across the crash: completed micros are not re-run,
+//!   orphaned micros run on exactly one survivor;
+//! * **oracle equality** — each step's folded gradient equals the
+//!   sequential oracle sum EXACTLY (grads are distinct powers of two,
+//!   so any double/dropped delivery flips a bit);
+//! * **arena hygiene** (ODC) — push-level acquire counts are exact
+//!   (no re-push), the dead client's arenas are released at recovery,
+//!   and total arena growth stays inside the step-count-independent
+//!   in-flight bound even many minibatches after the crash — a
+//!   recovery leak would scale with the post-crash steps and blow it.
+//!
+//! A join trial runs the mirror image: a device sits out the early
+//! steps and enters at a minibatch boundary, with identical invariants.
+
+use odc::balance::cost::CostModel;
+use odc::balance::dispatch::{make_elastic_dispatcher, Dispatcher};
+use odc::balance::packers::Plan;
+use odc::comm::backend::{CommBackend, ParamStore};
+use odc::comm::{ArenaStats, HybridComm, Membership, OdcComm};
+use odc::config::{Balancer, CommScheme, PaperModel};
+use odc::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Two layers, lengths chosen so padding differs across world sizes.
+const LAYERS: [usize; 2] = [12, 7];
+const MICROS_PER_DEV: usize = 3;
+
+/// Singleton microbatches with strictly decreasing cost, so the LPT
+/// pull order is deterministic and ids are distinct.
+fn make_plan(world: usize) -> (Plan, Vec<usize>) {
+    let n = world * MICROS_PER_DEV;
+    let lens: Vec<usize> = (0..n).map(|i| 4000 - 100 * i).collect();
+    let micro: Vec<Vec<Vec<usize>>> = (0..world)
+        .map(|d| (0..MICROS_PER_DEV).map(|m| vec![d * MICROS_PER_DEV + m]).collect())
+        .collect();
+    (Plan { micro }, lens)
+}
+
+struct TrialOutcome {
+    /// ids executed per step (any order).
+    executed: Vec<Vec<u64>>,
+    arena: Option<ArenaStats>,
+}
+
+/// Drive `steps` minibatches of the synthetic workload over an elastic
+/// membership, with trainer-faithful crash/join handling. Every shard
+/// owner asserts the exact oracle fold in-line.
+fn run_elastic(
+    scheme: CommScheme,
+    group_size: usize,
+    world: usize,
+    membership: Arc<Membership>,
+    fail: Option<(usize, usize, usize)>,
+    steps: usize,
+) -> TrialOutcome {
+    let params = Arc::new(ParamStore::new(&LAYERS, world));
+    let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match scheme {
+        CommScheme::Odc => {
+            let c = Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)));
+            (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
+        }
+        CommScheme::Hybrid => (
+            Arc::new(HybridComm::with_membership(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                group_size,
+            )) as Arc<dyn CommBackend>,
+            None,
+        ),
+        CommScheme::Collective => unreachable!("elastic × Collective is rejected at config time"),
+    };
+    let (plan, lens) = make_plan(world);
+    let cost = CostModel::for_model(PaperModel::M1_5B);
+    let n_micros = (world * MICROS_PER_DEV) as u64;
+    // every micro pushes 2^id: the full fold is exactly 2^n - 1
+    let want = ((1u64 << n_micros) - 1) as f32;
+    let executed: Arc<Vec<Mutex<Vec<u64>>>> =
+        Arc::new((0..steps).map(|_| Mutex::new(Vec::new())).collect());
+    let dispatchers: Vec<Arc<dyn Dispatcher>> = (0..steps)
+        .map(|step| {
+            let crasher: Vec<bool> = (0..world).map(|d| membership.fails_during(d, step)).collect();
+            let absent: Vec<bool> = (0..world).map(|d| membership.absent(d, step)).collect();
+            make_elastic_dispatcher(Balancer::Queue, scheme, &plan, &lens, &cost, &crasher, &absent)
+        })
+        .collect();
+    let dispatchers = Arc::new(dispatchers);
+
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let backend = Arc::clone(&backend);
+            let params = Arc::clone(&params);
+            let membership = Arc::clone(&membership);
+            let executed = Arc::clone(&executed);
+            let dispatchers = Arc::clone(&dispatchers);
+            s.spawn(move || {
+                let join = membership.joins_at(dev);
+                if join > 0 {
+                    backend.await_join(dev);
+                }
+                for step in join..steps {
+                    let disp = dispatchers[step].as_ref();
+                    let mut pulls = 0usize;
+                    let mut crashed = false;
+                    while let Some(a) = disp.next_micro(dev) {
+                        if fail == Some((dev, step, pulls)) {
+                            disp.report_failed(dev);
+                            crashed = true;
+                            break;
+                        }
+                        pulls += 1;
+                        executed[step].lock().unwrap().push(a.id);
+                        for (l, p) in params.layers.iter().enumerate() {
+                            let grad = vec![(1u64 << a.id) as f32; p.padded_len()];
+                            backend.reduce_grad(dev, l, &grad, 1.0, a.id);
+                        }
+                    }
+                    if !crashed && matches!(fail, Some((d, st, _)) if d == dev && st == step) {
+                        disp.report_failed(dev);
+                        crashed = true;
+                    }
+                    if crashed {
+                        return; // simulated crash: the worker vanishes
+                    }
+                    backend.end_minibatch(dev);
+                    for &shard in &membership.shards_owned_by(dev, step) {
+                        if shard != dev {
+                            backend.flush_shard(shard);
+                        }
+                        for (l, p) in params.layers.iter().enumerate() {
+                            let mut g = vec![0.0f32; p.shard_len];
+                            backend.take_grad_shard(shard, l, &mut g);
+                            for &v in &g {
+                                assert_eq!(
+                                    v, want,
+                                    "step {step} shard {shard} layer {l}: fold != oracle"
+                                );
+                            }
+                        }
+                    }
+                    backend.end_step(dev);
+                }
+            });
+        }
+    });
+
+    TrialOutcome {
+        executed: executed.iter().map(|m| m.lock().unwrap().clone()).collect(),
+        arena: odc_handle.map(|c| c.arena_stats()),
+    }
+}
+
+fn assert_exactly_once(outcome: &TrialOutcome, world: usize, steps: usize) {
+    let n = (world * MICROS_PER_DEV) as u64;
+    for (step, ids) in outcome.executed.iter().enumerate() {
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        let want: Vec<u64> = (0..n).collect();
+        assert_eq!(sorted, want, "step {step}: every microbatch must run exactly once");
+    }
+    assert_eq!(outcome.executed.len(), steps);
+}
+
+#[test]
+fn chaos_kill_random_device_odc() {
+    let world = 4;
+    let mut rng = Rng::new(0xE1A5);
+    for trial in 0..6 {
+        let fail_dev = rng.below(world as u64) as usize;
+        let fail_step = 1 + rng.below(2) as usize;
+        // pull index may exceed the device's actual pulls: then it
+        // crashes at the minibatch's end instead (both paths covered)
+        let fail_pull = rng.below((world * MICROS_PER_DEV) as u64 + 2) as usize;
+        let steps = fail_step + 7; // many post-recovery minibatches
+        let membership =
+            Arc::new(Membership::with_schedule(world, &[], &[(fail_dev, fail_step)]).unwrap());
+        let outcome = run_elastic(
+            CommScheme::Odc,
+            0,
+            world,
+            membership,
+            Some((fail_dev, fail_step, fail_pull)),
+            steps,
+        );
+        assert_exactly_once(&outcome, world, steps);
+
+        let stats = outcome.arena.expect("odc arena stats");
+        // Push-level exactly-once: each executed micro acquires exactly
+        // world × layers payload buffers, once.
+        let pushes = (steps * world * MICROS_PER_DEV * LAYERS.len() * world) as u64;
+        assert_eq!(stats.acquires, pushes, "trial {trial}: double or dropped pushes");
+        // The dead client's arena columns were released at recovery:
+        // at least their prealloc is gone from residency.
+        let prealloc_total = (world * world * (LAYERS.len() + 1)) as u64;
+        let dead_prealloc = (world * (LAYERS.len() + 1)) as u64;
+        assert!(
+            stats.resident <= prealloc_total + stats.fresh_allocs - dead_prealloc,
+            "trial {trial}: dead client's arenas not released (resident {}, fresh {})",
+            stats.resident,
+            stats.fresh_allocs
+        );
+        // Growth bound independent of the step count: in-flight per
+        // pair is capped by one minibatch's total pushes, so a per-step
+        // recovery leak would overflow this across the 7 post-crash
+        // steps.
+        let bound = (world * world * (world * MICROS_PER_DEV) * LAYERS.len()) as u64;
+        assert!(
+            stats.fresh_allocs <= bound,
+            "trial {trial}: arena growth {} exceeds in-flight bound {bound}",
+            stats.fresh_allocs
+        );
+    }
+}
+
+#[test]
+fn chaos_kill_random_device_hybrid() {
+    let world = 4;
+    let mut rng = Rng::new(0xB0B);
+    for group_size in [2usize, 2, 4, 1] {
+        let fail_dev = rng.below(world as u64) as usize;
+        let fail_step = 1 + rng.below(2) as usize;
+        let fail_pull = rng.below((world * MICROS_PER_DEV) as u64 + 2) as usize;
+        let steps = fail_step + 5;
+        let membership =
+            Arc::new(Membership::with_schedule(world, &[], &[(fail_dev, fail_step)]).unwrap());
+        // every group keeps a live member (single fail, group_size > 1
+        // or the dead device alone in its group is excluded)
+        if membership.validate_groups(group_size, steps).is_err() {
+            continue; // per-device groups with the dead device: unrecoverable by design
+        }
+        let outcome = run_elastic(
+            CommScheme::Hybrid,
+            group_size,
+            world,
+            membership,
+            Some((fail_dev, fail_step, fail_pull)),
+            steps,
+        );
+        assert_exactly_once(&outcome, world, steps);
+    }
+}
+
+#[test]
+fn join_at_minibatch_boundary_odc() {
+    let world = 4;
+    for join_step in [1usize, 2] {
+        let steps = join_step + 4;
+        let membership =
+            Arc::new(Membership::with_schedule(world, &[(3, join_step)], &[]).unwrap());
+        let outcome = run_elastic(CommScheme::Odc, 0, world, membership, None, steps);
+        assert_exactly_once(&outcome, world, steps);
+    }
+}
+
+#[test]
+fn join_then_fail_same_run() {
+    // A device joins late AND another crashes afterwards: both
+    // transitions in one run, still exactly-once everywhere.
+    let world = 4;
+    let membership =
+        Arc::new(Membership::with_schedule(world, &[(2, 1)], &[(0, 2)]).unwrap());
+    let steps = 6;
+    let outcome =
+        run_elastic(CommScheme::Odc, 0, world, membership, Some((0, 2, 1)), steps);
+    assert_exactly_once(&outcome, world, steps);
+}

@@ -487,6 +487,131 @@ fn device_speed_validated() {
     assert!(err.contains("finite and > 0"), "unexpected error: {err}");
 }
 
+/// THE ElasticWorld acceptance case: world 4, device 0 crashes during
+/// minibatch 1 immediately before its 3rd pulled microbatch (the CLI's
+/// `--fail-at 0:1:2`). All steps still complete, recovery overhead is
+/// reported, and the final parameters match the surviving-world oracle
+/// within 1e-5 — the id-keyed fold makes the re-dispatched microbatches
+/// placement-free and the rendezvous successor recovers bit-exact Adam
+/// state from the replicated store.
+#[test]
+fn elastic_fail_matches_surviving_world_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut pin = base_cfg();
+    pin.world = 4;
+    pin.minibs = 2;
+    pin.steps = 3;
+    pin.scheme = CommScheme::Odc;
+    pin.balancer = Balancer::Queue;
+    let plans4 = plan_preview(&pin).unwrap();
+    let flat: Vec<Plan> = plans4
+        .iter()
+        .map(|p| Plan { micro: vec![p.micro.iter().flatten().filter(|m| !m.is_empty()).cloned().collect()] })
+        .collect();
+    let mut solo = base_cfg();
+    solo.world = 1;
+    solo.minibs = 8; // 1×8 == 4×2 samples per optimizer step
+    solo.steps = 3;
+    solo.scheme = CommScheme::Odc;
+    solo.balancer = Balancer::LbMicro;
+    solo.plan_override = Some(flat);
+    let Some(oracle) = try_train(&solo) else { return };
+
+    let mut c = pin.clone();
+    c.fail_at = vec![(0, 1, 2)];
+    c.plan_override = Some(plans4);
+    let Some(r) = try_train(&c) else { return };
+    assert_eq!(r.logs.len(), 3, "all steps must complete despite the crash");
+    assert!(r.recovery_s > 0.0, "recovery overhead must be measured and reported");
+    for (a, b) in oracle.logs.iter().zip(&r.logs) {
+        assert_eq!(a.tokens, b.tokens, "step {}: exactly-once delivery", a.step);
+        assert!(
+            (a.loss - b.loss).abs() < 1e-6,
+            "step {}: oracle {} vs elastic {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    for (l, (pa, pb)) in oracle.final_params.iter().zip(&r.final_params).enumerate() {
+        let d = rel_l2(pb, pa);
+        assert!(d < 1e-5, "layer {l}: rel L2 {d} vs the surviving-world oracle");
+    }
+}
+
+/// A join at a minibatch boundary is bit-identical to a fresh run at
+/// the larger world size (the replica refresh path): device 1 sits out
+/// step 0 — its share redistributed, its shard served by the ring
+/// successor — then joins at step 1 recovering params + Adam moments
+/// from the replicated store. The bytes cannot tell the difference.
+#[test]
+fn join_bit_identical_to_fresh_run_at_larger_world() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut fresh = base_cfg();
+    fresh.steps = 3;
+    fresh.scheme = CommScheme::Odc;
+    fresh.balancer = Balancer::Queue;
+    let Some(a) = try_train(&fresh) else { return };
+    let mut late = fresh.clone();
+    late.join_at = vec![(1, 1)];
+    let Some(b) = try_train(&late) else { return };
+    assert!(b.recovery_s > 0.0, "the join refresh is recovery work");
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}: a join must not move a bit", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}: join must be bit-identical to the fresh run");
+    }
+}
+
+/// Elastic knobs are config errors under Collective — one dead rank
+/// deadlocks its per-layer barriers, which is the PS-vs-collective
+/// contrast the scenario exists to measure. Validation runs before
+/// artifacts are touched.
+#[test]
+fn elastic_rejected_under_collective() {
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::LbMicro;
+    c.fail_at = vec![(0, 1, 0)];
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+    let mut j = base_cfg();
+    j.scheme = CommScheme::Collective;
+    j.balancer = Balancer::LbMicro;
+    j.join_at = vec![(1, 1)];
+    let err = train(&j).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+}
+
+/// Malformed elastic schedules are rejected before anything runs.
+#[test]
+fn elastic_schedule_validated() {
+    // fail step beyond the run
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.fail_at = vec![(0, 99, 0)];
+    assert!(train(&c).is_err());
+    // nobody survives the step
+    let mut c2 = base_cfg();
+    c2.scheme = CommScheme::Odc;
+    c2.fail_at = vec![(0, 1, 0), (1, 1, 0)];
+    assert!(train(&c2).is_err());
+    // hybrid: the dead device is alone in its node group — its replica
+    // and super-shard duties would be unrecoverable
+    let mut c3 = base_cfg();
+    c3.scheme = CommScheme::Hybrid;
+    c3.devices_per_node = 1;
+    c3.fail_at = vec![(0, 1, 0)];
+    let err = train(&c3).unwrap_err().to_string();
+    assert!(err.contains("no completing member"), "unexpected error: {err}");
+}
+
 /// Config validation runs before artifacts are touched, so this holds
 /// even without `make artifacts`.
 #[test]

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: compare fresh BENCH_*.json records against the
+previous CI run's records (restored via actions/cache).
+
+Usage: bench_trend.py <prev_dir> <fresh_dir>
+
+Tracked metrics (higher is better for both):
+  * BENCH_hotpath.json  -> per_microbatch.reduction_pct
+        (zero-copy vs seed comm-path win, %)
+  * BENCH_dispatch.json -> static_bubble_time_s - queue_bubble_time_s
+        at the 4x-slowdown row (bubble seconds the work queue removes)
+
+Exit codes: 0 = ok (including "no previous record yet" — the first run
+seeds the trajectory), 1 = a metric regressed more than TOLERANCE, or a
+fresh record is missing/measured:false.
+"""
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.15  # 15% relative regression budget
+
+
+def load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def hot_metric(rec):
+    try:
+        v = rec["per_microbatch"]["reduction_pct"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def disp_metric(rec):
+    try:
+        for row in rec["rows"]:
+            if float(row["slowdown"]) == 4.0:
+                return float(row["static_bubble_time_s"]) - float(row["queue_bubble_time_s"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    return None
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: bench_trend.py <prev_dir> <fresh_dir>", file=sys.stderr)
+        return 2
+    prev_dir, fresh_dir = sys.argv[1], sys.argv[2]
+    failures = []
+
+    checks = [
+        ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric),
+        ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric),
+    ]
+    for fname, label, metric in checks:
+        fresh = load(os.path.join(fresh_dir, fname))
+        if fresh is None or not fresh.get("measured"):
+            failures.append(f"{fname}: fresh record missing or still measured:false")
+            continue
+        cur = metric(fresh)
+        if cur is None:
+            failures.append(f"{fname}: fresh record has no {label} metric")
+            continue
+        prev = load(os.path.join(prev_dir, fname))
+        if prev is None or not prev.get("measured"):
+            print(f"{label}: no measured previous record — seeding the trajectory at {cur:.4f}")
+            continue
+        old = metric(prev)
+        if old is None:
+            print(f"{label}: previous record has no metric — seeding at {cur:.4f}")
+            continue
+        floor = old - abs(old) * TOLERANCE
+        ok = cur >= floor
+        print(
+            f"{label}: previous {old:.4f} -> fresh {cur:.4f} "
+            f"(floor {floor:.4f}) {'OK' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(f"{label} regressed >{TOLERANCE:.0%}: {old:.4f} -> {cur:.4f}")
+
+    for msg in failures:
+        print(f"::error::{msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
