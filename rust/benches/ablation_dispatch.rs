@@ -16,6 +16,7 @@
 //! STRICTLY lower bubble time than static LB-Mini at the 4× slowdown);
 //! CI's bench smoke step fails on malformed output.
 
+use odc::comm::FaultPlan;
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use odc::report::{pct, pct_delta, Table};
 use odc::sim::run::{simulate, RunResult, SimConfig};
@@ -23,8 +24,15 @@ use odc::util::json::Json;
 
 const DEVICES: usize = 4;
 const SLOWDOWNS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+/// ChaosComm pricing cell: a fixed transient fault plan over the same
+/// 1x cell, tracked by the trend gate as a retained-throughput fraction.
+const CHAOS_PLAN: &str = "drop=0.05,dup=0.02,reorder=0.05,seed=7";
 
 fn run(balancer: Balancer, slowdown: f64) -> RunResult {
+    run_plan(balancer, slowdown, "")
+}
+
+fn run_plan(balancer: Balancer, slowdown: f64, fault_plan: &str) -> RunResult {
     let exp = ExperimentConfig {
         model: PaperModel::M1_5B,
         dataset: Dataset::LongAlign,
@@ -45,6 +53,7 @@ fn run(balancer: Balancer, slowdown: f64) -> RunResult {
         speeds[0] = 1.0 / slowdown; // device 0 is the straggler
         cfg.device_speed = speeds;
     }
+    cfg.fault_plan = FaultPlan::parse(fault_plan).expect("bench fault plan parses");
     simulate(&cfg)
 }
 
@@ -86,6 +95,20 @@ fn main() {
         if queue_lower_bubble_at_4x { "yes" } else { "NO (acceptance regression)" }
     );
 
+    // ChaosComm: the same uniform-speed cell under a lossy transport —
+    // the trend gate tracks the retained-throughput fraction so retry
+    // pricing cannot silently get more expensive.
+    let clean = run(Balancer::LbMini, 1.0);
+    let chaos = run_plan(Balancer::LbMini, 1.0, CHAOS_PLAN);
+    let retained = chaos.samples_per_sec_per_device / clean.samples_per_sec_per_device;
+    println!(
+        "\nchaos overhead ({CHAOS_PLAN}): {} retries, {} retransmitted bytes, \
+         retained throughput {}",
+        chaos.retries,
+        chaos.retransmitted_bytes,
+        pct(retained)
+    );
+
     let json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("measured", Json::Bool(true)),
@@ -104,6 +127,18 @@ fn main() {
         ),
         ("rows", Json::arr(rows)),
         ("queue_lower_bubble_at_4x", Json::Bool(queue_lower_bubble_at_4x)),
+        (
+            "chaos",
+            Json::obj(vec![
+                ("fault_plan", Json::str(CHAOS_PLAN)),
+                ("retries", Json::num(chaos.retries as f64)),
+                ("retransmitted_bytes", Json::num(chaos.retransmitted_bytes as f64)),
+                ("escalations", Json::num(chaos.escalations as f64)),
+                ("clean_samples_per_sec_per_device", Json::num(clean.samples_per_sec_per_device)),
+                ("chaos_samples_per_sec_per_device", Json::num(chaos.samples_per_sec_per_device)),
+                ("retained_throughput_fraction", Json::num(retained)),
+            ]),
+        ),
         (
             "notes",
             Json::str(

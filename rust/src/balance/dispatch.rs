@@ -165,8 +165,11 @@ pub fn lpt_order(plan: &Plan, lens: &[usize], cost: &CostModel) -> Vec<(usize, u
             order.push((c, d, m));
         }
     }
-    // descending cost; (d, m) tie-break keeps the order deterministic
-    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then_with(|| (a.1, a.2).cmp(&(b.1, b.2))));
+    // descending cost; (d, m) tie-break keeps the order deterministic.
+    // total_cmp, not partial_cmp().unwrap(): a NaN cost (rejected at
+    // config validation, but reachable through a hand-built CostModel)
+    // must yield a deterministic order, never a panic mid-dispatch.
+    order.sort_by(|a, b| b.0.total_cmp(&a.0).then_with(|| (a.1, a.2).cmp(&(b.1, b.2))));
     order.into_iter().map(|(_, d, m)| (d, m)).collect()
 }
 
@@ -491,6 +494,26 @@ mod tests {
         let pad = d.next_micro(1).unwrap();
         assert!(pad.samples.is_empty(), "second slot of device 1 is a padded barrier slot");
         assert!(d.next_micro(1).is_none());
+    }
+
+    /// Regression: a NaN predicted cost (e.g. a hand-built CostModel
+    /// with non-finite coefficients — the config path rejects these at
+    /// validation) used to panic `partial_cmp().unwrap()` mid-sort.
+    /// total_cmp totally orders NaN, so the pull order stays
+    /// deterministic and every microbatch is still served exactly once.
+    #[test]
+    fn lpt_order_survives_nan_costs() {
+        let (plan, lens) = plan();
+        let nan_cost = CostModel { linear: f64::NAN, quad: 0.0, micro_overhead: 0.0, device_flops: 1.0 };
+        let order_a = lpt_order(&plan, &lens, &nan_cost);
+        let order_b = lpt_order(&plan, &lens, &nan_cost);
+        assert_eq!(order_a, order_b, "NaN costs must still give a deterministic order");
+        let mut served = order_a.clone();
+        served.sort_unstable();
+        assert_eq!(served, vec![(0, 0), (0, 1), (1, 0)], "every non-empty micro served once");
+        let q = WorkQueue::new(&plan, &lens, &nan_cost);
+        let ids: Vec<u64> = std::iter::from_fn(|| q.next_micro(0)).map(|a| a.id).collect();
+        assert_eq!(ids.len(), 3);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 use super::membership::OptReplica;
 use super::shared::ShardedParam;
+use super::transport::FaultStats;
 use std::sync::Arc;
 
 /// Parameter store shared by engine and backends: one sharded flat
@@ -168,4 +169,21 @@ pub trait CommBackend: Send + Sync {
     /// and replicated optimizer state it is about to read are settled.
     /// No-op for founding members and static schedules.
     fn await_join(&self, _dev: usize) {}
+
+    // ---- ChaosComm hooks (see `comm::transport`) -----------------------
+
+    /// Whether `dev` has escalated an unreachable link: its retry budget
+    /// was exhausted past the suspicion threshold, so it must crash out
+    /// through the elastic path (`report_failed` → ring-successor
+    /// takeover → orphan re-pull) instead of wedging a rendezvous.
+    /// Always false on reliable transports.
+    fn link_escalated(&self, _dev: usize) -> bool {
+        false
+    }
+
+    /// Transport-level fault counters (retries, retransmitted bytes,
+    /// link escalations) accumulated so far. Zero on reliable transports.
+    fn fault_stats(&self) -> FaultStats {
+        FaultStats::default()
+    }
 }

@@ -94,19 +94,33 @@ use super::backend::{CommBackend, GatherPolicy, ParamStore};
 use super::membership::{Membership, MembershipBarrier};
 use super::shared::SharedBuf;
 use super::topology::GroupMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use super::transport::{
+    FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
+    WireMsg,
+};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+#[derive(Clone)]
 enum Msg {
     /// One super-shard gradient piece for this server's intra-group
     /// shard of `layer`, pushed by group-local `client` for global
     /// microbatch `micro` (the fold key); `data` returns to the
     /// (server, client) intra arena once folded.
     IntraAccum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
-    /// A group member has finished every microbatch of the minibatch.
-    IntraDone,
+    /// A group member (global device id `client`) has finished every
+    /// microbatch of the minibatch. The id lets the daemon count the
+    /// intra quorum per sender, ignoring a stray Done from a member the
+    /// membership schedule says does not complete this minibatch (e.g.
+    /// one that escalated a dead link mid-broadcast).
+    IntraDone { client: usize },
+    /// Crash-out compensation: group-local `client` escalated before
+    /// delivering `micro` to every super-shard owner, so the landed
+    /// pieces must be discarded — the dispatch layer re-runs the whole
+    /// microbatch on a survivor (all-or-nothing per microbatch).
+    IntraRetract { micro: u64, client: usize },
     /// The colocated worker asks for the group-partial super-shards; the
     /// daemon replies once all `group_size` members are done.
     IntraFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
@@ -119,6 +133,27 @@ enum Msg {
     /// the daemon replies once all `n_groups` groups delivered.
     CrossFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
     Shutdown,
+}
+
+impl WireMsg for Msg {
+    /// Everything except the two gradient payloads is control plane:
+    /// Done/Retract/Flush/Shutdown are never held back for reordering or
+    /// delay and flush a link's limbo ahead of themselves, so a
+    /// minibatch's in-flight pieces always land before the rendezvous
+    /// that folds them (and a retract always lands after the piece it
+    /// cancels — per-link FIFO).
+    fn is_barrier(&self) -> bool {
+        !matches!(self, Msg::IntraAccum { .. } | Msg::CrossAccum { .. })
+    }
+
+    fn payload_bytes(&self) -> usize {
+        match self {
+            Msg::IntraAccum { data, .. } | Msg::CrossAccum { data, .. } => {
+                data.len() * std::mem::size_of::<f32>()
+            }
+            _ => 0,
+        }
+    }
 }
 
 /// One buffered intra-level piece awaiting the id-keyed group fold.
@@ -241,25 +276,56 @@ impl DaemonState {
 /// intra-group scatter-accumulate and the cross-group epilogue for the
 /// shards this device owns at each level.
 fn daemon_loop(
-    rx: mpsc::Receiver<Msg>,
+    me: usize,
+    transport: Arc<dyn Transport<Msg>>,
     mut st: DaemonState,
     intra_arenas: Vec<Arc<PayloadArena>>,
     cross_arenas: Vec<Arc<PayloadArena>>,
 ) {
     loop {
-        let msg = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => return,
+        let msg = match transport.recv(me) {
+            Some(env) => env.msg,
+            None => return,
         };
         match msg {
             Msg::IntraAccum { layer, micro, weight, client, data } => {
-                st.pending_intra[layer].push(IntraPiece { micro, client, weight, data });
+                // Idempotence belt-and-braces on top of the transport's
+                // seq dedup: the fold key (micro, client) is unique per
+                // layer per minibatch, so a duplicate is free to drop.
+                if st.pending_intra[layer].iter().any(|p| p.micro == micro && p.client == client) {
+                    intra_arenas[client].release(data);
+                } else {
+                    st.pending_intra[layer].push(IntraPiece { micro, client, weight, data });
+                }
             }
-            Msg::IntraDone => st.intra_done += 1,
+            Msg::IntraDone { client } => {
+                // Count only members the schedule says complete this
+                // minibatch — a stray Done from an escalated member must
+                // not push the counter past the quorum equality check.
+                if st.membership.completes(client, st.intra_mb) {
+                    st.intra_done += 1;
+                }
+            }
+            Msg::IntraRetract { micro, client } => {
+                for layer in 0..st.pending_intra.len() {
+                    if let Some(i) = st.pending_intra[layer]
+                        .iter()
+                        .position(|p| p.micro == micro && p.client == client)
+                    {
+                        let p = st.pending_intra[layer].swap_remove(i);
+                        intra_arenas[p.client].release(p.data);
+                    }
+                }
+            }
             Msg::IntraFlush { reply } => st.intra_flush = Some(reply),
             Msg::CrossAccum { layer, group, data } => {
-                debug_assert!(st.pending_cross[layer][group].is_none(), "duplicate cross partial");
-                st.pending_cross[layer][group] = Some(data);
+                // Exactly one partial per (layer, group): a duplicate is
+                // discarded, its payload returned to the cross arena.
+                if st.pending_cross[layer][group].is_some() {
+                    cross_arenas[group].release(data);
+                } else {
+                    st.pending_cross[layer][group] = Some(data);
+                }
             }
             Msg::CrossDone => st.cross_done += 1,
             Msg::CrossFlush { reply } => st.cross_flush = Some(reply),
@@ -297,8 +363,10 @@ pub struct HybridComm {
     /// Per-group full-model replicas, `replicas[group][layer]`, each in
     /// the global padded layout.
     replicas: Vec<Vec<SharedBuf>>,
-    /// Mailbox senders, one per device (serving both levels).
-    mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
+    /// The typed envelope transport carrying every mailbox message for
+    /// both levels ([`crate::comm::transport`]): reliable in-process by
+    /// default, or a seeded [`FaultyTransport`] under a fault plan.
+    transport: Arc<dyn Transport<Msg>>,
     /// Fully-reduced optimizer shards returned at the minibatch boundary
     /// (written by the owner, or by a rendezvous successor's
     /// `flush_shard` for an orphaned shard).
@@ -317,6 +385,10 @@ pub struct HybridComm {
     /// Per-device scratch for the end_step replica refresh (sized to the
     /// largest super-shard; steady-state allocation-free).
     refresh_scratch: Vec<Mutex<Vec<f32>>>,
+    /// Set when a device's retry budget on some link is exhausted
+    /// ([`SendError::Unreachable`]): the device must crash out through
+    /// the trainer's elastic path instead of wedging a rendezvous.
+    escalated: Vec<AtomicBool>,
 }
 
 impl HybridComm {
@@ -340,6 +412,43 @@ impl HybridComm {
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,
+    ) -> Self {
+        let world = membership.world();
+        HybridComm::with_transport(
+            params,
+            membership,
+            group_size,
+            Arc::new(InProcTransport::new(world)),
+        )
+    }
+
+    /// Hybrid over a lossy transport: both levels' mailbox traffic
+    /// crosses a [`FaultyTransport`] driven by `plan`. Transient loss is
+    /// absorbed by the retransmit ladder and receiver reassembly
+    /// (bit-identity preserved); a link partitioned past the retry
+    /// budget escalates into the elastic machinery (see
+    /// [`CommBackend::link_escalated`]).
+    pub fn with_faults(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+        plan: FaultPlan,
+        policy: RetryPolicy,
+    ) -> Self {
+        let world = membership.world();
+        HybridComm::with_transport(
+            params,
+            membership,
+            group_size,
+            Arc::new(FaultyTransport::new(world, plan, policy)),
+        )
+    }
+
+    fn with_transport(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+        transport: Arc<dyn Transport<Msg>>,
     ) -> Self {
         let world = membership.world();
         let groups = GroupMap::new(world, group_size);
@@ -373,10 +482,8 @@ impl HybridComm {
             .collect();
 
         let max_super = super_lens.iter().copied().max().unwrap_or(0);
-        let mut mailbox = Vec::with_capacity(world);
         let mut daemons = Vec::with_capacity(world);
         for dev in 0..world {
-            let (tx, rx) = mpsc::channel::<Msg>();
             let st = DaemonState::new(
                 super_lens.clone(),
                 shard_lens.clone(),
@@ -387,15 +494,16 @@ impl HybridComm {
             );
             let intra_row = intra_arenas.row(dev);
             let cross_row = cross_arenas.row(dev);
-            daemons.push(std::thread::spawn(move || daemon_loop(rx, st, intra_row, cross_row)));
-            mailbox.push(Mutex::new(tx));
+            let wire = Arc::clone(&transport);
+            daemons
+                .push(std::thread::spawn(move || daemon_loop(dev, wire, st, intra_row, cross_row)));
         }
         HybridComm {
             world,
             groups,
             params,
             replicas,
-            mailbox,
+            transport,
             taken: (0..world).map(|_| Mutex::new(None)).collect(),
             barrier: MembershipBarrier::new(Arc::clone(&membership), 2),
             membership,
@@ -404,6 +512,7 @@ impl HybridComm {
             intra_arenas,
             cross_arenas,
             refresh_scratch: (0..world).map(|_| Mutex::new(vec![0.0f32; max_super])).collect(),
+            escalated: (0..world).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -412,7 +521,7 @@ impl HybridComm {
     /// piece to its owner's mailbox, then notify the owners. Called by
     /// the member owning `j` — or, when that member is dead or not yet
     /// joined, by its in-group rendezvous driver on its behalf.
-    fn cross_push(&self, group: usize, j: usize, partial: &[Vec<f32>]) {
+    fn cross_push(&self, src: usize, group: usize, j: usize, partial: &[Vec<f32>]) {
         let n_groups = self.groups.n_groups();
         for (layer, p) in self.params.layers.iter().enumerate() {
             let k = p.shard_len;
@@ -420,16 +529,22 @@ impl HybridComm {
                 let owner = j * n_groups + t;
                 let mut data = self.cross_arenas.arena(owner, group).acquire(k);
                 data.extend_from_slice(&partial[layer][t * k..(t + 1) * k]);
-                self.send(owner, Msg::CrossAccum { layer, group, data });
+                self.send(src, owner, 0, Msg::CrossAccum { layer, group, data });
             }
         }
         for t in 0..n_groups {
-            self.send(j * n_groups + t, Msg::CrossDone);
+            self.send(src, j * n_groups + t, 0, Msg::CrossDone);
         }
     }
 
-    fn send(&self, dev: usize, msg: Msg) {
-        self.mailbox[dev].lock().unwrap().send(msg).expect("daemon alive");
+    /// Fire-and-continue send: transient loss past the retry budget on a
+    /// rendezvous path marks the sender escalated — the trainer crashes
+    /// it out through the elastic machinery rather than wedging a fold.
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: Msg) {
+        match self.transport.send(src, dst, micro, msg) {
+            Ok(()) | Err(SendError::Lost { .. }) => {}
+            Err(SendError::Unreachable) => self.escalated[src].store(true, Ordering::Relaxed),
+        }
     }
 
     pub fn group_map(&self) -> GroupMap {
@@ -464,7 +579,18 @@ impl CommBackend for HybridComm {
         // One-sided intra-group read of the group replica: phase
         // discipline makes the replica immutable during the microbatch
         // phase (it is only written inside end_step's barrier pair).
-        let buf = &self.replicas[self.groups.group_of(dev)][layer];
+        // Under a lossy transport each member's super-shard read runs
+        // the retransmit ladder (deadline + capped backoff, priced into
+        // FaultStats); budget exhaustion marks the link escalated.
+        let group = self.groups.group_of(dev);
+        let s = self.params.layers[layer].padded_len() / self.groups.group_size;
+        for j in 0..self.groups.group_size {
+            let peer = self.groups.member(group, j);
+            if self.transport.one_sided(dev, peer, s * 4).is_err() {
+                self.escalated[dev].store(true, Ordering::Relaxed);
+            }
+        }
+        let buf = &self.replicas[group][layer];
         let n = buf.len().min(out.len());
         buf.read(0, &mut out[..n]);
     }
@@ -479,34 +605,66 @@ impl CommBackend for HybridComm {
         if weight == 0.0 {
             return; // idle slot: nothing to send, nothing to wait for
         }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // crashing out: push nothing more, the trainer re-runs
+        }
         let group = self.groups.group_of(dev);
         let me = self.groups.local_index(dev);
         let s = p.padded_len() / self.groups.group_size;
+        let mut lost = false;
         for j in 0..self.groups.group_size {
             let server = self.groups.member(group, j);
             let mut data = self.intra_arenas.arena(server, me).acquire(s);
             data.extend_from_slice(&grad[j * s..(j + 1) * s]);
-            self.send(server, Msg::IntraAccum { layer, micro, weight, client: me, data });
+            let msg = Msg::IntraAccum { layer, micro, weight, client: me, data };
+            if self.transport.send(dev, server, micro, msg).is_err() {
+                lost = true;
+            }
+        }
+        if lost {
+            // All-or-nothing per microbatch: a piece is gone for good, so
+            // retract every landed sibling (the retract is a barrier
+            // message — per-link FIFO puts it after the piece it cancels)
+            // and crash out; the dispatcher re-runs `micro` on a survivor
+            // exactly once. flush_links first lands any still-held pieces
+            // of COMPLETED microbatches so their folds stay whole.
+            self.escalated[dev].store(true, Ordering::Relaxed);
+            self.transport.flush_links(dev);
+            for j in 0..self.groups.group_size {
+                let server = self.groups.member(group, j);
+                let _ = self
+                    .transport
+                    .send(dev, server, micro, Msg::IntraRetract { micro, client: me });
+            }
         }
     }
 
     fn end_minibatch(&self, dev: usize) {
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // crashing out: the trainer reports the failure next
+        }
         let step = self.step_ctr[dev].load(Ordering::Relaxed);
         let group = self.groups.group_of(dev);
         let j = self.groups.local_index(dev);
 
         // ---- intra epilogue: node-level reduce-scatter completes ----
         for peer in self.groups.members(group) {
-            self.send(peer, Msg::IntraDone);
+            self.send(dev, peer, 0, Msg::IntraDone { client: dev });
+        }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            // Escalated mid-broadcast: bail before blocking on a flush
+            // this device may no longer satisfy. Daemons ignore the
+            // already-landed Dones through the quorum filter.
+            return;
         }
         let (tx, rx) = mpsc::channel();
-        self.send(dev, Msg::IntraFlush { reply: tx });
+        self.send(dev, dev, 0, Msg::IntraFlush { reply: tx });
         let partial = rx.recv().expect("intra flush");
 
         // ---- cross epilogue: ship optimizer-shard pieces to owners ----
         // Super-shard j covers global owners j*n_groups..(j+1)*n_groups;
         // piece t of the super-shard is owner (j*n_groups + t)'s shard.
-        self.cross_push(group, j, &partial);
+        self.cross_push(dev, group, j, &partial);
 
         // ---- drive dead/dormant group members' epilogues ----
         // Their daemons hold real group partials (every member's pushes
@@ -516,14 +674,14 @@ impl CommBackend for HybridComm {
         // owner's cross quorum stays whole and nothing deadlocks.
         for m in self.membership.driven_by(dev, self.groups.members(group), step) {
             let (tx, rx) = mpsc::channel();
-            self.send(m, Msg::IntraFlush { reply: tx });
+            self.send(dev, m, 0, Msg::IntraFlush { reply: tx });
             let pm = rx.recv().expect("driven intra flush");
-            self.cross_push(group, self.groups.local_index(m), &pm);
+            self.cross_push(dev, group, self.groups.local_index(m), &pm);
         }
 
         // ---- wait for every group's partial of MY optimizer shard ----
         let (tx, rx) = mpsc::channel();
-        self.send(dev, Msg::CrossFlush { reply: tx });
+        self.send(dev, dev, 0, Msg::CrossFlush { reply: tx });
         let grads = rx.recv().expect("cross flush");
         *self.taken[dev].lock().unwrap() = Some(grads);
     }
@@ -536,6 +694,7 @@ impl CommBackend for HybridComm {
 
     fn end_step(&self, dev: usize) {
         let step = self.step_ctr[dev].fetch_add(1, Ordering::Relaxed);
+        let next = step + 1;
         // Barrier 1: every live device has republished its optimizer
         // shard into the global store (quorum = the step's completers).
         self.barrier.wait();
@@ -552,8 +711,17 @@ impl CommBackend for HybridComm {
         for m in self.membership.driven_by(dev, self.groups.members(group), step) {
             locals.push(self.groups.local_index(m));
         }
+        let n_groups = self.groups.n_groups();
         for j in locals {
             for (layer, p) in self.params.layers.iter().enumerate() {
+                // Super-shard j spans the global shards of owners
+                // j*n_groups..(j+1)*n_groups: price one one-sided read
+                // per owner through the transport's retry ladder.
+                for t in 0..n_groups {
+                    if self.transport.one_sided(dev, j * n_groups + t, p.shard_len * 4).is_err() {
+                        self.escalated[dev].store(true, Ordering::Relaxed);
+                    }
+                }
                 let s = p.padded_len() / self.groups.group_size;
                 let buf = &mut scratch[..s];
                 p.buf.read(j * s, buf);
@@ -563,6 +731,8 @@ impl CommBackend for HybridComm {
         drop(scratch);
         // Barrier 2: nobody gathers until every replica is fresh.
         self.barrier.wait();
+        // Step-scoped faults (partitions) activate at the boundary.
+        self.transport.note_step(dev, next);
     }
 
     fn flush_shard(&self, shard: usize) {
@@ -571,7 +741,7 @@ impl CommBackend for HybridComm {
         // pieces (its in-group driver shipped the ones the dead worker
         // would have), so its cross quorum completes like any other.
         let (tx, rx) = mpsc::channel();
-        self.send(shard, Msg::CrossFlush { reply: tx });
+        self.send(shard, shard, 0, Msg::CrossFlush { reply: tx });
         let grads = rx.recv().expect("orphan cross flush");
         *self.taken[shard].lock().unwrap() = Some(grads);
     }
@@ -583,7 +753,16 @@ impl CommBackend for HybridComm {
         // barrier has completed, so the group replica (and the
         // replicated optimizer state about to be read) are settled.
         self.step_ctr[dev].store(join, Ordering::Relaxed);
+        self.transport.note_step(dev, join);
         self.barrier.await_step_start(join);
+    }
+
+    fn link_escalated(&self, dev: usize) -> bool {
+        self.escalated[dev].load(Ordering::Relaxed)
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.transport.stats()
     }
 
     fn name(&self) -> &'static str {
@@ -594,7 +773,9 @@ impl CommBackend for HybridComm {
 impl Drop for HybridComm {
     fn drop(&mut self) {
         for dev in 0..self.world {
-            let _ = self.mailbox[dev].lock().unwrap().send(Msg::Shutdown);
+            // Self-link (never partitioned; the ladder absorbs any
+            // transient drop), so the daemon always hears it.
+            let _ = self.transport.send(dev, dev, 0, Msg::Shutdown);
         }
         for d in self.daemons.lock().unwrap().drain(..) {
             let _ = d.join();

@@ -22,6 +22,11 @@
 //! * [`gather_cache`] — minibatch-scoped parameter-gather cache (§6.2
 //!   parameter caching) for one-sided backends: each layer is gathered
 //!   once per minibatch and shared zero-copy from then on.
+//! * [`transport`] — ChaosComm: the typed envelope transport under the
+//!   mailboxes ([`InProcTransport`] reliable path, [`FaultyTransport`]
+//!   deterministic drop/dup/reorder/delay injection per a declarative
+//!   [`FaultPlan`]) with retransmit ladder, receiver-side reassembly,
+//!   and suspicion-counter escalation into ElasticWorld.
 //! * [`membership`] — ElasticWorld: fault-tolerant elastic membership
 //!   for the one-sided backends (device crash mid-minibatch, join at a
 //!   minibatch boundary, deterministic rendezvous shard takeover,
@@ -40,6 +45,7 @@ pub mod odc;
 pub mod primbench;
 pub mod shared;
 pub mod topology;
+pub mod transport;
 pub mod volume;
 
 pub use arena::{ArenaMatrix, ArenaStats, PayloadArena};
@@ -50,3 +56,7 @@ pub use hybrid::HybridComm;
 pub use membership::{Membership, MembershipBarrier, OptReplica};
 pub use odc::OdcComm;
 pub use topology::GroupMap;
+pub use transport::{
+    Envelope, FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError,
+    Transport, WireMsg,
+};

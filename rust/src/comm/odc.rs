@@ -58,32 +58,59 @@
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
 use super::backend::{CommBackend, GatherPolicy, ParamStore};
 use super::membership::{Membership, MembershipBarrier};
+use super::transport::{
+    FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
+    WireMsg,
+};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+#[derive(Clone)]
 enum Msg {
     /// One gradient piece for this server's shard of `layer`, pushed by
     /// `client` for global microbatch `micro`; buffered until the flush
     /// (the fold is keyed by `micro`, not arrival), then `data` returns
     /// to the (server, client) arena.
     Accum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
-    /// A client has finished every microbatch of the current minibatch.
-    Done,
+    /// `client` has finished every microbatch of the current minibatch.
+    /// Carrying the id lets the daemon count the quorum per-client, so
+    /// a stray Done from a device the membership already excludes (the
+    /// escalation path) can never overshoot the quorum.
+    Done { client: usize },
+    /// Discard every buffered piece of (`micro`, `client`), across all
+    /// layers: the crash-out compensation that keeps pushes
+    /// all-or-nothing per microbatch. A device that lost a piece of
+    /// `micro` on a dead link retracts the siblings it did deliver, so
+    /// the orphan re-run by a survivor cannot double-count.
+    Retract { micro: u64, client: usize },
     /// The colocated worker asks for the completed accumulators; the
-    /// daemon replies once all `world` clients are Done.
+    /// daemon replies once the step's live quorum of clients is Done.
     Flush { reply: mpsc::Sender<Vec<Vec<f32>>> },
     Shutdown,
+}
+
+impl WireMsg for Msg {
+    fn is_barrier(&self) -> bool {
+        // control plane: never held in limbo, flushes limbo ahead
+        !matches!(self, Msg::Accum { .. })
+    }
+    fn payload_bytes(&self) -> usize {
+        match self {
+            Msg::Accum { data, .. } => data.len() * std::mem::size_of::<f32>(),
+            _ => 0,
+        }
+    }
 }
 
 pub struct OdcComm {
     world: usize,
     params: Arc<ParamStore>,
-    /// Mailbox senders, one per server device. A Mutex serializes sends
-    /// from concurrent clients (channel send is cheap; the per-client
-    /// arenas make the payloads themselves independent — the lock here
-    /// only orders enqueue, not the transfer).
-    mailbox: Vec<Mutex<mpsc::Sender<Msg>>>,
+    /// The typed envelope transport carrying every mailbox message
+    /// ([`crate::comm::transport`]): the reliable in-process path by
+    /// default, or the deterministic lossy wrapper under a fault plan.
+    transport: Arc<dyn Transport<Msg>>,
     /// Grads returned by the local daemon at the minibatch boundary
     /// (written by the owner's `end_minibatch`, or by a rendezvous
     /// successor's `flush_shard` when the owner is dead or dormant).
@@ -94,6 +121,11 @@ pub struct OdcComm {
     /// Payload arenas indexed `[server][client]` (Appendix B: one
     /// preallocated buffer set per client per server).
     arenas: ArenaMatrix,
+    /// Per-device step counters gating step-scoped fault partitions.
+    step_ctr: Vec<AtomicUsize>,
+    /// Set for a device once one of its links was declared unreachable:
+    /// the device must escalate into ElasticWorld (`report_failed`).
+    escalated: Vec<AtomicBool>,
 }
 
 impl OdcComm {
@@ -108,6 +140,30 @@ impl OdcComm {
     /// With a static schedule this is exactly [`OdcComm::new`].
     pub fn with_membership(params: Arc<ParamStore>, membership: Arc<Membership>) -> Self {
         let world = membership.world();
+        OdcComm::with_transport(params, membership, Arc::new(InProcTransport::new(world)))
+    }
+
+    /// ODC over a lossy transport: every mailbox message crosses a
+    /// [`FaultyTransport`] injecting the given plan. Transient faults
+    /// are absorbed by the retransmit ladder + reassembly (bit-identical
+    /// results); a partitioned link escalates the sender into the
+    /// elastic machinery (see [`CommBackend::link_escalated`]).
+    pub fn with_faults(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        plan: FaultPlan,
+        policy: RetryPolicy,
+    ) -> Self {
+        let world = membership.world();
+        OdcComm::with_transport(params, membership, Arc::new(FaultyTransport::new(world, plan, policy)))
+    }
+
+    fn with_transport(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        transport: Arc<dyn Transport<Msg>>,
+    ) -> Self {
+        let world = membership.world();
         let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
         // One full microbatch of a client pushes one piece per layer to
         // each server, so prealloc one buffer per layer's shard length,
@@ -115,30 +171,37 @@ impl OdcComm {
         let mut caps = shard_lens.clone();
         caps.push(shard_lens.iter().copied().max().unwrap_or(0));
         let arenas = ArenaMatrix::new(world, world, &caps);
-        let mut mailbox = Vec::with_capacity(world);
         let mut daemons = Vec::with_capacity(world);
         for server in 0..world {
-            let (tx, rx) = mpsc::channel::<Msg>();
             let lens = shard_lens.clone();
             let row = arenas.row(server);
             let members = Arc::clone(&membership);
-            daemons.push(std::thread::spawn(move || daemon_loop(rx, lens, members, row)));
-            mailbox.push(Mutex::new(tx));
+            let wire = Arc::clone(&transport);
+            daemons.push(std::thread::spawn(move || daemon_loop(server, wire, lens, members, row)));
         }
         OdcComm {
             world,
             params,
-            mailbox,
+            transport,
             taken: (0..world).map(|_| Mutex::new(None)).collect(),
             barrier: MembershipBarrier::new(Arc::clone(&membership), 1),
             membership,
             daemons: Mutex::new(daemons),
             arenas,
+            step_ctr: (0..world).map(|_| AtomicUsize::new(0)).collect(),
+            escalated: (0..world).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
-    fn send(&self, server: usize, msg: Msg) {
-        self.mailbox[server].lock().unwrap().send(msg).expect("daemon alive");
+    /// Send with escalation handling: a lost message is tolerated (the
+    /// id-keyed fold and membership quorum absorb it — it only happens
+    /// on a link already under suspicion), an unreachable link marks the
+    /// sending device for ElasticWorld escalation.
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: Msg) {
+        match self.transport.send(src, dst, micro, msg) {
+            Ok(()) | Err(SendError::Lost { .. }) => {}
+            Err(SendError::Unreachable) => self.escalated[src].store(true, Ordering::Relaxed),
+        }
     }
 
     /// Summed payload-arena counters (tests / benches): proves the push
@@ -187,7 +250,8 @@ fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>])
 /// delivery. At the crash step's flush the dead client's payload
 /// arenas are retired.
 fn daemon_loop(
-    rx: mpsc::Receiver<Msg>,
+    me: usize,
+    transport: Arc<dyn Transport<Msg>>,
     shard_lens: Vec<usize>,
     membership: Arc<Membership>,
     arenas: Vec<Arc<PayloadArena>>,
@@ -197,15 +261,40 @@ fn daemon_loop(
     let mut mb = 0usize;
     let mut flush: Option<mpsc::Sender<Vec<Vec<f32>>>> = None;
     loop {
-        let msg = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => return,
+        let msg = match transport.recv(me) {
+            Some(env) => env.msg,
+            None => return,
         };
         match msg {
             Msg::Accum { layer, micro, weight, client, data } => {
-                pending[layer].push(Piece { micro, client, weight, data });
+                // Idempotent delivery, belt and braces on top of the
+                // transport's seq dedup: the fold key (micro, client)
+                // identifies a push uniquely, so a replayed request is
+                // recognized and its payload returns to the arena.
+                if pending[layer].iter().any(|p| p.micro == micro && p.client == client) {
+                    arenas[client].release(data);
+                } else {
+                    pending[layer].push(Piece { micro, client, weight, data });
+                }
             }
-            Msg::Done => done += 1,
+            // Count the quorum per-client so a stray Done from a device
+            // the membership excludes at this minibatch (crash or
+            // escalation mid-broadcast) can never overshoot it.
+            Msg::Done { client } => {
+                if membership.completes(client, mb) {
+                    done += 1;
+                }
+            }
+            Msg::Retract { micro, client } => {
+                for pieces in pending.iter_mut() {
+                    if let Some(pos) =
+                        pieces.iter().position(|p| p.micro == micro && p.client == client)
+                    {
+                        let p = pieces.swap_remove(pos);
+                        arenas[p.client].release(p.data);
+                    }
+                }
+            }
             Msg::Flush { reply } => flush = Some(reply),
             Msg::Shutdown => return,
         }
@@ -234,11 +323,21 @@ impl CommBackend for OdcComm {
         self.world
     }
 
-    fn gather_params(&self, _dev: usize, layer: usize, out: &mut [f32]) {
+    fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]) {
         // One-sided read: parameters are immutable during the minibatch
         // (owners only write between end_minibatch and end_step), so no
         // synchronization is needed — the owner's compute is undisturbed.
+        // Under a lossy transport each per-owner read runs the same
+        // retry ladder as a push; the read itself always succeeds
+        // in-process, so a dead link only marks the reader for
+        // escalation.
         let p = &self.params.layers[layer];
+        for server in 0..self.world {
+            let bytes = p.shard_range(server).len() * std::mem::size_of::<f32>();
+            if self.transport.one_sided(dev, server, bytes).is_err() {
+                self.escalated[dev].store(true, Ordering::Relaxed);
+            }
+        }
         let n = p.padded_len().min(out.len());
         p.buf.read(0, &mut out[..n]);
     }
@@ -256,22 +355,46 @@ impl CommBackend for OdcComm {
         if weight == 0.0 {
             return; // idle slot: ODC has nothing to send and nothing to wait for
         }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // a link is dead: the device is crashing out, stop pushing
+        }
+        let mut lost = false;
         for server in 0..self.world {
             let r = p.shard_range(server);
             let mut data = self.arenas.arena(server, dev).acquire(r.len());
             data.extend_from_slice(&grad[r]);
-            self.send(server, Msg::Accum { layer, micro, weight, client: dev, data });
+            let msg = Msg::Accum { layer, micro, weight, client: dev, data };
+            if self.transport.send(dev, server, micro, msg).is_err() {
+                lost = true;
+            }
+        }
+        if lost {
+            // All-or-nothing per microbatch: a piece of `micro` is gone,
+            // so the micro must re-run on a survivor — land the held
+            // pieces of COMPLETED micros, retract the delivered siblings
+            // of this one, and crash out into ElasticWorld.
+            self.escalated[dev].store(true, Ordering::Relaxed);
+            self.transport.flush_links(dev);
+            for server in 0..self.world {
+                let _ = self.transport.send(dev, server, micro, Msg::Retract { micro, client: dev });
+            }
         }
     }
 
     fn end_minibatch(&self, dev: usize) {
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // crashing out: no Done broadcast, no flush to wait on
+        }
         // scatter-accumulate epilogue: tell every server this client is done
         for server in 0..self.world {
-            self.send(server, Msg::Done);
+            self.send(dev, server, 0, Msg::Done { client: dev });
+        }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // link died mid-broadcast: daemons ignore the stray Dones
         }
         // then wait for the local daemon to see all clients done
         let (rtx, rrx) = mpsc::channel();
-        self.send(dev, Msg::Flush { reply: rtx });
+        self.send(dev, dev, 0, Msg::Flush { reply: rtx });
         let grads = rrx.recv().expect("daemon flush");
         *self.taken[dev].lock().unwrap() = Some(grads);
     }
@@ -282,11 +405,13 @@ impl CommBackend for OdcComm {
         out.copy_from_slice(&grads[layer]);
     }
 
-    fn end_step(&self, _dev: usize) {
+    fn end_step(&self, dev: usize) {
         // The single global barrier per step: params republished. The
         // quorum follows the membership schedule (a dead device is not
         // waited for; a joiner is counted from its join step).
+        let next = self.step_ctr[dev].fetch_add(1, Ordering::Relaxed) + 1;
         self.barrier.wait();
+        self.transport.note_step(dev, next);
     }
 
     fn flush_shard(&self, shard: usize) {
@@ -294,15 +419,27 @@ impl CommBackend for OdcComm {
         // flush. Safe to call after the caller's own `end_minibatch`
         // returned: every live client has broadcast `Done` to ALL
         // daemons by then, so the orphan's quorum is (or will shortly
-        // be) met and the reply cannot deadlock.
+        // be) met and the reply cannot deadlock. The request travels
+        // the shard's self-link (never partitioned — validated).
         let (tx, rx) = mpsc::channel();
-        self.send(shard, Msg::Flush { reply: tx });
+        self.send(shard, shard, 0, Msg::Flush { reply: tx });
         let grads = rx.recv().expect("orphan daemon flush");
         *self.taken[shard].lock().unwrap() = Some(grads);
     }
 
     fn await_join(&self, dev: usize) {
-        self.barrier.await_step_start(self.membership.joins_at(dev));
+        let join = self.membership.joins_at(dev);
+        self.step_ctr[dev].store(join, Ordering::Relaxed);
+        self.transport.note_step(dev, join);
+        self.barrier.await_step_start(join);
+    }
+
+    fn link_escalated(&self, dev: usize) -> bool {
+        self.escalated[dev].load(Ordering::Relaxed)
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.transport.stats()
     }
 
     fn name(&self) -> &'static str {
@@ -313,7 +450,7 @@ impl CommBackend for OdcComm {
 impl Drop for OdcComm {
     fn drop(&mut self) {
         for server in 0..self.world {
-            let _ = self.mailbox[server].lock().unwrap().send(Msg::Shutdown);
+            let _ = self.transport.send(server, server, 0, Msg::Shutdown);
         }
         for d in self.daemons.lock().unwrap().drain(..) {
             let _ = d.join();

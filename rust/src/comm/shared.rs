@@ -54,11 +54,42 @@
 //!   next microbatch phase, so a pair's in-flight payloads are bounded
 //!   by a single minibatch's pushes — arenas stop growing after warm-up.
 //!
+//! ## The fault timeline (ChaosComm — `super::transport`)
+//!
+//! Under a lossy transport ([`super::transport::FaultyTransport`]) the
+//! phase timeline gains an ack/retry/escalation sub-structure INSIDE
+//! the microbatch phase; the phase boundaries themselves never move:
+//!
+//! ```text
+//!  push ──ack timeout──▶ retransmit ──▶ … ──▶ delivered   (transient)
+//!    │        (capped exponential backoff, ≤ max_retries)
+//!    └──all retransmits lost──▶ suspicion += 1
+//!            └──suspicion ≥ threshold──▶ link ESCALATED:
+//!                 retract in-flight micro → flush held links
+//!                 → report_failed → ElasticWorld takeover
+//! ```
+//!
+//! * **retries stay inside one push**: a retransmit re-sends the same
+//!   payload buffer — it never re-acquires from the arena, so the
+//!   in-flight bound above survives arbitrary transient loss;
+//! * **duplicates die at the receiver**: the transport reassembles a
+//!   per-link exactly-once in-order stream (seq dedup), so the id-keyed
+//!   fold never sees a replayed piece — daemon-side (micro, client)
+//!   dedup is belt and braces only;
+//! * **barriers flush limbo**: control-plane messages (`Done`, `Flush`,
+//!   `Retract`, shutdown) are never held for reorder/delay and push any
+//!   held data messages of their link ahead of themselves, so every
+//!   minibatch boundary drains the link — held pieces cannot leak
+//!   across `end_minibatch`;
+//! * **escalation is all-or-nothing per micro**: a device that loses a
+//!   piece retracts the micro's delivered siblings before crashing out,
+//!   so a survivor's re-run folds exactly once (see `docs/faults.md`).
+//!
 //! Violating the discipline is a logic bug in the coordinator, not in
 //! this substrate — mirroring how real RDMA gives you no protection
 //! either. The engine's integration tests (engine vs single-device
 //! oracle, Collective vs ODC equivalence, cached-vs-uncached gather
-//! bit-equality) are the guard.
+//! bit-equality, the `chaos_prop` lossy-transport soak) are the guard.
 
 use std::cell::UnsafeCell;
 

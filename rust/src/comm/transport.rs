@@ -1,0 +1,731 @@
+//! ChaosComm — the typed transport layer under the ODC mailboxes.
+//!
+//! Every point-to-point message in the scatter-accumulate protocol now
+//! travels as an [`Envelope`]: payload plus source rank, a per-(src,dst)
+//! **link sequence number**, and the global microbatch id it belongs to.
+//! Two implementations of the [`Transport`] trait exist:
+//!
+//! * [`InProcTransport`] — the original in-process mailbox path
+//!   (one mpsc channel per destination daemon), refactored behind the
+//!   trait with **zero behavior change**: reliable, in-order, no faults.
+//! * [`FaultyTransport`] — a deterministic seeded wrapper that injects
+//!   per-link **drop / duplicate / reorder / delay** according to a
+//!   declarative [`FaultPlan`], and models the retry machinery a real
+//!   wire transport would run:
+//!
+//!   - **drop** → the modeled ack timeout fires and the sender
+//!     retransmits the *same* sequence number under a capped
+//!     exponential backoff ladder ([`RetryPolicy`]), so a transiently
+//!     lossy link still delivers exactly once;
+//!   - **duplicate** → a second copy of the same sequence number is
+//!     put on the wire; the receiver-side reassembly discards it;
+//!   - **reorder / delay** → the envelope is held in a per-link limbo
+//!     and released after later traffic on the same link; the
+//!     receiver-side per-link reassembly buffers out-of-order arrivals
+//!     until the gap fills, restoring in-order delivery.
+//!
+//! The receiver therefore hands its daemon an **exactly-once, in-order
+//! per-link stream** regardless of the fault plan — the daemon fold
+//! and quorum logic upstack is semantically unchanged (it keeps its
+//! own id-keyed dedup as belt and braces).
+//!
+//! **Escalation.** A link whose request exhausts the retry budget
+//! increments a per-link *suspicion counter*; the message is reported
+//! lost ([`SendError::Lost`]) and the sender carries on. Once suspicion
+//! reaches [`RetryPolicy::suspicion_threshold`] the link is declared
+//! [`SendError::Unreachable`] (counted once in
+//! [`FaultStats::escalations`]) and the backend escalates the sending
+//! device into the existing ElasticWorld failure machinery
+//! (`report_failed` → ring-successor takeover → orphan re-pull).
+//!
+//! **Determinism.** Fault decisions consume a per-link RNG (forked from
+//! `FaultPlan::seed` in fixed link order) strictly in per-link send
+//! order. Each link has a single sending thread in this codebase, so a
+//! fixed seed replays the exact same fault schedule independent of
+//! cross-link thread interleaving. Backoff sleeps are timing-only and
+//! never ordering-relevant.
+//!
+//! **Control plane.** Rendezvous messages (`Done`/`Flush`/`Shutdown`
+//! variants — [`WireMsg::is_barrier`]) may be dropped or duplicated
+//! (the ladder and dedup absorb that) but are never held in limbo, and
+//! they flush any limbo ahead of themselves: a reorder can therefore
+//! never stall a minibatch epilogue. Flush *reply* channels stay plain
+//! mpsc — they model local completion, not network traffic.
+
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+/// Payload contract for messages crossing a [`Transport`].
+///
+/// `Clone` is required so the faulty wrapper can put duplicates on the
+/// wire; with the reliable transport nothing is ever cloned.
+pub trait WireMsg: Send + Clone + 'static {
+    /// Control-plane rendezvous message (Done/Flush/Shutdown): never
+    /// held in limbo, and flushes held envelopes ahead of itself.
+    fn is_barrier(&self) -> bool {
+        false
+    }
+    /// Payload bytes, for retransmission accounting.
+    fn payload_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// A typed message on the wire: payload + link-level framing.
+#[derive(Clone)]
+pub struct Envelope<M> {
+    /// Sending rank (link identity is `(src, dst)`).
+    pub src: usize,
+    /// Per-(src,dst) link sequence number, assigned at send time and
+    /// **reused verbatim on retransmission** — the dedup key.
+    pub seq: u64,
+    /// Global microbatch id the payload belongs to (0 if n/a).
+    pub micro: u64,
+    /// The payload.
+    pub msg: M,
+}
+
+/// Terminal send outcomes on a lossy link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendError {
+    /// Retry budget exhausted; the message is lost and the peer is now
+    /// suspected (`suspicion` failures so far). The sender may keep
+    /// going — subsequent traffic on healthy links is unaffected.
+    Lost { suspicion: u32 },
+    /// Suspicion crossed the threshold: the link is declared dead.
+    /// The sending device must escalate into ElasticWorld.
+    Unreachable,
+}
+
+/// Retry ladder parameters for the modeled ack/retransmit machinery.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retransmissions allowed per request before it counts as lost.
+    pub max_retries: u32,
+    /// First backoff step (doubles per retransmit).
+    pub base_delay_us: u64,
+    /// Backoff cap.
+    pub max_delay_us: u64,
+    /// Lost requests tolerated on a link before it is declared
+    /// unreachable and escalated. The default is 1: with the retry
+    /// budget already exhausted, a request-level loss on a healthy
+    /// plan is astronomically unlikely (`drop^(1+max_retries)`), so
+    /// the first exhausted budget is itself the suspicion signal —
+    /// raising the threshold trades faster recovery for tolerance of
+    /// pathological transients, at the cost of the lost requests.
+    pub suspicion_threshold: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 8, base_delay_us: 20, max_delay_us: 1_000, suspicion_threshold: 1 }
+    }
+}
+
+impl RetryPolicy {
+    /// Capped exponential backoff before retransmit number `attempt`.
+    pub fn backoff_us(&self, attempt: u32) -> u64 {
+        self.base_delay_us
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.max_delay_us)
+    }
+}
+
+/// Declarative per-link fault schedule, config-parsed like `fail_at`.
+///
+/// Probabilities apply independently to every (src,dst) link;
+/// `partition` lists links that drop **every** envelope from a given
+/// step on — the path that exercises escalation.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Per-attempt drop probability (the modeled ack timeout fires).
+    pub drop: f64,
+    /// Probability a delivered envelope is duplicated on the wire.
+    pub dup: f64,
+    /// Probability a data envelope is swapped behind the next send.
+    pub reorder: f64,
+    /// Probability a data envelope is held for 2–4 later sends.
+    pub delay: f64,
+    /// Seed for the per-link fault RNGs.
+    pub seed: u64,
+    /// `(src, dst, step)`: from `step` on, link src→dst drops
+    /// everything — past the retry budget this escalates.
+    pub partition: Vec<(usize, usize, usize)>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing at all.
+    pub fn is_noop(&self) -> bool {
+        self.drop == 0.0
+            && self.dup == 0.0
+            && self.reorder == 0.0
+            && self.delay == 0.0
+            && self.partition.is_empty()
+    }
+
+    /// Validate rates and partition entries.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in
+            [("drop", self.drop), ("dup", self.dup), ("reorder", self.reorder), ("delay", self.delay)]
+        {
+            if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                return Err(format!(
+                    "fault-plan {name}={p} must be a probability in [0, 1) \
+                     (use part=src:dst:step for a full partition)"
+                ));
+            }
+        }
+        for &(src, dst, _) in &self.partition {
+            if src == dst {
+                return Err(format!("fault-plan partition {src}:{dst} is a self-link"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI/config grammar: comma-separated `key=value` with
+    /// keys `drop|dup|reorder|delay|seed` and repeatable
+    /// `part=src:dst:step` triples. Empty input = no faults.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        if s.trim().is_empty() {
+            return Ok(plan);
+        }
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            let (key, val) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan entry `{entry}` is not key=value"))?;
+            let rate = |v: &str| {
+                v.parse::<f64>().map_err(|_| format!("fault-plan {key} `{v}` is not a number"))
+            };
+            match key {
+                "drop" => plan.drop = rate(val)?,
+                "dup" => plan.dup = rate(val)?,
+                "reorder" => plan.reorder = rate(val)?,
+                "delay" => plan.delay = rate(val)?,
+                "seed" => {
+                    plan.seed = val
+                        .parse::<u64>()
+                        .map_err(|_| format!("fault-plan seed `{val}` is not a u64"))?;
+                }
+                "part" => {
+                    let nums: Vec<usize> = val
+                        .split(':')
+                        .map(|p| p.parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .map_err(|_| format!("fault-plan part expects src:dst:step, got `{val}`"))?;
+                    if nums.len() != 3 {
+                        return Err(format!("fault-plan part expects src:dst:step, got `{val}`"));
+                    }
+                    plan.partition.push((nums[0], nums[1], nums[2]));
+                }
+                _ => return Err(format!("fault-plan key `{key}` unknown (drop|dup|reorder|delay|seed|part)")),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// Snapshot of a transport's fault counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Retransmissions performed (modeled ack timeouts fired).
+    pub retries: u64,
+    /// Bytes put on the wire beyond first transmission (retransmits +
+    /// duplicates).
+    pub retransmitted_bytes: u64,
+    /// Links escalated to unreachable (suspicion crossed threshold).
+    pub escalations: u64,
+}
+
+/// Point-to-point message transport between ranks.
+pub trait Transport<M: WireMsg>: Send + Sync {
+    /// Rank count.
+    fn world(&self) -> usize;
+    /// Send `msg` from `src` to `dst`'s daemon. The reliable transport
+    /// never fails; the faulty one reports terminal outcomes.
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError>;
+    /// Blocking receive of the next in-order envelope for `dst`
+    /// (single consumer per rank). `None` once all senders are gone.
+    fn recv(&self, dst: usize) -> Option<Envelope<M>>;
+    /// One-sided read of `bytes` from `dst`'s memory by `src` (gathers,
+    /// replica refresh): returns the retries spent, or the terminal
+    /// error on a dead link. The read itself always succeeds
+    /// in-process; the faulty transport prices and counts the ladder.
+    fn one_sided(&self, src: usize, dst: usize, bytes: usize) -> Result<u32, SendError>;
+    /// Advance `src`'s step counter (gates step-scoped partitions).
+    fn note_step(&self, _src: usize, _step: usize) {}
+    /// Deliver everything `src` still holds in limbo on any link — the
+    /// crash-out path: a device escalating into ElasticWorld must first
+    /// land its completed microbatches' delayed pieces, or the fold
+    /// would miss work the dispatcher considers resolved.
+    fn flush_links(&self, _src: usize) {}
+    /// Fault counters (zero for the reliable transport).
+    fn stats(&self) -> FaultStats {
+        FaultStats::default()
+    }
+}
+
+/// The original mailbox path: one mpsc channel per destination rank,
+/// reliable and in-order. Sequence numbers are still assigned per link
+/// so the framing is identical to the faulty path.
+pub struct InProcTransport<M> {
+    world: usize,
+    tx: Vec<Mutex<mpsc::Sender<Envelope<M>>>>,
+    rx: Vec<Mutex<mpsc::Receiver<Envelope<M>>>>,
+    seq: Vec<AtomicU64>,
+}
+
+impl<M: WireMsg> InProcTransport<M> {
+    pub fn new(world: usize) -> Self {
+        let mut tx = Vec::with_capacity(world);
+        let mut rx = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (t, r) = mpsc::channel();
+            tx.push(Mutex::new(t));
+            rx.push(Mutex::new(r));
+        }
+        let seq = (0..world * world).map(|_| AtomicU64::new(0)).collect();
+        InProcTransport { world, tx, rx, seq }
+    }
+
+    fn send_env(&self, dst: usize, env: Envelope<M>) {
+        self.tx[dst].lock().unwrap().send(env).expect("daemon alive");
+    }
+
+    fn recv_env(&self, dst: usize) -> Option<Envelope<M>> {
+        self.rx[dst].lock().unwrap().recv().ok()
+    }
+}
+
+impl<M: WireMsg> Transport<M> for InProcTransport<M> {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError> {
+        let seq = self.seq[src * self.world + dst].fetch_add(1, Ordering::Relaxed);
+        self.send_env(dst, Envelope { src, seq, micro, msg });
+        Ok(())
+    }
+
+    fn recv(&self, dst: usize) -> Option<Envelope<M>> {
+        self.recv_env(dst)
+    }
+
+    fn one_sided(&self, _src: usize, _dst: usize, _bytes: usize) -> Result<u32, SendError> {
+        Ok(0)
+    }
+}
+
+/// Per-link sender-side fault state, locked per link so fault
+/// decisions consume the link RNG strictly in send order.
+struct Link<M> {
+    rng: Rng,
+    next_seq: u64,
+    /// Held (delayed/reordered) envelopes: `(release_after, env)` —
+    /// released once `next_seq` passes `release_after`.
+    limbo: Vec<(u64, Envelope<M>)>,
+    suspicion: u32,
+    escalated: bool,
+}
+
+/// Per-destination receiver reassembly: one expected-seq cursor and an
+/// out-of-order buffer per source link, plus the in-order ready queue.
+struct RecvState<M> {
+    ready: VecDeque<Envelope<M>>,
+    expected: Vec<u64>,
+    ooo: Vec<BTreeMap<u64, Envelope<M>>>,
+}
+
+/// Deterministic lossy wrapper over [`InProcTransport`]: injects the
+/// [`FaultPlan`] per link, runs the retransmit ladder, and reassembles
+/// an exactly-once in-order stream on the receiver side.
+pub struct FaultyTransport<M> {
+    inner: InProcTransport<M>,
+    plan: FaultPlan,
+    policy: RetryPolicy,
+    links: Vec<Mutex<Link<M>>>,
+    recv_state: Vec<Mutex<RecvState<M>>>,
+    step: Vec<AtomicUsize>,
+    retries: AtomicU64,
+    retransmitted_bytes: AtomicU64,
+    escalations: AtomicU64,
+}
+
+impl<M: WireMsg> FaultyTransport<M> {
+    pub fn new(world: usize, plan: FaultPlan, policy: RetryPolicy) -> Self {
+        plan.validate().expect("fault plan validated at config time");
+        let mut root = Rng::new(plan.seed ^ 0xC4A0_5C0D);
+        let links = (0..world * world)
+            .map(|li| {
+                Mutex::new(Link {
+                    rng: root.fork(li as u64),
+                    next_seq: 0,
+                    limbo: Vec::new(),
+                    suspicion: 0,
+                    escalated: false,
+                })
+            })
+            .collect();
+        let recv_state = (0..world)
+            .map(|_| {
+                Mutex::new(RecvState {
+                    ready: VecDeque::new(),
+                    expected: vec![0; world],
+                    ooo: (0..world).map(|_| BTreeMap::new()).collect(),
+                })
+            })
+            .collect();
+        FaultyTransport {
+            inner: InProcTransport::new(world),
+            plan,
+            policy,
+            links,
+            recv_state,
+            step: (0..world).map(|_| AtomicUsize::new(0)).collect(),
+            retries: AtomicU64::new(0),
+            retransmitted_bytes: AtomicU64::new(0),
+            escalations: AtomicU64::new(0),
+        }
+    }
+
+    fn partitioned(&self, src: usize, dst: usize) -> bool {
+        let now = self.step[src].load(Ordering::Relaxed);
+        self.plan.partition.iter().any(|&(s, d, st)| s == src && d == dst && now >= st)
+    }
+
+    /// Run the drop/retransmit ladder for one request on a locked link.
+    /// Returns retries spent on success, or the terminal error.
+    fn ladder(&self, link: &mut Link<M>, partitioned: bool, bytes: usize) -> Result<u32, SendError> {
+        for attempt in 0..=self.policy.max_retries {
+            let dropped = partitioned || link.rng.f64() < self.plan.drop;
+            if !dropped {
+                link.suspicion = 0; // healthy traffic clears suspicion
+                return Ok(attempt);
+            }
+            if attempt == self.policy.max_retries {
+                break;
+            }
+            // modeled ack timeout: retransmit under capped backoff
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            self.retransmitted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+            let us = self.policy.backoff_us(attempt);
+            if us > 0 {
+                std::thread::sleep(Duration::from_micros(us));
+            }
+        }
+        link.suspicion += 1;
+        if link.suspicion >= self.policy.suspicion_threshold {
+            if !link.escalated {
+                link.escalated = true;
+                self.escalations.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(SendError::Unreachable)
+        } else {
+            Err(SendError::Lost { suspicion: link.suspicion })
+        }
+    }
+
+    /// Release limbo entries whose hold expired, in seq order.
+    fn release_due(&self, dst: usize, link: &mut Link<M>) {
+        if link.limbo.is_empty() {
+            return;
+        }
+        let cur = link.next_seq;
+        let mut due: Vec<Envelope<M>> = Vec::new();
+        let mut keep: Vec<(u64, Envelope<M>)> = Vec::with_capacity(link.limbo.len());
+        for (release_after, env) in link.limbo.drain(..) {
+            if release_after < cur {
+                due.push(env);
+            } else {
+                keep.push((release_after, env));
+            }
+        }
+        link.limbo = keep;
+        due.sort_by_key(|e| e.seq);
+        for env in due {
+            self.inner.send_env(dst, env);
+        }
+    }
+}
+
+impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
+    fn world(&self) -> usize {
+        self.inner.world
+    }
+
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError> {
+        let world = self.inner.world;
+        let partitioned = self.partitioned(src, dst);
+        let mut link = self.links[src * world + dst].lock().unwrap();
+        if link.escalated {
+            return Err(SendError::Unreachable);
+        }
+        let seq = link.next_seq;
+        link.next_seq += 1;
+        let bytes = msg.payload_bytes();
+        let barrier = msg.is_barrier();
+        let env = Envelope { src, seq, micro, msg };
+        if barrier {
+            // control plane: flush everything held on this link first
+            let mut held: Vec<Envelope<M>> =
+                link.limbo.drain(..).map(|(_, e)| e).collect();
+            held.sort_by_key(|e| e.seq);
+            for e in held {
+                self.inner.send_env(dst, e);
+            }
+        }
+        self.ladder(&mut link, partitioned, bytes)?;
+        // on the wire: maybe duplicate (receiver reassembly discards it)
+        if self.plan.dup > 0.0 && link.rng.f64() < self.plan.dup {
+            self.retransmitted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+            self.inner.send_env(dst, env.clone());
+        }
+        // data plane only: maybe hold in limbo (reorder/delay)
+        let hold: u64 = if barrier {
+            0
+        } else if self.plan.reorder > 0.0 && link.rng.f64() < self.plan.reorder {
+            1
+        } else if self.plan.delay > 0.0 && link.rng.f64() < self.plan.delay {
+            2 + link.rng.below(3)
+        } else {
+            0
+        };
+        if hold > 0 {
+            let release_after = seq + hold;
+            link.limbo.push((release_after, env));
+        } else {
+            self.inner.send_env(dst, env);
+        }
+        self.release_due(dst, &mut link);
+        Ok(())
+    }
+
+    fn recv(&self, dst: usize) -> Option<Envelope<M>> {
+        // single consumer per rank: holding the reassembly lock across
+        // the blocking inner recv is uncontended by construction
+        let mut st = self.recv_state[dst].lock().unwrap();
+        loop {
+            if let Some(env) = st.ready.pop_front() {
+                return Some(env);
+            }
+            let env = self.inner.recv_env(dst)?;
+            let s = env.src;
+            if env.seq < st.expected[s] {
+                continue; // duplicate: this seq was already delivered
+            }
+            if env.seq > st.expected[s] {
+                st.ooo[s].insert(env.seq, env); // gap: buffer until it fills
+                continue;
+            }
+            st.expected[s] += 1;
+            st.ready.push_back(env);
+            // the gap may have unblocked buffered successors
+            while let Some(e) = st.ooo[s].remove(&st.expected[s]) {
+                st.expected[s] += 1;
+                st.ready.push_back(e);
+            }
+        }
+    }
+
+    fn one_sided(&self, src: usize, dst: usize, bytes: usize) -> Result<u32, SendError> {
+        let world = self.inner.world;
+        let partitioned = self.partitioned(src, dst);
+        let mut link = self.links[src * world + dst].lock().unwrap();
+        if link.escalated {
+            return Err(SendError::Unreachable);
+        }
+        self.ladder(&mut link, partitioned, bytes)
+    }
+
+    fn note_step(&self, src: usize, step: usize) {
+        self.step[src].store(step, Ordering::Relaxed);
+    }
+
+    fn flush_links(&self, src: usize) {
+        let world = self.inner.world;
+        for dst in 0..world {
+            let mut link = self.links[src * world + dst].lock().unwrap();
+            let mut held: Vec<Envelope<M>> = link.limbo.drain(..).map(|(_, e)| e).collect();
+            held.sort_by_key(|e| e.seq);
+            for e in held {
+                self.inner.send_env(dst, e);
+            }
+        }
+    }
+
+    fn stats(&self) -> FaultStats {
+        FaultStats {
+            retries: self.retries.load(Ordering::Relaxed),
+            retransmitted_bytes: self.retransmitted_bytes.load(Ordering::Relaxed),
+            escalations: self.escalations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    enum TMsg {
+        Data(u64),
+        Done,
+    }
+
+    impl WireMsg for TMsg {
+        fn is_barrier(&self) -> bool {
+            matches!(self, TMsg::Done)
+        }
+        fn payload_bytes(&self) -> usize {
+            8
+        }
+    }
+
+    /// Drive `n` data messages + a Done barrier over link 0→1 and
+    /// return the delivered data values in arrival order.
+    fn drive(t: &dyn Transport<TMsg>, n: u64) -> Vec<u64> {
+        for i in 0..n {
+            t.send(0, 1, i, TMsg::Data(i)).expect("transient plan never loses a message");
+        }
+        t.send(0, 1, n, TMsg::Done).expect("barrier delivered");
+        let mut got = Vec::new();
+        loop {
+            let env = t.recv(1).expect("senders alive");
+            assert_eq!(env.src, 0);
+            match env.msg {
+                TMsg::Data(v) => got.push(v),
+                TMsg::Done => break,
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn inproc_delivers_in_order() {
+        let t = InProcTransport::<TMsg>::new(2);
+        let got = drive(&t, 50);
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        assert_eq!(t.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn faulty_with_empty_plan_is_transparent() {
+        let t = FaultyTransport::<TMsg>::new(2, FaultPlan::default(), RetryPolicy::default());
+        let got = drive(&t, 50);
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        assert_eq!(t.stats(), FaultStats::default());
+    }
+
+    fn chaos_plan() -> FaultPlan {
+        FaultPlan {
+            drop: 0.10,
+            dup: 0.30,
+            reorder: 0.30,
+            delay: 0.20,
+            seed: 0xFA15,
+            partition: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn lossy_link_reassembles_exactly_once_in_order() {
+        let t = FaultyTransport::<TMsg>::new(2, chaos_plan(), RetryPolicy::default());
+        let got = drive(&t, 200);
+        assert_eq!(got, (0..200).collect::<Vec<_>>(), "drop/dup/reorder/delay must be invisible");
+        let s = t.stats();
+        assert!(s.retries > 0, "a 10% drop rate over 200 sends must retransmit");
+        assert!(s.retransmitted_bytes > 0);
+        assert_eq!(s.escalations, 0);
+    }
+
+    #[test]
+    fn fixed_seed_replays_identically() {
+        let run = || {
+            let t = FaultyTransport::<TMsg>::new(2, chaos_plan(), RetryPolicy::default());
+            let got = drive(&t, 120);
+            (got, t.stats())
+        };
+        assert_eq!(run(), run(), "same seed, same fault schedule, same counters");
+    }
+
+    #[test]
+    fn partition_escalates_after_suspicion_threshold() {
+        let plan = FaultPlan { partition: vec![(0, 1, 0)], ..FaultPlan::default() };
+        let policy = RetryPolicy {
+            base_delay_us: 1,
+            max_delay_us: 4,
+            suspicion_threshold: 3,
+            ..RetryPolicy::default()
+        };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        assert_eq!(t.send(0, 1, 0, TMsg::Data(0)), Err(SendError::Lost { suspicion: 1 }));
+        assert_eq!(t.send(0, 1, 1, TMsg::Data(1)), Err(SendError::Lost { suspicion: 2 }));
+        assert_eq!(t.send(0, 1, 2, TMsg::Data(2)), Err(SendError::Unreachable));
+        assert_eq!(t.stats().escalations, 1);
+        // dead links fail fast from here on; healthy links are untouched
+        assert_eq!(t.send(0, 1, 3, TMsg::Data(3)), Err(SendError::Unreachable));
+        assert_eq!(t.stats().escalations, 1);
+        assert!(t.send(1, 0, 0, TMsg::Data(9)).is_ok());
+    }
+
+    #[test]
+    fn step_scoped_partition_waits_for_its_step() {
+        let plan = FaultPlan { partition: vec![(0, 1, 2)], ..FaultPlan::default() };
+        let policy = RetryPolicy { base_delay_us: 1, max_delay_us: 4, ..RetryPolicy::default() };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        assert!(t.send(0, 1, 0, TMsg::Data(0)).is_ok(), "link healthy before its step");
+        t.note_step(0, 2);
+        assert!(t.send(0, 1, 1, TMsg::Data(1)).is_err(), "partition active from step 2");
+    }
+
+    #[test]
+    fn one_sided_prices_the_same_ladder() {
+        let plan = FaultPlan { drop: 0.5, seed: 3, ..FaultPlan::default() };
+        let policy = RetryPolicy { base_delay_us: 1, max_delay_us: 2, ..RetryPolicy::default() };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        let mut spent = 0u32;
+        for _ in 0..50 {
+            spent += t.one_sided(0, 1, 1024).expect("50% drop with 8 retries succeeds");
+        }
+        assert!(spent > 0, "half the reads must have retried");
+        assert_eq!(t.stats().retries as u32, spent);
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        let p = FaultPlan::parse("drop=0.05, dup=0.02,reorder=0.02,delay=0.01,seed=9,part=0:1:2")
+            .unwrap();
+        assert_eq!(
+            p,
+            FaultPlan {
+                drop: 0.05,
+                dup: 0.02,
+                reorder: 0.02,
+                delay: 0.01,
+                seed: 9,
+                partition: vec![(0, 1, 2)],
+            }
+        );
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("drop=1.5").is_err(), "rates are probabilities");
+        assert!(FaultPlan::parse("drop=NaN").is_err(), "NaN rejected at parse time");
+        assert!(FaultPlan::parse("part=0:0:1").is_err(), "self-link partition rejected");
+        assert!(FaultPlan::parse("jitter=0.1").is_err(), "unknown keys rejected");
+        assert!(FaultPlan::parse("part=0:1").is_err(), "partition arity enforced");
+    }
+
+    #[test]
+    fn backoff_ladder_is_capped_exponential() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.backoff_us(0), p.base_delay_us);
+        assert_eq!(p.backoff_us(1), 2 * p.base_delay_us);
+        assert!(p.backoff_us(30) <= p.max_delay_us);
+    }
+}

@@ -250,13 +250,22 @@ impl ExperimentConfig {
 
     /// Cross-field validity: balancer × scheme legality (the simulator
     /// asserts this; the real trainer rejects the same combinations in
-    /// `engine::trainer::train`).
+    /// `engine::trainer::train`), plus numeric sanity — a non-finite
+    /// packing ratio would flow into NaN microbatch costs, which the
+    /// LPT dispatch order must never be fed (see `balance::dispatch`).
     pub fn validate(&self) -> Result<(), String> {
         if !self.balancer.legal_under(self.scheme) {
             return Err(format!(
                 "{} requires a barrier-free comm scheme: {}'s per-layer rendezvous needs equal \
                  microbatch counts on every device",
                 self.balancer, self.scheme
+            ));
+        }
+        if !self.packing_ratio.is_finite() || self.packing_ratio <= 0.0 {
+            return Err(format!(
+                "packing_ratio must be finite and positive, got {} — a NaN/∞ ratio poisons \
+                 every downstream microbatch cost",
+                self.packing_ratio
             ));
         }
         Ok(())
@@ -356,6 +365,18 @@ mod tests {
         assert!(err.contains("barrier-free"), "unexpected message: {err}");
         g.scheme = CommScheme::Odc;
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_packing_ratio() {
+        let mut g = ExperimentConfig::golden();
+        assert!(g.validate().is_ok());
+        g.packing_ratio = f64::NAN;
+        assert!(g.validate().is_err(), "NaN packing ratio must be rejected");
+        g.packing_ratio = f64::INFINITY;
+        assert!(g.validate().is_err());
+        g.packing_ratio = 0.0;
+        assert!(g.validate().is_err());
     }
 
     #[test]

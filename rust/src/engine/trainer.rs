@@ -77,7 +77,7 @@ use crate::balance::dispatch::{make_dispatcher, make_elastic_dispatcher, Dispatc
 use crate::balance::packers::{plan_run, Plan};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::membership::Membership;
-use crate::comm::{CollectiveComm, HybridComm, OdcComm};
+use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy};
 use crate::config::{Balancer, CommScheme};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
@@ -141,6 +141,17 @@ pub struct TrainerConfig {
     /// params + optimizer moments from the replicated store. A join is
     /// bit-identical to a fresh run at the full world size.
     pub join_at: Vec<(usize, usize)>,
+    /// ChaosComm fault injection (see [`crate::comm::transport`]): a
+    /// deterministic seeded [`FaultPlan`] dropping / duplicating /
+    /// reordering / delaying every mailbox message on the one-sided
+    /// backends. Transient rates are absorbed by the retransmit ladder
+    /// and receiver reassembly — the run stays bit-identical to the
+    /// fault-free oracle. `part=src:dst:step` entries permanently
+    /// partition a link from `step` on: the src device escalates once
+    /// its retry budget is exhausted and crashes out through the
+    /// ElasticWorld path (a derived fail-stop at `step` — explicit
+    /// `fail_at` cannot be combined with partitions). Noop by default.
+    pub fault_plan: FaultPlan,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -166,6 +177,7 @@ impl TrainerConfig {
             device_speed: Vec::new(),
             fail_at: Vec::new(),
             join_at: Vec::new(),
+            fault_plan: FaultPlan::default(),
             plan_override: None,
         }
     }
@@ -204,6 +216,13 @@ pub struct TrainRun {
     /// static membership. The sim's `RunResult::recovery_s` predicts
     /// this (fig12-style predicted-vs-measured reporting).
     pub recovery_s: f64,
+    /// ChaosComm transport counters (zero on a reliable transport):
+    /// retransmissions the retry ladder performed.
+    pub retries: u64,
+    /// Payload bytes carried by those retransmissions.
+    pub retransmitted_bytes: u64,
+    /// Links escalated to ElasticWorld after an exhausted retry budget.
+    pub escalations: u64,
 }
 
 /// The plans `train` would generate for this config (same seeding path).
@@ -255,8 +274,56 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
             ));
         }
     }
+    // --- ChaosComm fault plan (see comm::transport) ------------------------
+    cfg.fault_plan.validate().map_err(|e| anyhow!("fault_plan: {e}"))?;
+    if !cfg.fault_plan.is_noop() {
+        if cfg.scheme == CommScheme::Collective {
+            return Err(anyhow!(
+                "fault_plan requires a one-sided scheme: Collective's per-layer rendezvous \
+                 has no retransmit ladder to absorb a lossy link"
+            ));
+        }
+        if let Some(&(s, d, _)) =
+            cfg.fault_plan.partition.iter().find(|&&(s, d, _)| s >= cfg.world || d >= cfg.world)
+        {
+            return Err(anyhow!("fault_plan partition {s}:{d} references a device >= world {}", cfg.world));
+        }
+        if !cfg.fault_plan.partition.is_empty() {
+            if !cfg.fail_at.is_empty() {
+                // A partition IS a declared fail-stop for its src device
+                // (derived below); mixing it with explicit crash points
+                // would let a fail_at victim's in-flight pieces strand in
+                // a partitioned link's limbo — use part= entries alone.
+                return Err(anyhow!(
+                    "fail_at cannot be combined with fault_plan partitions: a partition already \
+                     implies a derived fail-stop for its src device"
+                ));
+            }
+            if cfg.scheme == CommScheme::Hybrid {
+                // ODC carries the partition-escalation guarantee; the
+                // hybrid cross-level quorum (one partial per group) has
+                // no per-message retraction for a half-shipped group
+                // partial, so a persistent partition is rejected rather
+                // than risking a wedged cross fold. Transient rates
+                // (drop/dup/reorder/delay) are fully supported.
+                return Err(anyhow!(
+                    "fault_plan partitions require --scheme odc (hybrid supports transient \
+                     drop/dup/reorder/delay only)"
+                ));
+            }
+        }
+    }
     // --- elastic membership (ElasticWorld, see comm::membership) ----------
-    let fails: Vec<(usize, usize)> = cfg.fail_at.iter().map(|&(d, s, _)| (d, s)).collect();
+    // A permanently partitioned link is a derived fail-stop: its src
+    // device escalates at the partition step (earliest, if several) and
+    // the schedule routes takeover exactly like an explicit fail_at.
+    let mut fails: Vec<(usize, usize)> = cfg.fail_at.iter().map(|&(d, s, _)| (d, s)).collect();
+    for &(src, _dst, step) in &cfg.fault_plan.partition {
+        match fails.iter_mut().find(|f| f.0 == src) {
+            Some(f) => f.1 = f.1.min(step),
+            None => fails.push((src, step)),
+        }
+    }
     let membership = Arc::new(
         Membership::with_schedule(cfg.world, &cfg.join_at, &fails).map_err(|e| anyhow!("{e}"))?,
     );
@@ -284,13 +351,27 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     for (l, p) in params.layers.iter().enumerate() {
         p.init_from(&man.load_init(l)?);
     }
+    let lossy = !cfg.fault_plan.is_noop();
     let backend: Arc<dyn CommBackend> = match cfg.scheme {
         CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
+        CommScheme::Odc if lossy => Arc::new(OdcComm::with_faults(
+            Arc::clone(&params),
+            Arc::clone(&membership),
+            cfg.fault_plan.clone(),
+            RetryPolicy::default(),
+        )),
         CommScheme::Odc => {
             Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)))
         }
         // NB: constructed after init_from above — HybridComm seeds its
         // group replicas from the global store.
+        CommScheme::Hybrid if lossy => Arc::new(HybridComm::with_faults(
+            Arc::clone(&params),
+            Arc::clone(&membership),
+            cfg.hybrid_group_size(),
+            cfg.fault_plan.clone(),
+            RetryPolicy::default(),
+        )),
         CommScheme::Hybrid => Arc::new(HybridComm::with_membership(
             Arc::clone(&params),
             Arc::clone(&membership),
@@ -410,7 +491,16 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
         })
         .collect();
     let recovery_s = *recovery.lock().unwrap();
-    Ok(TrainRun { logs, final_params, scheme: cfg.scheme, recovery_s })
+    let fs = backend.fault_stats();
+    Ok(TrainRun {
+        logs,
+        final_params,
+        scheme: cfg.scheme,
+        recovery_s,
+        retries: fs.retries,
+        retransmitted_bytes: fs.retransmitted_bytes,
+        escalations: fs.escalations,
+    })
 }
 
 struct DeviceCtx {
@@ -563,6 +653,18 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
                 continue;
             }
             run_microbatch(&ctx, &mut bufs, step, &a)?;
+            if ctx.backend.link_escalated(dev) {
+                // ChaosComm escalation: a link's retry budget is gone
+                // for good. The backend already retracted this
+                // microbatch's landed pieces (all-or-nothing), so
+                // reporting the failure orphans it to a survivor for an
+                // exactly-once re-run; this worker crashes out exactly
+                // like a fail_at victim (the membership schedule already
+                // carries its derived fail-stop).
+                disp.report_failed(dev);
+                crashed = true;
+                break;
+            }
         }
         if !crashed && matches!(my_fail, Some((s, _)) if s == step) {
             // Scheduled to crash this step but the work ran dry first:
@@ -576,6 +678,15 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         }
 
         ctx.backend.end_minibatch(dev);
+        if ctx.backend.link_escalated(dev) {
+            // Escalated inside the minibatch epilogue (e.g. the Done
+            // broadcast hit the partitioned link first): crash out
+            // before the optimizer phase — the gradient flush never
+            // completed for this device, and the fold quorum already
+            // excludes it via its derived fail-stop.
+            disp.report_failed(dev);
+            return Ok(());
+        }
 
         // ---- server role: sharded AdamW on every shard this device
         // serves at this step — its own, plus any adopted from a dead
@@ -767,6 +878,17 @@ fn run_microbatch(
     bufs.i32_pool.recycle(seg);
     bufs.i32_pool.recycle(targets);
     bufs.f32_pool.recycle(mask);
+
+    // ChaosComm escalation mid-microbatch: the backend retracted (or
+    // never delivered) this microbatch's gradient pieces, and the caller
+    // is about to orphan the assignment for an exactly-once re-run on a
+    // survivor — so undo the metric contributions counted above, or the
+    // re-run would double-count its tokens (and skew the 1/ntok gradient
+    // normalization away from the oracle).
+    if backend.link_escalated(dev) {
+        ctx.tok_count[step].fetch_sub(packed.real_tokens as u64, Ordering::SeqCst);
+        *ctx.loss_sum[step].lock().unwrap() -= loss_sum[0] as f64;
+    }
     Ok(())
 }
 

@@ -11,6 +11,7 @@
 //!   odc train --preset small --world 4 --steps 40
 //!   odc dist
 
+use odc::comm::FaultPlan;
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::sim::run::{simulate, SimConfig};
@@ -78,6 +79,19 @@ fn parse_join_at(s: &str) -> anyhow::Result<Vec<(usize, usize)>> {
     Ok(tuples.into_iter().map(|t| (t[0], t[1])).collect())
 }
 
+/// Parse `--fault-plan` — the ChaosComm lossy-transport grammar
+/// ("drop=0.05,dup=0.02,reorder=0.05,seed=7,part=0:2:3"); empty = clean
+/// transport. Validation errors use the CLI's standard exit-2 path.
+fn parse_fault_plan(s: &str) -> FaultPlan {
+    match FaultPlan::parse(s) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("invalid configuration: --fault-plan: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     odc::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -99,6 +113,11 @@ fn main() -> anyhow::Result<()> {
                 .opt("seed", "0", "rng seed")
                 .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1,1,1 (empty = uniform)")
                 .opt("fail-at", "", "crash events device:step:micro, e.g. 0:1:2 (empty = none)")
+                .opt(
+                    "fault-plan",
+                    "",
+                    "lossy transport, e.g. drop=0.05,dup=0.02,seed=7,part=0:2:3 (empty = clean)",
+                )
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -149,9 +168,32 @@ fn main() -> anyhow::Result<()> {
                 );
                 std::process::exit(2);
             }
+            let fault_plan = parse_fault_plan(a.get("fault-plan"));
+            if !fault_plan.is_noop() && exp.scheme == CommScheme::Collective {
+                eprintln!(
+                    "invalid configuration: --fault-plan requires a barrier-free scheme \
+                     (a dropped collective message stalls every rank at the next rendezvous)"
+                );
+                std::process::exit(2);
+            }
+            if !fault_plan.partition.is_empty() && exp.scheme != CommScheme::Odc {
+                eprintln!(
+                    "invalid configuration: --fault-plan partitions require --scheme odc \
+                     (hybrid supports transient drop/dup/reorder/delay only)"
+                );
+                std::process::exit(2);
+            }
+            if !fault_plan.partition.is_empty() && !fail_at.is_empty() {
+                eprintln!(
+                    "invalid configuration: --fail-at cannot combine with --fault-plan partitions \
+                     (a partition already implies a derived fail-stop for its src device)"
+                );
+                std::process::exit(2);
+            }
             let mut sim_cfg = SimConfig::new(exp);
             sim_cfg.device_speed = device_speed;
             sim_cfg.fail_at = fail_at;
+            sim_cfg.fault_plan = fault_plan;
             let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
@@ -178,6 +220,21 @@ fn main() -> anyhow::Result<()> {
                     if sim_cfg.fail_at.len() == 1 { "" } else { "s" }
                 );
             }
+            if !sim_cfg.fault_plan.is_noop() {
+                println!(
+                    "  fault pricing    : {} retries, {} retransmitted bytes, {} escalation{}",
+                    r.retries,
+                    r.retransmitted_bytes,
+                    r.escalations,
+                    if r.escalations == 1 { "" } else { "s" }
+                );
+                if r.escalations > 0 {
+                    println!(
+                        "  escalation       : partitioned links became derived fail-stops; recovery {:.3} ms",
+                        r.recovery_s * 1e3
+                    );
+                }
+            }
         }
         "train" => {
             let cli = Cli::new("odc train", "real FSDP training through PJRT")
@@ -193,6 +250,11 @@ fn main() -> anyhow::Result<()> {
                 .opt("device-speed", "", "per-device relative speed, e.g. 0.25,1 (empty = uniform)")
                 .opt("fail-at", "", "crash events device:step:micro, e.g. 0:1:2 (empty = none)")
                 .opt("join-at", "", "join events device:step, e.g. 3:2 (empty = none)")
+                .opt(
+                    "fault-plan",
+                    "",
+                    "lossy transport, e.g. drop=0.05,dup=0.02,seed=7,part=0:2:3 (empty = clean)",
+                )
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -216,7 +278,11 @@ fn main() -> anyhow::Result<()> {
             cfg.device_speed = parse_device_speed(a.get("device-speed"))?;
             cfg.fail_at = parse_fail_at(a.get("fail-at"))?;
             cfg.join_at = parse_join_at(a.get("join-at"))?;
-            let elastic = !cfg.fail_at.is_empty() || !cfg.join_at.is_empty();
+            cfg.fault_plan = parse_fault_plan(a.get("fault-plan"));
+            let lossy = !cfg.fault_plan.is_noop();
+            let elastic = !cfg.fail_at.is_empty()
+                || !cfg.join_at.is_empty()
+                || !cfg.fault_plan.partition.is_empty();
             let run = train(&cfg)?;
             for log in &run.logs {
                 println!(
@@ -229,6 +295,12 @@ fn main() -> anyhow::Result<()> {
                     "recovery_s {:.6}  (measured ElasticWorld recovery overhead: orphan flushes, \
                      shard adoption, join refresh)",
                     run.recovery_s
+                );
+            }
+            if lossy {
+                println!(
+                    "fault_stats  retries {}  retransmitted_bytes {}  escalations {}",
+                    run.retries, run.retransmitted_bytes, run.escalations
                 );
             }
         }

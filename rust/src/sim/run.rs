@@ -9,10 +9,12 @@ use crate::balance::bubble::estimate_bubble_dispatch;
 use crate::balance::cost::CostModel;
 use crate::balance::packers::{plan_run_opts, PackOpts};
 use crate::comm::topology::Topology;
+use crate::comm::transport::{FaultPlan, RetryPolicy};
 use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use crate::data::distributions::sample_lengths;
 use crate::sim::timeline::{
-    hybrid_step_overhead, recovery_epilogue_s, time_minibatch_dispatch, time_minibatch_failover,
+    fault_minibatch_overhead, hybrid_step_overhead, recovery_epilogue_s, time_minibatch_dispatch,
+    time_minibatch_failover,
 };
 use crate::util::rng::Rng;
 
@@ -37,6 +39,17 @@ pub struct SimConfig {
     /// schemes only — `simulate` panics under Collective, exactly like
     /// the trainer's validation error.
     pub fail_at: Vec<(usize, usize, usize)>,
+    /// ChaosComm lossy-transport scenario, mirroring
+    /// `TrainerConfig::fault_plan` (see [`FaultPlan`]). Transient loss
+    /// (drop/dup/reorder/delay) is priced as expected retransmission
+    /// stalls plus retransmitted volume; each `part=src:dst:step`
+    /// partition escalates its src device into a derived ElasticWorld
+    /// fail-stop at `step` (recovery epilogue, shrunken world, orphans
+    /// re-dispatched) — exactly what the engine's suspicion counter
+    /// does past the retry budget. Barrier-free schemes only;
+    /// partitions additionally require ODC and exclude `fail_at`,
+    /// matching the trainer's validation.
+    pub fault_plan: FaultPlan,
 }
 
 impl SimConfig {
@@ -48,6 +61,7 @@ impl SimConfig {
             hierarchical_gather: false,
             device_speed: Vec::new(),
             fail_at: Vec::new(),
+            fault_plan: FaultPlan::default(),
         }
     }
 }
@@ -94,6 +108,17 @@ pub struct RunResult {
     /// `bubble_rate` still describes the healthy schedule; failure
     /// steps are priced by the failover pull model.)
     pub recovery_s: f64,
+    /// ChaosComm: expected retransmissions under the configured
+    /// `fault_plan` — the sim mirror of the engine's
+    /// `FaultStats::retries` counter (0 on a clean transport).
+    pub retries: u64,
+    /// ChaosComm: expected retransmitted payload volume in bytes
+    /// (mirror of `FaultStats::retransmitted_bytes`).
+    pub retransmitted_bytes: u64,
+    /// ChaosComm: partitioned links escalated into ElasticWorld
+    /// fail-stops, deduplicated by (src, dst) link (mirror of
+    /// `FaultStats::escalations`).
+    pub escalations: u64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -119,20 +144,58 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
             "device_speed entries must be finite and > 0"
         );
     }
-    if !cfg.fail_at.is_empty() {
+    if let Err(e) = cfg.fault_plan.validate() {
+        panic!("invalid experiment cell: fault_plan: {e}");
+    }
+    let mut fail_at = cfg.fail_at.clone();
+    if !cfg.fault_plan.is_noop() {
+        assert!(
+            exp.scheme != CommScheme::Collective,
+            "invalid experiment cell: fault_plan requires a barrier-free scheme (a dropped \
+             collective message stalls every rank at the next rendezvous)"
+        );
+        for &(src, dst, step) in &cfg.fault_plan.partition {
+            assert!(src < exp.devices && dst < exp.devices, "partition link {src}->{dst} out of range");
+            assert!(step < exp.steps, "partition step {step} out of range");
+        }
+        if !cfg.fault_plan.partition.is_empty() {
+            assert!(
+                exp.scheme == CommScheme::Odc,
+                "invalid experiment cell: fault_plan partitions require the odc scheme \
+                 (hybrid's cross-level quorum has no per-message retraction; the trainer \
+                 rejects the combination too)"
+            );
+            assert!(
+                cfg.fail_at.is_empty(),
+                "invalid experiment cell: fail_at cannot combine with fault_plan partitions — \
+                 a partition already implies a derived fail-stop for its src device"
+            );
+            // A partitioned link escalates its src at the first touch past
+            // the retry budget: derive the fail-stop the trainer
+            // synthesizes (min step per src, zero completed pulls — the
+            // whole plan row re-dispatches to survivors).
+            for &(src, _dst, step) in &cfg.fault_plan.partition {
+                match fail_at.iter_mut().find(|f| f.0 == src) {
+                    Some(f) => f.1 = f.1.min(step),
+                    None => fail_at.push((src, step, 0)),
+                }
+            }
+        }
+    }
+    if !fail_at.is_empty() {
         assert!(
             exp.scheme != CommScheme::Collective,
             "invalid experiment cell: fail_at requires a barrier-free scheme (one dead rank \
              deadlocks Collective's per-layer all-gather rendezvous)"
         );
-        for &(dev, step, _) in &cfg.fail_at {
+        for &(dev, step, _) in &fail_at {
             assert!(dev < exp.devices, "fail_at device {dev} out of range");
             assert!(step < exp.steps, "fail_at step {step} out of range");
         }
-        let mut devs: Vec<usize> = cfg.fail_at.iter().map(|f| f.0).collect();
+        let mut devs: Vec<usize> = fail_at.iter().map(|f| f.0).collect();
         devs.sort_unstable();
         devs.dedup();
-        assert_eq!(devs.len(), cfg.fail_at.len(), "one fail_at event per device");
+        assert_eq!(devs.len(), fail_at.len(), "one fail_at event per device");
         assert!(devs.len() < exp.devices, "at least one device must survive");
     }
     let queue_dispatch = exp.balancer == Balancer::Queue;
@@ -158,17 +221,20 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     );
 
     let step_overhead = hybrid_overhead(exp, &topo);
+    let retry_policy = RetryPolicy::default();
     let mut total_wall = 0.0;
     let mut total_busy = 0.0;
     let mut dispatch_wait = 0.0;
     let mut bubble_busy = 0.0;
     let mut bubble_total = 0.0;
     let mut recovery_total = 0.0;
+    let mut retries = 0u64;
+    let mut retransmitted_bytes = 0u64;
     let mut dead = vec![false; exp.devices];
     let mut samples = 0usize;
     for (step, plan) in plans.iter().enumerate() {
         let fails_now: Vec<(usize, usize)> =
-            cfg.fail_at.iter().filter(|f| f.1 == step).map(|f| (f.0, f.2)).collect();
+            fail_at.iter().filter(|f| f.1 == step).map(|f| (f.0, f.2)).collect();
         let elastic = !fails_now.is_empty() || dead.iter().any(|&x| x);
         let t = if elastic {
             time_minibatch_failover(
@@ -220,7 +286,21 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
             dead[fdev] = true;
         }
         recovery_total += step_recovery;
-        total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead + step_recovery;
+        // ChaosComm pricing: every dispatched micro's scatter stream pays
+        // the expected retransmission stall under the lossy transport.
+        let micros: usize =
+            plan.micro.iter().map(|row| row.iter().filter(|m| !m.is_empty()).count()).sum();
+        let (step_retries, step_bytes, fault_stall) = fault_minibatch_overhead(
+            exp.model,
+            exp.devices,
+            micros,
+            &cfg.fault_plan,
+            &retry_policy,
+            &topo,
+        );
+        retries += step_retries;
+        retransmitted_bytes += step_bytes;
+        total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead + step_recovery + fault_stall;
         total_busy += t.busy.iter().sum::<f64>();
         // Speed- and dispatch-aware packing estimate, so the bubble
         // rate and dispatch_wait_s tell one consistent story (failure
@@ -230,6 +310,12 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         bubble_total += b.total;
         samples += plan.sample_count();
     }
+
+    let mut links: Vec<(usize, usize)> =
+        cfg.fault_plan.partition.iter().map(|&(s, t, _)| (s, t)).collect();
+    links.sort_unstable();
+    links.dedup();
+    let escalations = links.len() as u64;
 
     let d = exp.devices as f64;
     let bubble_rate = if bubble_total > 0.0 { 1.0 - bubble_busy / (d * bubble_total) } else { 0.0 };
@@ -244,6 +330,9 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         hybrid_step_overhead_s: step_overhead,
         dispatch_wait_s: dispatch_wait,
         recovery_s: recovery_total,
+        retries,
+        retransmitted_bytes,
+        escalations,
         minibatches: plans.len(),
         samples,
     }
@@ -561,6 +650,118 @@ mod tests {
         exp.balancer = Balancer::Queue;
         exp.steps = 1;
         let _ = simulate(&SimConfig::new(exp));
+    }
+
+    fn lossy(plan: &str) -> RunResult {
+        // Same cell as `elastic(vec![])` so clean-plan results compare
+        // bit-for-bit against the fault-free baseline.
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Odc;
+        exp.balancer = Balancer::LbMini;
+        exp.devices = 4;
+        exp.devices_per_node = 4;
+        exp.minibs = 4;
+        exp.steps = 6;
+        exp.seed = 7;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fault_plan = FaultPlan::parse(plan).expect("fault plan parses");
+        simulate(&cfg)
+    }
+
+    #[test]
+    fn noop_fault_plan_prices_nothing() {
+        // A seed-only plan is a no-op: zero counters, wall bit-identical
+        // to the fault-free baseline of the same cell.
+        let base = elastic(vec![]);
+        let r = lossy("seed=1");
+        assert_eq!(r.retries, 0);
+        assert_eq!(r.retransmitted_bytes, 0);
+        assert_eq!(r.escalations, 0);
+        assert_eq!(r.samples_per_sec_per_device, base.samples_per_sec_per_device);
+        assert_eq!(r.recovery_s, 0.0);
+    }
+
+    #[test]
+    fn transient_loss_prices_retries_and_costs_throughput() {
+        let clean = elastic(vec![]);
+        let r = lossy("drop=0.08,dup=0.05,reorder=0.05,seed=11");
+        assert!(r.retries > 0, "8% drop must price retransmissions");
+        assert!(r.retransmitted_bytes > 0);
+        assert_eq!(r.escalations, 0, "transient loss never escalates");
+        assert_eq!(r.recovery_s, 0.0);
+        assert!(
+            r.samples_per_sec_per_device < clean.samples_per_sec_per_device,
+            "retransmission stalls must cost throughput: {} vs {}",
+            r.samples_per_sec_per_device,
+            clean.samples_per_sec_per_device
+        );
+        assert_eq!(r.samples, clean.samples, "transient loss never drops samples");
+        let again = lossy("drop=0.08,dup=0.05,reorder=0.05,seed=11");
+        assert_eq!(r.retries, again.retries);
+        assert_eq!(r.retransmitted_bytes, again.retransmitted_bytes);
+        assert_eq!(r.samples_per_sec_per_device, again.samples_per_sec_per_device);
+    }
+
+    #[test]
+    fn partition_escalates_into_elastic_recovery() {
+        // A fully partitioned link past the retry budget becomes a
+        // derived fail-stop: ElasticWorld epilogue priced, orphans
+        // re-dispatched, every sample still trains exactly once.
+        let clean = elastic(vec![]);
+        let r = lossy("drop=0.05,seed=3,part=0:2:2");
+        assert_eq!(r.escalations, 1);
+        assert!(r.recovery_s > 0.0, "escalation must price the ElasticWorld epilogue");
+        assert!(r.samples_per_sec_per_device < clean.samples_per_sec_per_device);
+        assert_eq!(r.samples, clean.samples, "orphans re-dispatch; every sample trains");
+        assert_eq!(r.minibatches, clean.minibatches, "all steps complete");
+        let again = lossy("drop=0.05,seed=3,part=0:2:2");
+        assert_eq!(r.recovery_s, again.recovery_s);
+        assert_eq!(r.samples_per_sec_per_device, again.samples_per_sec_per_device);
+    }
+
+    #[test]
+    #[should_panic(expected = "barrier-free")]
+    fn lossy_collective_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Collective;
+        exp.balancer = Balancer::LbMicro;
+        exp.steps = 1;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fault_plan = FaultPlan::parse("drop=0.1").expect("fault plan parses");
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "partitions require")]
+    fn hybrid_partition_rejected_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Hybrid;
+        exp.balancer = Balancer::LbMicro;
+        exp.steps = 2;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fault_plan = FaultPlan::parse("drop=0.05,part=0:1:1").expect("fault plan parses");
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    fn hybrid_transient_loss_is_priced() {
+        // Hybrid supports the transient fault classes (no partitions):
+        // counters populate and the run stays deterministic.
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Hybrid;
+        exp.balancer = Balancer::LbMicro;
+        exp.devices = 8;
+        exp.devices_per_node = 4;
+        exp.minibs = 4;
+        exp.steps = 4;
+        let mut cfg = SimConfig::new(exp);
+        cfg.fault_plan = FaultPlan::parse("drop=0.06,dup=0.03,seed=5").expect("fault plan parses");
+        let a = simulate(&cfg);
+        assert!(a.retries > 0);
+        assert_eq!(a.escalations, 0);
+        let b = simulate(&cfg);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::balance::cost::CostModel;
 use crate::balance::dispatch::{lpt_order, pull_schedule, pull_schedule_budgeted};
 use crate::balance::packers::Plan;
 use crate::comm::topology::Topology;
+use crate::comm::transport::{FaultPlan, RetryPolicy};
 use crate::comm::volume;
 use crate::config::{CommScheme, PaperModel, Sharding};
 
@@ -86,6 +87,44 @@ pub fn recovery_epilogue_bytes(
 /// [`recovery_epilogue_bytes`] for a paper model (bf16 parameters).
 pub fn recovery_epilogue_s(model: PaperModel, world: usize, topo: &Topology, orphans: usize) -> f64 {
     recovery_epilogue_bytes(2.0 * model.params(), world, topo, orphans)
+}
+
+/// ChaosComm pricing (the sim mirror of [`crate::comm::transport`]):
+/// expected retransmissions and timeout stalls for one minibatch of
+/// `micros` dispatched microbatches over `world` devices on a lossy
+/// transport. The dominant lossy traffic is the scatter-accumulate push
+/// stream — `micros × layers × world` payload messages per minibatch,
+/// one per-server layer piece each — and a message retransmits
+/// `drop/(1-drop)` extra times in expectation (geometric; the capped
+/// ladder makes residual request-level loss negligible at transient
+/// rates). Reordered/delayed messages are held one release window and
+/// priced like a single backoff each.
+///
+/// Returns `(retries, retransmitted_bytes, stall_seconds)`: the first
+/// two mirror the engine's `FaultStats` counters, the stall is the
+/// expected wall addition (backoff sleeps + retransmitted volume over
+/// the intra-node links, amortized across the world's parallel links).
+pub fn fault_minibatch_overhead(
+    model: PaperModel,
+    world: usize,
+    micros: usize,
+    plan: &FaultPlan,
+    policy: &RetryPolicy,
+    topo: &Topology,
+) -> (u64, u64, f64) {
+    if plan.is_noop() || micros == 0 || world == 0 {
+        return (0, 0, 0.0);
+    }
+    let msgs = (micros * model.layers() * world) as f64;
+    let extra = plan.drop / (1.0 - plan.drop);
+    let retries = (msgs * extra).round() as u64;
+    let piece = layer_bytes(model) / world as f64;
+    let bytes = (retries as f64 * piece).round() as u64;
+    let backoff_s = policy.backoff_us(0) as f64 * 1e-6;
+    let held = msgs * (plan.delay + plan.reorder);
+    let stall = (retries as f64 * (backoff_s + piece / topo.intra_bw) + held * backoff_s)
+        / world as f64;
+    (retries, bytes, stall)
 }
 
 /// Result of timing one minibatch.

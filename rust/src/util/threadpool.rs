@@ -43,7 +43,20 @@ where
         for (i, r) in rx {
             match r {
                 Ok(v) => out[i] = Some(v),
-                Err(p) => std::panic::resume_unwind(p),
+                // Re-raise with the job index: a bare resume_unwind here
+                // surfaces as the unrelated "job did not report" expect
+                // below, making pool-amplified failures (e.g. chaos-test
+                // assertions) unattributable to the job that died.
+                Err(p) => {
+                    let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = p.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "non-string panic payload".to_string()
+                    };
+                    panic!("job {i} panicked: {msg}");
+                }
             }
         }
         out.into_iter().map(|o| o.expect("job did not report")).collect()
@@ -72,5 +85,13 @@ mod tests {
     fn panics_propagate() {
         let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
         scoped_map(2, jobs);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 1 panicked: boom")]
+    fn panics_carry_the_job_index() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| 1), Box::new(|| panic!("boom")), Box::new(|| 3)];
+        scoped_map(1, jobs);
     }
 }

@@ -1,0 +1,379 @@
+//! ChaosComm property test: lossy transport under Queue × {ODC, Hybrid}.
+//!
+//! Runs the synthetic elastic workload over a [`FaultyTransport`] that
+//! drops, duplicates, reorders and delays messages on every link, and
+//! asserts the hardening contract end to end (no PJRT, no artifacts —
+//! this suite always runs):
+//!
+//! * **bit-identity under transient loss** — with drop ≥ 5% plus
+//!   duplication and reordering on every link, each step's folded
+//!   gradient equals the sequential oracle EXACTLY (grads are distinct
+//!   powers of two, so any double/dropped delivery flips a bit);
+//! * **exactly-once** — every microbatch of every minibatch executes
+//!   exactly once despite retransmissions and duplicate deliveries;
+//! * **arena hygiene** (ODC) — push-level acquire counts stay exact
+//!   (a retransmit re-sends the same buffer, it never re-acquires) and
+//!   arena growth stays inside the step-count-independent in-flight
+//!   bound;
+//! * **deterministic replay** — a fixed fault-plan seed under static
+//!   dispatch reproduces the exact fault counters run over run (the
+//!   determinism scope documented in `docs/faults.md`);
+//! * **escalation** — a fully partitioned link past the retry budget
+//!   escalates its src into the EXISTING ElasticWorld machinery
+//!   (retract → report_failed → successor takeover → orphan re-pull)
+//!   and the run still completes bit-identical with
+//!   `fault_stats().escalations ≥ 1`;
+//! * **InProc equivalence** — the trait-wrapped in-process transport
+//!   with an empty plan behaves exactly like the plain constructors
+//!   (same oracle folds, zero fault counters).
+
+use odc::balance::cost::CostModel;
+use odc::balance::dispatch::{make_elastic_dispatcher, Dispatcher};
+use odc::balance::packers::Plan;
+use odc::comm::backend::{CommBackend, ParamStore};
+use odc::comm::{
+    ArenaStats, FaultPlan, FaultStats, HybridComm, Membership, OdcComm, RetryPolicy,
+};
+use odc::config::{Balancer, CommScheme, PaperModel};
+use std::sync::{Arc, Mutex};
+
+/// Two layers, lengths chosen so padding differs across world sizes.
+const LAYERS: [usize; 2] = [12, 7];
+const MICROS_PER_DEV: usize = 3;
+
+/// Singleton microbatches with strictly decreasing cost, so the LPT
+/// pull order is deterministic and ids are distinct.
+fn make_plan(world: usize) -> (Plan, Vec<usize>) {
+    let n = world * MICROS_PER_DEV;
+    let lens: Vec<usize> = (0..n).map(|i| 4000 - 100 * i).collect();
+    let micro: Vec<Vec<Vec<usize>>> = (0..world)
+        .map(|d| (0..MICROS_PER_DEV).map(|m| vec![d * MICROS_PER_DEV + m]).collect())
+        .collect();
+    (Plan { micro }, lens)
+}
+
+/// A chaos plan with every transient fault class active on every link.
+fn chaos_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        drop: 0.08,
+        dup: 0.05,
+        reorder: 0.10,
+        delay: 0.05,
+        seed,
+        partition: Vec::new(),
+    }
+}
+
+struct TrialOutcome {
+    /// ids executed (and not retracted) per step, any order.
+    executed: Vec<Vec<u64>>,
+    arena: Option<ArenaStats>,
+    stats: FaultStats,
+}
+
+/// Drive `steps` minibatches of the synthetic workload with
+/// trainer-faithful escalation handling: after each microbatch and after
+/// `end_minibatch`, a device whose link escalated reports itself failed
+/// and vanishes — the backend has already retracted the in-flight micro,
+/// so a survivor re-runs it (the id is recorded only when it stuck).
+/// Every shard owner asserts the exact oracle fold in-line.
+fn run_chaos(
+    scheme: CommScheme,
+    group_size: usize,
+    world: usize,
+    membership: Arc<Membership>,
+    balancer: Balancer,
+    plan: Option<FaultPlan>,
+    steps: usize,
+) -> TrialOutcome {
+    let params = Arc::new(ParamStore::new(&LAYERS, world));
+    let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match (scheme, plan) {
+        (CommScheme::Odc, Some(p)) => {
+            let c = Arc::new(OdcComm::with_faults(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                p,
+                RetryPolicy::default(),
+            ));
+            (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
+        }
+        (CommScheme::Odc, None) => {
+            let c = Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)));
+            (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
+        }
+        (CommScheme::Hybrid, Some(p)) => (
+            Arc::new(HybridComm::with_faults(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                group_size,
+                p,
+                RetryPolicy::default(),
+            )) as Arc<dyn CommBackend>,
+            None,
+        ),
+        (CommScheme::Hybrid, None) => (
+            Arc::new(HybridComm::with_membership(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                group_size,
+            )) as Arc<dyn CommBackend>,
+            None,
+        ),
+        (CommScheme::Collective, _) => unreachable!("chaos × Collective is rejected at config time"),
+    };
+    let (plan, lens) = make_plan(world);
+    let cost = CostModel::for_model(PaperModel::M1_5B);
+    let n_micros = (world * MICROS_PER_DEV) as u64;
+    // every micro pushes 2^id: the full fold is exactly 2^n - 1
+    let want = ((1u64 << n_micros) - 1) as f32;
+    let executed: Arc<Vec<Mutex<Vec<u64>>>> =
+        Arc::new((0..steps).map(|_| Mutex::new(Vec::new())).collect());
+    let dispatchers: Vec<Arc<dyn Dispatcher>> = (0..steps)
+        .map(|step| {
+            let crasher: Vec<bool> = (0..world).map(|d| membership.fails_during(d, step)).collect();
+            let absent: Vec<bool> = (0..world).map(|d| membership.absent(d, step)).collect();
+            make_elastic_dispatcher(balancer, scheme, &plan, &lens, &cost, &crasher, &absent)
+        })
+        .collect();
+    let dispatchers = Arc::new(dispatchers);
+
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let backend = Arc::clone(&backend);
+            let params = Arc::clone(&params);
+            let membership = Arc::clone(&membership);
+            let executed = Arc::clone(&executed);
+            let dispatchers = Arc::clone(&dispatchers);
+            s.spawn(move || {
+                let join = membership.joins_at(dev);
+                if join > 0 {
+                    backend.await_join(dev);
+                }
+                for step in join..steps {
+                    let disp = dispatchers[step].as_ref();
+                    let mut crashed = false;
+                    while let Some(a) = disp.next_micro(dev) {
+                        for (l, p) in params.layers.iter().enumerate() {
+                            let grad = vec![(1u64 << a.id) as f32; p.padded_len()];
+                            backend.reduce_grad(dev, l, &grad, 1.0, a.id);
+                        }
+                        // Trainer-faithful escalation: the backend has
+                        // already retracted this micro's delivered
+                        // pieces, so it re-runs on a survivor — record
+                        // the id only when it stuck.
+                        if backend.link_escalated(dev) {
+                            disp.report_failed(dev);
+                            crashed = true;
+                            break;
+                        }
+                        executed[step].lock().unwrap().push(a.id);
+                    }
+                    if crashed {
+                        return; // escalation: the worker vanishes
+                    }
+                    backend.end_minibatch(dev);
+                    if backend.link_escalated(dev) {
+                        // Link died during the Done broadcast: no grads
+                        // were taken, bail before the optimizer phase.
+                        disp.report_failed(dev);
+                        return;
+                    }
+                    for &shard in &membership.shards_owned_by(dev, step) {
+                        if shard != dev {
+                            backend.flush_shard(shard);
+                        }
+                        for (l, p) in params.layers.iter().enumerate() {
+                            let mut g = vec![0.0f32; p.shard_len];
+                            backend.take_grad_shard(shard, l, &mut g);
+                            for &v in &g {
+                                assert_eq!(
+                                    v, want,
+                                    "step {step} shard {shard} layer {l}: fold != oracle"
+                                );
+                            }
+                        }
+                    }
+                    backend.end_step(dev);
+                }
+            });
+        }
+    });
+
+    TrialOutcome {
+        executed: executed.iter().map(|m| m.lock().unwrap().clone()).collect(),
+        arena: odc_handle.as_ref().map(|c| c.arena_stats()),
+        stats: backend.fault_stats(),
+    }
+}
+
+fn assert_exactly_once(outcome: &TrialOutcome, world: usize, steps: usize) {
+    let n = (world * MICROS_PER_DEV) as u64;
+    for (step, ids) in outcome.executed.iter().enumerate() {
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        let want: Vec<u64> = (0..n).collect();
+        assert_eq!(sorted, want, "step {step}: every microbatch must run exactly once");
+    }
+    assert_eq!(outcome.executed.len(), steps);
+}
+
+#[test]
+fn transient_chaos_bit_identical_odc() {
+    let world = 4;
+    let steps = 4;
+    for seed in [0xC0FFEEu64, 7, 0xA5A5] {
+        let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+        let outcome = run_chaos(
+            CommScheme::Odc,
+            0,
+            world,
+            membership,
+            Balancer::Queue,
+            Some(chaos_plan(seed)),
+            steps,
+        );
+        // The in-line fold asserts already proved bit-identity to the
+        // oracle; here: exactly-once, retransmissions happened, nothing
+        // escalated, and the arena stayed inside its in-flight bound.
+        assert_exactly_once(&outcome, world, steps);
+        assert!(outcome.stats.retries > 0, "seed {seed:#x}: an 8% drop rate must retransmit");
+        assert!(outcome.stats.retransmitted_bytes > 0);
+        assert_eq!(outcome.stats.escalations, 0, "transient loss must never escalate");
+
+        let stats = outcome.arena.expect("odc arena stats");
+        // Push-level exactly-once: retransmits re-send, they never
+        // re-acquire — each executed micro acquires exactly
+        // world × layers buffers, once.
+        let pushes = (steps * world * MICROS_PER_DEV * LAYERS.len() * world) as u64;
+        assert_eq!(stats.acquires, pushes, "seed {seed:#x}: double or dropped pushes");
+        // Growth bound independent of the step count: duplicates return
+        // clones to the free list, but fresh misses stay capped by one
+        // minibatch's in-flight maximum.
+        let bound = (world * world * (world * MICROS_PER_DEV) * LAYERS.len()) as u64;
+        assert!(
+            stats.fresh_allocs <= bound,
+            "seed {seed:#x}: arena growth {} exceeds in-flight bound {bound}",
+            stats.fresh_allocs
+        );
+    }
+}
+
+#[test]
+fn transient_chaos_bit_identical_hybrid() {
+    let world = 4;
+    let steps = 4;
+    let mut seed = 0xB0B0u64;
+    for group_size in [2usize, 4, 1] {
+        seed += 1;
+        let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+        let outcome = run_chaos(
+            CommScheme::Hybrid,
+            group_size,
+            world,
+            membership,
+            Balancer::Queue,
+            Some(chaos_plan(seed)),
+            steps,
+        );
+        assert_exactly_once(&outcome, world, steps);
+        assert!(outcome.stats.retries > 0, "group {group_size}: drop must retransmit");
+        assert_eq!(outcome.stats.escalations, 0);
+    }
+}
+
+#[test]
+fn fixed_seed_replays_exact_fault_counters() {
+    // Determinism scope (docs/faults.md): per-link fault decisions are a
+    // pure function of (plan seed, link, message sequence). Static
+    // dispatch fixes every device's pull order, so two runs replay the
+    // exact same counters bit for bit.
+    let world = 4;
+    let steps = 3;
+    let run = || {
+        let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+        run_chaos(
+            CommScheme::Odc,
+            0,
+            world,
+            membership,
+            Balancer::LbMini,
+            Some(chaos_plan(0xD00D)),
+            steps,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_exactly_once(&a, world, steps);
+    assert_eq!(a.stats, b.stats, "fixed seed must replay identical fault counters");
+    assert!(a.stats.retries > 0);
+}
+
+#[test]
+fn partitioned_link_escalates_into_elastic_takeover() {
+    // A fully partitioned link (src 0 → dst 2 from step 1) exhausts the
+    // retry budget at its first touch: device 0 retracts its in-flight
+    // micro, reports itself failed, the ring successor adopts its shard
+    // and survivors re-pull the orphans. The fold stays exact and the
+    // transport records the escalation.
+    let world = 4;
+    let fail_step = 1;
+    let steps = fail_step + 4; // several post-recovery minibatches
+    for seed in [3u64, 0xE5C4] {
+        let plan = FaultPlan {
+            drop: 0.05,
+            dup: 0.02,
+            reorder: 0.05,
+            delay: 0.0,
+            seed,
+            partition: vec![(0, 2, fail_step)],
+        };
+        let membership =
+            Arc::new(Membership::with_schedule(world, &[], &[(0, fail_step)]).unwrap());
+        let outcome = run_chaos(
+            CommScheme::Odc,
+            0,
+            world,
+            membership,
+            Balancer::Queue,
+            Some(plan),
+            steps,
+        );
+        assert_exactly_once(&outcome, world, steps);
+        assert!(
+            outcome.stats.escalations >= 1,
+            "seed {seed:#x}: the partitioned link must escalate"
+        );
+    }
+}
+
+#[test]
+fn inproc_transport_with_empty_plan_matches_plain_backends() {
+    // The trait seam is free: an empty plan routes through
+    // InProcTransport and behaves exactly like the pre-transport
+    // constructors — same oracle folds (asserted in-line by both runs),
+    // same executed sets, zero fault counters on both sides.
+    let world = 4;
+    let steps = 3;
+    let run = |plan: Option<FaultPlan>| {
+        let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+        run_chaos(CommScheme::Odc, 0, world, membership, Balancer::LbMini, plan, steps)
+    };
+    let plain = run(None);
+    let wrapped = run(Some(FaultPlan::default()));
+    assert_exactly_once(&plain, world, steps);
+    assert_exactly_once(&wrapped, world, steps);
+    for step in 0..steps {
+        let mut a = plain.executed[step].clone();
+        let mut b = wrapped.executed[step].clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "step {step}: empty plan must not change the schedule");
+    }
+    assert_eq!(plain.stats, FaultStats::default());
+    assert_eq!(wrapped.stats, FaultStats::default());
+    assert_eq!(
+        plain.arena.unwrap().acquires,
+        wrapped.arena.unwrap().acquires,
+        "the transport seam must not change push accounting"
+    );
+}

@@ -4,11 +4,14 @@ previous CI run's records (restored via actions/cache).
 
 Usage: bench_trend.py <prev_dir> <fresh_dir>
 
-Tracked metrics (higher is better for both):
+Tracked metrics (higher is better for all):
   * BENCH_hotpath.json  -> per_microbatch.reduction_pct
         (zero-copy vs seed comm-path win, %)
   * BENCH_dispatch.json -> static_bubble_time_s - queue_bubble_time_s
         at the 4x-slowdown row (bubble seconds the work queue removes)
+  * BENCH_dispatch.json -> chaos.retained_throughput_fraction
+        (throughput kept under the fixed lossy fault plan; a drop means
+        retry/retransmission pricing got more expensive)
 
 Exit codes: 0 = ok (including "no previous record yet" — the first run
 seeds the trajectory), 1 = a metric regressed more than TOLERANCE, or a
@@ -47,6 +50,14 @@ def disp_metric(rec):
     return None
 
 
+def chaos_metric(rec):
+    try:
+        v = rec["chaos"]["retained_throughput_fraction"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 def main():
     if len(sys.argv) != 3:
         print("usage: bench_trend.py <prev_dir> <fresh_dir>", file=sys.stderr)
@@ -57,6 +68,7 @@ def main():
     checks = [
         ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric),
         ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric),
+        ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric),
     ]
     for fname, label, metric in checks:
         fresh = load(os.path.join(fresh_dir, fname))
