@@ -16,11 +16,16 @@
 //! STRICTLY lower bubble time than static LB-Mini at the 4× slowdown);
 //! CI's bench smoke step fails on malformed output.
 
+use odc::balance::cost::CostModel;
+use odc::balance::dispatch::queue_busy_split;
+use odc::balance::packers::{plan_run_split, PackOpts};
+use odc::balance::SplitMode;
 use odc::comm::FaultPlan;
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use odc::report::{pct, pct_delta, Table};
 use odc::sim::run::{simulate, RunResult, SimConfig};
 use odc::util::json::Json;
+use odc::util::rng::Rng;
 
 const DEVICES: usize = 4;
 const SLOWDOWNS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
@@ -55,6 +60,44 @@ fn run_plan(balancer: Balancer, slowdown: f64, fault_plan: &str) -> RunResult {
     }
     cfg.fault_plan = FaultPlan::parse(fault_plan).expect("bench fault plan parses");
     simulate(&cfg)
+}
+
+/// SeqSplit pricing cell: a dominant-sequence minibatch — one 64k
+/// document plus short context filling exactly one minibatch — priced
+/// with and without context-parallel splitting through the SAME shared
+/// makespan kernel (`dispatch::queue_busy_split`) the timeline and the
+/// bubble estimator use. Returns (unsplit makespan s, split makespan s,
+/// reduction fraction). Fully deterministic: no wall-clock sampling.
+fn seqsplit_cell() -> (f64, f64, f64) {
+    let cost = CostModel::for_model(PaperModel::M1_5B);
+    let mut lens = vec![2_048usize; 2 * DEVICES - 1];
+    lens.push(65_536); // the dominant straggler: no whole-sequence packing can beat it
+    let makespan = |frac: f64| -> f64 {
+        let mut rng = Rng::new(7);
+        let (plans, split) = plan_run_split(
+            Balancer::Queue,
+            &lens,
+            DEVICES,
+            2,
+            65_536,
+            &cost,
+            &mut rng,
+            PackOpts::default(),
+            frac,
+            SplitMode::Zigzag,
+        );
+        plans
+            .iter()
+            .map(|p| {
+                queue_busy_split(p, &lens, &cost, &split, |flops, _| cost.seconds(flops))
+                    .into_iter()
+                    .fold(0.0, f64::max)
+            })
+            .sum()
+    };
+    let unsplit = makespan(0.0);
+    let with_split = makespan(0.5);
+    (unsplit, with_split, 1.0 - with_split / unsplit)
 }
 
 fn main() {
@@ -109,6 +152,16 @@ fn main() {
         pct(retained)
     );
 
+    // SeqSplit: the dominant-corpus cell — the fraction of the
+    // straggler-pinned makespan that context-parallel splitting shears
+    // off. Trend-tracked and held to an absolute 0.15 floor.
+    let (unsplit_ms, split_ms, reduction) = seqsplit_cell();
+    println!(
+        "\nseqsplit dominant-corpus cell (frac=0.5, zigzag, {DEVICES} devices): \
+         unsplit makespan {unsplit_ms:.3}s, split {split_ms:.3}s, reduction {}",
+        pct(reduction)
+    );
+
     let json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("measured", Json::Bool(true)),
@@ -137,6 +190,17 @@ fn main() {
                 ("clean_samples_per_sec_per_device", Json::num(clean.samples_per_sec_per_device)),
                 ("chaos_samples_per_sec_per_device", Json::num(chaos.samples_per_sec_per_device)),
                 ("retained_throughput_fraction", Json::num(retained)),
+            ]),
+        ),
+        (
+            "seqsplit",
+            Json::obj(vec![
+                ("frac", Json::num(0.5)),
+                ("mode", Json::str("zigzag")),
+                ("devices", Json::num(DEVICES as f64)),
+                ("unsplit_makespan_s", Json::num(unsplit_ms)),
+                ("split_makespan_s", Json::num(split_ms)),
+                ("makespan_reduction_fraction", Json::num(reduction)),
             ]),
         ),
         (

@@ -11,8 +11,9 @@
 //! * **ODC**: devices only sync at the minibatch end: T = max_d Σ_m c(m, d).
 
 use super::cost::CostModel;
-use super::dispatch::{lpt_order, pull_schedule};
+use super::dispatch::{micro_flops_split, queue_busy_split};
 use super::packers::Plan;
+use super::split::SplitMap;
 use crate::config::CommScheme;
 
 #[derive(Clone, Debug)]
@@ -74,28 +75,42 @@ pub fn estimate_bubble_dispatch(
     speeds: &[f64],
     queue: bool,
 ) -> BubbleReport {
-    if speeds.is_empty() && !queue {
+    let empty = SplitMap::empty(lens.len());
+    estimate_bubble_dispatch_split(plan, lens, cost, scheme, speeds, queue, &empty)
+}
+
+/// `estimate_bubble_dispatch` made split-aware: chunk virtual samples
+/// (ids ≥ `split.base()`) are priced by [`CostModel::chunk_cost`]
+/// through the one shared makespan kernel
+/// ([`queue_busy_split`] — also the simulator's queue path), so the CLI
+/// bubble line and the timeline's dispatch-wait line agree under
+/// splitting by construction. With an empty map this is bit-identical
+/// to `estimate_bubble_dispatch`.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_bubble_dispatch_split(
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    scheme: CommScheme,
+    speeds: &[f64],
+    queue: bool,
+    split: &SplitMap,
+) -> BubbleReport {
+    if speeds.is_empty() && !queue && split.is_empty() {
         return estimate_bubble(plan, lens, cost, scheme);
     }
     let d = plan.devices();
     let inv = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
     let micro_cost = |dev: usize, m: usize| -> f64 {
         match plan.micro[dev].get(m) {
-            Some(mb) if !mb.is_empty() => {
-                let ls: Vec<usize> = mb.iter().map(|&i| lens[i]).collect();
-                cost.micro_cost(&ls)
-            }
+            Some(mb) if !mb.is_empty() => micro_flops_split(mb, lens, cost, split),
             _ => 0.0,
         }
     };
 
     let busy: Vec<f64> = if queue {
         debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
-        let order = lpt_order(plan, lens, cost);
-        pull_schedule(order.len(), d, |i, dev| {
-            let (od, om) = order[i];
-            micro_cost(od, om) * inv(dev)
-        })
+        queue_busy_split(plan, lens, cost, split, |flops, dev| flops * inv(dev))
     } else {
         (0..d)
             .map(|dev| (0..plan.micro[dev].len()).map(|m| micro_cost(dev, m)).sum::<f64>() * inv(dev))

@@ -47,6 +47,20 @@ impl CostModel {
         self.linear * s + self.quad * s * s
     }
 
+    /// Compute cost of tokens `[start, end)` of a sequence run as a
+    /// context-parallel chunk: linear work for the chunk's own tokens
+    /// plus causal attention against the full prefix (each query at
+    /// absolute position `p` attends to `p` keys, so the quadratic term
+    /// integrates to `end² − start²`). Chunk costs telescope exactly —
+    /// for any partition of `[0, s)`,
+    /// `Σ chunk_cost(aᵢ, aᵢ₊₁) == sample_cost(s)` — which is what lets
+    /// the split planner conserve total work while spreading it.
+    #[inline]
+    pub fn chunk_cost(&self, start: usize, end: usize) -> f64 {
+        let (a, b) = (start as f64, end as f64);
+        self.linear * (b - a) + self.quad * (b * b - a * a)
+    }
+
     /// Cost of a packed microbatch given member lengths.
     pub fn micro_cost(&self, lens: &[usize]) -> f64 {
         self.micro_overhead + lens.iter().map(|&l| self.sample_cost(l)).sum::<f64>()
@@ -98,6 +112,26 @@ mod tests {
         let lens = [100usize, 200, 300];
         let want: f64 = lens.iter().map(|&l| c.sample_cost(l)).sum::<f64>() + c.micro_overhead;
         assert!((c.micro_cost(&lens) - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn chunk_costs_telescope_to_sample_cost() {
+        let c = CostModel::for_model(PaperModel::M7B);
+        let s = 10_000usize;
+        for cuts in [vec![0, s], vec![0, 1, s], vec![0, 2500, 5000, 7500, s]] {
+            let total: f64 = cuts.windows(2).map(|w| c.chunk_cost(w[0], w[1])).sum();
+            let rel = (total - c.sample_cost(s)).abs() / c.sample_cost(s);
+            assert!(rel < 1e-12, "partition {cuts:?}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn later_chunks_cost_more_at_equal_tokens() {
+        // causal attention: the same token span costs more deeper into
+        // the sequence (longer prefix), which is why zigzag boundaries
+        // front-load tokens
+        let c = CostModel::for_model(PaperModel::M1_5B);
+        assert!(c.chunk_cost(32_768, 65_536) > c.chunk_cost(0, 32_768));
     }
 
     #[test]

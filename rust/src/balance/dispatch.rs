@@ -44,6 +44,7 @@
 
 use super::cost::CostModel;
 use super::packers::Plan;
+use super::split::SplitMap;
 use crate::config::{Balancer, CommScheme};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -155,13 +156,25 @@ impl Dispatcher for StaticDispatch {
 /// sorted by descending predicted cost, ties broken by flattened
 /// position — a pure function of (plan, lens, cost).
 pub fn lpt_order(plan: &Plan, lens: &[usize], cost: &CostModel) -> Vec<(usize, usize)> {
+    lpt_order_split(plan, lens, cost, &SplitMap::empty(lens.len()))
+}
+
+/// [`lpt_order`] under SeqSplit: chunk virtual ids are priced by their
+/// causal-prefix-aware [`CostModel::chunk_cost`] through the
+/// [`SplitMap`] (an empty map reproduces `lpt_order` bit for bit).
+pub fn lpt_order_split(
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    split: &SplitMap,
+) -> Vec<(usize, usize)> {
     let mut order: Vec<(f64, usize, usize)> = Vec::new();
     for (d, row) in plan.micro.iter().enumerate() {
         for (m, micro) in row.iter().enumerate() {
             if micro.is_empty() {
                 continue;
             }
-            let c: f64 = micro.iter().map(|&i| cost.sample_cost(lens[i])).sum();
+            let c: f64 = micro.iter().map(|&i| split.cost_of(i, lens, cost)).sum();
             order.push((c, d, m));
         }
     }
@@ -171,6 +184,37 @@ pub fn lpt_order(plan: &Plan, lens: &[usize], cost: &CostModel) -> Vec<(usize, u
     // must yield a deterministic order, never a panic mid-dispatch.
     order.sort_by(|a, b| b.0.total_cmp(&a.0).then_with(|| (a.1, a.2).cmp(&(b.1, b.2))));
     order.into_iter().map(|(_, d, m)| (d, m)).collect()
+}
+
+/// Split-aware microbatch FLOP cost: `micro_overhead` plus each
+/// member's chunk-true cost — identical to [`CostModel::micro_cost`]
+/// when no member is a chunk.
+pub fn micro_flops_split(micro: &[usize], lens: &[usize], cost: &CostModel, split: &SplitMap) -> f64 {
+    cost.micro_overhead + micro.iter().map(|&i| split.cost_of(i, lens, cost)).sum::<f64>()
+}
+
+/// THE split-aware work-queue makespan kernel, shared by
+/// [`super::bubble::estimate_bubble_dispatch_split`] and the timeline
+/// simulator's queue path so the two can never drift (the same seam
+/// [`pull_schedule`] provides for the pull dynamics): the plan's
+/// non-empty micros in split-aware LPT order, replayed through
+/// [`pull_schedule`], each priced by `slot(flops, device)` — the bubble
+/// estimator passes FLOP-equivalents straight through, the timeline
+/// converts to seconds and applies the comm floor. Returns per-device
+/// busy totals in `slot`'s units.
+pub fn queue_busy_split(
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    split: &SplitMap,
+    mut slot: impl FnMut(f64, usize) -> f64,
+) -> Vec<f64> {
+    let order = lpt_order_split(plan, lens, cost, split);
+    let flops: Vec<f64> = order
+        .iter()
+        .map(|&(d, m)| micro_flops_split(&plan.micro[d][m], lens, cost, split))
+        .collect();
+    pull_schedule(order.len(), plan.devices(), |i, dev| slot(flops[i], dev))
 }
 
 /// Work-stealing dispatch: one shared LPT-ordered pool of the plan's
@@ -184,8 +228,16 @@ pub struct WorkQueue {
 
 impl WorkQueue {
     pub fn new(plan: &Plan, lens: &[usize], cost: &CostModel) -> Self {
+        WorkQueue::new_split(plan, lens, cost, &SplitMap::empty(lens.len()))
+    }
+
+    /// [`WorkQueue::new`] under SeqSplit: the LPT pool prices chunk
+    /// virtual ids through the [`SplitMap`], so a heavy late chunk is
+    /// pulled as early as its true prefix-aware cost warrants. Ids stay
+    /// canonical either way — the fold never sees the difference.
+    pub fn new_split(plan: &Plan, lens: &[usize], cost: &CostModel, split: &SplitMap) -> Self {
         let rows = canonical_rows(plan);
-        let pool = lpt_order(plan, lens, cost)
+        let pool = lpt_order_split(plan, lens, cost, split)
             .into_iter()
             .map(|(d, m)| rows[d][m].clone())
             .collect();
@@ -366,10 +418,24 @@ pub fn make_dispatcher(
     lens: &[usize],
     cost: &CostModel,
 ) -> Arc<dyn Dispatcher> {
+    make_dispatcher_split(balancer, scheme, plan, lens, cost, &SplitMap::empty(lens.len()))
+}
+
+/// [`make_dispatcher`] under SeqSplit: the work queue prices chunk ids
+/// through the [`SplitMap`]; static replay is placement-fixed and needs
+/// no costs, so only the queue path differs.
+pub fn make_dispatcher_split(
+    balancer: Balancer,
+    scheme: CommScheme,
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    split: &SplitMap,
+) -> Arc<dyn Dispatcher> {
     match balancer {
         Balancer::Queue => {
             debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
-            Arc::new(WorkQueue::new(plan, lens, cost))
+            Arc::new(WorkQueue::new_split(plan, lens, cost, split))
         }
         _ => Arc::new(StaticDispatch::new(plan, scheme == CommScheme::Collective)),
     }
@@ -380,6 +446,7 @@ pub fn make_dispatcher(
 /// dispatcher is wrapped in [`ElasticDispatch`] so their work is
 /// orphaned and re-pulled by survivors; otherwise the plain dispatcher
 /// is returned untouched (zero overhead for static membership).
+#[allow(clippy::too_many_arguments)]
 pub fn make_elastic_dispatcher(
     balancer: Balancer,
     scheme: CommScheme,
@@ -389,7 +456,26 @@ pub fn make_elastic_dispatcher(
     crasher: &[bool],
     absent: &[bool],
 ) -> Arc<dyn Dispatcher> {
-    let inner = make_dispatcher(balancer, scheme, plan, lens, cost);
+    let empty = SplitMap::empty(lens.len());
+    make_elastic_dispatcher_split(balancer, scheme, plan, lens, cost, crasher, absent, &empty)
+}
+
+/// [`make_elastic_dispatcher`] under SeqSplit: the inner queue prices
+/// chunk ids through the [`SplitMap`] (config validation already
+/// rejected the one illegal corner — a scheduled crash on a device that
+/// could host a chunk).
+#[allow(clippy::too_many_arguments)]
+pub fn make_elastic_dispatcher_split(
+    balancer: Balancer,
+    scheme: CommScheme,
+    plan: &Plan,
+    lens: &[usize],
+    cost: &CostModel,
+    crasher: &[bool],
+    absent: &[bool],
+    split: &SplitMap,
+) -> Arc<dyn Dispatcher> {
+    let inner = make_dispatcher_split(balancer, scheme, plan, lens, cost, split);
     if crasher.iter().any(|&c| c) || absent.iter().any(|&a| a) {
         let row_based = balancer != Balancer::Queue;
         Arc::new(ElasticDispatch::new(inner, crasher.to_vec(), absent, row_based))

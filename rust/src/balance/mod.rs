@@ -45,6 +45,19 @@
 //! ([`crate::config::Balancer::legal_under`] — the trainer and the sim
 //! CLI both enforce it) rather than discovered as a deadlock at runtime.
 //!
+//! ### Legality: SeqSplit (`--seq-split`) × the rest of the matrix
+//!
+//! | knob combination            | legal? | why |
+//! |-----------------------------|--------|-----|
+//! | split × Collective          | ✗      | padded barrier slots assume whole sequences; splitting needs a barrier-free scheme |
+//! | split × ODC / Hybrid        | ✓      | chunk micros push independently; the per-sequence fold rendezvouses at the flush |
+//! | split × LB-Mini / Queue     | ✓      | chunks enter the same KK / LPT balancing as whole samples |
+//! | split × LocalSort / LB-Micro / Native | ✗ | synchronized-k packers pad to equal micro counts; singleton chunk micros break the symmetry |
+//! | split × `fail_at` on a chunk-hosting device | ✗ | the crash would strand its sequence's rendezvous partners |
+//!
+//! Enforced in the trainer, the simulator and both CLIs; see
+//! [`split`] and `docs/seqsplit.md`.
+//!
 //! ### Elastic membership
 //!
 //! The same freedom extends to the fleet itself: under an ElasticWorld
@@ -62,12 +75,17 @@ pub mod cost;
 pub mod dispatch;
 pub mod kk;
 pub mod packers;
+pub mod split;
 
-pub use bubble::{estimate_bubble, estimate_bubble_dispatch, BubbleReport};
+pub use bubble::{
+    estimate_bubble, estimate_bubble_dispatch, estimate_bubble_dispatch_split, BubbleReport,
+};
 pub use cost::CostModel;
 pub use dispatch::{
-    make_dispatcher, make_elastic_dispatcher, Dispatcher, ElasticDispatch, MicroAssignment,
-    StaticDispatch, WorkQueue,
+    make_dispatcher, make_dispatcher_split, make_elastic_dispatcher,
+    make_elastic_dispatcher_split, Dispatcher, ElasticDispatch, MicroAssignment, StaticDispatch,
+    WorkQueue,
 };
 pub use kk::karmarkar_karp;
-pub use packers::{plan_run, Plan};
+pub use packers::{plan_run, plan_run_split, Plan};
+pub use split::{ChunkInfo, SplitMap, SplitMode};

@@ -19,12 +19,13 @@
 
 use super::cost::CostModel;
 use super::kk::karmarkar_karp;
+use super::split::{split_minibatch, SplitMap, SplitMode};
 use crate::config::Balancer;
 use crate::util::rng::Rng;
 
 /// Placement of one minibatch: `micro[d][m]` = global sample indices of
 /// device d's m-th microbatch.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Plan {
     pub micro: Vec<Vec<Vec<usize>>>,
 }
@@ -193,6 +194,85 @@ pub fn plan_run_opts(
             .collect(),
         Balancer::VerlNative => plan_verl_native(&order, lens, world, minibs, max_tokens, cost, rng),
     }
+}
+
+/// [`plan_run_opts`] with SeqSplit ([`crate::balance::split`]): after
+/// the shuffle-and-chunk step, each minibatch runs the split rule —
+/// any member whose cost exceeds `seq_split` of the balanced per-device
+/// budget is replaced by chunk virtual ids — and the LB-Mini KK then
+/// balances whole samples and chunks together, chunks priced by their
+/// causal-prefix-aware [`CostModel::chunk_cost`]. Each chunk lands as a
+/// **singleton microbatch** so its gradient push carries exactly that
+/// chunk's contribution for the per-sequence rendezvous fold.
+///
+/// With `seq_split == 0` this is exactly `plan_run_opts` (identical rng
+/// usage, bit-identical plans) plus an empty [`SplitMap`]. With a
+/// positive fraction the balancer must be LbMini or Queue — the
+/// synchronized-k packers have no slot for singleton chunk micros
+/// (callers validate; this asserts).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_run_split(
+    balancer: Balancer,
+    lens: &[usize],
+    world: usize,
+    minibs: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    rng: &mut Rng,
+    opts: PackOpts,
+    seq_split: f64,
+    split_mode: SplitMode,
+) -> (Vec<Plan>, SplitMap) {
+    if seq_split <= 0.0 {
+        let plans = plan_run_opts(balancer, lens, world, minibs, max_tokens, cost, rng, opts);
+        return (plans, SplitMap::empty(lens.len()));
+    }
+    assert!(
+        matches!(balancer, Balancer::LbMini | Balancer::Queue),
+        "seq-split requires an LB-Mini or Queue balancer (got {balancer:?})"
+    );
+    let per_step = world * minibs;
+    assert!(per_step > 0);
+    let mut order: Vec<usize> = (0..lens.len()).collect();
+    rng.shuffle(&mut order);
+
+    let mut map = SplitMap::empty(lens.len());
+    let plans = chunk_minibatches(&order, per_step)
+        .into_iter()
+        .map(|mb| {
+            let mb = split_minibatch(&mb, lens, world, seq_split, split_mode, cost, &mut map);
+            plan_lb_mini_split(&mb, lens, world, max_tokens, cost, opts.lb_mini_equal_size, &map)
+        })
+        .collect();
+    (plans, map)
+}
+
+/// LB-Mini over a minibatch that may contain chunk virtual ids: the KK
+/// device partition prices every id through the [`SplitMap`] (chunks by
+/// true prefix-aware cost), whole samples then pack locally as usual
+/// while each chunk becomes its own singleton microbatch.
+fn plan_lb_mini_split(
+    mb: &[usize],
+    lens: &[usize],
+    world: usize,
+    max_tokens: usize,
+    cost: &CostModel,
+    equal_size: bool,
+    map: &SplitMap,
+) -> Plan {
+    let costs: Vec<f64> = mb.iter().map(|&i| map.cost_of(i, lens, cost)).collect();
+    let parts = karmarkar_karp(&costs, world, equal_size);
+    let micro = parts
+        .into_iter()
+        .map(|p| {
+            let (chunks, whole): (Vec<usize>, Vec<usize>) =
+                p.iter().map(|&j| mb[j]).partition(|&id| map.is_chunk(id));
+            let (mut m, _) = microbatch_partition(&whole, lens, max_tokens, cost, 1);
+            m.extend(chunks.into_iter().map(|c| vec![c]));
+            m
+        })
+        .collect();
+    Plan { micro }
 }
 
 /// LocalSort: deal samples round-robin, sort each device's set by length
@@ -511,6 +591,109 @@ mod tests {
         let (micro, _) = microbatch_partition(&[0], &lens, 10, &cost, 1);
         assert_eq!(micro.len(), 1);
         assert_eq!(micro[0], vec![0]);
+    }
+
+    #[test]
+    fn split_disabled_is_bit_identical_to_plan_run() {
+        let (lens, cost, _) = setup(64, 29);
+        let plain = plan_run(Balancer::LbMini, &lens, 4, 4, 65_536, &cost, &mut Rng::new(11));
+        let (split, map) = plan_run_split(
+            Balancer::LbMini,
+            &lens,
+            4,
+            4,
+            65_536,
+            &cost,
+            &mut Rng::new(11),
+            PackOpts::default(),
+            0.0,
+            SplitMode::Ring,
+        );
+        assert!(map.is_empty());
+        assert_eq!(plain.len(), split.len());
+        for (a, b) in plain.iter().zip(&split) {
+            assert_eq!(a.micro, b.micro);
+        }
+    }
+
+    #[test]
+    fn split_plans_cover_each_parent_exactly_once() {
+        // one dominant sequence per minibatch worth of samples
+        let mut lens = Vec::new();
+        for _ in 0..4 {
+            lens.push(60_000usize);
+            lens.extend(std::iter::repeat(2_000).take(15));
+        }
+        let cost = CostModel::for_model(PaperModel::M1_5B);
+        let (plans, map) = plan_run_split(
+            Balancer::Queue,
+            &lens,
+            4,
+            4,
+            65_536,
+            &cost,
+            &mut Rng::new(5),
+            PackOpts::default(),
+            0.5,
+            SplitMode::Zigzag,
+        );
+        assert!(!map.is_empty(), "the dominant sequences must split");
+        // every base id is either placed whole exactly once, or fully
+        // covered by its chunk set exactly once — and chunk micros are
+        // singletons
+        let mut whole = vec![0usize; lens.len()];
+        let mut chunk_tokens = vec![0usize; lens.len()];
+        let mut chunk_seen = vec![0usize; lens.len()];
+        for p in &plans {
+            for dev in &p.micro {
+                for m in dev {
+                    for &id in m {
+                        match map.get(id) {
+                            Some(c) => {
+                                assert_eq!(m.len(), 1, "chunk {id} must be a singleton micro");
+                                chunk_tokens[c.parent] += c.len;
+                                chunk_seen[c.parent] += 1;
+                            }
+                            None => whole[id] += 1,
+                        }
+                    }
+                }
+            }
+        }
+        for id in 0..lens.len() {
+            if chunk_seen[id] > 0 {
+                assert_eq!(whole[id], 0, "sample {id} placed both whole and chunked");
+                assert_eq!(chunk_tokens[id], lens[id], "chunks of {id} must cover it exactly");
+            } else {
+                assert!(whole[id] <= 1, "sample {id} duplicated");
+            }
+        }
+    }
+
+    #[test]
+    fn split_plans_deterministic_for_fixed_seed() {
+        let (lens, cost, _) = setup(64, 31);
+        let mk = || {
+            plan_run_split(
+                Balancer::LbMini,
+                &lens,
+                4,
+                4,
+                65_536,
+                &cost,
+                &mut Rng::new(77),
+                PackOpts::default(),
+                0.4,
+                SplitMode::Ring,
+            )
+        };
+        let (pa, ma) = mk();
+        let (pb, mb) = mk();
+        assert_eq!(ma, mb);
+        assert_eq!(pa.len(), pb.len());
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.micro, b.micro);
+        }
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! SeqSplit: context-parallel splitting of overlong sequences.
+//!
+//! LB-Mini and the work queue balance at whole-sequence granularity, so
+//! one overlong sequence caps minibatch makespan no matter how the
+//! dispatcher shuffles placement — the straggler IS the sequence. The
+//! split rule chunks any sequence whose predicted cost exceeds a
+//! configurable fraction of the balanced per-device budget into
+//! contiguous token spans, each of which becomes a **virtual sample**:
+//! an id `>= base` (the corpus size) that every downstream layer —
+//! packers, dispatch, bubble, timeline, trainer — resolves through the
+//! [`SplitMap`] produced alongside the plans.
+//!
+//! ## The split rule
+//!
+//! Per minibatch, with `B = Σ sample costs / world` the balanced
+//! per-device budget and `T = frac·B` the threshold: a sample with
+//! `sample_cost(len) > T` is cut into
+//! `c = min(world, ceil(cost / T))` chunks (never more chunks than
+//! devices — a chunk per device already removes the straggler, and more
+//! would only add rendezvous traffic). Chunk boundaries depend on the
+//! mode:
+//!
+//! * [`SplitMode::Ring`] — equal **token** spans, the classic ring
+//!   attention slicing. Simple, but under causal attention later chunks
+//!   carry more work (longer prefix).
+//! * [`SplitMode::Zigzag`] — equal **cost** spans: boundaries solve the
+//!   quadratic `CostModel::chunk_cost` so every chunk prices the same,
+//!   the load-equalization goal of zigzag sharding achieved with
+//!   contiguous spans (front chunks get more tokens, back chunks
+//!   fewer).
+//!
+//! Chunk costs telescope exactly to the parent's cost
+//! ([`CostModel::chunk_cost`]), so splitting conserves total work; it
+//! only redistributes it. Each chunk is packed as a **singleton
+//! microbatch** — never co-packed with other samples — so its gradient
+//! push carries exactly that chunk's contribution and the per-sequence
+//! rendezvous fold in the comm daemons ([`crate::comm`]) can
+//! reconstitute the parent's gradient deterministically.
+//!
+//! ## Legality
+//!
+//! Splitting needs the barrier-free schemes: Collective's padded
+//! barrier slots assume whole sequences (every rank walks the same
+//! per-layer barrier count), so `--seq-split` is rejected under it at
+//! config validation, exactly like LB-Mini and Queue are. It also
+//! requires an LB-Mini-family balancer (LbMini or Queue): the
+//! synchronized-k packers pad to equal microbatch counts and have no
+//! slot for singleton chunk micros.
+
+use super::cost::CostModel;
+use std::fmt;
+
+/// Chunk boundary rule. See the module docs for the trade-off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Equal token spans (ring attention slicing).
+    Ring,
+    /// Equal cost spans (zigzag-style load equalization, contiguous).
+    Zigzag,
+}
+
+impl SplitMode {
+    pub fn parse(s: &str) -> Option<SplitMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(SplitMode::Ring),
+            "zigzag" => Some(SplitMode::Zigzag),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for SplitMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SplitMode::Ring => write!(f, "ring"),
+            SplitMode::Zigzag => write!(f, "zigzag"),
+        }
+    }
+}
+
+/// One chunk of a split sequence: tokens `[start, start+len)` of sample
+/// `parent`, chunk `index` of `count`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkInfo {
+    /// Base sample id this chunk was cut from.
+    pub parent: usize,
+    /// Position of this chunk within the parent (0-based).
+    pub index: usize,
+    /// Total chunks the parent was cut into.
+    pub count: usize,
+    /// Token offset of the chunk within the parent.
+    pub start: usize,
+    /// Tokens in the chunk.
+    pub len: usize,
+}
+
+/// The split table produced with a plan: virtual sample ids `>= base`
+/// map to chunks; ids `< base` are ordinary whole samples. Every layer
+/// that prices or materializes samples resolves ids through this map,
+/// so the `Plan`/dispatch/fold machinery needs no new id space.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SplitMap {
+    base: usize,
+    chunks: Vec<ChunkInfo>,
+}
+
+impl SplitMap {
+    /// An empty map over a corpus of `base` samples (no splits).
+    pub fn empty(base: usize) -> SplitMap {
+        SplitMap { base, chunks: Vec::new() }
+    }
+
+    /// First virtual id (== the corpus size the map was built over).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Total chunks across all split parents.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Is `id` a chunk virtual id?
+    #[inline]
+    pub fn is_chunk(&self, id: usize) -> bool {
+        id >= self.base
+    }
+
+    /// The chunk behind virtual id `id` (panics on a base id).
+    #[inline]
+    pub fn chunk(&self, id: usize) -> &ChunkInfo {
+        &self.chunks[id - self.base]
+    }
+
+    pub fn get(&self, id: usize) -> Option<&ChunkInfo> {
+        if self.is_chunk(id) {
+            self.chunks.get(id - self.base)
+        } else {
+            None
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ChunkInfo> {
+        self.chunks.iter()
+    }
+
+    /// Token count of `id`: the chunk's span, or `lens[id]` for a whole
+    /// sample.
+    #[inline]
+    pub fn len_of(&self, id: usize, lens: &[usize]) -> usize {
+        match self.get(id) {
+            Some(c) => c.len,
+            None => lens[id],
+        }
+    }
+
+    /// Predicted compute cost of `id`: causal-prefix-aware
+    /// [`CostModel::chunk_cost`] for a chunk, `sample_cost` for a whole
+    /// sample. Identical to `sample_cost(lens[id])` when the map is
+    /// empty — the split-disabled paths stay bit-identical.
+    #[inline]
+    pub fn cost_of(&self, id: usize, lens: &[usize], cost: &CostModel) -> f64 {
+        match self.get(id) {
+            Some(c) => cost.chunk_cost(c.start, c.start + c.len),
+            None => cost.sample_cost(lens[id]),
+        }
+    }
+
+    /// Register the chunks of one freshly split parent and return their
+    /// virtual ids, in chunk-index order.
+    pub fn push_parent(&mut self, chunks: Vec<ChunkInfo>) -> Vec<usize> {
+        let first = self.base + self.chunks.len();
+        let ids = (first..first + chunks.len()).collect();
+        self.chunks.extend(chunks);
+        ids
+    }
+}
+
+/// Cut a sequence of `len` tokens into `count` contiguous chunks under
+/// `mode`. Boundaries are strictly increasing (every chunk gets at
+/// least one token); callers clamp `count <= len`.
+pub fn chunk_boundaries(len: usize, count: usize, mode: SplitMode, cost: &CostModel) -> Vec<usize> {
+    debug_assert!(count >= 1 && count <= len);
+    let mut cuts = Vec::with_capacity(count + 1);
+    cuts.push(0usize);
+    for i in 1..count {
+        let raw = match mode {
+            // equal token spans
+            SplitMode::Ring => (i as f64 * len as f64 / count as f64).round() as usize,
+            // equal cost spans: cumulative cost to position x is
+            // linear·x + quad·x²; invert it at i/count of the total
+            SplitMode::Zigzag => {
+                let target = cost.sample_cost(len) * i as f64 / count as f64;
+                invert_cumulative_cost(target, cost).round() as usize
+            }
+        };
+        // monotone clamp: leave room for the remaining chunks
+        let lo = cuts[i - 1] + 1;
+        let hi = len - (count - i);
+        cuts.push(raw.clamp(lo, hi));
+    }
+    cuts.push(len);
+    cuts
+}
+
+/// Solve `quad·x² + linear·x = target` for x ≥ 0.
+fn invert_cumulative_cost(target: f64, cost: &CostModel) -> f64 {
+    if cost.quad <= 0.0 {
+        return target / cost.linear;
+    }
+    let (a, b) = (cost.quad, cost.linear);
+    (-b + (b * b + 4.0 * a * target).sqrt()) / (2.0 * a)
+}
+
+/// Apply the split rule to one minibatch: any member whose cost exceeds
+/// `frac` of the balanced per-device budget is replaced by its chunks'
+/// virtual ids (registered in `map`). Returns the minibatch with split
+/// parents substituted in place — order preserved, chunks in index
+/// order — so the downstream packers see one flat id list.
+pub fn split_minibatch(
+    mb: &[usize],
+    lens: &[usize],
+    world: usize,
+    frac: f64,
+    mode: SplitMode,
+    cost: &CostModel,
+    map: &mut SplitMap,
+) -> Vec<usize> {
+    debug_assert!(frac > 0.0);
+    let total: f64 = mb.iter().map(|&i| cost.sample_cost(lens[i])).sum();
+    let threshold = frac * total / world as f64;
+    let mut out = Vec::with_capacity(mb.len());
+    for &id in mb {
+        let c = cost.sample_cost(lens[id]);
+        if c <= threshold || lens[id] < 2 {
+            out.push(id);
+            continue;
+        }
+        let count = ((c / threshold).ceil() as usize).clamp(2, world).min(lens[id]);
+        if count < 2 {
+            out.push(id);
+            continue;
+        }
+        let cuts = chunk_boundaries(lens[id], count, mode, cost);
+        let chunks = cuts
+            .windows(2)
+            .enumerate()
+            .map(|(index, w)| ChunkInfo { parent: id, index, count, start: w[0], len: w[1] - w[0] })
+            .collect();
+        out.extend(map.push_parent(chunks));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PaperModel;
+
+    fn cm() -> CostModel {
+        CostModel::for_model(PaperModel::M1_5B)
+    }
+
+    #[test]
+    fn ring_boundaries_equal_tokens() {
+        let cuts = chunk_boundaries(1000, 4, SplitMode::Ring, &cm());
+        assert_eq!(cuts, vec![0, 250, 500, 750, 1000]);
+    }
+
+    #[test]
+    fn zigzag_boundaries_equalize_cost() {
+        let c = cm();
+        let len = 65_536;
+        let cuts = chunk_boundaries(len, 4, SplitMode::Zigzag, &c);
+        assert_eq!(cuts[0], 0);
+        assert_eq!(*cuts.last().unwrap(), len);
+        let costs: Vec<f64> = cuts.windows(2).map(|w| c.chunk_cost(w[0], w[1])).collect();
+        let (lo, hi) = (costs.iter().cloned().fold(f64::MAX, f64::min), costs.iter().cloned().fold(0.0, f64::max));
+        assert!(hi / lo < 1.001, "zigzag chunk costs must be near-equal: {costs:?}");
+        // and the front chunk holds more tokens than the back chunk
+        assert!(cuts[1] - cuts[0] > cuts[4] - cuts[3]);
+    }
+
+    #[test]
+    fn boundaries_cover_without_gaps_even_tiny() {
+        let c = cm();
+        for len in [2usize, 3, 5, 7, 100] {
+            for count in 1..=len.min(6) {
+                for mode in [SplitMode::Ring, SplitMode::Zigzag] {
+                    let cuts = chunk_boundaries(len, count, mode, &c);
+                    assert_eq!(cuts.len(), count + 1);
+                    assert_eq!(cuts[0], 0);
+                    assert_eq!(*cuts.last().unwrap(), len);
+                    assert!(cuts.windows(2).all(|w| w[1] > w[0]), "{len}/{count}/{mode}: {cuts:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_split_when_under_budget() {
+        let lens = vec![100usize; 8];
+        let mut map = SplitMap::empty(lens.len());
+        let mb: Vec<usize> = (0..8).collect();
+        let out = split_minibatch(&mb, &lens, 4, 0.5, SplitMode::Ring, &cm(), &mut map);
+        assert_eq!(out, mb);
+        assert!(map.is_empty());
+    }
+
+    #[test]
+    fn dominant_sequence_splits_conserving_tokens_and_cost() {
+        let c = cm();
+        let mut lens = vec![2048usize; 7];
+        lens.push(65_536); // one dominant straggler
+        let mut map = SplitMap::empty(lens.len());
+        let mb: Vec<usize> = (0..8).collect();
+        let out = split_minibatch(&mb, &lens, 4, 0.5, SplitMode::Zigzag, &c, &mut map);
+        assert!(!map.is_empty());
+        assert!(out.iter().all(|&i| i != 7), "the split parent must leave the minibatch");
+        let chunk_ids: Vec<usize> = out.iter().copied().filter(|&i| map.is_chunk(i)).collect();
+        let toks: usize = chunk_ids.iter().map(|&i| map.len_of(i, &lens)).sum();
+        assert_eq!(toks, 65_536, "chunks must cover the parent exactly");
+        let cost_sum: f64 = chunk_ids.iter().map(|&i| map.cost_of(i, &lens, &c)).sum();
+        let rel = (cost_sum - c.sample_cost(65_536)).abs() / c.sample_cost(65_536);
+        assert!(rel < 1e-12, "split must conserve cost: rel {rel}");
+        // chunks are contiguous and in order
+        let mut pos = 0usize;
+        for &i in &chunk_ids {
+            let ch = map.chunk(i);
+            assert_eq!(ch.parent, 7);
+            assert_eq!(ch.start, pos);
+            pos += ch.len;
+        }
+    }
+
+    #[test]
+    fn chunk_count_capped_at_world() {
+        let c = cm();
+        let lens = vec![65_536usize]; // one sample: budget = cost/world
+        let mut map = SplitMap::empty(1);
+        split_minibatch(&[0], &lens, 4, 0.1, SplitMode::Ring, &c, &mut map);
+        assert_eq!(map.n_chunks(), 4, "never more chunks than devices");
+    }
+
+    #[test]
+    fn map_resolves_base_ids_unchanged() {
+        let lens = vec![10usize, 20];
+        let map = SplitMap::empty(2);
+        let c = cm();
+        assert_eq!(map.len_of(1, &lens), 20);
+        assert_eq!(map.cost_of(1, &lens, &c), c.sample_cost(20));
+        assert!(!map.is_chunk(1));
+    }
+}

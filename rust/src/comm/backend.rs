@@ -97,6 +97,20 @@ impl GatherPolicy {
     }
 }
 
+/// Key space for SeqSplit's per-sequence fold: a reconstituted sequence
+/// gradient enters the ordinary micro fold under `SEQ_KEY_BASE + seq`,
+/// far above any real microbatch id, so folded sequences sort after all
+/// regular micros deterministically. A minibatch has at most thousands
+/// of micros and sequence ids are corpus indices — both fit with >30
+/// bits to spare.
+pub const SEQ_KEY_BASE: u64 = 1 << 62;
+
+/// The synthetic micro-fold key for split sequence `seq`.
+#[inline]
+pub fn seq_micro_key(seq: u64) -> u64 {
+    SEQ_KEY_BASE + seq
+}
+
 pub trait CommBackend: Send + Sync {
     fn world(&self) -> usize;
 
@@ -131,6 +145,37 @@ pub trait CommBackend: Send + Sync {
     /// work-stealing dispatch semantically free). `Collective` folds
     /// synchronously inside its barriers and ignores the id.
     fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, micro: u64);
+
+    /// SeqSplit's per-sequence rendezvous: contribute the gradient of ONE
+    /// chunk of a split sequence (`chunk` of `count`, cut from parent
+    /// sample `seq`). The one-sided backends buffer chunk pieces
+    /// separately and, at the minibatch flush, partially reduce each
+    /// sequence's chunks in chunk-index order FIRST, then feed the
+    /// reconstituted per-sequence gradient into the ordinary micro fold
+    /// under the synthetic key `SEQ_KEY_BASE + seq` — id-keyed exactly
+    /// like [`CommBackend::reduce_grad`], so any dispatch interleaving
+    /// of the chunks stays bit-deterministic. `weight` is the chunk's
+    /// aggregation weight within the sequence — `1.0` from the trainer
+    /// (chunk losses are token sums, and the global `1/ntok`
+    /// normalization happens at the optimizer), arbitrary in tests.
+    ///
+    /// Default: delegate each chunk straight into the micro fold under
+    /// its own synthetic key — linear, deterministic, and sufficient for
+    /// backends with synchronous folds; the one-sided backends override
+    /// this with the true buffered rendezvous.
+    fn reduce_grad_seq(
+        &self,
+        dev: usize,
+        layer: usize,
+        grad: &[f32],
+        weight: f32,
+        seq: u64,
+        chunk: u32,
+        _count: u32,
+    ) {
+        // (seq, chunk) packed so no two chunks of any sequences collide
+        self.reduce_grad(dev, layer, grad, weight, seq_micro_key(seq << 16 | chunk as u64));
+    }
 
     /// Blocks until every device's gradients for this minibatch are fully
     /// accumulated (ODC: until all clients pushed + daemon drained;

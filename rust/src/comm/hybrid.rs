@@ -90,7 +90,7 @@
 //! (asserted under adversarial skew in `comm_stress`).
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
-use super::backend::{CommBackend, GatherPolicy, ParamStore};
+use super::backend::{seq_micro_key, CommBackend, GatherPolicy, ParamStore};
 use super::membership::{Membership, MembershipBarrier};
 use super::shared::SharedBuf;
 use super::topology::GroupMap;
@@ -121,6 +121,17 @@ enum Msg {
     /// pieces must be discarded — the dispatch layer re-runs the whole
     /// microbatch on a survivor (all-or-nothing per microbatch).
     IntraRetract { micro: u64, client: usize },
+    /// One super-shard piece of a SEQUENCE CHUNK (SeqSplit): chunk
+    /// `chunk` of `count`, cut from parent sample `seq`. Buffered apart
+    /// from the micro pieces; the intra fold partially reduces each
+    /// sequence's chunks in chunk-index order FIRST and feeds the result
+    /// into the id-keyed fold under `seq_micro_key(seq)`. Chunks whose
+    /// devices sit in DIFFERENT groups meet at the cross level instead
+    /// — group partials sum linearly, so the total is exact either way.
+    IntraSeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<f32> },
+    /// SeqSplit arm of the crash-out compensation: discard the buffered
+    /// piece of chunk (`seq`, `chunk`) from group-local `client`.
+    IntraSeqRetract { seq: u64, chunk: u32, client: usize },
     /// The colocated worker asks for the group-partial super-shards; the
     /// daemon replies once all `group_size` members are done.
     IntraFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
@@ -143,14 +154,17 @@ impl WireMsg for Msg {
     /// that folds them (and a retract always lands after the piece it
     /// cancels — per-link FIFO).
     fn is_barrier(&self) -> bool {
-        !matches!(self, Msg::IntraAccum { .. } | Msg::CrossAccum { .. })
+        !matches!(
+            self,
+            Msg::IntraAccum { .. } | Msg::IntraSeqAccum { .. } | Msg::CrossAccum { .. }
+        )
     }
 
     fn payload_bytes(&self) -> usize {
         match self {
-            Msg::IntraAccum { data, .. } | Msg::CrossAccum { data, .. } => {
-                data.len() * std::mem::size_of::<f32>()
-            }
+            Msg::IntraAccum { data, .. }
+            | Msg::IntraSeqAccum { data, .. }
+            | Msg::CrossAccum { data, .. } => data.len() * std::mem::size_of::<f32>(),
             _ => 0,
         }
     }
@@ -162,6 +176,56 @@ struct IntraPiece {
     client: usize,
     weight: f32,
     data: Vec<f32>,
+}
+
+/// One buffered intra-level SEQUENCE-CHUNK piece (SeqSplit) awaiting its
+/// per-sequence rendezvous at the intra fold.
+struct SeqPiece {
+    seq: u64,
+    chunk: u32,
+    count: u32,
+    client: usize,
+    weight: f32,
+    data: Vec<f32>,
+}
+
+/// SeqSplit's intra-level per-sequence rendezvous, mirroring the ODC
+/// fold exactly: sort by (seq, chunk, client), fold each sequence's
+/// chunks into its first chunk's payload (scaled in place), release the
+/// rest, and hand each reconstituted sequence back as an ordinary
+/// [`IntraPiece`] keyed `seq_micro_key(seq)` with weight 1. Chunks of a
+/// sequence that ran in another group are folded by THAT group's
+/// daemons; the partials meet at the cross level, where group sums add
+/// linearly — exact as a sum, and bit-identical whenever all chunks
+/// share a group (in particular the single-group oracle case).
+fn fold_seq_layer(seqs: &mut Vec<SeqPiece>, arenas: &[Arc<PayloadArena>]) -> Vec<IntraPiece> {
+    seqs.sort_by_key(|p| (p.seq, p.chunk, p.client));
+    let mut out: Vec<IntraPiece> = Vec::new();
+    for p in seqs.drain(..) {
+        match out.last_mut() {
+            Some(last) if last.micro == seq_micro_key(p.seq) => {
+                debug_assert_eq!(last.data.len(), p.data.len());
+                for (x, &g) in last.data.iter_mut().zip(&p.data) {
+                    *x += p.weight * g;
+                }
+                arenas[p.client].release(p.data);
+            }
+            _ => {
+                debug_assert!(p.count >= 2);
+                let mut data = p.data;
+                for x in data.iter_mut() {
+                    *x *= p.weight;
+                }
+                out.push(IntraPiece {
+                    micro: seq_micro_key(p.seq),
+                    client: p.client,
+                    weight: 1.0,
+                    data,
+                });
+            }
+        }
+    }
+    out
 }
 
 /// Per-daemon mutable state: buffered payloads of the minibatch in
@@ -182,6 +246,9 @@ struct DaemonState {
     shard_lens: Vec<usize>,
     /// `[layer]` → buffered pieces, folded id-keyed at the flush.
     pending_intra: Vec<Vec<IntraPiece>>,
+    /// `[layer]` → buffered SeqSplit chunk pieces, rendezvoused
+    /// per-sequence at the intra fold before the id-keyed fold runs.
+    pending_seq: Vec<Vec<SeqPiece>>,
     intra_done: usize,
     intra_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
     /// `[layer][group]` → exactly one partial per minibatch.
@@ -207,6 +274,7 @@ impl DaemonState {
             group_start,
             intra_mb: 0,
             pending_intra: (0..n_layers).map(|_| Vec::new()).collect(),
+            pending_seq: (0..n_layers).map(|_| Vec::new()).collect(),
             pending_cross: (0..n_layers).map(|_| vec![None; n_groups]).collect(),
             super_lens,
             shard_lens,
@@ -235,6 +303,10 @@ impl DaemonState {
     fn fold_intra(&mut self, arenas: &[Arc<PayloadArena>]) -> Vec<Vec<f32>> {
         let mut out = Vec::with_capacity(self.super_lens.len());
         for (layer, &len) in self.super_lens.iter().enumerate() {
+            // SeqSplit rendezvous first: reconstituted sequence partials
+            // join the id-keyed fold under their synthetic keys.
+            let folded = fold_seq_layer(&mut self.pending_seq[layer], arenas);
+            self.pending_intra[layer].extend(folded);
             let pieces = &mut self.pending_intra[layer];
             pieces.sort_by_key(|p| (p.micro, p.client));
             let mut acc = vec![0.0f32; len];
@@ -306,6 +378,17 @@ fn daemon_loop(
                     st.intra_done += 1;
                 }
             }
+            Msg::IntraSeqAccum { layer, seq, chunk, count, weight, client, data } => {
+                // idempotent like IntraAccum: (seq, chunk, client) unique
+                if st.pending_seq[layer]
+                    .iter()
+                    .any(|p| p.seq == seq && p.chunk == chunk && p.client == client)
+                {
+                    intra_arenas[client].release(data);
+                } else {
+                    st.pending_seq[layer].push(SeqPiece { seq, chunk, count, client, weight, data });
+                }
+            }
             Msg::IntraRetract { micro, client } => {
                 for layer in 0..st.pending_intra.len() {
                     if let Some(i) = st.pending_intra[layer]
@@ -313,6 +396,17 @@ fn daemon_loop(
                         .position(|p| p.micro == micro && p.client == client)
                     {
                         let p = st.pending_intra[layer].swap_remove(i);
+                        intra_arenas[p.client].release(p.data);
+                    }
+                }
+            }
+            Msg::IntraSeqRetract { seq, chunk, client } => {
+                for layer in 0..st.pending_seq.len() {
+                    if let Some(i) = st.pending_seq[layer]
+                        .iter()
+                        .position(|p| p.seq == seq && p.chunk == chunk && p.client == client)
+                    {
+                        let p = st.pending_seq[layer].swap_remove(i);
                         intra_arenas[p.client].release(p.data);
                     }
                 }
@@ -639,6 +733,53 @@ impl CommBackend for HybridComm {
         }
     }
 
+    fn reduce_grad_seq(
+        &self,
+        dev: usize,
+        layer: usize,
+        grad: &[f32],
+        weight: f32,
+        seq: u64,
+        chunk: u32,
+        count: u32,
+    ) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        if weight == 0.0 {
+            return;
+        }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // crashing out: push nothing more, the trainer re-runs
+        }
+        let group = self.groups.group_of(dev);
+        let me = self.groups.local_index(dev);
+        let s = p.padded_len() / self.groups.group_size;
+        let mut lost = false;
+        for j in 0..self.groups.group_size {
+            let server = self.groups.member(group, j);
+            let mut data = self.intra_arenas.arena(server, me).acquire(s);
+            data.extend_from_slice(&grad[j * s..(j + 1) * s]);
+            let msg = Msg::IntraSeqAccum { layer, seq, chunk, count, weight, client: me, data };
+            if self.transport.send(dev, server, seq_micro_key(seq), msg).is_err() {
+                lost = true;
+            }
+        }
+        if lost {
+            // all-or-nothing per chunk, mirroring `reduce_grad`
+            self.escalated[dev].store(true, Ordering::Relaxed);
+            self.transport.flush_links(dev);
+            for j in 0..self.groups.group_size {
+                let server = self.groups.member(group, j);
+                let _ = self.transport.send(
+                    dev,
+                    server,
+                    seq_micro_key(seq),
+                    Msg::IntraSeqRetract { seq, chunk, client: me },
+                );
+            }
+        }
+    }
+
     fn end_minibatch(&self, dev: usize) {
         if self.escalated[dev].load(Ordering::Relaxed) {
             return; // crashing out: the trainer reports the failure next
@@ -960,6 +1101,85 @@ mod tests {
         // all payloads back home after the final drain
         let total = comm.arena_stats();
         assert_eq!(total.resident, (world * 2 * 3 + world * 2 * 3) as u64);
+    }
+
+    /// SeqSplit chunks pushed from devices in DIFFERENT groups meet at
+    /// the cross level: each group folds its own chunk subset into a
+    /// partial keyed `seq_micro_key(seq)`, and the cross sum over group
+    /// partials reconstitutes the whole-sequence gradient exactly.
+    #[test]
+    fn seq_chunks_across_groups_sum_exactly() {
+        let world = 4;
+        let params = Arc::new(ParamStore::new(&[12], world));
+        let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    // dev 0 (group 0) and dev 2 (group 1) hold the two
+                    // chunks of sequence 0; devs 1 and 3 run nothing
+                    match dev {
+                        0 => comm.reduce_grad_seq(dev, 0, &[4.0; 12], 0.5, 0, 0, 2),
+                        2 => comm.reduce_grad_seq(dev, 0, &[8.0; 12], 0.5, 0, 1, 2),
+                        _ => {}
+                    }
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0f32; 3];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    for &v in &shard {
+                        assert_eq!(v, 6.0, "dev {dev}: 0.5*4 + 0.5*8"); // exact in f32
+                    }
+                    comm.end_step(dev);
+                });
+            }
+        });
+    }
+
+    /// Single-group seq fold is keyed by chunk INDEX, not push order:
+    /// catastrophic-cancellation values expose any ordering difference.
+    /// A whole-sample micro pushed alongside folds before the
+    /// reconstituted sequence (SEQ_KEY_BASE sorts above real ids).
+    #[test]
+    fn seq_fold_single_group_chunk_order_invariant() {
+        let run = |scrambled: bool| -> Vec<Vec<f32>> {
+            let world = 2;
+            let params = Arc::new(ParamStore::new(&[8], world));
+            let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for dev in 0..world {
+                    let comm = Arc::clone(&comm);
+                    handles.push(s.spawn(move || {
+                        if dev == 0 {
+                            // chunks 0 and 2 of sequence 5, in either order
+                            let pushes: [(u32, f32); 2] =
+                                if scrambled { [(2, -1e8), (0, 1e8)] } else { [(0, 1e8), (2, -1e8)] };
+                            for (chunk, val) in pushes {
+                                comm.reduce_grad_seq(dev, 0, &[val; 8], 1.0, 5, chunk, 3);
+                            }
+                        } else {
+                            comm.reduce_grad_seq(dev, 0, &[1.0; 8], 1.0, 5, 1, 3);
+                            comm.reduce_grad(dev, 0, &[2.0; 8], 1.0, 0); // whole sample
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 4];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                        g
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a, b, "seq fold must not depend on chunk push order");
+        // (1e8 + 1.0) + -1e8 == 0.0 in f32 only if folded in chunk order
+        for shard in &a {
+            for &v in shard {
+                assert_eq!(v, 2.0, "seq folds to 0.0, plus the whole sample's 2.0");
+            }
+        }
     }
 
     /// Multi-group runs are deterministic across repetitions: the

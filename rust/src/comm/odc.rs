@@ -56,7 +56,7 @@
 //! `comm_stress`).
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
-use super::backend::{CommBackend, GatherPolicy, ParamStore};
+use super::backend::{seq_micro_key, CommBackend, GatherPolicy, ParamStore};
 use super::membership::{Membership, MembershipBarrier};
 use super::transport::{
     FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
@@ -74,6 +74,17 @@ enum Msg {
     /// (the fold is keyed by `micro`, not arrival), then `data` returns
     /// to the (server, client) arena.
     Accum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
+    /// One gradient piece of a SEQUENCE CHUNK (SeqSplit): chunk `chunk`
+    /// of `count`, cut from parent sample `seq`, pushed by `client`.
+    /// Buffered apart from the micro pieces; at the flush each
+    /// sequence's chunks are partially reduced in chunk-index order
+    /// FIRST, and the reconstituted gradient enters the micro fold under
+    /// the synthetic key `seq_micro_key(seq)`.
+    SeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<f32> },
+    /// Discard the buffered piece of chunk (`seq`, `chunk`) from
+    /// `client`, across all layers — the SeqSplit arm of the
+    /// all-or-nothing crash-out compensation ([`Msg::Retract`]).
+    SeqRetract { seq: u64, chunk: u32, client: usize },
     /// `client` has finished every microbatch of the current minibatch.
     /// Carrying the id lets the daemon count the quorum per-client, so
     /// a stray Done from a device the membership already excludes (the
@@ -94,11 +105,13 @@ enum Msg {
 impl WireMsg for Msg {
     fn is_barrier(&self) -> bool {
         // control plane: never held in limbo, flushes limbo ahead
-        !matches!(self, Msg::Accum { .. })
+        !matches!(self, Msg::Accum { .. } | Msg::SeqAccum { .. })
     }
     fn payload_bytes(&self) -> usize {
         match self {
-            Msg::Accum { data, .. } => data.len() * std::mem::size_of::<f32>(),
+            Msg::Accum { data, .. } | Msg::SeqAccum { data, .. } => {
+                data.len() * std::mem::size_of::<f32>()
+            }
             _ => 0,
         }
     }
@@ -219,6 +232,53 @@ struct Piece {
     data: Vec<f32>,
 }
 
+/// One buffered SEQUENCE-CHUNK piece (SeqSplit) awaiting its
+/// per-sequence rendezvous at the flush.
+struct SeqPiece {
+    seq: u64,
+    chunk: u32,
+    count: u32,
+    client: usize,
+    weight: f32,
+    data: Vec<f32>,
+}
+
+/// SeqSplit's per-sequence partial reduction: sort the layer's chunk
+/// pieces by (seq, chunk, client) — chunk-index order within a
+/// sequence, a pure function of the split rule, blind to which device
+/// ran which chunk — then fold each sequence's chunks into its FIRST
+/// chunk's payload (scaled in place; the other payloads return to their
+/// pushers' arenas immediately). Each reconstituted sequence gradient
+/// becomes one ordinary [`Piece`] keyed `seq_micro_key(seq)` with
+/// weight 1 (the chunk weights already sum to the sequence's aggregation
+/// weight), so the micro fold stays the single ordering authority and
+/// the accumulator payload goes home through [`fold_layer`]'s release —
+/// arena accounting stays exact with zero new allocations.
+fn fold_seq_layer(seqs: &mut Vec<SeqPiece>, arenas: &[Arc<PayloadArena>]) -> Vec<Piece> {
+    seqs.sort_by_key(|p| (p.seq, p.chunk, p.client));
+    let mut out: Vec<Piece> = Vec::new();
+    for p in seqs.drain(..) {
+        match out.last_mut() {
+            Some(last) if last.micro == seq_micro_key(p.seq) => {
+                debug_assert_eq!(last.data.len(), p.data.len());
+                for (x, &g) in last.data.iter_mut().zip(&p.data) {
+                    *x += p.weight * g;
+                }
+                arenas[p.client].release(p.data);
+            }
+            _ => {
+                debug_assert!(p.count >= 2);
+                let mut data = p.data;
+                for x in data.iter_mut() {
+                    *x *= p.weight;
+                }
+                out.push(Piece { micro: seq_micro_key(p.seq), client: p.client, weight: 1.0, data });
+            }
+        }
+    }
+    out
+}
+
 /// Fold one layer's buffered pieces in (micro id asc, client asc) order
 /// — a pure function of the plan, blind to arrival interleaving — and
 /// release every payload to its (server, client) arena. The sort is
@@ -257,6 +317,7 @@ fn daemon_loop(
     arenas: Vec<Arc<PayloadArena>>,
 ) {
     let mut pending: Vec<Vec<Piece>> = shard_lens.iter().map(|_| Vec::new()).collect();
+    let mut pending_seq: Vec<Vec<SeqPiece>> = shard_lens.iter().map(|_| Vec::new()).collect();
     let mut done = 0usize;
     let mut mb = 0usize;
     let mut flush: Option<mpsc::Sender<Vec<Vec<f32>>>> = None;
@@ -285,10 +346,32 @@ fn daemon_loop(
                     done += 1;
                 }
             }
+            Msg::SeqAccum { layer, seq, chunk, count, weight, client, data } => {
+                // idempotent like Accum: (seq, chunk, client) is unique
+                if pending_seq[layer]
+                    .iter()
+                    .any(|p| p.seq == seq && p.chunk == chunk && p.client == client)
+                {
+                    arenas[client].release(data);
+                } else {
+                    pending_seq[layer].push(SeqPiece { seq, chunk, count, client, weight, data });
+                }
+            }
             Msg::Retract { micro, client } => {
                 for pieces in pending.iter_mut() {
                     if let Some(pos) =
                         pieces.iter().position(|p| p.micro == micro && p.client == client)
+                    {
+                        let p = pieces.swap_remove(pos);
+                        arenas[p.client].release(p.data);
+                    }
+                }
+            }
+            Msg::SeqRetract { seq, chunk, client } => {
+                for pieces in pending_seq.iter_mut() {
+                    if let Some(pos) = pieces
+                        .iter()
+                        .position(|p| p.seq == seq && p.chunk == chunk && p.client == client)
                     {
                         let p = pieces.swap_remove(pos);
                         arenas[p.client].release(p.data);
@@ -300,6 +383,13 @@ fn daemon_loop(
         }
         if done == membership.expected_done(mb) {
             if let Some(reply) = flush.take() {
+                // SeqSplit rendezvous first: reconstituted sequence
+                // gradients join the micro fold under their synthetic
+                // keys, then everything folds id-ordered as usual.
+                for (layer, seqs) in pending_seq.iter_mut().enumerate() {
+                    let folded = fold_seq_layer(seqs, &arenas);
+                    pending[layer].extend(folded);
+                }
                 let out: Vec<Vec<f32>> = pending
                     .iter_mut()
                     .zip(&shard_lens)
@@ -377,6 +467,49 @@ impl CommBackend for OdcComm {
             self.transport.flush_links(dev);
             for server in 0..self.world {
                 let _ = self.transport.send(dev, server, micro, Msg::Retract { micro, client: dev });
+            }
+        }
+    }
+
+    fn reduce_grad_seq(
+        &self,
+        dev: usize,
+        layer: usize,
+        grad: &[f32],
+        weight: f32,
+        seq: u64,
+        chunk: u32,
+        count: u32,
+    ) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        if weight == 0.0 {
+            return;
+        }
+        if self.escalated[dev].load(Ordering::Relaxed) {
+            return; // a link is dead: the device is crashing out, stop pushing
+        }
+        let mut lost = false;
+        for server in 0..self.world {
+            let r = p.shard_range(server);
+            let mut data = self.arenas.arena(server, dev).acquire(r.len());
+            data.extend_from_slice(&grad[r]);
+            let msg = Msg::SeqAccum { layer, seq, chunk, count, weight, client: dev, data };
+            if self.transport.send(dev, server, seq_micro_key(seq), msg).is_err() {
+                lost = true;
+            }
+        }
+        if lost {
+            // all-or-nothing per chunk, mirroring `reduce_grad`
+            self.escalated[dev].store(true, Ordering::Relaxed);
+            self.transport.flush_links(dev);
+            for server in 0..self.world {
+                let _ = self.transport.send(
+                    dev,
+                    server,
+                    seq_micro_key(seq),
+                    Msg::SeqRetract { seq, chunk, client: dev },
+                );
             }
         }
     }
@@ -639,5 +772,93 @@ mod tests {
         for shard in &in_order {
             assert_eq!(shard, &vec![0.0f32; 2]);
         }
+    }
+
+    /// SeqSplit rendezvous: chunk pieces fold in chunk-index order no
+    /// matter which client pushed which chunk or in what order, and the
+    /// reconstituted gradient joins the micro fold under its synthetic
+    /// key. Values chosen so a wrong fold order would change bits.
+    #[test]
+    fn seq_fold_keyed_by_chunk_index_not_push_order() {
+        let world = 2;
+        let run = |push_order: &[(usize, u32, f32)]| -> Vec<Vec<f32>> {
+            let params = Arc::new(ParamStore::new(&[4], world));
+            let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+            // one regular micro plus a 3-chunk split sequence (seq 7)
+            comm.reduce_grad(0, 0, &[2.0; 4], 1.0, 0);
+            for &(client, chunk, val) in push_order {
+                comm.reduce_grad_seq(client, 0, &[val; 4], 1.0, 7, chunk, 3);
+            }
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for dev in 0..world {
+                    let comm = Arc::clone(&comm);
+                    handles.push(s.spawn(move || {
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 2];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        comm.end_step(dev);
+                        g
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        // chunk 0 = 1e8, chunk 1 = 1.0, chunk 2 = -1e8: index-order fold
+        // gives (1e8 + 1.0) + (-1e8) == 0.0 in f32
+        let in_order = run(&[(0, 0, 1e8), (1, 1, 1.0), (0, 2, -1e8)]);
+        let scrambled = run(&[(1, 2, -1e8), (0, 1, 1.0), (1, 0, 1e8)]);
+        assert_eq!(in_order, scrambled, "chunk placement/order must not change a bit");
+        for shard in &in_order {
+            assert_eq!(shard, &vec![2.0f32; 2], "micro 2.0 + seq fold 0.0");
+        }
+    }
+
+    #[test]
+    fn seq_chunk_weights_scale_each_chunk() {
+        // weighted chunks: 0.25·4 + 0.75·8 = 7 on every element
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[4], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        comm.reduce_grad_seq(0, 0, &[4.0; 4], 0.25, 3, 0, 2);
+        comm.reduce_grad_seq(1, 0, &[8.0; 4], 0.75, 3, 1, 2);
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    comm.end_minibatch(dev);
+                    let mut g = vec![0.0f32; 2];
+                    comm.take_grad_shard(dev, 0, &mut g);
+                    comm.end_step(dev);
+                    assert_eq!(g, vec![7.0f32; 2]);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn seq_pushes_keep_arena_accounting_exact() {
+        // chunk payloads are acquired like micro payloads and every one
+        // returns home at the fold — accumulator included.
+        let world = 2;
+        let params = Arc::new(ParamStore::new(&[6], world));
+        let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+        let initial = comm.arena_stats().resident;
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    let g = vec![1.0; params_padded(&comm, 0)];
+                    comm.reduce_grad_seq(dev, 0, &g, 0.5, 11, dev as u32, 2);
+                    comm.end_minibatch(dev);
+                    let mut shard = vec![0.0; 3];
+                    comm.take_grad_shard(dev, 0, &mut shard);
+                    comm.end_step(dev);
+                });
+            }
+        });
+        let st = comm.arena_stats();
+        assert_eq!(st.acquires, (world * world) as u64);
+        assert_eq!(st.resident, initial + st.fresh_allocs, "all chunk payloads must return home");
     }
 }

@@ -40,6 +40,27 @@
 //!   rendezvous), then the cross-group shard exchange — the ONLY
 //!   cross-group synchronization outside `end_step`.
 //!
+//! Under SeqSplit (`--seq-split`, see `docs/seqsplit.md`) the minibatch
+//! flush gains a *chunk rendezvous* sub-step at the head of the fold,
+//! still strictly inside the existing phase boundaries:
+//!
+//! ```text
+//!  … microbatch phase ───────────── end_minibatch ─────────────── …
+//!     chunk pushes (reduce_grad_seq)   │ seq fold │ micro fold │
+//!     buffered per (seq, chunk,        │ chunks → │ sequences  │
+//!     client), NO extra barrier        │ sequence │ join by id │
+//! ```
+//!
+//! Each split sequence's chunk gradients are partially reduced in chunk-
+//! index order FIRST (the per-sequence fold), and the reconstituted
+//! gradient then enters the ordinary id-keyed micro fold under its
+//! synthetic key (`SEQ_KEY_BASE + seq`). Chunks may have run on any
+//! devices in any order — the rendezvous is data buffered at the daemon,
+//! not a new barrier, so the free-running property and both caching
+//! arguments above are untouched. Under Hybrid the seq fold happens at
+//! the *intra* level per group; chunks split across groups meet as group
+//! partials in the cross-level sum.
+//!
 //! Two subsystems lean on this timeline beyond plain read/write safety:
 //!
 //! * [`super::gather_cache::GatherCache`] (§6.2 parameter caching):

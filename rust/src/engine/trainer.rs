@@ -73,8 +73,11 @@
 //! exactly.
 
 use crate::balance::cost::CostModel;
-use crate::balance::dispatch::{make_dispatcher, make_elastic_dispatcher, Dispatcher, MicroAssignment};
-use crate::balance::packers::{plan_run, Plan};
+use crate::balance::dispatch::{
+    make_dispatcher_split, make_elastic_dispatcher_split, Dispatcher, MicroAssignment,
+};
+use crate::balance::packers::{plan_run_split, PackOpts, Plan};
+use crate::balance::split::{ChunkInfo, SplitMap, SplitMode};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::membership::Membership;
 use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy};
@@ -152,11 +155,30 @@ pub struct TrainerConfig {
     /// ElasticWorld path (a derived fail-stop at `step` — explicit
     /// `fail_at` cannot be combined with partitions). Noop by default.
     pub fault_plan: FaultPlan,
+    /// SeqSplit (`--seq-split`): split any sequence whose predicted cost
+    /// exceeds this fraction of the balanced per-device compute budget
+    /// into context-parallel chunks, packed and dispatched as singleton
+    /// microbatches; the one-sided backends rendezvous each sequence's
+    /// chunk gradients at the minibatch flush (see
+    /// [`CommBackend::reduce_grad_seq`] and `docs/seqsplit.md`). `0.0`
+    /// disables splitting — bit-identical to the pre-SeqSplit trainer.
+    /// Requires a barrier-free scheme (ODC/Hybrid) and an LB-Mini or
+    /// Queue balancer; a scheduled crash on a chunk-hosting device is
+    /// rejected after planning (it would strand the rendezvous).
+    pub seq_split: f64,
+    /// Chunk-boundary rule for split sequences: `Ring` = equal tokens,
+    /// `Zigzag` = equal predicted cost (the causal-attention-aware cut).
+    pub seq_split_mode: SplitMode,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
     /// the plan and vary only the communication scheme / world mapping.
     pub plan_override: Option<Vec<Plan>>,
+    /// Paired with `plan_override` when the pinned plans were packed
+    /// under SeqSplit: the [`SplitMap`] their chunk virtual ids resolve
+    /// through. `None` means the overridden plans contain whole samples
+    /// only.
+    pub split_override: Option<SplitMap>,
 }
 
 impl TrainerConfig {
@@ -178,7 +200,10 @@ impl TrainerConfig {
             fail_at: Vec::new(),
             join_at: Vec::new(),
             fault_plan: FaultPlan::default(),
+            seq_split: 0.0,
+            seq_split_mode: SplitMode::Zigzag,
             plan_override: None,
+            split_override: None,
         }
     }
 
@@ -228,6 +253,14 @@ pub struct TrainRun {
 /// The plans `train` would generate for this config (same seeding path).
 /// Used by equivalence tests to pin microbatch composition across runs.
 pub fn plan_preview(cfg: &TrainerConfig) -> Result<Vec<Plan>> {
+    Ok(plan_preview_split(cfg)?.0)
+}
+
+/// [`plan_preview`] plus the [`SplitMap`] the plans were packed under
+/// (empty when `seq_split` is 0.0). Equivalence tests pin BOTH across
+/// runs: chunk virtual ids in a pinned plan are meaningless without the
+/// map that generated them.
+pub fn plan_preview_split(cfg: &TrainerConfig) -> Result<(Vec<Plan>, SplitMap)> {
     let man = Manifest::load(&cfg.artifacts_dir)?;
     let max_bucket = *man.seq_buckets.iter().max().unwrap();
     let mut rng = Rng::new(cfg.seed);
@@ -238,7 +271,18 @@ pub fn plan_preview(cfg: &TrainerConfig) -> Result<Vec<Plan>> {
     let cost = CostModel::from_dims(man.n_layers, man.d_model, man.total_params as f64);
     let _ = rng.fork(7); // keep rng stream aligned with train()
     let mut plan_rng = rng.fork(13);
-    Ok(plan_run(cfg.balancer, &lens, cfg.world, cfg.minibs, max_bucket, &cost, &mut plan_rng))
+    Ok(plan_run_split(
+        cfg.balancer,
+        &lens,
+        cfg.world,
+        cfg.minibs,
+        max_bucket,
+        &cost,
+        &mut plan_rng,
+        PackOpts::default(),
+        cfg.seq_split,
+        cfg.seq_split_mode,
+    ))
 }
 
 /// Train per the config; returns the loss curve and final parameters.
@@ -271,6 +315,28 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 "hybrid sharding needs node groups that tile the device set: world {} % devices_per_node {} != 0",
                 cfg.world,
                 g
+            ));
+        }
+    }
+    // --- SeqSplit legality (see balance::split and docs/seqsplit.md) ------
+    if cfg.seq_split != 0.0 {
+        if !cfg.seq_split.is_finite() || cfg.seq_split < 0.0 || cfg.seq_split > 1.0 {
+            return Err(anyhow!(
+                "seq_split must be a fraction of the per-device budget in (0, 1]: got {}",
+                cfg.seq_split
+            ));
+        }
+        if cfg.scheme == CommScheme::Collective {
+            return Err(anyhow!(
+                "seq_split requires a barrier-free scheme: Collective's padded per-layer \
+                 rendezvous assumes whole sequences, while a split sequence's chunks push \
+                 independently and meet only at the minibatch flush"
+            ));
+        }
+        if !matches!(cfg.balancer, Balancer::LbMini | Balancer::Queue) {
+            return Err(anyhow!(
+                "seq_split requires an LB-Mini or Queue balancer: synchronized-k packers pad \
+                 to equal microbatch counts, which singleton chunk micros break"
             ));
         }
     }
@@ -392,20 +458,69 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     let lens: Vec<usize> = (0..n).map(|_| spec.sample(&mut rng)).collect();
     let lm = BigramLm::new(man.vocab, 4, cfg.seed);
     let mut data_rng = rng.fork(7);
-    let samples: Arc<Vec<Sample>> = Arc::new(make_dataset(&lm, &lens, &mut data_rng));
+    let mut dataset = make_dataset(&lm, &lens, &mut data_rng);
 
     let cost = CostModel::from_dims(man.n_layers, man.d_model, man.total_params as f64);
     let mut plan_rng = rng.fork(13);
-    let plans: Arc<Vec<Plan>> = Arc::new(match &cfg.plan_override {
-        Some(p) => p.clone(),
-        None => plan_run(cfg.balancer, &lens, cfg.world, cfg.minibs, max_bucket, &cost, &mut plan_rng),
-    });
+    let (planned, split) = match &cfg.plan_override {
+        Some(p) => (
+            p.clone(),
+            cfg.split_override.clone().unwrap_or_else(|| SplitMap::empty(lens.len())),
+        ),
+        None => plan_run_split(
+            cfg.balancer,
+            &lens,
+            cfg.world,
+            cfg.minibs,
+            max_bucket,
+            &cost,
+            &mut plan_rng,
+            PackOpts::default(),
+            cfg.seq_split,
+            cfg.seq_split_mode,
+        ),
+    };
+    let plans: Arc<Vec<Plan>> = Arc::new(planned);
     if plans.len() != cfg.steps {
         return Err(anyhow!("planned {} steps, expected {}", plans.len(), cfg.steps));
     }
     if plans.iter().any(|p| p.devices() != cfg.world) {
         return Err(anyhow!("plan device count does not match world size"));
     }
+    if !split.is_empty() {
+        // A scheduled crash (explicit fail_at or a partition's derived
+        // fail-stop) on a device that could run a chunk micro would
+        // strand the sequence's rendezvous partners in the per-sequence
+        // fold — rejected here, after planning, when placement is known.
+        // Queue dispatch decides placement at runtime, so ANY scheduled
+        // crash could land on a chunk.
+        for &(d, step) in &fails {
+            let hosts = match cfg.balancer {
+                Balancer::Queue => true,
+                _ => plans
+                    .get(step)
+                    .is_some_and(|p| p.micro[d].iter().flatten().any(|&i| split.is_chunk(i))),
+            };
+            if hosts {
+                return Err(anyhow!(
+                    "fail_at device {d} can host a split chunk at step {step}: the crash would \
+                     strand its sequence's rendezvous partners — disable seq_split or move the \
+                     failure to a step without chunks on that device"
+                ));
+            }
+        }
+    }
+    // SeqSplit: materialize each chunk as a virtual sample slicing its
+    // parent's tokens/targets — dataset index == chunk virtual id, and
+    // the token totals are conserved (Σ chunk lens == parent len), so
+    // the 1/ntok gradient normalization matches the unsplit corpus.
+    for c in split.iter() {
+        let tokens = dataset[c.parent].tokens[c.start..c.start + c.len].to_vec();
+        let targets = dataset[c.parent].targets[c.start..c.start + c.len].to_vec();
+        dataset.push(Sample { tokens, targets });
+    }
+    let samples: Arc<Vec<Sample>> = Arc::new(dataset);
+    let split = Arc::new(split);
 
     // --- dispatch layer ----------------------------------------------------
     // One dispatcher per minibatch, shared by all device threads: static
@@ -419,13 +534,22 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
             .enumerate()
             .map(|(step, p)| {
                 if membership.is_static() {
-                    make_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost)
+                    make_dispatcher_split(cfg.balancer, cfg.scheme, p, &lens, &cost, &split)
                 } else {
                     let crasher: Vec<bool> =
                         (0..cfg.world).map(|d| membership.fails_during(d, step)).collect();
                     let absent: Vec<bool> =
                         (0..cfg.world).map(|d| membership.absent(d, step)).collect();
-                    make_elastic_dispatcher(cfg.balancer, cfg.scheme, p, &lens, &cost, &crasher, &absent)
+                    make_elastic_dispatcher_split(
+                        cfg.balancer,
+                        cfg.scheme,
+                        p,
+                        &lens,
+                        &cost,
+                        &crasher,
+                        &absent,
+                        &split,
+                    )
                 }
             })
             .collect(),
@@ -455,6 +579,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 membership: Arc::clone(&membership),
                 dispatchers: Arc::clone(&dispatchers),
                 samples: Arc::clone(&samples),
+                split: Arc::clone(&split),
                 tok_count: Arc::clone(&tok_count),
                 loss_sum: Arc::clone(&loss_sum),
                 wall: Arc::clone(&wall),
@@ -516,6 +641,11 @@ struct DeviceCtx {
     /// One per minibatch, shared by every device thread.
     dispatchers: Arc<Vec<Arc<dyn Dispatcher>>>,
     samples: Arc<Vec<Sample>>,
+    /// SeqSplit chunk map (empty when splitting is off): resolves chunk
+    /// virtual ids in dispatched micros to their parent sequence, so
+    /// `run_microbatch` routes their pushes through the per-sequence
+    /// rendezvous instead of the plain micro fold.
+    split: Arc<SplitMap>,
     tok_count: Arc<Vec<AtomicU64>>,
     loss_sum: Arc<Vec<Mutex<f64>>>,
     wall: Arc<Vec<Mutex<f64>>>,
@@ -774,6 +904,29 @@ fn run_microbatch(
     let n_layers = man.n_layers;
     let backend = ctx.backend.as_ref();
     let micro: &[usize] = &a.samples;
+    // SeqSplit: chunk virtual ids only ever appear as singleton micros
+    // (the packers keep context-parallel chunks un-packed); their pushes
+    // route through the per-sequence rendezvous fold instead of the
+    // plain micro fold, keyed (parent, chunk index) so any dispatch
+    // interleaving reconstitutes the same sequence gradient.
+    debug_assert!(
+        micro.len() == 1 || micro.iter().all(|&i| !ctx.split.is_chunk(i)),
+        "chunk virtual id packed into a multi-sample micro"
+    );
+    let chunk: Option<&ChunkInfo> =
+        if micro.len() == 1 { ctx.split.get(micro[0]) } else { None };
+    let push = |layer: usize, gp: &[f32]| match chunk {
+        Some(c) => backend.reduce_grad_seq(
+            dev,
+            layer,
+            gp,
+            1.0,
+            c.parent as u64,
+            c.index as u32,
+            c.count as u32,
+        ),
+        None => backend.reduce_grad(dev, layer, gp, 1.0, a.id),
+    };
     let refs: Vec<&Sample> = micro.iter().map(|&i| &ctx.samples[i]).collect();
     let packed = pack_micro(&refs, &man.seq_buckets)?;
     let s = packed.seq;
@@ -847,7 +1000,7 @@ fn run_microbatch(
         let gp = &mut bufs.grad_pad[..p.padded_len()];
         gp[..man.block_params].copy_from_slice(&dflat);
         gp[man.block_params..].fill(0.0);
-        ctx.backend.reduce_grad(dev, l, gp, 1.0, a.id);
+        push(l, gp);
     }
 
     // embedding gradient: head (tied weights) + input scatter-add
@@ -870,7 +1023,7 @@ fn run_microbatch(
         *slot = h + i;
     }
     gp[man.embed_params..].fill(0.0);
-    ctx.backend.reduce_grad(dev, 0, gp, 1.0, a.id);
+    push(0, gp);
 
     // Return the microbatch tensors to their pools (uniquely owned
     // again: the service drops its input clones before replying).

@@ -11,6 +11,7 @@
 //!   odc train --preset small --world 4 --steps 40
 //!   odc dist
 
+use odc::balance::SplitMode;
 use odc::comm::FaultPlan;
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use odc::engine::trainer::{train, TrainerConfig};
@@ -92,6 +93,46 @@ fn parse_fault_plan(s: &str) -> FaultPlan {
     }
 }
 
+/// Parse `--seq-split-mode` — `ring` (equal tokens) or `zigzag` (equal
+/// predicted cost).
+fn parse_split_mode(s: &str) -> SplitMode {
+    match SplitMode::parse(s) {
+        Some(m) => m,
+        None => {
+            eprintln!("invalid configuration: unknown --seq-split-mode `{s}` (ring|zigzag)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Shared SeqSplit legality checks for both CLIs (`--seq-split`):
+/// splitting needs a barrier-free scheme and a balancer whose plans
+/// tolerate singleton chunk micros. Exit-2 like every other config
+/// error.
+fn check_seq_split(seq_split: f64, scheme: CommScheme, balancer: Balancer) {
+    if seq_split == 0.0 {
+        return;
+    }
+    if !seq_split.is_finite() || seq_split < 0.0 || seq_split > 1.0 {
+        eprintln!("invalid configuration: --seq-split must be a fraction in (0, 1]: got {seq_split}");
+        std::process::exit(2);
+    }
+    if scheme == CommScheme::Collective {
+        eprintln!(
+            "invalid configuration: --seq-split requires a barrier-free scheme: collective's \
+             padded barrier slots assume whole sequences"
+        );
+        std::process::exit(2);
+    }
+    if !matches!(balancer, Balancer::LbMini | Balancer::Queue) {
+        eprintln!(
+            "invalid configuration: --seq-split requires --balancer lb-mini or queue \
+             (synchronized-k packers pad to equal microbatch counts)"
+        );
+        std::process::exit(2);
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     odc::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -118,6 +159,8 @@ fn main() -> anyhow::Result<()> {
                     "",
                     "lossy transport, e.g. drop=0.05,dup=0.02,seed=7,part=0:2:3 (empty = clean)",
                 )
+                .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
+                .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -190,10 +233,21 @@ fn main() -> anyhow::Result<()> {
                 );
                 std::process::exit(2);
             }
+            let seq_split = a.f64("seq-split");
+            check_seq_split(seq_split, exp.scheme, exp.balancer);
+            if seq_split != 0.0 && (!fail_at.is_empty() || !fault_plan.partition.is_empty()) {
+                eprintln!(
+                    "invalid configuration: --seq-split cannot combine with --fail-at or \
+                     partitions in the simulator (the failover pricing path is split-unaware)"
+                );
+                std::process::exit(2);
+            }
             let mut sim_cfg = SimConfig::new(exp);
             sim_cfg.device_speed = device_speed;
             sim_cfg.fail_at = fail_at;
             sim_cfg.fault_plan = fault_plan;
+            sim_cfg.seq_split = seq_split;
+            sim_cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
             let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
@@ -255,6 +309,8 @@ fn main() -> anyhow::Result<()> {
                     "",
                     "lossy transport, e.g. drop=0.05,dup=0.02,seed=7,part=0:2:3 (empty = clean)",
                 )
+                .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
+                .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -279,6 +335,9 @@ fn main() -> anyhow::Result<()> {
             cfg.fail_at = parse_fail_at(a.get("fail-at"))?;
             cfg.join_at = parse_join_at(a.get("join-at"))?;
             cfg.fault_plan = parse_fault_plan(a.get("fault-plan"));
+            cfg.seq_split = a.f64("seq-split");
+            cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
+            check_seq_split(cfg.seq_split, cfg.scheme, cfg.balancer);
             let lossy = !cfg.fault_plan.is_noop();
             let elastic = !cfg.fail_at.is_empty()
                 || !cfg.join_at.is_empty()

@@ -5,16 +5,17 @@
 //! reports samples/s/device (Tables 3 & 5) plus the packing-estimated
 //! bubble rate (Tables 4 & 6).
 
-use crate::balance::bubble::estimate_bubble_dispatch;
+use crate::balance::bubble::estimate_bubble_dispatch_split;
 use crate::balance::cost::CostModel;
-use crate::balance::packers::{plan_run_opts, PackOpts};
+use crate::balance::packers::{plan_run_split, PackOpts};
+use crate::balance::split::SplitMode;
 use crate::comm::topology::Topology;
 use crate::comm::transport::{FaultPlan, RetryPolicy};
 use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
 use crate::data::distributions::sample_lengths;
 use crate::sim::timeline::{
-    fault_minibatch_overhead, hybrid_step_overhead, recovery_epilogue_s, time_minibatch_dispatch,
-    time_minibatch_failover,
+    fault_minibatch_overhead, hybrid_step_overhead, recovery_epilogue_s,
+    time_minibatch_dispatch_split, time_minibatch_failover,
 };
 use crate::util::rng::Rng;
 
@@ -50,6 +51,19 @@ pub struct SimConfig {
     /// partitions additionally require ODC and exclude `fail_at`,
     /// matching the trainer's validation.
     pub fault_plan: FaultPlan,
+    /// SeqSplit (`--seq-split`), mirroring `TrainerConfig::seq_split`:
+    /// split any sequence whose predicted cost exceeds this fraction of
+    /// the balanced per-device budget into context-parallel chunks. The
+    /// timeline prices chunk compute through the split-aware makespan
+    /// kernel plus a per-sequence partial-reduce epilogue on the wall
+    /// (see `sim::timeline::seqsplit_reduce_epilogue_s`). `0.0`
+    /// disables; requires a barrier-free scheme and an LB-Mini or Queue
+    /// balancer, and cannot combine with `fail_at` / partitions here
+    /// (the failover pricing path is split-unaware).
+    pub seq_split: f64,
+    /// Chunk-boundary rule: `Ring` = equal tokens, `Zigzag` = equal
+    /// predicted cost.
+    pub seq_split_mode: SplitMode,
 }
 
 impl SimConfig {
@@ -62,6 +76,8 @@ impl SimConfig {
             device_speed: Vec::new(),
             fail_at: Vec::new(),
             fault_plan: FaultPlan::default(),
+            seq_split: 0.0,
+            seq_split_mode: SplitMode::Zigzag,
         }
     }
 }
@@ -198,6 +214,30 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         assert_eq!(devs.len(), fail_at.len(), "one fail_at event per device");
         assert!(devs.len() < exp.devices, "at least one device must survive");
     }
+    // SeqSplit legality, mirroring the trainer's validation errors.
+    if cfg.seq_split != 0.0 {
+        assert!(
+            cfg.seq_split.is_finite() && cfg.seq_split > 0.0 && cfg.seq_split <= 1.0,
+            "invalid experiment cell: seq_split must be a fraction in (0, 1]: got {}",
+            cfg.seq_split
+        );
+        assert!(
+            exp.scheme != CommScheme::Collective,
+            "invalid experiment cell: seq_split requires a barrier-free scheme (Collective's \
+             padded barrier slots assume whole sequences)"
+        );
+        assert!(
+            matches!(exp.balancer, Balancer::LbMini | Balancer::Queue),
+            "invalid experiment cell: seq_split requires an LB-Mini or Queue balancer \
+             (synchronized-k packers pad to equal microbatch counts)"
+        );
+        assert!(
+            fail_at.is_empty(),
+            "invalid experiment cell: seq_split cannot combine with fail_at or partitions in \
+             the simulator — the failover pricing path is split-unaware (the trainer permits a \
+             crash on a device that hosts no chunks; see docs/seqsplit.md)"
+        );
+    }
     let queue_dispatch = exp.balancer == Balancer::Queue;
     let cost = CostModel::for_model(exp.model);
     let topo = Topology::paper(exp.devices, exp.devices_per_node);
@@ -209,7 +249,9 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
 
     let opts = PackOpts { lb_mini_equal_size: cfg.rl_mode };
     let mut plan_rng = rng.fork(1);
-    let plans = plan_run_opts(
+    // seq_split == 0.0 delegates to the seed packer with an empty map —
+    // every downstream path is bit-identical to the pre-SeqSplit sim.
+    let (plans, split) = plan_run_split(
         exp.balancer,
         &lens,
         exp.devices,
@@ -218,6 +260,8 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         &cost,
         &mut plan_rng,
         opts,
+        cfg.seq_split,
+        cfg.seq_split_mode,
     );
 
     let step_overhead = hybrid_overhead(exp, &topo);
@@ -251,7 +295,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
                 &fails_now,
             )
         } else {
-            time_minibatch_dispatch(
+            time_minibatch_dispatch_split(
                 plan,
                 &lens,
                 exp.model,
@@ -262,6 +306,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
                 cfg.hierarchical_gather,
                 &cfg.device_speed,
                 queue_dispatch,
+                &split,
             )
         };
         // Idle time counts devices alive at the step's start (a device
@@ -305,10 +350,24 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         // Speed- and dispatch-aware packing estimate, so the bubble
         // rate and dispatch_wait_s tell one consistent story (failure
         // steps: the estimate still describes the healthy schedule).
-        let b = estimate_bubble_dispatch(plan, &lens, &cost, exp.scheme, &cfg.device_speed, queue_dispatch);
+        let b = estimate_bubble_dispatch_split(
+            plan,
+            &lens,
+            &cost,
+            exp.scheme,
+            &cfg.device_speed,
+            queue_dispatch,
+            &split,
+        );
         bubble_busy += b.busy.iter().sum::<f64>();
         bubble_total += b.total;
-        samples += plan.sample_count();
+        // A split parent appears as `count` chunk vids but is still ONE
+        // sample — count it once, at its first chunk (identical to
+        // `sample_count()` when the map is empty).
+        samples += plan
+            .iter_samples()
+            .filter(|&i| split.get(i).map_or(true, |c| c.index == 0))
+            .count();
     }
 
     let mut links: Vec<(usize, usize)> =
@@ -762,6 +821,59 @@ mod tests {
         let b = simulate(&cfg);
         assert_eq!(a.retries, b.retries);
         assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
+    }
+
+    fn seqsplit_cell(seq_split: f64, scheme: CommScheme, balancer: Balancer) -> SimConfig {
+        let exp = ExperimentConfig {
+            model: PaperModel::M1_5B,
+            dataset: Dataset::LongAlign,
+            scheme,
+            balancer,
+            sharding: Sharding::Full,
+            minibs: 2,
+            devices: 4,
+            devices_per_node: 4,
+            packing_ratio: 1.0,
+            max_len: 65_536,
+            steps: 6,
+            seed: 7,
+        };
+        let mut cfg = SimConfig::new(exp);
+        cfg.seq_split = seq_split;
+        cfg
+    }
+
+    #[test]
+    fn seqsplit_deterministic_and_conserves_samples() {
+        let a = simulate(&seqsplit_cell(0.5, CommScheme::Odc, Balancer::Queue));
+        let b = simulate(&seqsplit_cell(0.5, CommScheme::Odc, Balancer::Queue));
+        assert_eq!(a.samples_per_sec_per_device, b.samples_per_sec_per_device);
+        assert_eq!(a.dispatch_wait_s, b.dispatch_wait_s);
+        // a split parent is still ONE sample: chunking never changes the
+        // trained-sample count
+        let base = simulate(&seqsplit_cell(0.0, CommScheme::Odc, Balancer::Queue));
+        assert_eq!(a.samples, base.samples);
+        assert_eq!(a.minibatches, base.minibatches);
+    }
+
+    #[test]
+    #[should_panic(expected = "barrier-free")]
+    fn seqsplit_under_collective_panics_in_sim() {
+        let _ = simulate(&seqsplit_cell(0.5, CommScheme::Collective, Balancer::LbMicro));
+    }
+
+    #[test]
+    #[should_panic(expected = "LB-Mini or Queue")]
+    fn seqsplit_under_synchronized_k_balancer_panics_in_sim() {
+        let _ = simulate(&seqsplit_cell(0.5, CommScheme::Odc, Balancer::LbMicro));
+    }
+
+    #[test]
+    #[should_panic(expected = "split-unaware")]
+    fn seqsplit_with_fail_at_panics_in_sim() {
+        let mut cfg = seqsplit_cell(0.5, CommScheme::Odc, Balancer::LbMini);
+        cfg.fail_at = vec![(0, 2, 1)];
+        let _ = simulate(&cfg);
     }
 
     #[test]

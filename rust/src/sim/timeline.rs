@@ -7,8 +7,9 @@
 //! while compute grows as O(s²), so long microbatches hide comm).
 
 use crate::balance::cost::CostModel;
-use crate::balance::dispatch::{lpt_order, pull_schedule, pull_schedule_budgeted};
+use crate::balance::dispatch::{lpt_order, micro_flops_split, pull_schedule_budgeted, queue_busy_split};
 use crate::balance::packers::Plan;
+use crate::balance::split::SplitMap;
 use crate::comm::topology::Topology;
 use crate::comm::transport::{FaultPlan, RetryPolicy};
 use crate::comm::volume;
@@ -201,17 +202,85 @@ pub fn time_minibatch_dispatch(
     speeds: &[f64],
     queue: bool,
 ) -> MinibatchTiming {
+    let empty = SplitMap::empty(lens.len());
+    time_minibatch_dispatch_split(
+        plan, lens, model, cost, scheme, sharding, topo, hierarchical, speeds, queue, &empty,
+    )
+}
+
+/// SeqSplit's per-minibatch rendezvous epilogue: every split parent's
+/// chunk gradients meet in a cross-device partial reduction before the
+/// ordinary micro fold ([`crate::comm`]'s per-sequence fold). Each
+/// parent cut into `c` chunks costs `c − 1` extra shard-sized gradient
+/// passes over the intra-node links — the chunks' payloads already
+/// reached the shard servers through the per-micro scatter, the
+/// reduction moves `(c − 1) · grad_bytes / world` per parent to fold
+/// them — plus one op-setup latency per parent. Exposed (serial) time:
+/// devices cannot start the optimizer epilogue until every parent's
+/// gradient is whole.
+pub fn seqsplit_reduce_epilogue_bytes(
+    param_bytes: f64,
+    world: usize,
+    topo: &Topology,
+    split: &SplitMap,
+) -> f64 {
+    if split.is_empty() {
+        return 0.0;
+    }
+    let shard = param_bytes / world.max(1) as f64;
+    let mut secs = 0.0;
+    for info in split.iter() {
+        if info.index == 0 {
+            secs += (info.count - 1) as f64 * shard / topo.intra_bw + topo.latency;
+        }
+    }
+    secs
+}
+
+/// [`seqsplit_reduce_epilogue_bytes`] for a paper model (bf16 grads).
+pub fn seqsplit_reduce_epilogue_s(
+    model: PaperModel,
+    world: usize,
+    topo: &Topology,
+    split: &SplitMap,
+) -> f64 {
+    seqsplit_reduce_epilogue_bytes(2.0 * model.params(), world, topo, split)
+}
+
+/// [`time_minibatch_dispatch`] under SeqSplit: chunk virtual ids are
+/// priced by their causal-prefix-aware chunk cost through the
+/// [`SplitMap`] (empty map = bit-identical to the unsplit path), the
+/// queue path goes through the ONE shared makespan kernel
+/// ([`queue_busy_split`] — also the bubble estimator's), and the
+/// per-sequence rendezvous epilogue is added to the wall (not per-device
+/// busy: it is exposed network time, reported as dispatch wait).
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_dispatch_split(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    speeds: &[f64],
+    queue: bool,
+    split: &SplitMap,
+) -> MinibatchTiming {
     let d = plan.devices();
     let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
     let m_max = plan.max_micro_count();
     let inv_speed = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
+    debug_assert!(
+        split.is_empty() || scheme != CommScheme::Collective,
+        "seq-split × Collective is rejected at config validation"
+    );
+    let epilogue = seqsplit_reduce_epilogue_s(model, d, topo, split);
 
     let micro_secs = |dev: usize, m: usize| -> (f64, bool) {
         match plan.micro[dev].get(m) {
-            Some(mb) if !mb.is_empty() => {
-                let ls: Vec<usize> = mb.iter().map(|&i| lens[i]).collect();
-                (cost.seconds(cost.micro_cost(&ls)), false)
-            }
+            Some(mb) if !mb.is_empty() => (cost.seconds(micro_flops_split(mb, lens, cost, split)), false),
             Some(_) => (0.0, true),  // padded empty slot (collective)
             None => (0.0, true),     // device simply has fewer microbatches (ODC)
         }
@@ -219,18 +288,16 @@ pub fn time_minibatch_dispatch(
 
     if queue {
         debug_assert!(scheme != CommScheme::Collective, "Queue×Collective is rejected at config validation");
-        // Work-stealing pull: LPT order over ALL of the plan's
-        // microbatches, each served by the device that frees up
-        // earliest (`pull_schedule` — the same kernel the makespan
-        // property tests pin) — a straggler pulls less often and the
-        // fast devices absorb its share at microbatch granularity.
-        let order = lpt_order(plan, lens, cost);
-        let busy = pull_schedule(order.len(), d, |i, dev| {
-            let (od, om) = order[i];
-            let (c, _) = micro_secs(od, om);
-            slot_time(c * inv_speed(dev), comm, scheme, false)
+        // Work-stealing pull through THE shared split-aware makespan
+        // kernel (`queue_busy_split` — the bubble estimator replays the
+        // identical schedule, so the CLI's bubble and dispatch-wait
+        // lines agree under splitting by construction) — a straggler
+        // pulls less often and the fast devices absorb its share at
+        // microbatch (now chunk) granularity.
+        let busy = queue_busy_split(plan, lens, cost, split, |flops, dev| {
+            slot_time(cost.seconds(flops) * inv_speed(dev), comm, scheme, false)
         });
-        let wall = busy.iter().cloned().fold(0.0, f64::max);
+        let wall = busy.iter().cloned().fold(0.0, f64::max) + epilogue;
         return MinibatchTiming { wall, busy };
     }
 
@@ -264,7 +331,7 @@ pub fn time_minibatch_dispatch(
         }
     };
 
-    MinibatchTiming { wall, busy }
+    MinibatchTiming { wall: wall + epilogue, busy }
 }
 
 /// Price one minibatch under elastic membership (the sim mirror of the
@@ -556,5 +623,82 @@ mod tests {
         assert!(one > 0.0);
         assert!((two - 2.0 * one).abs() < 1e-12);
         assert_eq!(hybrid_step_overhead_bytes(1e9, &topo8()), 0.0);
+    }
+
+    #[test]
+    fn seqsplit_cuts_queue_wall_on_dominant_corpus() {
+        // One sequence holds >40% of the minibatch's tokens: unsplit,
+        // its device is the makespan no matter how the queue deals the
+        // rest; split into ≤world chunks the work spreads and the wall
+        // drops even after paying the rendezvous epilogue.
+        use crate::balance::packers::{plan_run_split, PackOpts};
+        use crate::balance::split::SplitMode;
+        use crate::config::Balancer;
+        use crate::util::rng::Rng;
+        let c = cost();
+        let mut lens = vec![2_000usize; 7];
+        lens.push(60_000);
+        let topo = Topology::paper(4, 8);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let (base_plans, empty) = plan_run_split(
+            Balancer::Queue, &lens, 4, 2, 65_536, &c, &mut r1, PackOpts::default(), 0.0,
+            SplitMode::Zigzag,
+        );
+        let (split_plans, map) = plan_run_split(
+            Balancer::Queue, &lens, 4, 2, 65_536, &c, &mut r2, PackOpts::default(), 0.5,
+            SplitMode::Zigzag,
+        );
+        assert!(empty.is_empty() && !map.is_empty());
+        let t = |p: &Plan, m: &SplitMap| {
+            time_minibatch_dispatch_split(
+                p, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo, false,
+                &[], true, m,
+            )
+        };
+        let base: f64 = base_plans.iter().map(|p| t(p, &empty).wall).sum();
+        let split: f64 = split_plans.iter().map(|p| t(p, &map).wall).sum();
+        assert!(split < base, "split wall {split} must be strictly below unsplit {base}");
+    }
+
+    #[test]
+    fn seqsplit_epilogue_prices_partial_reduce() {
+        use crate::balance::split::ChunkInfo;
+        let topo = topo8();
+        let mut map = SplitMap::empty(4);
+        assert_eq!(seqsplit_reduce_epilogue_bytes(1e9, 8, &topo, &map), 0.0);
+        map.push_parent(
+            (0..3).map(|i| ChunkInfo { parent: 0, index: i, count: 3, start: 100 * i, len: 100 }).collect(),
+        );
+        let one = seqsplit_reduce_epilogue_bytes(1e9, 8, &topo, &map);
+        assert!(one > 0.0, "a split parent must price its rendezvous");
+        map.push_parent(
+            (0..2).map(|i| ChunkInfo { parent: 1, index: i, count: 2, start: 50 * i, len: 50 }).collect(),
+        );
+        let two = seqsplit_reduce_epilogue_bytes(1e9, 8, &topo, &map);
+        assert!(two > one, "each parent adds its own partial-reduce bytes");
+        // bytes scale linearly at fixed chunk structure (latency aside)
+        let double = seqsplit_reduce_epilogue_bytes(2e9, 8, &topo, &map);
+        assert!(double > two);
+    }
+
+    #[test]
+    fn split_disabled_dispatch_identical_to_seed_path() {
+        let (plan, lens) = skew_plan();
+        let c = cost();
+        let topo = Topology::paper(2, 8);
+        let empty = SplitMap::empty(lens.len());
+        for queue in [false, true] {
+            let a = time_minibatch_dispatch(
+                &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo,
+                false, &[], queue,
+            );
+            let b = time_minibatch_dispatch_split(
+                &plan, &lens, PaperModel::M1_5B, &c, CommScheme::Odc, Sharding::Full, &topo,
+                false, &[], queue, &empty,
+            );
+            assert_eq!(a.wall, b.wall);
+            assert_eq!(a.busy, b.busy);
+        }
     }
 }

@@ -399,6 +399,152 @@ fn hybrid_skewed_counts_arena_growth_stops_after_warmup() {
     assert_eq!(after.resident, prealloc as u64 + after.fresh_allocs);
 }
 
+/// SeqSplit's per-sequence rendezvous under the friendly regime: one
+/// split sequence whose chunks land on every device (the maximal
+/// rendezvous), plus a whole micro per device, every minibatch. The
+/// chunk payloads ride the SAME per-pair arenas as micro payloads —
+/// within the prealloc the push path must stay allocation-free, the
+/// acquire count must be EXACT (one payload per shard server per push,
+/// chunk or not), and the fold must release every payload (resident
+/// accounting after the final drain).
+#[test]
+fn odc_seq_fold_arena_exact_accounting_within_prealloc() {
+    let world = 4;
+    let steps = 25usize;
+    // 1 layer => prealloc 2 buffers/pair; 2 pushes/pair per minibatch
+    // (one chunk + one micro) — exactly at the prealloc, never past it.
+    let params = Arc::new(ParamStore::new(&[40], world));
+    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let comm = Arc::clone(&comm);
+            s.spawn(move || {
+                for _step in 0..steps {
+                    // chunk `dev` of split sequence 0 (count = world)
+                    comm.reduce_grad_seq(dev, 0, &[1.0f32; 40], 1.0, 0, dev as u32, world as u32);
+                    // plus an ordinary whole-sample micro
+                    comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0, dev as u64);
+                    comm.end_minibatch(dev);
+                    let mut g = vec![0.0f32; 10];
+                    comm.take_grad_shard(dev, 0, &mut g);
+                    // seq fold: Σ over `world` chunks + `world` micros
+                    for &v in &g {
+                        assert_eq!(v, 2.0 * world as f32, "reconstituted sequence + micros");
+                    }
+                    comm.end_step(dev);
+                }
+            });
+        }
+    });
+    let stats = comm.arena_stats();
+    // 2 pushes per device per minibatch, each acquiring one payload per
+    // shard server — chunk pushes are accounted exactly like micros.
+    assert_eq!(stats.acquires, (steps * world * 2 * world) as u64);
+    assert_eq!(stats.fresh_allocs, 0, "chunk push path must be allocation-free inside the prealloc");
+    assert_eq!(stats.resident, (world * world * 2) as u64, "every chunk payload must come home");
+}
+
+/// The adversarial single-long-sequence skew: ONE device pushes all 8
+/// chunks of one overlong sequence every minibatch (8× the prealloc),
+/// the other only a whole micro. Growth is bounded by one minibatch's
+/// in-flight chunk pushes per pair and STOPS after warm-up — the
+/// per-sequence fold releases every non-accumulator payload, and the
+/// accumulator is released by the micro fold it feeds.
+#[test]
+fn odc_seq_fold_arena_growth_bounded_under_split_skew() {
+    let world = 2;
+    let chunks = 8usize;
+    let params = Arc::new(ParamStore::new(&[40], world));
+    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let run_minibatches = |n: usize| {
+        std::thread::scope(|s| {
+            for dev in 0..world {
+                let comm = Arc::clone(&comm);
+                s.spawn(move || {
+                    for _ in 0..n {
+                        if dev == 0 {
+                            for k in 0..chunks {
+                                comm.reduce_grad_seq(dev, 0, &[1.0f32; 40], 1.0, 0, k as u32, chunks as u32);
+                            }
+                        } else {
+                            comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0, 7);
+                        }
+                        comm.end_minibatch(dev);
+                        let mut g = vec![0.0f32; 20];
+                        comm.take_grad_shard(dev, 0, &mut g);
+                        for &v in &g {
+                            assert_eq!(v, chunks as f32 + 1.0, "8-chunk sequence + 1 micro");
+                        }
+                        comm.end_step(dev);
+                    }
+                });
+            }
+        });
+    };
+    run_minibatches(3); // warm-up
+    let warm = comm.arena_stats();
+    let prealloc_per_pair = 2; // 1 layer + 1
+    // device 0's 8 chunk pushes per minibatch, to each of `world`
+    // servers, less the prealloc; device 1 stays inside its prealloc
+    let bound = (world * (chunks - prealloc_per_pair)) as u64;
+    assert!(warm.fresh_allocs <= bound, "fresh {} exceeds in-flight bound {bound}", warm.fresh_allocs);
+
+    run_minibatches(20);
+    let after = comm.arena_stats();
+    assert_eq!(
+        after.fresh_allocs, warm.fresh_allocs,
+        "arena kept growing after warm-up under split skew: {} -> {}",
+        warm.fresh_allocs, after.fresh_allocs
+    );
+    assert_eq!(after.resident, (world * world * prealloc_per_pair) as u64 + after.fresh_allocs);
+}
+
+/// SeqSplit across hybrid's two levels: a sequence split across node
+/// groups rendezvouses per group at the intra level, and the group
+/// partials meet in the cross-level sum. The chunk payloads ride the
+/// per-(server, client) INTRA arenas — exact acquire accounting, no
+/// allocation inside the prealloc — and the cross epilogue's
+/// per-sequence partials stay inside the cross prealloc (they fold into
+/// ordinary per-layer cross pieces, adding no cross traffic).
+#[test]
+fn hybrid_seq_fold_arena_exact_accounting_across_groups() {
+    let world = 4;
+    let group_size = 2;
+    let steps = 25usize;
+    let params = Arc::new(ParamStore::new(&[40], world));
+    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, group_size));
+    std::thread::scope(|s| {
+        for dev in 0..world {
+            let comm = Arc::clone(&comm);
+            s.spawn(move || {
+                for _step in 0..steps {
+                    // chunk `dev` of sequence 0: groups {0,1} and {2,3}
+                    // each fold a 2-chunk partial, summed cross-group
+                    comm.reduce_grad_seq(dev, 0, &[1.0f32; 40], 1.0, 0, dev as u32, world as u32);
+                    comm.reduce_grad(dev, 0, &[1.0f32; 40], 1.0, dev as u64);
+                    comm.end_minibatch(dev);
+                    let mut g = vec![0.0f32; 10];
+                    comm.take_grad_shard(dev, 0, &mut g);
+                    for &v in &g {
+                        assert_eq!(v, 2.0 * world as f32, "group partials must sum exactly");
+                    }
+                    comm.end_step(dev);
+                }
+            });
+        }
+    });
+    let stats = comm.arena_stats();
+    // 2 pushes per device per minibatch, each acquiring one super-shard
+    // payload per group member
+    assert_eq!(stats.acquires, (steps * world * 2 * group_size) as u64);
+    assert_eq!(stats.fresh_allocs, 0, "intra chunk pushes must stay inside the prealloc");
+    assert_eq!(
+        comm.cross_arena_stats().fresh_allocs,
+        0,
+        "per-sequence partials must not grow the cross epilogue"
+    );
+}
+
 /// The minibatch-scoped gather cache over hybrid group membership:
 /// cached bytes are bit-identical to direct replica reads for every
 /// device of every group, and stay correct across an end_step replica

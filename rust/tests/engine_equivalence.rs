@@ -11,8 +11,9 @@
 //! case BIT-identical to the oracle (no tolerance).
 
 use odc::balance::packers::Plan;
+use odc::balance::SplitMap;
 use odc::config::{Balancer, CommScheme};
-use odc::engine::trainer::{plan_preview, train, TrainRun, TrainerConfig};
+use odc::engine::trainer::{plan_preview, plan_preview_split, train, TrainRun, TrainerConfig};
 use std::path::{Path, PathBuf};
 
 fn tiny_dir() -> PathBuf {
@@ -623,6 +624,207 @@ fn hybrid_rejects_groups_that_do_not_tile_world() {
     c.devices_per_node = 3;
     let err = train(&c).unwrap_err().to_string();
     assert!(err.contains("tile the device set"), "unexpected error: {err}");
+}
+
+/// SeqSplit's fraction knob on the tiny corpus: with minibs=2 and
+/// world=2 the per-device budget is roughly half a minibatch, so a 0.5
+/// threshold reliably splits at least one sequence — the helper asserts
+/// it did, keeping the matrix honest about exercising chunks.
+const SPLIT_FRAC: f64 = 0.5;
+
+/// The pinned world=2 split plans (chunk virtual ids included) plus the
+/// single-device oracle replaying the SAME chunk composition: both the
+/// plans AND the `SplitMap` are pinned via `plan_override` +
+/// `split_override`, so oracle and distributed runs compute identical
+/// chunk slices and fold them under identical synthetic keys. `None`
+/// when the PJRT stub is active (skip).
+fn split_plans_and_oracle(balancer: Balancer) -> Option<(Vec<Plan>, SplitMap, TrainRun)> {
+    let mut pin = base_cfg();
+    pin.scheme = CommScheme::Odc;
+    pin.balancer = balancer;
+    pin.seq_split = SPLIT_FRAC;
+    let (plans2, split) = plan_preview_split(&pin).unwrap();
+    assert!(!split.is_empty(), "the pinned corpus must actually split under frac {SPLIT_FRAC}");
+    let flat: Vec<Plan> = plans2
+        .iter()
+        .map(|p| Plan { micro: vec![p.micro.iter().flatten().filter(|m| !m.is_empty()).cloned().collect()] })
+        .collect();
+    let mut solo_cfg = base_cfg();
+    solo_cfg.world = 1;
+    solo_cfg.minibs = 4; // 1×4 == 2×2 samples per optimizer step
+    solo_cfg.scheme = CommScheme::Odc;
+    solo_cfg.balancer = Balancer::LbMicro;
+    solo_cfg.plan_override = Some(flat);
+    solo_cfg.split_override = Some(split.clone());
+    let solo = try_train(&solo_cfg)?;
+    Some((plans2, split, solo))
+}
+
+/// THE SeqSplit acceptance matrix: split × {ODC, Hybrid} × {LB-Mini,
+/// Queue} against the single-device oracle running the same chunk
+/// composition, within 1e-5. The per-sequence fold is chunk-index
+/// ordered and the reconstituted gradient joins the id-keyed micro
+/// fold, so placement (static rows or runtime pulls) cannot move a bit.
+#[test]
+fn split_matrix_matches_single_device_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    for balancer in [Balancer::LbMini, Balancer::Queue] {
+        let Some((plans2, split, solo)) = split_plans_and_oracle(balancer) else { return };
+        for (scheme, label) in [(CommScheme::Odc, "split×odc"), (CommScheme::Hybrid, "split×hybrid")] {
+            let mut c = base_cfg();
+            c.scheme = scheme;
+            c.balancer = balancer;
+            c.seq_split = SPLIT_FRAC;
+            c.plan_override = Some(plans2.clone());
+            c.split_override = Some(split.clone());
+            let Some(r) = try_train(&c) else { return };
+            for (a, b) in solo.logs.iter().zip(&r.logs) {
+                assert_eq!(a.tokens, b.tokens, "{label}×{balancer} step {}: chunk token conservation", a.step);
+                assert!(
+                    (a.loss - b.loss).abs() < 1e-5,
+                    "{label}×{balancer} step {}: oracle {} vs {}",
+                    a.step,
+                    a.loss,
+                    b.loss
+                );
+            }
+            for (l, (pa, pb)) in solo.final_params.iter().zip(&r.final_params).enumerate() {
+                let d = rel_l2(pb, pa);
+                assert!(d < 1e-5, "{label}×{balancer} layer {l}: rel L2 {d} vs the oracle");
+            }
+        }
+    }
+}
+
+/// `--seq-split 0` IS the seed path: `plan_preview_split` must return
+/// the seed plans plus an empty map, and a training run with the knob
+/// explicitly zeroed must be BIT-identical to one that never mentions
+/// it — the empty-`SplitMap` wrappers threaded through packer,
+/// dispatcher and trainer may not perturb a single RNG draw or float.
+#[test]
+fn split_disabled_bit_identical_to_seed_path() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut zeroed = base_cfg();
+    zeroed.scheme = CommScheme::Odc;
+    zeroed.balancer = Balancer::LbMini;
+    zeroed.seq_split = 0.0;
+    let (plans, split) = plan_preview_split(&zeroed).unwrap();
+    assert!(split.is_empty(), "frac 0 must not split anything");
+    let seed = base_cfg();
+    let mut seed_cfg = seed.clone();
+    seed_cfg.scheme = CommScheme::Odc;
+    seed_cfg.balancer = Balancer::LbMini;
+    assert_eq!(plans, plan_preview(&seed_cfg).unwrap(), "frac 0 must reproduce the seed plans");
+    let Some(a) = try_train(&zeroed) else { return };
+    let Some(b) = try_train(&seed_cfg) else { return };
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}: split-disabled must be bit-identical", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}: split-disabled must be bit-identical to the seed path");
+    }
+}
+
+/// Split runs are repeatable under runtime placement with a straggler:
+/// two Queue×ODC runs with a 4× slow device give the same bits even
+/// though realized chunk placement may differ — the rendezvous fold is
+/// keyed by (seq, chunk), not by schedule.
+#[test]
+fn split_deterministic_across_runs_under_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::Queue;
+    c.seq_split = SPLIT_FRAC;
+    c.device_speed = vec![1.0, 0.25];
+    let Some(a) = try_train(&c) else { return };
+    let Some(b) = try_train(&c) else { return };
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}");
+    }
+}
+
+/// Split × Collective is a config error (padded per-layer barriers
+/// assume whole sequences), as are synchronized-k balancers and
+/// out-of-range fractions. Validation runs before artifacts are
+/// touched, so these hold even without `make artifacts`.
+#[test]
+fn split_rejected_under_collective_and_synchronized_balancers() {
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::LbMicro;
+    c.seq_split = SPLIT_FRAC;
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+
+    let mut b = base_cfg();
+    b.scheme = CommScheme::Odc;
+    b.balancer = Balancer::LbMicro;
+    b.seq_split = SPLIT_FRAC;
+    let err = train(&b).unwrap_err().to_string();
+    assert!(err.contains("LB-Mini or Queue"), "unexpected error: {err}");
+
+    let mut f = base_cfg();
+    f.scheme = CommScheme::Odc;
+    f.balancer = Balancer::LbMini;
+    f.seq_split = 1.5;
+    let err = train(&f).unwrap_err().to_string();
+    assert!(err.contains("(0, 1]"), "unexpected error: {err}");
+}
+
+/// Split × `fail_at` on a device that can host a chunk is rejected
+/// after planning: under Queue ANY scheduled crash could land on a
+/// chunk (runtime placement), and under static LB-Mini the plan row at
+/// the fail step is inspected for chunk virtual ids.
+#[test]
+fn split_rejected_when_failure_can_host_a_chunk() {
+    if !have_artifacts() {
+        return;
+    }
+    // Queue: blanket rejection — placement is decided at runtime.
+    let mut q = base_cfg();
+    q.scheme = CommScheme::Odc;
+    q.balancer = Balancer::Queue;
+    q.seq_split = SPLIT_FRAC;
+    q.fail_at = vec![(0, 1, 0)];
+    let err = train(&q).unwrap_err().to_string();
+    assert!(err.contains("split chunk"), "unexpected error: {err}");
+
+    // Static LB-Mini: find a (device, step) whose planned row holds a
+    // chunk virtual id and schedule the crash exactly there.
+    let mut pin = base_cfg();
+    pin.scheme = CommScheme::Odc;
+    pin.balancer = Balancer::LbMini;
+    pin.seq_split = SPLIT_FRAC;
+    let (plans, split) = plan_preview_split(&pin).unwrap();
+    let hit = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(step, p)| {
+            let split = &split;
+            p.micro
+                .iter()
+                .enumerate()
+                .filter(move |(_, row)| row.iter().flatten().any(|&i| split.is_chunk(i)))
+                .map(move |(d, _)| (d, step))
+        })
+        .next();
+    let (d, step) = hit.expect("frac 0.5 on the tiny corpus must place a chunk somewhere");
+    let mut s = pin.clone();
+    s.fail_at = vec![(d, step, 0)];
+    let err = train(&s).unwrap_err().to_string();
+    assert!(err.contains("split chunk"), "unexpected error: {err}");
 }
 
 #[test]

@@ -1,0 +1,339 @@
+//! Property suite for SeqSplit (context-parallel straggler splitting):
+//! randomized corpora and worlds through `plan_run_split` and the
+//! dispatch layer, pinning the invariants the equivalence matrix in
+//! `engine_equivalence.rs` relies on:
+//!
+//! * every chunk is planned AND dispatched exactly once (split parents
+//!   leave the plan, chunks ride as singleton micros);
+//! * on a dominant-sequence corpus — one sequence holding the bulk of a
+//!   minibatch's tokens — splitting strictly lowers the makespan (the
+//!   acceptance criterion). Fully random corpora are deliberately NOT
+//!   asserted here: list scheduling is subject to Graham anomalies, so
+//!   "split never hurts" is only a theorem when the unsplit makespan is
+//!   pinned by the straggler itself;
+//! * split plans are a pure function of (corpus, knobs, seed);
+//! * a corpus with no over-budget sequence splits nothing and plans
+//!   bit-identically to the seed path.
+//!
+//! Plus the shared-kernel regression (docs/seqsplit.md): the CLI bubble
+//! line and the timeline's dispatch-wait line price splitting through
+//! ONE makespan kernel (`queue_busy_split`) and may not drift.
+
+use odc::balance::cost::CostModel;
+use odc::balance::dispatch::{queue_busy_split, Dispatcher, WorkQueue};
+use odc::balance::packers::{plan_run_split, PackOpts, Plan};
+use odc::balance::{estimate_bubble_dispatch_split, SplitMap, SplitMode};
+use odc::comm::topology::Topology;
+use odc::config::{Balancer, CommScheme, PaperModel, Sharding};
+use odc::sim::timeline::{seqsplit_reduce_epilogue_s, time_minibatch_dispatch_split};
+use odc::util::prop::{check, vec_of};
+use odc::util::rng::Rng;
+
+const MAX_TOKENS: usize = 65_536;
+
+fn cost() -> CostModel {
+    CostModel::for_model(PaperModel::M1_5B)
+}
+
+fn split_plans(
+    lens: &[usize],
+    world: usize,
+    minibs: usize,
+    frac: f64,
+    mode: SplitMode,
+    seed: u64,
+) -> (Vec<Plan>, SplitMap) {
+    let mut rng = Rng::new(seed);
+    plan_run_split(
+        Balancer::Queue,
+        lens,
+        world,
+        minibs,
+        MAX_TOKENS,
+        &cost(),
+        &mut rng,
+        PackOpts::default(),
+        frac,
+        mode,
+    )
+}
+
+/// The canonical (id, samples) set of a plan's non-empty microbatches —
+/// ids assigned in (device asc, slot asc) order over every slot, the
+/// fold-key contract of `balance::dispatch`.
+fn nonempty_micros(plan: &Plan) -> Vec<(u64, Vec<usize>)> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for row in &plan.micro {
+        for m in row {
+            if !m.is_empty() {
+                out.push((id, m.clone()));
+            }
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Every chunk planned exactly once, as a singleton micro, with its
+/// parent gone — and the work queue serves exactly the plan's micros
+/// (ids canonical) under any pull interleaving. Random corpora, random
+/// worlds, both modes.
+#[test]
+fn chunks_planned_and_dispatched_exactly_once() {
+    check(
+        "seqsplit-exactly-once",
+        60,
+        |r| (vec_of(r, 1, 32, |r| r.below(60_000) as usize), r.below(1_000) as usize),
+        |(raw_lens, raw)| {
+            if raw_lens.is_empty() {
+                return Ok(());
+            }
+            let lens: Vec<usize> = raw_lens.iter().map(|&v| 16 + v % 50_000).collect();
+            let world = 2 + raw % 7;
+            let mode = if raw % 2 == 0 { SplitMode::Ring } else { SplitMode::Zigzag };
+            let (plans, split) = split_plans(&lens, world, 2, 0.4, mode, 0xA11CE);
+
+            let mut seen = vec![0usize; lens.len() + split.n_chunks()];
+            for plan in &plans {
+                for row in &plan.micro {
+                    for micro in row {
+                        if micro.len() > 1 && micro.iter().any(|&i| split.is_chunk(i)) {
+                            return Err(format!("chunk co-packed with another sample: {micro:?}"));
+                        }
+                        for &i in micro {
+                            seen[i] += 1;
+                        }
+                    }
+                }
+            }
+            let split_parents: Vec<usize> = split.iter().map(|c| c.parent).collect();
+            for (i, &n) in seen.iter().enumerate() {
+                let want = if split_parents.contains(&i) { 0 } else { 1 };
+                if n != want {
+                    return Err(format!("id {i} planned {n} times, want {want} (base {})", split.base()));
+                }
+            }
+            // token conservation: each split parent's chunks cover it
+            for &p in &split_parents {
+                let toks: usize =
+                    split.iter().filter(|c| c.parent == p).map(|c| c.len).sum();
+                if toks != lens[p] {
+                    return Err(format!("parent {p}: chunks cover {toks} of {} tokens", lens[p]));
+                }
+            }
+
+            // dispatch level: the queue serves exactly the plan's
+            // non-empty micros, ids canonical, each exactly once
+            for plan in &plans {
+                let mut want = nonempty_micros(plan);
+                let q = WorkQueue::new_split(plan, &lens, &cost(), &split);
+                let mut got = Vec::new();
+                let mut dev = 0usize;
+                while let Some(a) = q.next_micro(dev) {
+                    got.push((a.id, a.samples.to_vec()));
+                    dev = (dev + 1) % world;
+                }
+                got.sort();
+                want.sort();
+                if got != want {
+                    return Err(format!("queue served {got:?}, plan holds {want:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// THE acceptance property: on a corpus where one sequence dominates
+/// the minibatch (>= 40% of its tokens — here far more in cost, since
+/// cost grows quadratically), splitting strictly beats not splitting,
+/// for both the queue makespan (the shared kernel) and the static
+/// LB-Mini bubble total, at every world >= 4 and in both modes.
+#[test]
+fn split_strictly_beats_unsplit_on_dominant_corpus() {
+    check(
+        "seqsplit-dominant-strict-improvement",
+        40,
+        |r| (vec_of(r, 3, 7, |r| r.below(4_096) as usize), r.below(1_000) as usize),
+        |(raw_rest, raw)| {
+            if raw_rest.is_empty() {
+                return Ok(());
+            }
+            let world = 4 + raw % 5;
+            let mode = if raw % 2 == 0 { SplitMode::Ring } else { SplitMode::Zigzag };
+            let mut lens: Vec<usize> = raw_rest.iter().map(|&v| 256 + v % 3_584).collect();
+            lens.push(MAX_TOKENS); // the dominant straggler
+            let c = cost();
+
+            let (unsplit, empty) = split_plans(&lens, world, 2, 0.0, mode, 9);
+            let (splitp, map) = split_plans(&lens, world, 2, 0.5, mode, 9);
+            if !empty.is_empty() {
+                return Err("frac 0 must not split".into());
+            }
+            if map.is_empty() {
+                return Err("the dominant sequence must split".into());
+            }
+            if unsplit.len() != 1 || splitp.len() != 1 {
+                return Err("corpus must fit one minibatch".into());
+            }
+
+            let makespan = |plan: &Plan, split: &SplitMap| -> f64 {
+                queue_busy_split(plan, &lens, &c, split, |f, _| f)
+                    .into_iter()
+                    .fold(0.0, f64::max)
+            };
+            let mu = makespan(&unsplit[0], &empty);
+            let ms = makespan(&splitp[0], &map);
+            if !(ms < mu) {
+                return Err(format!("queue makespan: split {ms} !< unsplit {mu} (world {world}, {mode})"));
+            }
+            // unsplit can never beat the straggler's own cost; split must
+            if mu < c.sample_cost(MAX_TOKENS) {
+                return Err("unsplit makespan fell below the straggler cost".into());
+            }
+            if !(ms < c.sample_cost(MAX_TOKENS)) {
+                return Err(format!("split makespan {ms} still floored by the straggler"));
+            }
+
+            // static LB-Mini story, through the bubble estimator
+            let bu = estimate_bubble_dispatch_split(&unsplit[0], &lens, &c, CommScheme::Odc, &[], false, &empty);
+            let bs = estimate_bubble_dispatch_split(&splitp[0], &lens, &c, CommScheme::Odc, &[], false, &map);
+            if !(bs.total < bu.total) {
+                return Err(format!("static total: split {} !< unsplit {}", bs.total, bu.total));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Split plans are a pure function of (corpus, world, frac, mode, seed):
+/// two invocations agree bit for bit, plans and map both.
+#[test]
+fn split_plans_deterministic_for_fixed_seed() {
+    check(
+        "seqsplit-deterministic",
+        40,
+        |r| (vec_of(r, 1, 24, |r| r.below(60_000) as usize), r.below(1_000) as usize),
+        |(raw_lens, raw)| {
+            if raw_lens.is_empty() {
+                return Ok(());
+            }
+            let lens: Vec<usize> = raw_lens.iter().map(|&v| 16 + v % 50_000).collect();
+            let world = 2 + raw % 7;
+            let mode = if raw % 2 == 0 { SplitMode::Ring } else { SplitMode::Zigzag };
+            let a = split_plans(&lens, world, 2, 0.5, mode, 0xFEED);
+            let b = split_plans(&lens, world, 2, 0.5, mode, 0xFEED);
+            if a != b {
+                return Err("same seed, different (plans, map)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A corpus with no over-budget sequence splits nothing: empty map, and
+/// the plans are BIT-identical to the seed (frac 0) path — uniform
+/// minibatches whose members all sit at exactly the balanced share.
+#[test]
+fn no_split_when_everything_fits_budget() {
+    check(
+        "seqsplit-under-budget-is-seed",
+        40,
+        |r| (r.below(4_096) as usize, r.below(4) as usize),
+        |&(len_raw, n_raw)| {
+            let world = 4;
+            let minibs = 2;
+            let len = 64 + len_raw % 4_096;
+            // full minibatches only: a partial trailing minibatch could
+            // legitimately split (one sample CAN dominate a short one)
+            let n = world * minibs * (1 + n_raw % 4);
+            let lens = vec![len; n];
+            let (with_knob, map) = split_plans(&lens, world, minibs, 0.75, SplitMode::Zigzag, 3);
+            let (seed, _) = split_plans(&lens, world, minibs, 0.0, SplitMode::Zigzag, 3);
+            if !map.is_empty() {
+                return Err(format!("{} chunks from an under-budget corpus", map.n_chunks()));
+            }
+            if with_knob != seed {
+                return Err("under-budget plans must be bit-identical to the seed path".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The shared-kernel regression (satellite of docs/seqsplit.md §sim):
+/// bubble and timeline price split queue dispatch through the one
+/// `queue_busy_split` kernel, so on a comm-free topology the timeline's
+/// per-device busy seconds ARE the bubble kernel's FLOPs through
+/// `CostModel::seconds` — and on a real topology the rendezvous
+/// epilogue lands on the wall, never on per-device busy.
+#[test]
+fn bubble_and_timeline_agree_under_splitting() {
+    let mut lens = vec![2_048usize; 7];
+    lens.push(MAX_TOKENS); // dominant straggler: the split actually fires
+    let c = cost();
+    let world = 4;
+    let (plans, split) = split_plans(&lens, world, 2, 0.5, SplitMode::Zigzag, 7);
+    assert!(!split.is_empty(), "the dominant corpus must split");
+
+    // comm-free topology: every slot is compute-bound, epilogue free
+    let free = Topology {
+        devices: world,
+        devices_per_node: world,
+        intra_bw: f64::INFINITY,
+        inter_bw: f64::INFINITY,
+        latency: 0.0,
+    };
+    for plan in &plans {
+        let b = estimate_bubble_dispatch_split(plan, &lens, &c, CommScheme::Odc, &[], true, &split);
+        let t = time_minibatch_dispatch_split(
+            plan,
+            &lens,
+            PaperModel::M1_5B,
+            &c,
+            CommScheme::Odc,
+            Sharding::Full,
+            &free,
+            false,
+            &[],
+            true,
+            &split,
+        );
+        for (d, (&flops, &secs)) in b.busy.iter().zip(&t.busy).enumerate() {
+            let want = c.seconds(flops);
+            assert!(
+                (secs - want).abs() <= 1e-9 * want.max(f64::MIN_POSITIVE),
+                "device {d}: timeline busy {secs} vs bubble busy {want} — the kernels drifted"
+            );
+        }
+        let want_wall = c.seconds(b.total);
+        assert!(
+            (t.wall - want_wall).abs() <= 1e-9 * want_wall,
+            "wall {} vs bubble total {want_wall}",
+            t.wall
+        );
+    }
+
+    // paper topology: wall == max(busy) + epilogue EXACTLY (same floats)
+    let paper = Topology::paper(world, world);
+    let ep = seqsplit_reduce_epilogue_s(PaperModel::M1_5B, world, &paper, &split);
+    assert!(ep > 0.0, "a split map must price a rendezvous epilogue");
+    for plan in &plans {
+        let t = time_minibatch_dispatch_split(
+            plan,
+            &lens,
+            PaperModel::M1_5B,
+            &c,
+            CommScheme::Odc,
+            Sharding::Full,
+            &paper,
+            false,
+            &[],
+            true,
+            &split,
+        );
+        let max_busy = t.busy.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(t.wall, max_busy + ep, "the epilogue must land on the wall, not on busy");
+    }
+}

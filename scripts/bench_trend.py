@@ -12,10 +12,15 @@ Tracked metrics (higher is better for all):
   * BENCH_dispatch.json -> chaos.retained_throughput_fraction
         (throughput kept under the fixed lossy fault plan; a drop means
         retry/retransmission pricing got more expensive)
+  * BENCH_dispatch.json -> seqsplit.makespan_reduction_fraction
+        (dominant-corpus makespan fraction SeqSplit shears off; besides
+        the trend comparison it carries an ABSOLUTE floor of
+        SEQSPLIT_FLOOR — splitting must always remove at least 15% of
+        the straggler-pinned makespan, even on a first/seeding run)
 
 Exit codes: 0 = ok (including "no previous record yet" — the first run
-seeds the trajectory), 1 = a metric regressed more than TOLERANCE, or a
-fresh record is missing/measured:false.
+seeds the trajectory), 1 = a metric regressed more than TOLERANCE, fell
+below its absolute floor, or a fresh record is missing/measured:false.
 """
 
 import json
@@ -23,6 +28,7 @@ import os
 import sys
 
 TOLERANCE = 0.15  # 15% relative regression budget
+SEQSPLIT_FLOOR = 0.15  # absolute: split must shear >=15% off the dominant-corpus makespan
 
 
 def load(path):
@@ -58,6 +64,14 @@ def chaos_metric(rec):
         return None
 
 
+def seqsplit_metric(rec):
+    try:
+        v = rec["seqsplit"]["makespan_reduction_fraction"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 def main():
     if len(sys.argv) != 3:
         print("usage: bench_trend.py <prev_dir> <fresh_dir>", file=sys.stderr)
@@ -66,11 +80,12 @@ def main():
     failures = []
 
     checks = [
-        ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric),
-        ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric),
-        ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric),
+        ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric, None),
+        ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric, None),
+        ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric, None),
+        ("BENCH_dispatch.json", "seqsplit makespan reduction fraction", seqsplit_metric, SEQSPLIT_FLOOR),
     ]
-    for fname, label, metric in checks:
+    for fname, label, metric, abs_floor in checks:
         fresh = load(os.path.join(fresh_dir, fname))
         if fresh is None or not fresh.get("measured"):
             failures.append(f"{fname}: fresh record missing or still measured:false")
@@ -78,6 +93,9 @@ def main():
         cur = metric(fresh)
         if cur is None:
             failures.append(f"{fname}: fresh record has no {label} metric")
+            continue
+        if abs_floor is not None and cur < abs_floor:
+            failures.append(f"{label} below absolute floor {abs_floor:.2f}: {cur:.4f}")
             continue
         prev = load(os.path.join(prev_dir, fname))
         if prev is None or not prev.get("measured"):
