@@ -17,7 +17,7 @@
 //!   so CI's bench smoke gate can always run it.
 
 use odc::comm::topology::Topology;
-use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::report::{pct_delta, Table};
 use odc::sim::run::{simulate, SimConfig};
@@ -107,11 +107,12 @@ fn engine_mode() {
         c.devices_per_node = dpn;
         c
     };
-    let mean_wall = |cfg: &TrainerConfig| -> Option<f64> {
+    // (mean step wall, measured wire bytes, measured fold seconds)
+    let mean_wall = |cfg: &TrainerConfig| -> Option<(f64, u64, f64)> {
         match train(cfg) {
             Ok(r) => {
                 let n = r.logs.len().max(1);
-                Some(r.logs.iter().map(|l| l.wall_s).sum::<f64>() / n as f64)
+                Some((r.logs.iter().map(|l| l.wall_s).sum::<f64>() / n as f64, r.wire_bytes, r.fold_s))
             }
             Err(e) => {
                 println!("fig12 --engine: real engine unavailable ({e}); skipping.");
@@ -120,24 +121,33 @@ fn engine_mode() {
         }
     };
     println!("== Fig 12 --engine: real trainer on tiny preset (world={world}) ==\n");
-    let mut t = Table::new(&["backend", "mean step wall (ms)"]);
+    let mut t = Table::new(&["backend", "mean step wall (ms)", "wire KiB", "fold ms"]);
     let mut odc_wall = None;
     let mut hybrid_wall = None;
-    for (name, scheme, bal, dpn) in [
-        ("collective LB-Micro", CommScheme::Collective, Balancer::LbMicro, 0),
-        ("odc LB-Mini", CommScheme::Odc, Balancer::LbMini, 0),
-        ("hybrid LB-Mini (2 groups)", CommScheme::Hybrid, Balancer::LbMini, devices_per_node),
+    for (name, scheme, bal, dpn, wire) in [
+        ("collective LB-Micro", CommScheme::Collective, Balancer::LbMicro, 0, WireDtype::F32),
+        ("odc LB-Mini", CommScheme::Odc, Balancer::LbMini, 0, WireDtype::F32),
+        ("odc LB-Mini (bf16 wire)", CommScheme::Odc, Balancer::LbMini, 0, WireDtype::Bf16),
+        ("hybrid LB-Mini (2 groups)", CommScheme::Hybrid, Balancer::LbMini, devices_per_node, WireDtype::F32),
     ] {
-        let Some(w) = mean_wall(&mk(scheme, bal, dpn)) else { return };
-        if scheme == CommScheme::Odc {
+        let mut cfg = mk(scheme, bal, dpn);
+        cfg.wire_dtype = wire;
+        let Some((w, wire_bytes, fold_s)) = mean_wall(&cfg) else { return };
+        if scheme == CommScheme::Odc && wire == WireDtype::F32 {
             odc_wall = Some(w);
         }
         if scheme == CommScheme::Hybrid {
             hybrid_wall = Some(w);
         }
-        t.row(vec![name.to_string(), format!("{:.3}", w * 1e3)]);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}", w * 1e3),
+            format!("{:.1}", wire_bytes as f64 / 1024.0),
+            format!("{:.3}", fold_s * 1e3),
+        ]);
     }
     println!("{}", t.markdown());
+    println!("(bf16 wire halves the pushed KiB of the odc row above — the FastFold payload knob)");
 
     // Predicted: the analytic model over a paper-shaped topology with
     // this run's device/group counts and the tiny model's actual

@@ -1,0 +1,136 @@
+//! FastFold kernel benchmark: chunk-parallel fold throughput and bf16
+//! wire payload reduction, with machine-readable output.
+//!
+//! Two measurements:
+//!
+//! * `fold.gbps` — throughput of `comm::fold::fold_pieces` over the
+//!   world-4 bench shape (8 pieces × 8 MiB accumulator): source bytes
+//!   folded per second, scalar (threads=1) vs chunk-parallel. The
+//!   chunked kernel is bit-identical to the scalar one at any thread
+//!   count (see `tests/fold_prop.rs`), so this is a pure-speed knob.
+//! * `wire.bytes_reduction_fraction` — measured pushed-byte reduction
+//!   of `WireDtype::Bf16` vs `WireDtype::F32` on a real `OdcComm`
+//!   schedule, read back from `hotpath_stats().wire_bytes` (not
+//!   computed from the dtype widths — the counter sits after the
+//!   encoder, so a payload regression shows up here).
+//!
+//! MERGES its `fold` / `wire` sections into `BENCH_hotpath.json` rather
+//! than rewriting it: run AFTER `--bench comm_path`, which writes the
+//! file wholesale. ODC_BENCH_ITERS scales sampling.
+
+use odc::comm::backend::{CommBackend, ParamStore};
+use odc::comm::{fold, FoldPiece, Membership, OdcComm, PieceData, WireDtype};
+use odc::util::bench::Bencher;
+use odc::util::json::Json;
+use std::sync::Arc;
+
+/// 8 MiB f32 accumulator — large enough that the parallel path engages
+/// (`len >= 2 * CHUNK_ELEMS`) and spans many chunk boundaries.
+const ACC_ELEMS: usize = 1 << 21;
+/// World-4 bench shape: 2 microbatches from each of 4 clients.
+const PIECES: usize = 8;
+const PAR_THREADS: usize = 4;
+
+/// Run a tiny but complete ODC minibatch (4 devices, 2 micros each,
+/// 3 layers) under `wire` and return the measured pushed wire bytes.
+fn pushed_bytes(wire: WireDtype) -> u64 {
+    const WORLD: usize = 4;
+    const LAYERS: [usize; 3] = [1 << 16, 1 << 15, 1 << 15];
+    let params = Arc::new(ParamStore::new(&LAYERS, WORLD));
+    let comm = Arc::new(OdcComm::with_wire(
+        Arc::clone(&params),
+        Arc::new(Membership::all_live(WORLD)),
+        wire,
+    ));
+    std::thread::scope(|s| {
+        for dev in 0..WORLD {
+            let comm = Arc::clone(&comm);
+            let params = Arc::clone(&params);
+            s.spawn(move || {
+                let grad = vec![0.5f32; params.max_padded_len()];
+                let mut gshard =
+                    vec![0.0f32; params.layers.iter().map(|p| p.shard_len).max().unwrap()];
+                for micro in 0..2u64 {
+                    for l in 0..params.n_layers() {
+                        comm.reduce_grad(dev, l, &grad[..params.layers[l].padded_len()], 1.0, micro);
+                    }
+                }
+                comm.end_minibatch(dev);
+                for l in 0..params.n_layers() {
+                    comm.take_grad_shard(dev, l, &mut gshard[..params.layers[l].shard_len]);
+                }
+                comm.end_step(dev);
+            });
+        }
+    });
+    comm.hotpath_stats().wire_bytes
+}
+
+fn main() {
+    let b = Bencher::default();
+    println!("== fold-kernel benchmark: chunk-parallel fold + bf16 wire reduction ==");
+    println!("   acc_elems={ACC_ELEMS} pieces={PIECES} threads={PAR_THREADS}\n");
+
+    // ---- fold throughput: scalar vs chunk-parallel -----------------------
+    let sources: Vec<Vec<f32>> = (0..PIECES)
+        .map(|p| (0..ACC_ELEMS).map(|i| ((i + p) % 17) as f32 * 0.25 - 2.0).collect())
+        .collect();
+    let pieces: Vec<FoldPiece> =
+        sources.iter().map(|s| FoldPiece { weight: 0.5, data: PieceData::F32(s) }).collect();
+    let mut acc = vec![0.0f32; ACC_ELEMS];
+    let r_scalar =
+        b.run("fold_scalar_8x8MiB", || fold::fold_pieces(&mut acc, &pieces, 1));
+    let r_par = b.run("fold_parallel_8x8MiB", || {
+        fold::fold_pieces(&mut acc, &pieces, PAR_THREADS)
+    });
+
+    let src_bytes = (PIECES * ACC_ELEMS * 4) as f64;
+    let scalar_gbps = src_bytes / r_scalar.mean_ns; // bytes/ns == GB/s
+    let par_gbps = src_bytes / r_par.mean_ns;
+    let speedup = r_scalar.mean_ns / r_par.mean_ns;
+    println!(
+        "\n  fold throughput: scalar {scalar_gbps:.2} GB/s  ->  parallel {par_gbps:.2} GB/s  ({speedup:.2}x, {PAR_THREADS} threads)"
+    );
+
+    // ---- wire payload reduction: bf16 vs f32 -----------------------------
+    let f32_bytes = pushed_bytes(WireDtype::F32);
+    let bf16_bytes = pushed_bytes(WireDtype::Bf16);
+    assert!(f32_bytes > 0, "the schedule must push something");
+    let reduction = 1.0 - bf16_bytes as f64 / f32_bytes as f64;
+    println!(
+        "  wire payloads: f32 {f32_bytes} B  ->  bf16 {bf16_bytes} B  ({:.1}% reduction)",
+        reduction * 100.0
+    );
+
+    // ---- merge into the shared hot-path record ---------------------------
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::Obj(Default::default()));
+    let Json::Obj(m) = &mut root else { panic!("{path} is not a JSON object") };
+    m.entry("measured".to_string()).or_insert(Json::Bool(true));
+    m.insert(
+        "fold".to_string(),
+        Json::obj(vec![
+            ("gbps", Json::num(par_gbps)),
+            ("scalar_gbps", Json::num(scalar_gbps)),
+            ("parallel_speedup", Json::num(speedup)),
+            ("threads", Json::num(PAR_THREADS as f64)),
+            ("acc_elems", Json::num(ACC_ELEMS as f64)),
+            ("pieces", Json::num(PIECES as f64)),
+            ("generated_by", Json::str("cargo bench --bench fold_kernel")),
+        ]),
+    );
+    m.insert(
+        "wire".to_string(),
+        Json::obj(vec![
+            ("bytes_reduction_fraction", Json::num(reduction)),
+            ("f32_bytes", Json::num(f32_bytes as f64)),
+            ("bf16_bytes", Json::num(bf16_bytes as f64)),
+            ("generated_by", Json::str("cargo bench --bench fold_kernel")),
+        ]),
+    );
+    std::fs::write(path, root.dump() + "\n").expect("writing BENCH_hotpath.json");
+    println!("\n  merged fold/wire sections into {path}");
+}

@@ -13,9 +13,13 @@
 //!   clients (the paper's point: per-client buffers make concurrent
 //!   pushes independent);
 //! * slots are preallocated per layer at that layer's `shard_range`
-//!   length (plus one max-sized spare for daemon lag), so `acquire` is
-//!   a best-fit pick over ~layers+1 uncontended entries +
-//!   `extend_from_slice`, never a heap allocation in steady state;
+//!   WIRE length in bytes (plus one max-sized spare for daemon lag), so
+//!   `acquire` is a best-fit pick over ~layers+1 uncontended entries +
+//!   `extend_from_slice`, never a heap allocation in steady state.
+//!   Arenas pool raw encoded bytes (`Vec<u8>`) rather than f32s: under
+//!   `WireDtype::Bf16` the resident payload memory genuinely halves,
+//!   and the pool is dtype-agnostic — callers size capacities via
+//!   `WireDtype::bytes_for`;
 //! * in-flight payloads per pair are bounded by one minibatch's pushes
 //!   (`end_minibatch` fully drains every daemon before any device can
 //!   start the next minibatch), so the arena stops growing after
@@ -48,15 +52,15 @@ impl ArenaStats {
 /// A preallocated payload buffer pool owned by one (server, client) pair.
 pub struct PayloadArena {
     /// Free buffers, heterogeneous capacities (one per layer + spares).
-    slots: Mutex<Vec<Vec<f32>>>,
+    slots: Mutex<Vec<Vec<u8>>>,
     acquires: AtomicU64,
     fresh_allocs: AtomicU64,
 }
 
 impl PayloadArena {
-    /// Arena preallocating one empty buffer per entry of `caps` (f32
-    /// capacities) — callers pass one shard length per layer plus any
-    /// headroom spares.
+    /// Arena preallocating one empty buffer per entry of `caps` (BYTE
+    /// capacities) — callers pass one encoded shard length per layer
+    /// plus any headroom spares.
     pub fn new(caps: &[usize]) -> Self {
         PayloadArena {
             slots: Mutex::new(caps.iter().map(|&c| Vec::with_capacity(c)).collect()),
@@ -65,12 +69,12 @@ impl PayloadArena {
         }
     }
 
-    /// Take an EMPTY buffer with capacity for at least `len` elements —
+    /// Take an EMPTY buffer with capacity for at least `len` bytes —
     /// best fit, so a small request never consumes a large layer's slot
     /// — and let the caller fill it with `extend_from_slice` (no
     /// zero-fill, no reallocation). Falls back to a fresh allocation
     /// (counted) only when no slot fits.
-    pub fn acquire(&self, len: usize) -> Vec<f32> {
+    pub fn acquire(&self, len: usize) -> Vec<u8> {
         self.acquires.fetch_add(1, Ordering::Relaxed);
         let mut slots = self.slots.lock().unwrap();
         let best = slots
@@ -92,7 +96,7 @@ impl PayloadArena {
 
     /// Return a consumed buffer (daemon side). Never shrinks; the arena
     /// grows to the historical in-flight maximum and then stays flat.
-    pub fn release(&self, buf: Vec<f32>) {
+    pub fn release(&self, buf: Vec<u8>) {
         self.slots.lock().unwrap().push(buf);
     }
 
@@ -176,7 +180,7 @@ mod tests {
         for _ in 0..100 {
             let mut b1 = a.acquire(64);
             let b2 = a.acquire(16);
-            b1.extend_from_slice(&[1.0; 64]);
+            b1.extend_from_slice(&[1u8; 64]);
             a.release(b1);
             a.release(b2);
         }
@@ -249,7 +253,7 @@ mod tests {
         let mut b = a.acquire(10);
         assert!(b.is_empty());
         assert!(b.capacity() >= 32);
-        b.extend_from_slice(&[2.0; 10]);
+        b.extend_from_slice(&[2u8; 10]);
         let ptr = b.as_ptr();
         a.release(b);
         // round-trips reuse the same allocation

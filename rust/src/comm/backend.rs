@@ -25,6 +25,21 @@ use super::shared::ShardedParam;
 use super::transport::FaultStats;
 use std::sync::Arc;
 
+/// FastFold hot-path counters: cumulative bytes pushed over the wire
+/// (post-encoding, so `WireDtype::Bf16` shows the real halving) and
+/// cumulative nanoseconds spent inside the daemon-side fold kernels.
+/// Zero on backends without an explicit wire/fold stage (`Collective`
+/// folds synchronously inside its rendezvous and is not instrumented).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HotpathStats {
+    /// Encoded payload bytes pushed by `reduce_grad`/`reduce_grad_seq`
+    /// (and the hybrid cross-group epilogue).
+    pub wire_bytes: u64,
+    /// Wall nanoseconds spent in flush-time fold kernels across all
+    /// daemon threads (sums over threads, so it can exceed wall time).
+    pub fold_ns: u64,
+}
+
 /// Parameter store shared by engine and backends: one sharded flat
 /// vector per layer (layer 0 = embedding, 1..=L = blocks).
 ///
@@ -230,5 +245,14 @@ pub trait CommBackend: Send + Sync {
     /// link escalations) accumulated so far. Zero on reliable transports.
     fn fault_stats(&self) -> FaultStats {
         FaultStats::default()
+    }
+
+    // ---- FastFold hooks (see `comm::fold`) -----------------------------
+
+    /// Hot-path counters (encoded wire bytes, fold kernel time)
+    /// accumulated so far. Zero on backends without an explicit
+    /// wire/fold stage.
+    fn hotpath_stats(&self) -> HotpathStats {
+        HotpathStats::default()
     }
 }

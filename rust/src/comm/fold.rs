@@ -1,0 +1,474 @@
+//! FastFold — the shared weighted-accumulate kernels of the reduction
+//! hot path, plus the wire-precision (bf16) payload codecs.
+//!
+//! Every one-sided backend folds buffered gradient pieces into an f32
+//! master accumulator in a deterministic key order (micro asc, client
+//! asc — see `comm/odc.rs` / `comm/hybrid.rs`). Before this module each
+//! fold site carried its own scalar `for` loop and every payload crossed
+//! the wire as full f32. This module centralizes:
+//!
+//! * **Fold kernels** — [`fold_pieces`] folds a sorted piece list into
+//!   an accumulator either with one auto-vectorizable chunked scalar
+//!   pass or chunk-parallel over [`crate::util::threadpool::scoped_map`].
+//!   Parallelism splits the accumulator's ELEMENT RANGE into fixed
+//!   [`CHUNK_ELEMS`]-aligned spans; every worker folds ALL pieces in the
+//!   caller's order over its own span, so the per-element float
+//!   bracketing is identical to the scalar pass at ANY thread count or
+//!   chunk boundary — bit-identity is by construction, not by test.
+//! * **Wire precision** — [`WireDtype`] selects the payload element
+//!   encoding. `F32` round-trips bit-exactly; `Bf16` halves the bytes
+//!   with round-to-nearest-even truncation and an optional per-shard
+//!   error-feedback residual ([`encode_ef`]): the quantization error of
+//!   each push is carried into the next push of the same shard, so
+//!   compression error stays bounded instead of accumulating across
+//!   steps (see `docs/wire_precision.md` for the math and the
+//!   determinism scope table).
+//! * **Bulk byte casts** — [`f32_from_le_bytes`] / [`f32_to_le_bytes`],
+//!   the memcpy-shaped decode the manifest loader and the F32 wire
+//!   encoding share (the seed's per-element `chunks_exact(4)` decode was
+//!   a measurable startup cost on multi-MiB init blobs).
+
+use crate::util::threadpool::scoped_map;
+use std::fmt;
+
+/// Payload element encoding on the wire (gradient pushes). Parameters
+/// themselves are always exchanged as f32 values; only the PRICED byte
+/// volume of gathers follows the dtype (the sim has always modeled bf16
+/// parameter bytes — `WireDtype` makes that assumption explicit and
+/// configurable).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WireDtype {
+    /// 4 bytes/element, bit-exact round trip (the engine default: every
+    /// equivalence suite stays bit-identical to the oracle).
+    #[default]
+    F32,
+    /// 2 bytes/element, round-to-nearest-even truncation + error
+    /// feedback (the sim's historical pricing assumption).
+    Bf16,
+}
+
+impl WireDtype {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WireDtype::F32 => 4,
+            WireDtype::Bf16 => 2,
+        }
+    }
+
+    /// Wire bytes for `elems` elements under this encoding.
+    pub fn bytes_for(self, elems: usize) -> usize {
+        elems * self.bytes_per_elem()
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(WireDtype::F32),
+            "bf16" | "bfloat16" => Some(WireDtype::Bf16),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for WireDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", match self {
+            WireDtype::F32 => "f32",
+            WireDtype::Bf16 => "bf16",
+        })
+    }
+}
+
+/// Fixed chunk size (elements) of the parallel fold split. The value is
+/// a constant — NOT derived from thread count — so the span boundaries
+/// are deterministic; 8K f32 = 32 KiB per chunk keeps a span inside L1/L2
+/// while amortizing the spawn cost.
+pub const CHUNK_ELEMS: usize = 8192;
+
+/// One gradient piece awaiting the fold, in whatever representation it
+/// arrived: decoded f32 (a reconstituted per-sequence fold) or raw wire
+/// bytes (the common case — decode happens fused into the accumulate,
+/// never into a temporary).
+#[derive(Clone, Copy)]
+pub enum PieceData<'a> {
+    F32(&'a [f32]),
+    Wire(&'a [u8], WireDtype),
+}
+
+impl PieceData<'_> {
+    pub fn elems(&self) -> usize {
+        match self {
+            PieceData::F32(v) => v.len(),
+            PieceData::Wire(b, dt) => b.len() / dt.bytes_per_elem(),
+        }
+    }
+}
+
+/// A weighted piece for [`fold_pieces`].
+#[derive(Clone, Copy)]
+pub struct FoldPiece<'a> {
+    pub weight: f32,
+    pub data: PieceData<'a>,
+}
+
+/// The scalar inner kernel: `dst[i] += weight * src[i]`. Kept as a bare
+/// slice loop with no bounds checks in the body so LLVM auto-vectorizes
+/// it (the zip iterator erases the per-index checks).
+#[inline]
+pub fn axpy(dst: &mut [f32], src: &[f32], weight: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += weight * s;
+    }
+}
+
+/// Decode-fused accumulate of LE f32 wire bytes: `dst[i] += w * le(src)`.
+#[inline]
+fn axpy_f32_bytes(dst: &mut [f32], src: &[u8], weight: f32) {
+    debug_assert_eq!(dst.len() * 4, src.len());
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *d += weight * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+/// Decode-fused accumulate of LE bf16 wire bytes. bf16 is the upper 16
+/// bits of the f32 pattern, so decode is a single shift — the loop stays
+/// vectorizable.
+#[inline]
+fn axpy_bf16_bytes(dst: &mut [f32], src: &[u8], weight: f32) {
+    debug_assert_eq!(dst.len() * 2, src.len());
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        let bits = (u16::from_le_bytes([c[0], c[1]]) as u32) << 16;
+        *d += weight * f32::from_bits(bits);
+    }
+}
+
+/// Fold one piece's sub-range `[lo, lo + acc.len())` into `acc`. A piece
+/// shorter than the accumulator (trailing-shard padding) contributes
+/// only its overlap.
+#[inline]
+fn fold_piece_range(acc: &mut [f32], lo: usize, piece: &FoldPiece) {
+    let n = piece.data.elems();
+    if lo >= n {
+        return;
+    }
+    let hi = (lo + acc.len()).min(n);
+    let acc = &mut acc[..hi - lo];
+    match piece.data {
+        PieceData::F32(v) => axpy(acc, &v[lo..hi], piece.weight),
+        PieceData::Wire(b, WireDtype::F32) => axpy_f32_bytes(acc, &b[lo * 4..hi * 4], piece.weight),
+        PieceData::Wire(b, WireDtype::Bf16) => axpy_bf16_bytes(acc, &b[lo * 2..hi * 2], piece.weight),
+    }
+}
+
+/// Fold `pieces` (already sorted in the caller's deterministic key
+/// order) into `acc`, scalar or chunk-parallel.
+///
+/// `threads <= 1` — or a fold too small to amortize a spawn — runs the
+/// single chunked scalar pass. Otherwise the accumulator is split into
+/// `threads` contiguous spans aligned to [`CHUNK_ELEMS`]; each worker
+/// folds EVERY piece, in order, over its own span. Per element the
+/// accumulation sequence is identical to the scalar pass, so the result
+/// is bit-identical at any thread count (asserted by
+/// `tests/fold_prop.rs` across boundaries and counts).
+pub fn fold_pieces(acc: &mut [f32], pieces: &[FoldPiece], threads: usize) {
+    if pieces.is_empty() {
+        return;
+    }
+    let len = acc.len();
+    if threads <= 1 || len < 2 * CHUNK_ELEMS {
+        for p in pieces {
+            fold_piece_range(acc, 0, p);
+        }
+        return;
+    }
+    // Span length: ceil-even split, rounded UP to a chunk boundary so
+    // span edges are independent of `threads`-vs-`len` remainders.
+    let chunks = len.div_ceil(CHUNK_ELEMS);
+    let span = chunks.div_ceil(threads) * CHUNK_ELEMS;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+    for (i, sub) in acc.chunks_mut(span).enumerate() {
+        let lo = i * span;
+        jobs.push(Box::new(move || {
+            for p in pieces {
+                fold_piece_range(sub, lo, p);
+            }
+        }));
+    }
+    let workers = jobs.len();
+    scoped_map(workers, jobs);
+}
+
+/// Round-to-nearest-even truncation of an f32 to the bf16 bit pattern
+/// (upper 16 bits). NaN payload bits are forced non-zero so a NaN never
+/// rounds into an infinity.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Exact bf16 → f32 widening (every bf16 value is representable).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode `src` into `dst` (appended) under `dtype`, WITHOUT error
+/// feedback. `F32` is the exact LE byte image of the slice.
+pub fn encode(dst: &mut Vec<u8>, src: &[f32], dtype: WireDtype) {
+    match dtype {
+        WireDtype::F32 => f32_to_le_bytes(dst, src),
+        WireDtype::Bf16 => {
+            dst.reserve(src.len() * 2);
+            for &x in src {
+                dst.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Encode `src` into `dst` (appended) with per-element error feedback:
+/// each element is quantized as `q = enc(src[i] + residual[i])` and the
+/// quantization error `(src[i] + residual[i]) - dec(q)` is written back
+/// into `residual[i]` for the NEXT push of the same shard. Under `F32`
+/// the encoding is exact, so the residual is untouched (it stays zero)
+/// and the byte image equals [`encode`]'s.
+pub fn encode_ef(dst: &mut Vec<u8>, src: &[f32], residual: &mut [f32], dtype: WireDtype) {
+    match dtype {
+        WireDtype::F32 => f32_to_le_bytes(dst, src),
+        WireDtype::Bf16 => {
+            debug_assert_eq!(src.len(), residual.len());
+            dst.reserve(src.len() * 2);
+            for (&x, r) in src.iter().zip(residual.iter_mut()) {
+                let v = x + *r;
+                let q = f32_to_bf16(v);
+                *r = v - bf16_to_f32(q);
+                dst.extend_from_slice(&q.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode a wire payload back into f32s (tests and the per-sequence
+/// fold's reconstitution path; the hot micro fold never materializes
+/// this — it decodes fused into the accumulate).
+pub fn decode(bytes: &[u8], dtype: WireDtype) -> Vec<f32> {
+    match dtype {
+        WireDtype::F32 => f32_from_le_bytes(bytes),
+        WireDtype::Bf16 => bytes
+            .chunks_exact(2)
+            .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+    }
+}
+
+/// Bulk LE-byte → f32 decode: one `memcpy` into the target allocation
+/// on little-endian hosts (a per-element byte-swap pass elsewhere),
+/// replacing per-element `chunks_exact(4)` scalar decodes.
+pub fn f32_from_le_bytes(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 4 == 0, "byte length {} not a multiple of 4", bytes.len());
+    let n = bytes.len() / 4;
+    let mut out = vec![0.0f32; n];
+    // SAFETY: `out` owns n*4 writable bytes; f32 has no invalid bit
+    // patterns; ranges cannot overlap (fresh allocation).
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    #[cfg(target_endian = "big")]
+    for x in &mut out {
+        *x = f32::from_bits(x.to_bits().swap_bytes());
+    }
+    out
+}
+
+/// Bulk f32 → LE-byte append: the encode-side twin of
+/// [`f32_from_le_bytes`].
+pub fn f32_to_le_bytes(dst: &mut Vec<u8>, src: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: reading src as its own byte image; f32 and u8 have no
+        // alignment conflict in this direction.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * 4) };
+        dst.extend_from_slice(bytes);
+    }
+    #[cfg(target_endian = "big")]
+    for &x in src {
+        dst.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Fold worker count: `ODC_FOLD_THREADS` when set (0/1 = scalar), else
+/// a conservative share of the host's parallelism — every device daemon
+/// folds concurrently at the minibatch flush, so each fold taking a
+/// quarter of the cores keeps world-4 runs from oversubscribing.
+pub fn default_fold_threads() -> usize {
+    if let Ok(v) = std::env::var("ODC_FOLD_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| (n.get() / 4).clamp(1, 4)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pieces_of(raw: &[(f32, Vec<f32>)]) -> Vec<(f32, Vec<u8>)> {
+        raw.iter()
+            .map(|(w, v)| {
+                let mut b = Vec::new();
+                encode(&mut b, v, WireDtype::F32);
+                (*w, b)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_fold_bit_identical_to_scalar() {
+        let n = 3 * CHUNK_ELEMS + 17; // deliberately chunk-misaligned
+        let raw: Vec<(f32, Vec<f32>)> = (0..5)
+            .map(|k| {
+                let w = 1.0 + k as f32 * 0.25;
+                let v: Vec<f32> =
+                    (0..n).map(|i| ((i * 31 + k * 7) % 1000) as f32 * 1e-3 - 0.5).collect();
+                (w, v)
+            })
+            .collect();
+        let enc = pieces_of(&raw);
+        let build = |threads: usize| {
+            let pieces: Vec<FoldPiece> = enc
+                .iter()
+                .map(|(w, b)| FoldPiece { weight: *w, data: PieceData::Wire(b, WireDtype::F32) })
+                .collect();
+            let mut acc = vec![0.0f32; n];
+            fold_pieces(&mut acc, &pieces, threads);
+            acc
+        };
+        let scalar = build(1);
+        for threads in [2, 3, 4, 7] {
+            assert_eq!(build(threads), scalar, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn fold_handles_short_pieces() {
+        // A piece shorter than the accumulator (trailing-pad shard)
+        // contributes only its overlap — in scalar and parallel alike.
+        let n = 2 * CHUNK_ELEMS + 5;
+        let short = vec![2.0f32; CHUNK_ELEMS + 3];
+        let full = vec![1.0f32; n];
+        let run = |threads| {
+            let pieces = [
+                FoldPiece { weight: 1.0, data: PieceData::F32(&full) },
+                FoldPiece { weight: 0.5, data: PieceData::F32(&short) },
+            ];
+            let mut acc = vec![0.0f32; n];
+            fold_pieces(&mut acc, &pieces, threads);
+            acc
+        };
+        let a = run(1);
+        assert_eq!(a[0], 2.0);
+        assert_eq!(a[n - 1], 1.0);
+        assert_eq!(run(4), a);
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -2.5, 0.15625, 3.0e38, -1.0e-38] {
+            let q = f32_to_bf16(x);
+            let back = bf16_to_f32(q);
+            assert_eq!(f32_to_bf16(back), q);
+            if x.to_bits() & 0xFFFF == 0 {
+                assert_eq!(back.to_bits(), x.to_bits(), "{x} is exactly representable");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly half-way between bf16(1.0) and the next
+        // value up: RNE picks the even mantissa (1.0).
+        let half_way = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(half_way)), 1.0);
+        // one ULP above half-way rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert!(bf16_to_f32(f32_to_bf16(above)) > 1.0);
+        // NaN stays NaN (payload forced non-zero)
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn error_feedback_carries_quantization_error() {
+        let src = vec![0.1f32; 64];
+        let mut residual = vec![0.0f32; 64];
+        let mut b1 = Vec::new();
+        encode_ef(&mut b1, &src, &mut residual, WireDtype::Bf16);
+        let q1 = decode(&b1, WireDtype::Bf16);
+        // residual holds exactly what the wire lost
+        for i in 0..64 {
+            assert_eq!(residual[i], src[i] - q1[i]);
+        }
+        // the next push re-injects it: cumulative decoded sum tracks the
+        // true sum to within one quantization step
+        let mut sum = q1[0];
+        for _ in 0..20 {
+            let mut b = Vec::new();
+            encode_ef(&mut b, &src, &mut residual, WireDtype::Bf16);
+            sum += decode(&b, WireDtype::Bf16)[0];
+        }
+        let truth = 21.0 * 0.1;
+        assert!((sum - truth).abs() / truth < 1e-2, "EF sum {sum} vs {truth}");
+    }
+
+    #[test]
+    fn f32_wire_is_exact_and_residual_untouched() {
+        let src = vec![0.1f32, -3.7e-5, 1.0e30, -0.0];
+        let mut residual = vec![0.0f32; 4];
+        let mut b = Vec::new();
+        encode_ef(&mut b, &src, &mut residual, WireDtype::F32);
+        assert_eq!(decode(&b, WireDtype::F32), src);
+        assert_eq!(residual, vec![0.0; 4]);
+        assert_eq!(b.len(), WireDtype::F32.bytes_for(4));
+    }
+
+    #[test]
+    fn bulk_byte_cast_roundtrips() {
+        let src: Vec<f32> = (0..1025).map(|i| (i as f32).sin()).collect();
+        let mut bytes = Vec::new();
+        f32_to_le_bytes(&mut bytes, &src);
+        assert_eq!(bytes.len(), src.len() * 4);
+        assert_eq!(f32_from_le_bytes(&bytes), src);
+        // matches the scalar per-element decode bit-for-bit
+        let scalar: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(f32_from_le_bytes(&bytes), scalar);
+    }
+
+    #[test]
+    fn dtype_parse_roundtrip_and_sizes() {
+        for dt in [WireDtype::F32, WireDtype::Bf16] {
+            assert_eq!(WireDtype::parse(&dt.to_string()), Some(dt));
+        }
+        assert_eq!(WireDtype::parse("int8"), None);
+        assert_eq!(WireDtype::F32.bytes_for(10), 40);
+        assert_eq!(WireDtype::Bf16.bytes_for(10), 20);
+        assert_eq!(WireDtype::default(), WireDtype::F32);
+    }
+
+    #[test]
+    fn bf16_wire_halves_the_bytes() {
+        let src = vec![1.0f32; 1000];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        encode(&mut a, &src, WireDtype::F32);
+        encode(&mut b, &src, WireDtype::Bf16);
+        assert_eq!(b.len() * 2, a.len());
+    }
+}

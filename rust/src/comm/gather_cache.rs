@@ -27,6 +27,13 @@
 //! exchange + replica refresh) runs entirely inside the backend and
 //! never routes through this cache — the refresh at `end_step` is
 //! precisely the event `invalidate` accounts for.
+//!
+//! FastFold's streamed gathers build on the same phase immutability: a
+//! prefetch worker may gather layer `l+1` while the device computes
+//! layer `l` and deposit the result via [`GatherCache::adopt_prefetch`];
+//! the bytes are bit-identical to a synchronous gather, and the first
+//! use of a prefetched slot is counted as a miss so [`CacheStats`] are
+//! invariant to whether streaming is on.
 
 use super::backend::{CommBackend, GatherPolicy, ParamStore};
 use std::sync::Arc;
@@ -47,6 +54,12 @@ struct Slot {
     buf: Option<Arc<[f32]>>,
     /// Whether `buf` holds this minibatch's gather of the layer.
     valid: bool,
+    /// `buf` was filled by a prefetch worker ([`GatherCache::adopt_prefetch`])
+    /// and has not been handed out yet. The first `gather` of such a slot
+    /// still counts as a miss — a real backend gather DID happen for that
+    /// request, just early — so [`CacheStats`] stay identical whether
+    /// streaming is on or off.
+    prefetched: bool,
 }
 
 /// Per-device-thread gather cache (single-threaded by construction: each
@@ -75,7 +88,10 @@ impl GatherCache {
         GatherCache {
             dev,
             policy,
-            slots: padded_lens.iter().map(|_| Slot { buf: None, valid: false }).collect(),
+            slots: padded_lens
+                .iter()
+                .map(|_| Slot { buf: None, valid: false, prefetched: false })
+                .collect(),
             padded_lens,
             stats: CacheStats::default(),
         }
@@ -98,7 +114,14 @@ impl GatherCache {
         let enabled = self.policy.cacheable();
         let slot = &mut self.slots[layer];
         if enabled && slot.valid {
-            self.stats.hits += 1;
+            if slot.prefetched {
+                // First use of a streamed gather: the backend gather
+                // happened (in the prefetch worker), so this is a miss.
+                slot.prefetched = false;
+                self.stats.misses += 1;
+            } else {
+                self.stats.hits += 1;
+            }
             return Arc::clone(slot.buf.as_ref().expect("valid slot holds a buffer"));
         }
         // Reuse the slot allocation when uniquely owned; otherwise (a
@@ -118,11 +141,38 @@ impl GatherCache {
         out
     }
 
+    /// Whether a streamed (prefetched) gather of `layer` would be
+    /// adopted right now: caching must be enabled and the slot must not
+    /// already hold this minibatch's bytes. The trainer's prefetch loop
+    /// consults this before posting a request so it never performs a
+    /// backend gather the cache would discard.
+    pub fn wants_prefetch(&self, layer: usize) -> bool {
+        self.policy.cacheable() && !self.slots[layer].valid
+    }
+
+    /// Adopt a gather performed ahead of time by a prefetch worker
+    /// (FastFold streamed gathers). Legal only because params are
+    /// phase-immutable: a prefetch taken any time after `end_step` is
+    /// bit-identical to one taken at use. Ignored (buffer dropped) when
+    /// the slot is already valid or caching is disabled, so racing a
+    /// synchronous gather is harmless.
+    pub fn adopt_prefetch(&mut self, layer: usize, buf: Arc<[f32]>) {
+        if !self.wants_prefetch(layer) {
+            return;
+        }
+        debug_assert_eq!(buf.len(), self.padded_lens[layer]);
+        let slot = &mut self.slots[layer];
+        slot.buf = Some(buf);
+        slot.valid = true;
+        slot.prefetched = true;
+    }
+
     /// Invalidate every slot. Call right after `end_step`: owners have
     /// republished their shards, so cached bytes are stale.
     pub fn invalidate(&mut self) {
         for slot in &mut self.slots {
             slot.valid = false;
+            slot.prefetched = false;
         }
     }
 
@@ -208,6 +258,47 @@ mod tests {
             assert_eq!(cache.enabled(), cached, "{policy:?}");
             assert_eq!(cache.policy(), policy);
         }
+    }
+
+    #[test]
+    fn prefetched_slot_counts_first_use_as_miss_then_hits() {
+        let params = store(&[10], 2);
+        let comm = OdcComm::new(Arc::clone(&params), 2);
+        let mut cache = GatherCache::new(&params, 0, true);
+        assert!(cache.wants_prefetch(0));
+        let mut pre = vec![0.0f32; params.layers[0].padded_len()];
+        comm.gather_params(0, 0, &mut pre);
+        cache.adopt_prefetch(0, pre.clone().into());
+        assert!(!cache.wants_prefetch(0), "valid slot must not re-prefetch");
+        let mut direct = vec![0.0f32; params.layers[0].padded_len()];
+        comm.gather_params(0, 0, &mut direct);
+        for i in 0..3 {
+            let g = cache.gather(&comm, 0);
+            assert_eq!(&g[..], &direct[..], "use {i}");
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "adopted prefetch IS the layer's one real gather");
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.fresh_allocs, 0, "prefetch buffers are allocated by the stream");
+        cache.invalidate();
+        assert!(cache.wants_prefetch(0), "invalidate re-arms prefetching");
+    }
+
+    #[test]
+    fn adopt_is_ignored_when_slot_valid_or_cache_disabled() {
+        let params = store(&[6], 1);
+        let comm = OdcComm::new(Arc::clone(&params), 1);
+        let mut cache = GatherCache::new(&params, 0, true);
+        let first = cache.gather(&comm, 0);
+        cache.adopt_prefetch(0, vec![99.0f32; params.layers[0].padded_len()].into());
+        assert_eq!(&cache.gather(&comm, 0)[..], &first[..], "late prefetch must be dropped");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, fresh_allocs: 1 });
+
+        let mut off = GatherCache::new(&params, 0, false);
+        assert!(!off.wants_prefetch(0));
+        off.adopt_prefetch(0, vec![99.0f32; params.layers[0].padded_len()].into());
+        assert_eq!(&off.gather(&comm, 0)[..], &first[..]);
+        assert_eq!(off.stats().misses, 1, "disabled cache still gathers every call");
     }
 
     #[test]

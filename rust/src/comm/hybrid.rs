@@ -90,7 +90,8 @@
 //! (asserted under adversarial skew in `comm_stress`).
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
-use super::backend::{seq_micro_key, CommBackend, GatherPolicy, ParamStore};
+use super::backend::{seq_micro_key, CommBackend, GatherPolicy, HotpathStats, ParamStore};
+use super::fold::{self, FoldPiece, PieceData, WireDtype};
 use super::membership::{Membership, MembershipBarrier};
 use super::shared::SharedBuf;
 use super::topology::GroupMap;
@@ -98,18 +99,20 @@ use super::transport::{
     FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
     WireMsg,
 };
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 #[derive(Clone)]
 enum Msg {
     /// One super-shard gradient piece for this server's intra-group
     /// shard of `layer`, pushed by group-local `client` for global
-    /// microbatch `micro` (the fold key); `data` returns to the
-    /// (server, client) intra arena once folded.
-    IntraAccum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
+    /// microbatch `micro` (the fold key); `data` is the ENCODED wire
+    /// image (the backend's [`WireDtype`]) and returns to the (server,
+    /// client) intra arena once folded.
+    IntraAccum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<u8> },
     /// A group member (global device id `client`) has finished every
     /// microbatch of the minibatch. The id lets the daemon count the
     /// intra quorum per sender, ignoring a stray Done from a member the
@@ -128,7 +131,7 @@ enum Msg {
     /// into the id-keyed fold under `seq_micro_key(seq)`. Chunks whose
     /// devices sit in DIFFERENT groups meet at the cross level instead
     /// — group partials sum linearly, so the total is exact either way.
-    IntraSeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<f32> },
+    IntraSeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<u8> },
     /// SeqSplit arm of the crash-out compensation: discard the buffered
     /// piece of chunk (`seq`, `chunk`) from group-local `client`.
     IntraSeqRetract { seq: u64, chunk: u32, client: usize },
@@ -136,8 +139,9 @@ enum Msg {
     /// daemon replies once all `group_size` members are done.
     IntraFlush { reply: mpsc::Sender<Vec<Vec<f32>>> },
     /// `group`'s partial sum over this owner's global optimizer shard of
-    /// `layer`; `data` returns to the (owner, group) cross arena.
-    CrossAccum { layer: usize, group: usize, data: Vec<f32> },
+    /// `layer`, encoded under the backend's [`WireDtype`]; `data` returns
+    /// to the (owner, group) cross arena.
+    CrossAccum { layer: usize, group: usize, data: Vec<u8> },
     /// A group's covering member has pushed all its pieces to this owner.
     CrossDone,
     /// The colocated worker asks for the fully-reduced optimizer shards;
@@ -161,11 +165,32 @@ impl WireMsg for Msg {
     }
 
     fn payload_bytes(&self) -> usize {
+        // payloads are already encoded wire bytes, so their length IS
+        // the priced volume — bf16 halves it automatically
         match self {
             Msg::IntraAccum { data, .. }
             | Msg::IntraSeqAccum { data, .. }
-            | Msg::CrossAccum { data, .. } => data.len() * std::mem::size_of::<f32>(),
+            | Msg::CrossAccum { data, .. } => data.len(),
             _ => 0,
+        }
+    }
+}
+
+/// A buffered intra piece's payload: the encoded wire image as pushed
+/// (returns to its pusher's arena after the fold), or an already-decoded
+/// f32 partial reconstituted by the SeqSplit rendezvous (plain heap —
+/// dropped after the fold).
+enum Payload {
+    Wire(Vec<u8>),
+    Folded(Vec<f32>),
+}
+
+impl Payload {
+    /// Borrow as a fold input under the backend's wire encoding.
+    fn piece_data(&self, wire: WireDtype) -> PieceData<'_> {
+        match self {
+            Payload::Wire(b) => PieceData::Wire(b, wire),
+            Payload::Folded(v) => PieceData::F32(v),
         }
     }
 }
@@ -175,7 +200,7 @@ struct IntraPiece {
     micro: u64,
     client: usize,
     weight: f32,
-    data: Vec<f32>,
+    data: Payload,
 }
 
 /// One buffered intra-level SEQUENCE-CHUNK piece (SeqSplit) awaiting its
@@ -186,44 +211,47 @@ struct SeqPiece {
     count: u32,
     client: usize,
     weight: f32,
-    data: Vec<f32>,
+    data: Vec<u8>,
 }
 
 /// SeqSplit's intra-level per-sequence rendezvous, mirroring the ODC
 /// fold exactly: sort by (seq, chunk, client), fold each sequence's
-/// chunks into its first chunk's payload (scaled in place), release the
-/// rest, and hand each reconstituted sequence back as an ordinary
-/// [`IntraPiece`] keyed `seq_micro_key(seq)` with weight 1. Chunks of a
-/// sequence that ran in another group are folded by THAT group's
-/// daemons; the partials meet at the cross level, where group sums add
-/// linearly — exact as a sum, and bit-identical whenever all chunks
-/// share a group (in particular the single-group oracle case).
-fn fold_seq_layer(seqs: &mut Vec<SeqPiece>, arenas: &[Arc<PayloadArena>]) -> Vec<IntraPiece> {
+/// chunks into a fresh f32 accumulator in chunk-index order (decode
+/// fused into the accumulate; every chunk's wire payload returns to its
+/// pusher's arena immediately), and hand each reconstituted sequence
+/// back as an ordinary [`IntraPiece`] keyed `seq_micro_key(seq)` with
+/// weight 1. Chunks of a sequence that ran in another group are folded
+/// by THAT group's daemons; the partials meet at the cross level, where
+/// group sums add linearly — exact as a sum, and bit-identical whenever
+/// all chunks share a group (in particular the single-group oracle
+/// case).
+fn fold_seq_layer(
+    seqs: &mut Vec<SeqPiece>,
+    len: usize,
+    arenas: &[Arc<PayloadArena>],
+    wire: WireDtype,
+) -> Vec<IntraPiece> {
     seqs.sort_by_key(|p| (p.seq, p.chunk, p.client));
     let mut out: Vec<IntraPiece> = Vec::new();
     for p in seqs.drain(..) {
-        match out.last_mut() {
-            Some(last) if last.micro == seq_micro_key(p.seq) => {
-                debug_assert_eq!(last.data.len(), p.data.len());
-                for (x, &g) in last.data.iter_mut().zip(&p.data) {
-                    *x += p.weight * g;
-                }
-                arenas[p.client].release(p.data);
-            }
-            _ => {
-                debug_assert!(p.count >= 2);
-                let mut data = p.data;
-                for x in data.iter_mut() {
-                    *x *= p.weight;
-                }
-                out.push(IntraPiece {
-                    micro: seq_micro_key(p.seq),
-                    client: p.client,
-                    weight: 1.0,
-                    data,
-                });
-            }
+        let key = seq_micro_key(p.seq);
+        if !matches!(out.last(), Some(last) if last.micro == key) {
+            debug_assert!(p.count >= 2);
+            out.push(IntraPiece {
+                micro: key,
+                client: p.client,
+                weight: 1.0,
+                data: Payload::Folded(vec![0.0; len]),
+            });
         }
+        let last = out.last_mut().expect("accumulator just ensured");
+        let acc = match &mut last.data {
+            Payload::Folded(v) => v,
+            Payload::Wire(_) => unreachable!("seq accumulators are always Folded"),
+        };
+        let piece = FoldPiece { weight: p.weight, data: PieceData::Wire(&p.data, wire) };
+        fold::fold_pieces(acc, std::slice::from_ref(&piece), 1);
+        arenas[p.client].release(p.data);
     }
     out
 }
@@ -251,13 +279,18 @@ struct DaemonState {
     pending_seq: Vec<Vec<SeqPiece>>,
     intra_done: usize,
     intra_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
-    /// `[layer][group]` → exactly one partial per minibatch.
-    pending_cross: Vec<Vec<Option<Vec<f32>>>>,
+    /// `[layer][group]` → exactly one encoded partial per minibatch.
+    pending_cross: Vec<Vec<Option<Vec<u8>>>>,
     cross_done: usize,
     cross_flush: Option<mpsc::Sender<Vec<Vec<f32>>>>,
+    /// Payload element encoding on the wire (FastFold).
+    wire: WireDtype,
+    /// Worker count for the chunk-parallel flush folds.
+    fold_threads: usize,
 }
 
 impl DaemonState {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         super_lens: Vec<usize>,
         shard_lens: Vec<usize>,
@@ -265,6 +298,8 @@ impl DaemonState {
         group_start: usize,
         group_size: usize,
         n_groups: usize,
+        wire: WireDtype,
+        fold_threads: usize,
     ) -> Self {
         let n_layers = super_lens.len();
         DaemonState {
@@ -282,6 +317,8 @@ impl DaemonState {
             intra_flush: None,
             cross_done: 0,
             cross_flush: None,
+            wire,
+            fold_threads,
         }
     }
 
@@ -305,37 +342,49 @@ impl DaemonState {
         for (layer, &len) in self.super_lens.iter().enumerate() {
             // SeqSplit rendezvous first: reconstituted sequence partials
             // join the id-keyed fold under their synthetic keys.
-            let folded = fold_seq_layer(&mut self.pending_seq[layer], arenas);
+            let folded = fold_seq_layer(&mut self.pending_seq[layer], len, arenas, self.wire);
             self.pending_intra[layer].extend(folded);
             let pieces = &mut self.pending_intra[layer];
             pieces.sort_by_key(|p| (p.micro, p.client));
             let mut acc = vec![0.0f32; len];
+            let inputs: Vec<FoldPiece> = pieces
+                .iter()
+                .map(|p| FoldPiece { weight: p.weight, data: p.data.piece_data(self.wire) })
+                .collect();
+            fold::fold_pieces(&mut acc, &inputs, self.fold_threads);
+            drop(inputs);
             for p in pieces.drain(..) {
-                debug_assert_eq!(p.data.len(), len);
-                for (a, &g) in acc.iter_mut().zip(&p.data) {
-                    *a += p.weight * g;
+                if let Payload::Wire(b) = p.data {
+                    arenas[p.client].release(b);
                 }
-                arenas[p.client].release(p.data);
             }
             out.push(acc);
         }
         out
     }
 
-    /// Fold the cross-level partials in group order, returning the
-    /// fully-reduced optimizer shard per layer.
+    /// Fold the cross-level partials in group order — the fixed
+    /// cross-level bracketing, chunk-parallel with per-element order
+    /// identical to the scalar pass — returning the fully-reduced
+    /// optimizer shard per layer.
     fn fold_cross(&mut self, arenas: &[Arc<PayloadArena>]) -> Vec<Vec<f32>> {
         let mut out = Vec::with_capacity(self.shard_lens.len());
         for (layer, &len) in self.shard_lens.iter().enumerate() {
             let mut acc = vec![0.0f32; len];
-            for group in 0..self.n_groups {
-                let data = self.pending_cross[layer][group]
-                    .take()
-                    .expect("every group delivers exactly one partial per layer");
-                debug_assert_eq!(data.len(), len);
-                for (a, &g) in acc.iter_mut().zip(&data) {
-                    *a += g;
-                }
+            let taken: Vec<Vec<u8>> = (0..self.n_groups)
+                .map(|group| {
+                    self.pending_cross[layer][group]
+                        .take()
+                        .expect("every group delivers exactly one partial per layer")
+                })
+                .collect();
+            let inputs: Vec<FoldPiece> = taken
+                .iter()
+                .map(|data| FoldPiece { weight: 1.0, data: PieceData::Wire(data, self.wire) })
+                .collect();
+            fold::fold_pieces(&mut acc, &inputs, self.fold_threads);
+            drop(inputs);
+            for (group, data) in taken.into_iter().enumerate() {
                 arenas[group].release(data);
             }
             out.push(acc);
@@ -353,6 +402,7 @@ fn daemon_loop(
     mut st: DaemonState,
     intra_arenas: Vec<Arc<PayloadArena>>,
     cross_arenas: Vec<Arc<PayloadArena>>,
+    fold_ns: Arc<AtomicU64>,
 ) {
     loop {
         let msg = match transport.recv(me) {
@@ -367,7 +417,8 @@ fn daemon_loop(
                 if st.pending_intra[layer].iter().any(|p| p.micro == micro && p.client == client) {
                     intra_arenas[client].release(data);
                 } else {
-                    st.pending_intra[layer].push(IntraPiece { micro, client, weight, data });
+                    st.pending_intra[layer]
+                        .push(IntraPiece { micro, client, weight, data: Payload::Wire(data) });
                 }
             }
             Msg::IntraDone { client } => {
@@ -396,7 +447,9 @@ fn daemon_loop(
                         .position(|p| p.micro == micro && p.client == client)
                     {
                         let p = st.pending_intra[layer].swap_remove(i);
-                        intra_arenas[p.client].release(p.data);
+                        if let Payload::Wire(b) = p.data {
+                            intra_arenas[p.client].release(b);
+                        }
                     }
                 }
             }
@@ -427,7 +480,9 @@ fn daemon_loop(
         }
         if st.intra_done == st.expected_intra() {
             if let Some(reply) = st.intra_flush.take() {
+                let t0 = Instant::now();
                 let out = st.fold_intra(&intra_arenas);
+                fold_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 // A group member that crashed during this minibatch has
                 // pushed its last piece: release its arena column.
                 for (local, arena) in intra_arenas.iter().enumerate() {
@@ -442,7 +497,9 @@ fn daemon_loop(
         }
         if st.cross_done == st.n_groups {
             if let Some(reply) = st.cross_flush.take() {
+                let t0 = Instant::now();
                 let out = st.fold_cross(&cross_arenas);
+                fold_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 st.cross_done = 0;
                 let _ = reply.send(out);
             }
@@ -483,6 +540,22 @@ pub struct HybridComm {
     /// ([`SendError::Unreachable`]): the device must crash out through
     /// the trainer's elastic path instead of wedging a rendezvous.
     escalated: Vec<AtomicBool>,
+    /// Payload element encoding on the wire (FastFold).
+    wire: WireDtype,
+    /// Intra-level error-feedback residuals, `[dev][layer]`, the layer's
+    /// full padded length (sliced per super-shard at the push). Empty
+    /// under `F32`.
+    intra_residuals: Vec<Vec<Mutex<Vec<f32>>>>,
+    /// Cross-level error-feedback residuals, `[dev][layer]`, one
+    /// super-shard length — keyed by the super-shard's OWNING member
+    /// (group, j), so a rendezvous driver pushing on a dead member's
+    /// behalf continues that member's residual stream. Empty under
+    /// `F32`.
+    cross_residuals: Vec<Vec<Mutex<Vec<f32>>>>,
+    /// Total encoded gradient bytes pushed (intra + seq + cross).
+    wire_bytes: Arc<AtomicU64>,
+    /// Total nanoseconds the daemons spent in flush folds.
+    fold_ns: Arc<AtomicU64>,
 }
 
 impl HybridComm {
@@ -507,12 +580,26 @@ impl HybridComm {
         membership: Arc<Membership>,
         group_size: usize,
     ) -> Self {
+        HybridComm::with_wire(params, membership, group_size, WireDtype::F32)
+    }
+
+    /// Two-level backend with a configured wire encoding: `F32` keeps
+    /// every fold bit-identical; `Bf16` halves pushed bytes at both
+    /// levels with per-stream error feedback (see
+    /// `docs/wire_precision.md`).
+    pub fn with_wire(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+        wire: WireDtype,
+    ) -> Self {
         let world = membership.world();
         HybridComm::with_transport(
             params,
             membership,
             group_size,
             Arc::new(InProcTransport::new(world)),
+            wire,
         )
     }
 
@@ -529,12 +616,27 @@ impl HybridComm {
         plan: FaultPlan,
         policy: RetryPolicy,
     ) -> Self {
+        HybridComm::with_faults_wire(params, membership, group_size, plan, policy, WireDtype::F32)
+    }
+
+    /// [`HybridComm::with_faults`] with a configured wire encoding — the
+    /// retransmit ladder replays the SAME encoded payload, so fault
+    /// tolerance and wire precision compose without interaction.
+    pub fn with_faults_wire(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+        plan: FaultPlan,
+        policy: RetryPolicy,
+        wire: WireDtype,
+    ) -> Self {
         let world = membership.world();
         HybridComm::with_transport(
             params,
             membership,
             group_size,
             Arc::new(FaultyTransport::new(world, plan, policy)),
+            wire,
         )
     }
 
@@ -543,6 +645,7 @@ impl HybridComm {
         membership: Arc<Membership>,
         group_size: usize,
         transport: Arc<dyn Transport<Msg>>,
+        wire: WireDtype,
     ) -> Self {
         let world = membership.world();
         let groups = GroupMap::new(world, group_size);
@@ -551,11 +654,13 @@ impl HybridComm {
             params.layers.iter().map(|l| l.padded_len() / group_size).collect();
         let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
 
-        let mut intra_caps = super_lens.clone();
-        intra_caps.push(super_lens.iter().copied().max().unwrap_or(0));
+        // Arena capacities are ENCODED byte lengths: bf16 halves the
+        // resident payload memory at both levels.
+        let mut intra_caps: Vec<usize> = super_lens.iter().map(|&l| wire.bytes_for(l)).collect();
+        intra_caps.push(intra_caps.iter().copied().max().unwrap_or(0));
         let intra_arenas = ArenaMatrix::new(world, group_size, &intra_caps);
-        let mut cross_caps = shard_lens.clone();
-        cross_caps.push(shard_lens.iter().copied().max().unwrap_or(0));
+        let mut cross_caps: Vec<usize> = shard_lens.iter().map(|&l| wire.bytes_for(l)).collect();
+        cross_caps.push(cross_caps.iter().copied().max().unwrap_or(0));
         let cross_arenas = ArenaMatrix::new(world, n_groups, &cross_caps);
 
         // Seed every group's replica from the (initialized) global store.
@@ -576,6 +681,8 @@ impl HybridComm {
             .collect();
 
         let max_super = super_lens.iter().copied().max().unwrap_or(0);
+        let fold_threads = fold::default_fold_threads();
+        let fold_ns = Arc::new(AtomicU64::new(0));
         let mut daemons = Vec::with_capacity(world);
         for dev in 0..world {
             let st = DaemonState::new(
@@ -585,13 +692,45 @@ impl HybridComm {
                 groups.group_of(dev) * group_size,
                 group_size,
                 n_groups,
+                wire,
+                fold_threads,
             );
             let intra_row = intra_arenas.row(dev);
             let cross_row = cross_arenas.row(dev);
-            let wire = Arc::clone(&transport);
-            daemons
-                .push(std::thread::spawn(move || daemon_loop(dev, wire, st, intra_row, cross_row)));
+            let link = Arc::clone(&transport);
+            let ns = Arc::clone(&fold_ns);
+            daemons.push(std::thread::spawn(move || {
+                daemon_loop(dev, link, st, intra_row, cross_row, ns)
+            }));
         }
+        let intra_residuals = (0..world)
+            .map(|_| {
+                params
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Mutex::new(match wire {
+                            WireDtype::F32 => Vec::new(),
+                            WireDtype::Bf16 => vec![0.0; l.padded_len()],
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+        let cross_residuals = (0..world)
+            .map(|_| {
+                params
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Mutex::new(match wire {
+                            WireDtype::F32 => Vec::new(),
+                            WireDtype::Bf16 => vec![0.0; l.padded_len() / group_size],
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
         HybridComm {
             world,
             groups,
@@ -607,6 +746,11 @@ impl HybridComm {
             cross_arenas,
             refresh_scratch: (0..world).map(|_| Mutex::new(vec![0.0f32; max_super])).collect(),
             escalated: (0..world).map(|_| AtomicBool::new(false)).collect(),
+            wire,
+            intra_residuals,
+            cross_residuals,
+            wire_bytes: Arc::new(AtomicU64::new(0)),
+            fold_ns,
         }
     }
 
@@ -617,12 +761,28 @@ impl HybridComm {
     /// joined, by its in-group rendezvous driver on its behalf.
     fn cross_push(&self, src: usize, group: usize, j: usize, partial: &[Vec<f32>]) {
         let n_groups = self.groups.n_groups();
+        // The residual stream is keyed by the super-shard's OWNING member
+        // (group, j) — not the pusher — so a rendezvous driver continues
+        // a dead member's stream instead of corrupting its own.
+        let stream = self.groups.member(group, j);
         for (layer, p) in self.params.layers.iter().enumerate() {
             let k = p.shard_len;
+            let mut residual = self.cross_residuals[stream][layer].lock().unwrap();
             for t in 0..n_groups {
                 let owner = j * n_groups + t;
-                let mut data = self.cross_arenas.arena(owner, group).acquire(k);
-                data.extend_from_slice(&partial[layer][t * k..(t + 1) * k]);
+                let mut data =
+                    self.cross_arenas.arena(owner, group).acquire(self.wire.bytes_for(k));
+                let src_slice = &partial[layer][t * k..(t + 1) * k];
+                match self.wire {
+                    WireDtype::F32 => fold::encode(&mut data, src_slice, self.wire),
+                    WireDtype::Bf16 => fold::encode_ef(
+                        &mut data,
+                        src_slice,
+                        &mut residual[t * k..(t + 1) * k],
+                        self.wire,
+                    ),
+                }
+                self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
                 self.send(src, owner, 0, Msg::CrossAccum { layer, group, data });
             }
         }
@@ -680,7 +840,7 @@ impl CommBackend for HybridComm {
         let s = self.params.layers[layer].padded_len() / self.groups.group_size;
         for j in 0..self.groups.group_size {
             let peer = self.groups.member(group, j);
-            if self.transport.one_sided(dev, peer, s * 4).is_err() {
+            if self.transport.one_sided(dev, peer, self.wire.bytes_for(s)).is_err() {
                 self.escalated[dev].store(true, Ordering::Relaxed);
             }
         }
@@ -706,15 +866,24 @@ impl CommBackend for HybridComm {
         let me = self.groups.local_index(dev);
         let s = p.padded_len() / self.groups.group_size;
         let mut lost = false;
+        let mut residual = self.intra_residuals[dev][layer].lock().unwrap();
         for j in 0..self.groups.group_size {
             let server = self.groups.member(group, j);
-            let mut data = self.intra_arenas.arena(server, me).acquire(s);
-            data.extend_from_slice(&grad[j * s..(j + 1) * s]);
+            let mut data = self.intra_arenas.arena(server, me).acquire(self.wire.bytes_for(s));
+            let src = &grad[j * s..(j + 1) * s];
+            match self.wire {
+                WireDtype::F32 => fold::encode(&mut data, src, self.wire),
+                WireDtype::Bf16 => {
+                    fold::encode_ef(&mut data, src, &mut residual[j * s..(j + 1) * s], self.wire)
+                }
+            }
+            self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
             let msg = Msg::IntraAccum { layer, micro, weight, client: me, data };
             if self.transport.send(dev, server, micro, msg).is_err() {
                 lost = true;
             }
         }
+        drop(residual);
         if lost {
             // All-or-nothing per microbatch: a piece is gone for good, so
             // retract every landed sibling (the retract is a barrier
@@ -755,15 +924,24 @@ impl CommBackend for HybridComm {
         let me = self.groups.local_index(dev);
         let s = p.padded_len() / self.groups.group_size;
         let mut lost = false;
+        let mut residual = self.intra_residuals[dev][layer].lock().unwrap();
         for j in 0..self.groups.group_size {
             let server = self.groups.member(group, j);
-            let mut data = self.intra_arenas.arena(server, me).acquire(s);
-            data.extend_from_slice(&grad[j * s..(j + 1) * s]);
+            let mut data = self.intra_arenas.arena(server, me).acquire(self.wire.bytes_for(s));
+            let src = &grad[j * s..(j + 1) * s];
+            match self.wire {
+                WireDtype::F32 => fold::encode(&mut data, src, self.wire),
+                WireDtype::Bf16 => {
+                    fold::encode_ef(&mut data, src, &mut residual[j * s..(j + 1) * s], self.wire)
+                }
+            }
+            self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
             let msg = Msg::IntraSeqAccum { layer, seq, chunk, count, weight, client: me, data };
             if self.transport.send(dev, server, seq_micro_key(seq), msg).is_err() {
                 lost = true;
             }
         }
+        drop(residual);
         if lost {
             // all-or-nothing per chunk, mirroring `reduce_grad`
             self.escalated[dev].store(true, Ordering::Relaxed);
@@ -859,7 +1037,8 @@ impl CommBackend for HybridComm {
                 // j*n_groups..(j+1)*n_groups: price one one-sided read
                 // per owner through the transport's retry ladder.
                 for t in 0..n_groups {
-                    if self.transport.one_sided(dev, j * n_groups + t, p.shard_len * 4).is_err() {
+                    let bytes = self.wire.bytes_for(p.shard_len);
+                    if self.transport.one_sided(dev, j * n_groups + t, bytes).is_err() {
                         self.escalated[dev].store(true, Ordering::Relaxed);
                     }
                 }
@@ -904,6 +1083,13 @@ impl CommBackend for HybridComm {
 
     fn fault_stats(&self) -> FaultStats {
         self.transport.stats()
+    }
+
+    fn hotpath_stats(&self) -> HotpathStats {
+        HotpathStats {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            fold_ns: self.fold_ns.load(Ordering::Relaxed),
+        }
     }
 
     fn name(&self) -> &'static str {

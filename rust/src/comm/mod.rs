@@ -22,6 +22,10 @@
 //! * [`gather_cache`] — minibatch-scoped parameter-gather cache (§6.2
 //!   parameter caching) for one-sided backends: each layer is gathered
 //!   once per minibatch and shared zero-copy from then on.
+//! * [`fold`] — FastFold: the shared weighted-accumulate kernels
+//!   (chunked scalar + deterministic chunk-parallel) every fold site
+//!   drives, the [`WireDtype`] payload codecs (f32 exact / bf16 with
+//!   error feedback), and the bulk f32↔LE-byte casts.
 //! * [`transport`] — ChaosComm: the typed envelope transport under the
 //!   mailboxes ([`InProcTransport`] reliable path, [`FaultyTransport`]
 //!   deterministic drop/dup/reorder/delay injection per a declarative
@@ -38,6 +42,7 @@
 pub mod arena;
 pub mod backend;
 pub mod collective;
+pub mod fold;
 pub mod gather_cache;
 pub mod hybrid;
 pub mod membership;
@@ -49,8 +54,9 @@ pub mod transport;
 pub mod volume;
 
 pub use arena::{ArenaMatrix, ArenaStats, PayloadArena};
-pub use backend::{CommBackend, GatherPolicy};
+pub use backend::{CommBackend, GatherPolicy, HotpathStats};
 pub use collective::CollectiveComm;
+pub use fold::{FoldPiece, PieceData, WireDtype};
 pub use gather_cache::{CacheStats, GatherCache};
 pub use hybrid::HybridComm;
 pub use membership::{Membership, MembershipBarrier, OptReplica};

@@ -56,31 +56,35 @@
 //! `comm_stress`).
 
 use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
-use super::backend::{seq_micro_key, CommBackend, GatherPolicy, ParamStore};
+use super::backend::{seq_micro_key, CommBackend, GatherPolicy, HotpathStats, ParamStore};
+use super::fold::{self, FoldPiece, PieceData, WireDtype};
 use super::membership::{Membership, MembershipBarrier};
 use super::transport::{
     FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
     WireMsg,
 };
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 #[derive(Clone)]
 enum Msg {
     /// One gradient piece for this server's shard of `layer`, pushed by
     /// `client` for global microbatch `micro`; buffered until the flush
     /// (the fold is keyed by `micro`, not arrival), then `data` returns
-    /// to the (server, client) arena.
-    Accum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<f32> },
+    /// to the (server, client) arena. `data` is the ENCODED wire image
+    /// (the backend's [`WireDtype`]) — the daemon decodes fused into the
+    /// f32 master accumulate at the fold.
+    Accum { layer: usize, micro: u64, weight: f32, client: usize, data: Vec<u8> },
     /// One gradient piece of a SEQUENCE CHUNK (SeqSplit): chunk `chunk`
     /// of `count`, cut from parent sample `seq`, pushed by `client`.
     /// Buffered apart from the micro pieces; at the flush each
     /// sequence's chunks are partially reduced in chunk-index order
     /// FIRST, and the reconstituted gradient enters the micro fold under
     /// the synthetic key `seq_micro_key(seq)`.
-    SeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<f32> },
+    SeqAccum { layer: usize, seq: u64, chunk: u32, count: u32, weight: f32, client: usize, data: Vec<u8> },
     /// Discard the buffered piece of chunk (`seq`, `chunk`) from
     /// `client`, across all layers — the SeqSplit arm of the
     /// all-or-nothing crash-out compensation ([`Msg::Retract`]).
@@ -108,10 +112,10 @@ impl WireMsg for Msg {
         !matches!(self, Msg::Accum { .. } | Msg::SeqAccum { .. })
     }
     fn payload_bytes(&self) -> usize {
+        // payloads are already encoded wire bytes, so their length IS
+        // the priced volume — bf16 halves it automatically
         match self {
-            Msg::Accum { data, .. } | Msg::SeqAccum { data, .. } => {
-                data.len() * std::mem::size_of::<f32>()
-            }
+            Msg::Accum { data, .. } | Msg::SeqAccum { data, .. } => data.len(),
             _ => 0,
         }
     }
@@ -139,6 +143,17 @@ pub struct OdcComm {
     /// Set for a device once one of its links was declared unreachable:
     /// the device must escalate into ElasticWorld (`report_failed`).
     escalated: Vec<AtomicBool>,
+    /// Payload element encoding on the wire (FastFold). `F32` is
+    /// bit-exact; `Bf16` halves push bytes with error feedback.
+    wire: WireDtype,
+    /// Error-feedback residuals, `[dev][layer]`, each the layer's full
+    /// padded length (sliced per server range at the push). Empty under
+    /// `F32` — the encoding is exact, there is no error to feed back.
+    residuals: Vec<Vec<Mutex<Vec<f32>>>>,
+    /// Total encoded gradient bytes pushed by clients (Accum + SeqAccum).
+    wire_bytes: Arc<AtomicU64>,
+    /// Total nanoseconds the daemons spent in flush folds.
+    fold_ns: Arc<AtomicU64>,
 }
 
 impl OdcComm {
@@ -152,8 +167,20 @@ impl OdcComm {
     /// dead client's payload arenas are released at its fail-step fold.
     /// With a static schedule this is exactly [`OdcComm::new`].
     pub fn with_membership(params: Arc<ParamStore>, membership: Arc<Membership>) -> Self {
+        OdcComm::with_wire(params, membership, WireDtype::F32)
+    }
+
+    /// ODC with a configured wire encoding: `F32` stays bit-identical to
+    /// the oracle; `Bf16` halves pushed gradient bytes (round-to-nearest
+    /// -even + per-shard error feedback, f32 master accumulation
+    /// server-side — tolerance-equivalent, see `docs/wire_precision.md`).
+    pub fn with_wire(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        wire: WireDtype,
+    ) -> Self {
         let world = membership.world();
-        OdcComm::with_transport(params, membership, Arc::new(InProcTransport::new(world)))
+        OdcComm::with_transport(params, membership, Arc::new(InProcTransport::new(world)), wire)
     }
 
     /// ODC over a lossy transport: every mailbox message crosses a
@@ -167,31 +194,71 @@ impl OdcComm {
         plan: FaultPlan,
         policy: RetryPolicy,
     ) -> Self {
+        OdcComm::with_faults_wire(params, membership, plan, policy, WireDtype::F32)
+    }
+
+    /// [`OdcComm::with_faults`] with a configured wire encoding — the
+    /// retransmit ladder replays the SAME encoded payload, so fault
+    /// tolerance and wire precision compose without interaction.
+    pub fn with_faults_wire(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        plan: FaultPlan,
+        policy: RetryPolicy,
+        wire: WireDtype,
+    ) -> Self {
         let world = membership.world();
-        OdcComm::with_transport(params, membership, Arc::new(FaultyTransport::new(world, plan, policy)))
+        OdcComm::with_transport(
+            params,
+            membership,
+            Arc::new(FaultyTransport::new(world, plan, policy)),
+            wire,
+        )
     }
 
     fn with_transport(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         transport: Arc<dyn Transport<Msg>>,
+        wire: WireDtype,
     ) -> Self {
         let world = membership.world();
         let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
         // One full microbatch of a client pushes one piece per layer to
-        // each server, so prealloc one buffer per layer's shard length,
-        // plus a max-sized spare for the daemon lagging one message.
-        let mut caps = shard_lens.clone();
-        caps.push(shard_lens.iter().copied().max().unwrap_or(0));
+        // each server, so prealloc one buffer per layer's ENCODED shard
+        // length, plus a max-sized spare for the daemon lagging one
+        // message. Byte-sized arenas: under bf16 the resident payload
+        // memory genuinely halves.
+        let mut caps: Vec<usize> = shard_lens.iter().map(|&l| wire.bytes_for(l)).collect();
+        caps.push(caps.iter().copied().max().unwrap_or(0));
         let arenas = ArenaMatrix::new(world, world, &caps);
+        let fold_threads = fold::default_fold_threads();
+        let fold_ns = Arc::new(AtomicU64::new(0));
         let mut daemons = Vec::with_capacity(world);
         for server in 0..world {
             let lens = shard_lens.clone();
             let row = arenas.row(server);
             let members = Arc::clone(&membership);
-            let wire = Arc::clone(&transport);
-            daemons.push(std::thread::spawn(move || daemon_loop(server, wire, lens, members, row)));
+            let link = Arc::clone(&transport);
+            let ns = Arc::clone(&fold_ns);
+            daemons.push(std::thread::spawn(move || {
+                daemon_loop(server, link, lens, members, row, wire, fold_threads, ns)
+            }));
         }
+        let residuals = (0..world)
+            .map(|_| {
+                params
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Mutex::new(match wire {
+                            WireDtype::F32 => Vec::new(),
+                            WireDtype::Bf16 => vec![0.0; l.padded_len()],
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
         OdcComm {
             world,
             params,
@@ -203,6 +270,10 @@ impl OdcComm {
             arenas,
             step_ctr: (0..world).map(|_| AtomicUsize::new(0)).collect(),
             escalated: (0..world).map(|_| AtomicBool::new(false)).collect(),
+            wire,
+            residuals,
+            wire_bytes: Arc::new(AtomicU64::new(0)),
+            fold_ns,
         }
     }
 
@@ -224,12 +295,31 @@ impl OdcComm {
     }
 }
 
+/// A buffered piece's payload: the encoded wire image as pushed (goes
+/// home to its pusher's arena after the fold), or an already-decoded f32
+/// gradient reconstituted by the SeqSplit per-sequence rendezvous
+/// (plain heap — simply dropped after the fold).
+enum Payload {
+    Wire(Vec<u8>),
+    Folded(Vec<f32>),
+}
+
+impl Payload {
+    /// Borrow as a fold input under the backend's wire encoding.
+    fn piece_data(&self, wire: WireDtype) -> PieceData<'_> {
+        match self {
+            Payload::Wire(b) => PieceData::Wire(b, wire),
+            Payload::Folded(v) => PieceData::F32(v),
+        }
+    }
+}
+
 /// One buffered gradient piece awaiting the minibatch fold.
 struct Piece {
     micro: u64,
     client: usize,
     weight: f32,
-    data: Vec<f32>,
+    data: Payload,
 }
 
 /// One buffered SEQUENCE-CHUNK piece (SeqSplit) awaiting its
@@ -240,59 +330,78 @@ struct SeqPiece {
     count: u32,
     client: usize,
     weight: f32,
-    data: Vec<f32>,
+    data: Vec<u8>,
 }
 
 /// SeqSplit's per-sequence partial reduction: sort the layer's chunk
 /// pieces by (seq, chunk, client) — chunk-index order within a
 /// sequence, a pure function of the split rule, blind to which device
-/// ran which chunk — then fold each sequence's chunks into its FIRST
-/// chunk's payload (scaled in place; the other payloads return to their
-/// pushers' arenas immediately). Each reconstituted sequence gradient
-/// becomes one ordinary [`Piece`] keyed `seq_micro_key(seq)` with
-/// weight 1 (the chunk weights already sum to the sequence's aggregation
-/// weight), so the micro fold stays the single ordering authority and
-/// the accumulator payload goes home through [`fold_layer`]'s release —
-/// arena accounting stays exact with zero new allocations.
-fn fold_seq_layer(seqs: &mut Vec<SeqPiece>, arenas: &[Arc<PayloadArena>]) -> Vec<Piece> {
+/// ran which chunk — then fold each sequence's chunks into a fresh f32
+/// accumulator (decode fused into the accumulate; every chunk's wire
+/// payload returns to its pusher's arena immediately). Each
+/// reconstituted sequence gradient becomes one ordinary [`Piece`] keyed
+/// `seq_micro_key(seq)` with weight 1 (the chunk weights already sum to
+/// the sequence's aggregation weight), so the micro fold stays the
+/// single ordering authority — and arena accounting stays exact: every
+/// acquired buffer goes home here, the f32 accumulator is plain heap.
+fn fold_seq_layer(
+    seqs: &mut Vec<SeqPiece>,
+    len: usize,
+    arenas: &[Arc<PayloadArena>],
+    wire: WireDtype,
+) -> Vec<Piece> {
     seqs.sort_by_key(|p| (p.seq, p.chunk, p.client));
     let mut out: Vec<Piece> = Vec::new();
     for p in seqs.drain(..) {
-        match out.last_mut() {
-            Some(last) if last.micro == seq_micro_key(p.seq) => {
-                debug_assert_eq!(last.data.len(), p.data.len());
-                for (x, &g) in last.data.iter_mut().zip(&p.data) {
-                    *x += p.weight * g;
-                }
-                arenas[p.client].release(p.data);
-            }
-            _ => {
-                debug_assert!(p.count >= 2);
-                let mut data = p.data;
-                for x in data.iter_mut() {
-                    *x *= p.weight;
-                }
-                out.push(Piece { micro: seq_micro_key(p.seq), client: p.client, weight: 1.0, data });
-            }
+        let key = seq_micro_key(p.seq);
+        if !matches!(out.last(), Some(last) if last.micro == key) {
+            debug_assert!(p.count >= 2);
+            out.push(Piece {
+                micro: key,
+                client: p.client,
+                weight: 1.0,
+                data: Payload::Folded(vec![0.0; len]),
+            });
         }
+        let last = out.last_mut().expect("accumulator just ensured");
+        let acc = match &mut last.data {
+            Payload::Folded(v) => v,
+            Payload::Wire(_) => unreachable!("seq accumulators are always Folded"),
+        };
+        let piece = FoldPiece { weight: p.weight, data: PieceData::Wire(&p.data, wire) };
+        fold::fold_pieces(acc, std::slice::from_ref(&piece), 1);
+        arenas[p.client].release(p.data);
     }
     out
 }
 
 /// Fold one layer's buffered pieces in (micro id asc, client asc) order
 /// — a pure function of the plan, blind to arrival interleaving — and
-/// release every payload to its (server, client) arena. The sort is
-/// stable, so same-key pieces (possible only from one client's
-/// sequential pushes) keep their channel-FIFO order.
-fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>]) -> Vec<f32> {
+/// release every wire payload to its (server, client) arena. The sort
+/// is stable, so same-key pieces (possible only from one client's
+/// sequential pushes) keep their channel-FIFO order. The accumulate
+/// itself runs through [`fold::fold_pieces`] — chunk-parallel over
+/// `threads` workers with per-element order identical to the scalar
+/// pass, so the result is bit-identical at any thread count.
+fn fold_layer(
+    pieces: &mut Vec<Piece>,
+    len: usize,
+    arenas: &[Arc<PayloadArena>],
+    wire: WireDtype,
+    threads: usize,
+) -> Vec<f32> {
     pieces.sort_by_key(|p| (p.micro, p.client));
     let mut acc = vec![0.0f32; len];
+    let inputs: Vec<FoldPiece> = pieces
+        .iter()
+        .map(|p| FoldPiece { weight: p.weight, data: p.data.piece_data(wire) })
+        .collect();
+    fold::fold_pieces(&mut acc, &inputs, threads);
+    drop(inputs);
     for p in pieces.drain(..) {
-        debug_assert_eq!(acc.len(), p.data.len());
-        for (x, &g) in acc.iter_mut().zip(&p.data) {
-            *x += p.weight * g;
+        if let Payload::Wire(b) = p.data {
+            arenas[p.client].release(b);
         }
-        arenas[p.client].release(p.data);
     }
     acc
 }
@@ -309,12 +418,16 @@ fn fold_layer(pieces: &mut Vec<Piece>, len: usize, arenas: &[Arc<PayloadArena>])
 /// pieces (completed microbatches) stay in the fold for exactly-once
 /// delivery. At the crash step's flush the dead client's payload
 /// arenas are retired.
+#[allow(clippy::too_many_arguments)]
 fn daemon_loop(
     me: usize,
     transport: Arc<dyn Transport<Msg>>,
     shard_lens: Vec<usize>,
     membership: Arc<Membership>,
     arenas: Vec<Arc<PayloadArena>>,
+    wire: WireDtype,
+    fold_threads: usize,
+    fold_ns: Arc<AtomicU64>,
 ) {
     let mut pending: Vec<Vec<Piece>> = shard_lens.iter().map(|_| Vec::new()).collect();
     let mut pending_seq: Vec<Vec<SeqPiece>> = shard_lens.iter().map(|_| Vec::new()).collect();
@@ -335,7 +448,7 @@ fn daemon_loop(
                 if pending[layer].iter().any(|p| p.micro == micro && p.client == client) {
                     arenas[client].release(data);
                 } else {
-                    pending[layer].push(Piece { micro, client, weight, data });
+                    pending[layer].push(Piece { micro, client, weight, data: Payload::Wire(data) });
                 }
             }
             // Count the quorum per-client so a stray Done from a device
@@ -363,7 +476,9 @@ fn daemon_loop(
                         pieces.iter().position(|p| p.micro == micro && p.client == client)
                     {
                         let p = pieces.swap_remove(pos);
-                        arenas[p.client].release(p.data);
+                        if let Payload::Wire(b) = p.data {
+                            arenas[p.client].release(b);
+                        }
                     }
                 }
             }
@@ -386,15 +501,17 @@ fn daemon_loop(
                 // SeqSplit rendezvous first: reconstituted sequence
                 // gradients join the micro fold under their synthetic
                 // keys, then everything folds id-ordered as usual.
+                let t0 = Instant::now();
                 for (layer, seqs) in pending_seq.iter_mut().enumerate() {
-                    let folded = fold_seq_layer(seqs, &arenas);
+                    let folded = fold_seq_layer(seqs, shard_lens[layer], &arenas, wire);
                     pending[layer].extend(folded);
                 }
                 let out: Vec<Vec<f32>> = pending
                     .iter_mut()
                     .zip(&shard_lens)
-                    .map(|(pieces, &len)| fold_layer(pieces, len, &arenas))
+                    .map(|(pieces, &len)| fold_layer(pieces, len, &arenas, wire, fold_threads))
                     .collect();
+                fold_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 for (client, arena) in arenas.iter().enumerate() {
                     if membership.fails_during(client, mb) {
                         arena.retire();
@@ -423,7 +540,7 @@ impl CommBackend for OdcComm {
         // escalation.
         let p = &self.params.layers[layer];
         for server in 0..self.world {
-            let bytes = p.shard_range(server).len() * std::mem::size_of::<f32>();
+            let bytes = self.wire.bytes_for(p.shard_range(server).len());
             if self.transport.one_sided(dev, server, bytes).is_err() {
                 self.escalated[dev].store(true, Ordering::Relaxed);
             }
@@ -449,15 +566,22 @@ impl CommBackend for OdcComm {
             return; // a link is dead: the device is crashing out, stop pushing
         }
         let mut lost = false;
+        let mut residual = self.residuals[dev][layer].lock().unwrap();
         for server in 0..self.world {
             let r = p.shard_range(server);
-            let mut data = self.arenas.arena(server, dev).acquire(r.len());
-            data.extend_from_slice(&grad[r]);
+            let mut data = self.arenas.arena(server, dev).acquire(self.wire.bytes_for(r.len()));
+            let src = &grad[r.clone()];
+            match self.wire {
+                WireDtype::F32 => fold::encode(&mut data, src, self.wire),
+                WireDtype::Bf16 => fold::encode_ef(&mut data, src, &mut residual[r], self.wire),
+            }
+            self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
             let msg = Msg::Accum { layer, micro, weight, client: dev, data };
             if self.transport.send(dev, server, micro, msg).is_err() {
                 lost = true;
             }
         }
+        drop(residual);
         if lost {
             // All-or-nothing per microbatch: a piece of `micro` is gone,
             // so the micro must re-run on a survivor — land the held
@@ -490,15 +614,22 @@ impl CommBackend for OdcComm {
             return; // a link is dead: the device is crashing out, stop pushing
         }
         let mut lost = false;
+        let mut residual = self.residuals[dev][layer].lock().unwrap();
         for server in 0..self.world {
             let r = p.shard_range(server);
-            let mut data = self.arenas.arena(server, dev).acquire(r.len());
-            data.extend_from_slice(&grad[r]);
+            let mut data = self.arenas.arena(server, dev).acquire(self.wire.bytes_for(r.len()));
+            let src = &grad[r.clone()];
+            match self.wire {
+                WireDtype::F32 => fold::encode(&mut data, src, self.wire),
+                WireDtype::Bf16 => fold::encode_ef(&mut data, src, &mut residual[r], self.wire),
+            }
+            self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
             let msg = Msg::SeqAccum { layer, seq, chunk, count, weight, client: dev, data };
             if self.transport.send(dev, server, seq_micro_key(seq), msg).is_err() {
                 lost = true;
             }
         }
+        drop(residual);
         if lost {
             // all-or-nothing per chunk, mirroring `reduce_grad`
             self.escalated[dev].store(true, Ordering::Relaxed);
@@ -573,6 +704,13 @@ impl CommBackend for OdcComm {
 
     fn fault_stats(&self) -> FaultStats {
         self.transport.stats()
+    }
+
+    fn hotpath_stats(&self) -> HotpathStats {
+        HotpathStats {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            fold_ns: self.fold_ns.load(Ordering::Relaxed),
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -21,7 +21,17 @@
 //!     │   microbatch phase        │     optimizer phase      │
 //!     │   params READ-ONLY        │     params WRITTEN,      │
 //!     │   (gathers, pushes)       │     owner-shard-disjoint │
+//!     │   prefetch l+1 ∥ compute l│                          │
 //! ```
+//!
+//! The *prefetch* row is FastFold's streamed gathers: because params
+//! are read-only for the whole microbatch phase, a gather of layer
+//! `l+1` issued while layer `l` computes returns the same bytes it
+//! would at use time — the trainer's prefetch worker runs it
+//! concurrently and deposits the buffer in the gather cache
+//! ([`super::gather_cache::GatherCache::adopt_prefetch`]). Streaming is
+//! an overlap-only change: it never adds, removes, or reorders the
+//! synchronizing calls.
 //!
 //! Under the two-level hybrid backend ([`super::hybrid::HybridComm`])
 //! the same timeline holds at BOTH levels, with the epilogues nested:
@@ -158,15 +168,14 @@ impl SharedBuf {
         }
     }
 
-    /// Accumulate `data * weight` into the window (server-side daemon op).
+    /// Accumulate `data * weight` into the window (server-side daemon
+    /// op), through the shared FastFold kernel ([`super::fold::axpy`])
+    /// so every accumulate site in the system vectorizes identically.
     #[inline]
     pub fn accumulate(&self, offset: usize, data: &[f32], weight: f32) {
         let dst = unsafe { &mut *self.data.get() };
         assert!(offset + data.len() <= dst.len(), "accumulate out of window");
-        let dst = &mut dst[offset..offset + data.len()];
-        for (d, &s) in dst.iter_mut().zip(data) {
-            *d += weight * s;
-        }
+        super::fold::axpy(&mut dst[offset..offset + data.len()], data, weight);
     }
 
     /// Zero a range (grad reset at minibatch boundary).

@@ -7,6 +7,11 @@
 use crate::util::json::Json;
 use std::fmt;
 
+/// Wire payload precision for gradient pushes (FastFold). Defined in
+/// [`crate::comm::fold`] next to its codecs; re-exported here because it
+/// is a first-class experiment knob alongside [`CommScheme`].
+pub use crate::comm::fold::WireDtype;
+
 /// Paper evaluation models (DeepSeek-R1-Distill-Qwen family shapes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PaperModel {
@@ -326,6 +331,16 @@ mod tests {
         }
         assert_eq!(CommScheme::parse("hybrid"), Some(CommScheme::Hybrid));
         assert_eq!(CommScheme::parse("ring"), None);
+    }
+
+    #[test]
+    fn wire_dtype_parse_roundtrip() {
+        for d in [WireDtype::F32, WireDtype::Bf16] {
+            assert_eq!(WireDtype::parse(&d.to_string()), Some(d));
+        }
+        assert_eq!(WireDtype::parse("bfloat16"), Some(WireDtype::Bf16));
+        assert_eq!(WireDtype::parse("fp8"), None);
+        assert_eq!(WireDtype::default(), WireDtype::F32);
     }
 
     #[test]

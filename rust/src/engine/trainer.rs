@@ -81,7 +81,7 @@ use crate::balance::split::{ChunkInfo, SplitMap, SplitMode};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::membership::Membership;
 use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy};
-use crate::config::{Balancer, CommScheme};
+use crate::config::{Balancer, CommScheme, WireDtype};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
 use crate::engine::bufplan::BufferPlan;
@@ -169,6 +169,14 @@ pub struct TrainerConfig {
     /// Chunk-boundary rule for split sequences: `Ring` = equal tokens,
     /// `Zigzag` = equal predicted cost (the causal-attention-aware cut).
     pub seq_split_mode: SplitMode,
+    /// FastFold wire precision for gradient pushes on the one-sided
+    /// backends: `F32` (default) is bit-exact — every equivalence suite
+    /// holds bit-for-bit — while `Bf16` halves pushed gradient bytes via
+    /// round-to-nearest-even truncation with per-shard error feedback
+    /// (tolerance-equivalent; see `docs/wire_precision.md`). Rejected
+    /// under `Collective`, whose in-place rendezvous fold has no
+    /// encode/decode stage.
+    pub wire_dtype: WireDtype,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -202,6 +210,7 @@ impl TrainerConfig {
             fault_plan: FaultPlan::default(),
             seq_split: 0.0,
             seq_split_mode: SplitMode::Zigzag,
+            wire_dtype: WireDtype::F32,
             plan_override: None,
             split_override: None,
         }
@@ -248,6 +257,14 @@ pub struct TrainRun {
     pub retransmitted_bytes: u64,
     /// Links escalated to ElasticWorld after an exhausted retry budget.
     pub escalations: u64,
+    /// FastFold: encoded gradient bytes pushed over the wire (0 under
+    /// Collective, which folds in place with no explicit wire stage).
+    /// Under `WireDtype::Bf16` this is half the f32 figure for the same
+    /// run — the quantity the hot-path benches gate.
+    pub wire_bytes: u64,
+    /// FastFold: seconds spent inside daemon-side fold kernels, summed
+    /// across daemon threads (can exceed wall time).
+    pub fold_s: f64,
 }
 
 /// The plans `train` would generate for this config (same seeding path).
@@ -317,6 +334,13 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 g
             ));
         }
+    }
+    if cfg.wire_dtype == WireDtype::Bf16 && cfg.scheme == CommScheme::Collective {
+        return Err(anyhow!(
+            "wire_dtype bf16 requires a one-sided scheme: Collective's in-place rendezvous \
+             fold has no encode/decode stage to quantize (and no per-shard residual state \
+             for error feedback)"
+        ));
     }
     // --- SeqSplit legality (see balance::split and docs/seqsplit.md) ------
     if cfg.seq_split != 0.0 {
@@ -420,28 +444,33 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     let lossy = !cfg.fault_plan.is_noop();
     let backend: Arc<dyn CommBackend> = match cfg.scheme {
         CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
-        CommScheme::Odc if lossy => Arc::new(OdcComm::with_faults(
+        CommScheme::Odc if lossy => Arc::new(OdcComm::with_faults_wire(
             Arc::clone(&params),
             Arc::clone(&membership),
             cfg.fault_plan.clone(),
             RetryPolicy::default(),
+            cfg.wire_dtype,
         )),
-        CommScheme::Odc => {
-            Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)))
-        }
+        CommScheme::Odc => Arc::new(OdcComm::with_wire(
+            Arc::clone(&params),
+            Arc::clone(&membership),
+            cfg.wire_dtype,
+        )),
         // NB: constructed after init_from above — HybridComm seeds its
         // group replicas from the global store.
-        CommScheme::Hybrid if lossy => Arc::new(HybridComm::with_faults(
+        CommScheme::Hybrid if lossy => Arc::new(HybridComm::with_faults_wire(
             Arc::clone(&params),
             Arc::clone(&membership),
             cfg.hybrid_group_size(),
             cfg.fault_plan.clone(),
             RetryPolicy::default(),
+            cfg.wire_dtype,
         )),
-        CommScheme::Hybrid => Arc::new(HybridComm::with_membership(
+        CommScheme::Hybrid => Arc::new(HybridComm::with_wire(
             Arc::clone(&params),
             Arc::clone(&membership),
             cfg.hybrid_group_size(),
+            cfg.wire_dtype,
         )),
     };
 
@@ -617,6 +646,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
         .collect();
     let recovery_s = *recovery.lock().unwrap();
     let fs = backend.fault_stats();
+    let hp = backend.hotpath_stats();
     Ok(TrainRun {
         logs,
         final_params,
@@ -625,7 +655,87 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
         retries: fs.retries,
         retransmitted_bytes: fs.retransmitted_bytes,
         escalations: fs.escalations,
+        wire_bytes: hp.wire_bytes,
+        fold_s: hp.fold_ns as f64 * 1e-9,
     })
+}
+
+/// FastFold streamed gathers: a per-device prefetch worker driven by a
+/// posted-request/await pair. While the device computes block `l`, the
+/// worker gathers layer `l+1`'s parameters through the backend and the
+/// result is adopted into the minibatch-scoped [`GatherCache`] — so the
+/// first forward pass of each minibatch overlaps its gathers with
+/// compute instead of serializing them.
+///
+/// Legality is exactly the cache's: params are phase-immutable, so a
+/// prefetched gather is bit-identical to a synchronous one (see the
+/// phase timeline in [`crate::comm::shared`]). The stream is created
+/// only when the backend's [`GatherPolicy`] is cacheable, posts only
+/// layers the cache would adopt ([`GatherCache::wants_prefetch`]), and
+/// keeps at most ONE request in flight, always awaited within the same
+/// microbatch — no prefetch ever spans `end_minibatch`/`end_step`, so
+/// the worker is provably idle at every barrier.
+struct GatherStream {
+    /// `None` after shutdown; dropping the sender stops the worker.
+    req_tx: Option<std::sync::mpsc::Sender<usize>>,
+    res_rx: std::sync::mpsc::Receiver<(usize, Arc<[f32]>)>,
+    /// The one posted-but-not-awaited layer, if any.
+    pending: Option<usize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GatherStream {
+    fn start(backend: Arc<dyn CommBackend>, dev: usize, padded_lens: Vec<usize>) -> Self {
+        let (req_tx, req_rx) = std::sync::mpsc::channel::<usize>();
+        let (res_tx, res_rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            while let Ok(layer) = req_rx.recv() {
+                let mut buf = vec![0.0f32; padded_lens[layer]];
+                backend.gather_params(dev, layer, &mut buf);
+                if res_tx.send((layer, Arc::from(buf))).is_err() {
+                    break;
+                }
+            }
+        });
+        GatherStream { req_tx: Some(req_tx), res_rx, pending: None, handle: Some(handle) }
+    }
+
+    /// Post a prefetch of `layer` unless one is already in flight or the
+    /// cache would discard the result (slot already valid this
+    /// minibatch — i.e. every microbatch after the first).
+    fn post(&mut self, layer: usize, cache: &crate::comm::GatherCache) {
+        if self.pending.is_some() || !cache.wants_prefetch(layer) {
+            return;
+        }
+        if let Some(tx) = &self.req_tx {
+            if tx.send(layer).is_ok() {
+                self.pending = Some(layer);
+            }
+        }
+    }
+
+    /// Await the in-flight prefetch (if any) and deposit it in the
+    /// cache. Must run before the posted layer's synchronous gather so
+    /// the work is not done twice.
+    fn await_into(&mut self, cache: &mut crate::comm::GatherCache) {
+        if let Some(layer) = self.pending.take() {
+            let (got, buf) = self.res_rx.recv().expect("gather prefetch worker died");
+            debug_assert_eq!(got, layer, "prefetch results must arrive in post order");
+            cache.adopt_prefetch(got, buf);
+        }
+    }
+}
+
+impl Drop for GatherStream {
+    fn drop(&mut self) {
+        self.req_tx.take(); // closes the channel; the worker loop exits
+        if self.pending.take().is_some() {
+            let _ = self.res_rx.recv(); // drain the in-flight result
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 struct DeviceCtx {
@@ -723,6 +833,18 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
     };
     let mut bufs = BufferPlan::new(&ctx.params, dev, policy);
 
+    // FastFold streamed gathers: one prefetch worker per device, created
+    // only when the gather policy is cacheable — the same structural
+    // condition that makes reusing (and therefore pre-taking) a gather
+    // legal. Collective runs without a stream and keeps the seed call
+    // sequence exactly.
+    let mut stream = if policy.cacheable() {
+        let lens: Vec<usize> = ctx.params.layers.iter().map(|l| l.padded_len()).collect();
+        Some(GatherStream::start(Arc::clone(&ctx.backend), dev, lens))
+    } else {
+        None
+    };
+
     // Late joiner: sit out the early steps (the membership schedule
     // already routed our share to survivors), then enter exactly at the
     // join boundary, once the previous step's parameters and replicated
@@ -782,7 +904,7 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
                 idle_participation(&ctx, n_layers, &mut bufs)?;
                 continue;
             }
-            run_microbatch(&ctx, &mut bufs, step, &a)?;
+            run_microbatch(&ctx, &mut bufs, step, &a, stream.as_mut())?;
             if ctx.backend.link_escalated(dev) {
                 // ChaosComm escalation: a link's retry budget is gone
                 // for good. The backend already retracted this
@@ -898,6 +1020,7 @@ fn run_microbatch(
     bufs: &mut BufferPlan,
     step: usize,
     a: &MicroAssignment,
+    mut stream: Option<&mut GatherStream>,
 ) -> Result<()> {
     let man = &ctx.man;
     let dev = ctx.dev;
@@ -941,6 +1064,16 @@ fn run_microbatch(
     let mask = bufs.f32_pool.adopt(packed.mask);
 
     // ---- forward ----
+    // Streamed gathers: post block 1's gather before touching the
+    // embedding, then keep exactly one prefetch in flight — layer l+1
+    // posted while block l computes, awaited (and adopted into the
+    // cache) at the top of the next iteration. Every post is consumed
+    // within this microbatch, so no prefetch ever crosses a barrier.
+    if n_layers >= 1 {
+        if let Some(s) = stream.as_deref_mut() {
+            s.post(1, &bufs.cache);
+        }
+    }
     let emb = bufs.cache.gather(backend, 0);
     let mut out = ctx.compute(
         &format!("embed_fwd_s{s}"),
@@ -950,6 +1083,12 @@ fn run_microbatch(
 
     debug_assert!(bufs.acts.is_empty(), "activation stack leaked from a previous microbatch");
     for l in 1..=n_layers {
+        if let Some(s) = stream.as_deref_mut() {
+            s.await_into(&mut bufs.cache);
+            if l < n_layers {
+                s.post(l + 1, &bufs.cache);
+            }
+        }
         let flat = bufs.cache.gather(backend, l);
         let mut out = ctx.compute(
             &format!("block_fwd_s{s}"),

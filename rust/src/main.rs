@@ -13,7 +13,7 @@
 
 use odc::balance::SplitMode;
 use odc::comm::FaultPlan;
-use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::sim::run::{simulate, SimConfig};
 use odc::util::cli::Cli;
@@ -93,6 +93,19 @@ fn parse_fault_plan(s: &str) -> FaultPlan {
     }
 }
 
+/// Parse `--wire-dtype` — FastFold gradient payload precision (`f32` =
+/// exact byte image, `bf16` = round-to-nearest-even halves with
+/// error-feedback residuals; see docs/wire_precision.md).
+fn parse_wire_dtype(s: &str) -> WireDtype {
+    match WireDtype::parse(s) {
+        Some(d) => d,
+        None => {
+            eprintln!("invalid configuration: unknown --wire-dtype `{s}` (f32|bf16)");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Parse `--seq-split-mode` — `ring` (equal tokens) or `zigzag` (equal
 /// predicted cost).
 fn parse_split_mode(s: &str) -> SplitMode {
@@ -161,6 +174,7 @@ fn main() -> anyhow::Result<()> {
                 )
                 .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
                 .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
+                .opt("wire-dtype", "bf16", "gradient payload precision: f32 | bf16 (the sim's historical pricing)")
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -248,6 +262,7 @@ fn main() -> anyhow::Result<()> {
             sim_cfg.fault_plan = fault_plan;
             sim_cfg.seq_split = seq_split;
             sim_cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
+            sim_cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
             let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
@@ -259,6 +274,14 @@ fn main() -> anyhow::Result<()> {
                 r.dispatch_wait_s,
                 odc::report::pct(if total_device_s > 0.0 { r.dispatch_wait_s / total_device_s } else { 0.0 })
             );
+            if r.wire_bytes > 0 {
+                println!(
+                    "  hot path         : {:.3} GiB pushed ({} wire)   fold {:.3}s modeled",
+                    r.wire_bytes as f64 / (1u64 << 30) as f64,
+                    sim_cfg.wire_dtype,
+                    r.fold_s
+                );
+            }
             println!(
                 "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
                 r.mean_minibatch_s, r.minibatches, r.samples
@@ -311,6 +334,7 @@ fn main() -> anyhow::Result<()> {
                 )
                 .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
                 .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
+                .opt("wire-dtype", "f32", "gradient payload precision: f32 (bit-exact) | bf16 (half the wire bytes)")
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -337,6 +361,7 @@ fn main() -> anyhow::Result<()> {
             cfg.fault_plan = parse_fault_plan(a.get("fault-plan"));
             cfg.seq_split = a.f64("seq-split");
             cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
+            cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
             check_seq_split(cfg.seq_split, cfg.scheme, cfg.balancer);
             let lossy = !cfg.fault_plan.is_noop();
             let elastic = !cfg.fail_at.is_empty()
@@ -347,6 +372,12 @@ fn main() -> anyhow::Result<()> {
                 println!(
                     "step {:>4}  loss {:>8.4}  tokens {:>8}  wall {:>7.3}s",
                     log.step, log.loss, log.tokens, log.wall_s
+                );
+            }
+            if run.wire_bytes > 0 {
+                println!(
+                    "hotpath  wire_bytes {}  ({} wire)  fold_s {:.6}",
+                    run.wire_bytes, cfg.wire_dtype, run.fold_s
                 );
             }
             if elastic {

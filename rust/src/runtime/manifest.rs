@@ -156,7 +156,7 @@ impl Manifest {
         if bytes.len() != want * 4 {
             return Err(anyhow!("{path:?}: expected {} bytes, got {}", want * 4, bytes.len()));
         }
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        Ok(crate::comm::fold::f32_from_le_bytes(&bytes))
     }
 
     /// Flat lengths of every layer (0 = embed, 1..=L = blocks).
@@ -204,6 +204,29 @@ mod tests {
         let m = Manifest::load(tiny_dir()).unwrap();
         assert_eq!(m.load_init(0).unwrap().len(), m.embed_params);
         assert_eq!(m.load_init(1).unwrap().len(), m.block_params);
+    }
+
+    #[test]
+    fn load_init_bulk_decode_round_trips() {
+        // load_init decodes via the bulk byte cast; pin it against the
+        // scalar per-element decode on a synthetic init file.
+        let vals: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.37).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let dir = std::env::temp_dir().join("ps_manifest_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("embed.f32");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let scalar: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let bulk = crate::comm::fold::f32_from_le_bytes(&std::fs::read(&path).unwrap());
+        assert_eq!(bulk.len(), vals.len());
+        for (a, b) in bulk.iter().zip(&scalar) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

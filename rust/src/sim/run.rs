@@ -11,11 +11,11 @@ use crate::balance::packers::{plan_run_split, PackOpts};
 use crate::balance::split::SplitMode;
 use crate::comm::topology::Topology;
 use crate::comm::transport::{FaultPlan, RetryPolicy};
-use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding};
+use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use crate::data::distributions::sample_lengths;
 use crate::sim::timeline::{
-    fault_minibatch_overhead, hybrid_step_overhead, recovery_epilogue_s,
-    time_minibatch_dispatch_split, time_minibatch_failover,
+    fault_minibatch_overhead, hybrid_step_overhead_dtype, model_bytes_dtype, recovery_epilogue_s,
+    time_minibatch_dispatch_split_dtype, time_minibatch_failover_dtype,
 };
 use crate::util::rng::Rng;
 
@@ -64,6 +64,12 @@ pub struct SimConfig {
     /// Chunk-boundary rule: `Ring` = equal tokens, `Zigzag` = equal
     /// predicted cost.
     pub seq_split_mode: SplitMode,
+    /// FastFold wire precision, mirroring `TrainerConfig::wire_dtype`.
+    /// Defaults to `Bf16` — the sim's comm pricing has always assumed
+    /// bf16 payloads, so the default reproduces every historical result
+    /// bit-for-bit; `F32` doubles the priced per-micro payload bytes
+    /// (and the reported `wire_bytes`). See `docs/wire_precision.md`.
+    pub wire_dtype: WireDtype,
 }
 
 impl SimConfig {
@@ -78,6 +84,7 @@ impl SimConfig {
             fault_plan: FaultPlan::default(),
             seq_split: 0.0,
             seq_split_mode: SplitMode::Zigzag,
+            wire_dtype: WireDtype::Bf16,
         }
     }
 }
@@ -135,6 +142,19 @@ pub struct RunResult {
     /// fail-stops, deduplicated by (src, dst) link (mirror of
     /// `FaultStats::escalations`).
     pub escalations: u64,
+    /// FastFold: modeled pushed gradient wire volume over the run, in
+    /// bytes at the configured `wire_dtype` — the sim mirror of
+    /// `TrainRun::wire_bytes` (`HotpathStats::wire_bytes`). One-sided
+    /// schemes encode each dispatched micro's full gradient once at
+    /// push; Hybrid additionally prices the per-minibatch cross-node
+    /// super-shard exchange (the same `(nodes-1)/nodes` volume term
+    /// `hybrid_step_overhead_bytes` times); Collective reports 0,
+    /// exactly like the engine's default `hotpath_stats`.
+    pub wire_bytes: u64,
+    /// FastFold: modeled server-side fold seconds over the run (f32
+    /// master-accumulate traffic / `SIM_FOLD_GBPS`) — the sim mirror
+    /// of `TrainRun::fold_s`. 0 under Collective.
+    pub fold_s: f64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -264,7 +284,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         cfg.seq_split_mode,
     );
 
-    let step_overhead = hybrid_overhead(exp, &topo);
+    let step_overhead = hybrid_overhead(exp, &topo, cfg.wire_dtype);
     let retry_policy = RetryPolicy::default();
     let mut total_wall = 0.0;
     let mut total_busy = 0.0;
@@ -274,6 +294,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let mut recovery_total = 0.0;
     let mut retries = 0u64;
     let mut retransmitted_bytes = 0u64;
+    let mut total_micros = 0usize;
     let mut dead = vec![false; exp.devices];
     let mut samples = 0usize;
     for (step, plan) in plans.iter().enumerate() {
@@ -281,7 +302,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
             fail_at.iter().filter(|f| f.1 == step).map(|f| (f.0, f.2)).collect();
         let elastic = !fails_now.is_empty() || dead.iter().any(|&x| x);
         let t = if elastic {
-            time_minibatch_failover(
+            time_minibatch_failover_dtype(
                 plan,
                 &lens,
                 exp.model,
@@ -293,9 +314,10 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
                 &cfg.device_speed,
                 &dead,
                 &fails_now,
+                cfg.wire_dtype,
             )
         } else {
-            time_minibatch_dispatch_split(
+            time_minibatch_dispatch_split_dtype(
                 plan,
                 &lens,
                 exp.model,
@@ -307,6 +329,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
                 &cfg.device_speed,
                 queue_dispatch,
                 &split,
+                cfg.wire_dtype,
             )
         };
         // Idle time counts devices alive at the step's start (a device
@@ -345,6 +368,7 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         );
         retries += step_retries;
         retransmitted_bytes += step_bytes;
+        total_micros += micros;
         total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead + step_recovery + fault_stall;
         total_busy += t.busy.iter().sum::<f64>();
         // Speed- and dispatch-aware packing estimate, so the bubble
@@ -380,6 +404,8 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let bubble_rate = if bubble_total > 0.0 { 1.0 - bubble_busy / (d * bubble_total) } else { 0.0 };
     let device_utilization =
         if total_wall > 0.0 { (total_busy / (total_wall * d)).clamp(0.0, 1.0) } else { 0.0 };
+    let (wire_bytes, fold_s) =
+        hotpath_model(exp, &topo, cfg.wire_dtype, total_micros, plans.len());
     RunResult {
         label: exp.label(),
         samples_per_sec_per_device: samples as f64 / (total_wall.max(1e-12) * d),
@@ -392,6 +418,8 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         retries,
         retransmitted_bytes,
         escalations,
+        wire_bytes,
+        fold_s,
         minibatches: plans.len(),
         samples,
     }
@@ -400,12 +428,52 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
 /// Sharded elementwise AdamW epilogue, ~ms-scale.
 const ADAM_EPILOGUE_S: f64 = 0.002;
 
+/// Modeled server-side fold throughput in GB/s of f32 master-accumulate
+/// traffic, used only for `RunResult::fold_s` — the chunk-parallel
+/// kernel's ballpark on the `benches/fold_kernel.rs` shapes. The engine
+/// measures the real quantity (`TrainRun::fold_s`); the sim's number
+/// exists for fig12-style predicted-vs-measured comparison, not as a
+/// calibrated model.
+const SIM_FOLD_GBPS: f64 = 12.0;
+
+/// FastFold hotpath mirror: modeled (wire_bytes, fold_s) for the run —
+/// see the `RunResult` field docs for the volume model. `micros` is the
+/// total dispatched (non-empty) microbatch count across all steps.
+fn hotpath_model(
+    exp: &ExperimentConfig,
+    topo: &Topology,
+    dtype: WireDtype,
+    micros: usize,
+    minibatches: usize,
+) -> (u64, f64) {
+    if exp.scheme == CommScheme::Collective {
+        // Collective has no mailbox fold and no encoded payloads — the
+        // engine's default `hotpath_stats` reports zeros there too.
+        return (0, 0.0);
+    }
+    let push = model_bytes_dtype(exp.model, dtype);
+    let mut wire = micros as f64 * push;
+    // Each pushed gradient element lands in one f32 master accumulate.
+    let mut fold_elems = micros as f64 * exp.model.params();
+    if exp.scheme == CommScheme::Hybrid && topo.multi_node() {
+        let nodes = topo.nodes() as f64;
+        // Cross level: once per minibatch the node-folded super-shards
+        // cross node boundaries — the same (nodes-1)/nodes volume term
+        // `hybrid_step_overhead_bytes` prices — and fold again into the
+        // cross-level masters.
+        wire += minibatches as f64 * push * (nodes - 1.0) / nodes;
+        fold_elems += minibatches as f64 * exp.model.params() * (nodes - 1.0) / nodes;
+    }
+    let fold_s = fold_elems * 4.0 / (SIM_FOLD_GBPS * 1e9);
+    (wire.round() as u64, fold_s)
+}
+
 /// Hybrid sharding's per-minibatch cross-node optimizer-state exchange:
 /// applies both to the legacy `Sharding::Hybrid` analytic toggle and to
 /// the real two-level scheme (`CommScheme::Hybrid`).
-fn hybrid_overhead(exp: &ExperimentConfig, topo: &Topology) -> f64 {
+fn hybrid_overhead(exp: &ExperimentConfig, topo: &Topology, dtype: WireDtype) -> f64 {
     if exp.sharding == Sharding::Hybrid || exp.scheme == CommScheme::Hybrid {
-        hybrid_step_overhead(exp.model, topo)
+        hybrid_step_overhead_dtype(exp.model, topo, dtype)
     } else {
         0.0
     }
@@ -874,6 +942,58 @@ mod tests {
         let mut cfg = seqsplit_cell(0.5, CommScheme::Odc, Balancer::LbMini);
         cfg.fail_at = vec![(0, 2, 1)];
         let _ = simulate(&cfg);
+    }
+
+    #[test]
+    fn wire_dtype_defaults_bf16_and_f32_doubles_reported_wire() {
+        // The default must keep every historical sim number intact: the
+        // pricing path has always assumed bf16 payloads.
+        let cfg = SimConfig::new(ExperimentConfig::golden());
+        assert_eq!(cfg.wire_dtype, WireDtype::Bf16);
+
+        let mk = |dtype: WireDtype| {
+            let mut exp = ExperimentConfig::golden();
+            exp.scheme = CommScheme::Odc;
+            exp.balancer = Balancer::LbMini;
+            exp.devices = 4;
+            exp.devices_per_node = 4;
+            exp.minibs = 4;
+            exp.steps = 4;
+            let mut cfg = SimConfig::new(exp);
+            cfg.wire_dtype = dtype;
+            simulate(&cfg)
+        };
+        let bf = mk(WireDtype::Bf16);
+        let f32c = mk(WireDtype::F32);
+        // Identical packing → identical micro count → exactly 2× bytes.
+        assert_eq!(f32c.wire_bytes, 2 * bf.wire_bytes);
+        assert!(bf.wire_bytes > 0);
+        // f32 payloads can only slow the comm slots down.
+        assert!(f32c.samples_per_sec_per_device <= bf.samples_per_sec_per_device);
+        // The fold runs on f32 masters either way — dtype-invariant.
+        assert_eq!(bf.fold_s, f32c.fold_s);
+        assert!(bf.fold_s > 0.0);
+    }
+
+    #[test]
+    fn hotpath_mirror_zero_under_collective_and_deterministic() {
+        let col = quick(CommScheme::Collective, Balancer::LbMicro, 4);
+        assert_eq!(col.wire_bytes, 0, "Collective has no encoded pushes");
+        assert_eq!(col.fold_s, 0.0, "Collective has no mailbox fold");
+        let a = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        let b = quick(CommScheme::Odc, Balancer::LbMicro, 4);
+        assert!(a.wire_bytes > 0);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert_eq!(a.fold_s, b.fold_s);
+        // Hybrid multinode pays the cross level on top of the intra push.
+        let hyb = multinode_short(CommScheme::Hybrid);
+        let odc = multinode_short(CommScheme::Odc);
+        assert!(
+            hyb.wire_bytes > odc.wire_bytes,
+            "cross-level super-shard exchange must add wire volume: {} vs {}",
+            hyb.wire_bytes,
+            odc.wire_bytes
+        );
     }
 
     #[test]

@@ -13,11 +13,25 @@ use crate::balance::split::SplitMap;
 use crate::comm::topology::Topology;
 use crate::comm::transport::{FaultPlan, RetryPolicy};
 use crate::comm::volume;
-use crate::config::{CommScheme, PaperModel, Sharding};
+use crate::config::{CommScheme, PaperModel, Sharding, WireDtype};
 
-/// Per-layer parameter bytes for a model (bf16).
+/// Total parameter bytes of a model under a configured wire encoding —
+/// the FastFold [`WireDtype`] makes the sim's historical "2 bytes per
+/// element" pricing an explicit, configurable assumption.
+pub fn model_bytes_dtype(model: PaperModel, dtype: WireDtype) -> f64 {
+    dtype.bytes_per_elem() as f64 * model.params()
+}
+
+/// Per-layer parameter bytes for a model under a configured wire dtype.
+pub fn layer_bytes_dtype(model: PaperModel, dtype: WireDtype) -> f64 {
+    model_bytes_dtype(model, dtype) / model.layers() as f64
+}
+
+/// Per-layer parameter bytes for a model (bf16 — the historical sim
+/// default, kept as the fixed-dtype entry point so every existing
+/// caller and pin is untouched; see [`layer_bytes_dtype`]).
 pub fn layer_bytes(model: PaperModel) -> f64 {
-    2.0 * model.params() / model.layers() as f64
+    layer_bytes_dtype(model, WireDtype::Bf16)
 }
 
 /// Communication seconds for ONE microbatch on one device: forward
@@ -36,7 +50,21 @@ pub fn micro_comm_time_opt(
     topo: &Topology,
     hierarchical: bool,
 ) -> f64 {
-    let lb = layer_bytes(model);
+    micro_comm_time_opt_dtype(model, scheme, sharding, topo, hierarchical, WireDtype::Bf16)
+}
+
+/// [`micro_comm_time_opt`] under a configured wire dtype: layer bytes
+/// follow [`WireDtype::bytes_per_elem`] instead of the hardwired bf16
+/// factor, so f32-wire runs price their doubled volume.
+pub fn micro_comm_time_opt_dtype(
+    model: PaperModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    dtype: WireDtype,
+) -> f64 {
+    let lb = layer_bytes_dtype(model, dtype);
     // CommScheme::Hybrid IS two-level sharding regardless of the
     // `sharding` field (the real backend has no full-shard mode).
     let per_op = match (sharding, scheme, hierarchical) {
@@ -52,7 +80,12 @@ pub fn micro_comm_time_opt(
 /// gradients are reduce-scattered across nodes and fresh params
 /// all-gathered back — 2 inter-node passes over the full model.
 pub fn hybrid_step_overhead(model: PaperModel, topo: &Topology) -> f64 {
-    hybrid_step_overhead_bytes(2.0 * model.params(), topo)
+    hybrid_step_overhead_dtype(model, topo, WireDtype::Bf16)
+}
+
+/// [`hybrid_step_overhead`] under a configured wire dtype.
+pub fn hybrid_step_overhead_dtype(model: PaperModel, topo: &Topology, dtype: WireDtype) -> f64 {
+    hybrid_step_overhead_bytes(model_bytes_dtype(model, dtype), topo)
 }
 
 /// `hybrid_step_overhead` generalized over raw parameter bytes, so the
@@ -87,7 +120,7 @@ pub fn recovery_epilogue_bytes(
 
 /// [`recovery_epilogue_bytes`] for a paper model (bf16 parameters).
 pub fn recovery_epilogue_s(model: PaperModel, world: usize, topo: &Topology, orphans: usize) -> f64 {
-    recovery_epilogue_bytes(2.0 * model.params(), world, topo, orphans)
+    recovery_epilogue_bytes(model_bytes_dtype(model, WireDtype::Bf16), world, topo, orphans)
 }
 
 /// ChaosComm pricing (the sim mirror of [`crate::comm::transport`]):
@@ -141,6 +174,13 @@ pub struct MinibatchTiming {
 /// overlapped with communication. An EMPTY slot still pays the full
 /// communication time under collective (the device must join every
 /// all-gather/reduce-scatter barrier) but costs nothing under ODC.
+///
+/// `compute.max(comm)` models FULL compute/communication overlap. On
+/// the one-sided schemes the engine now earns this credit explicitly:
+/// FastFold's streamed gathers post layer `l+1`'s gather while block
+/// `l` computes (see `engine::trainer::GatherStream`), so the slot
+/// pays whichever of the two is longer — exactly this expression. No
+/// numeric change here; the engine caught up to the model.
 fn slot_time(compute: f64, comm: f64, scheme: CommScheme, empty: bool) -> f64 {
     match (scheme, empty) {
         (CommScheme::Collective, true) => comm,
@@ -244,7 +284,7 @@ pub fn seqsplit_reduce_epilogue_s(
     topo: &Topology,
     split: &SplitMap,
 ) -> f64 {
-    seqsplit_reduce_epilogue_bytes(2.0 * model.params(), world, topo, split)
+    seqsplit_reduce_epilogue_bytes(model_bytes_dtype(model, WireDtype::Bf16), world, topo, split)
 }
 
 /// [`time_minibatch_dispatch`] under SeqSplit: chunk virtual ids are
@@ -268,8 +308,43 @@ pub fn time_minibatch_dispatch_split(
     queue: bool,
     split: &SplitMap,
 ) -> MinibatchTiming {
+    time_minibatch_dispatch_split_dtype(
+        plan,
+        lens,
+        model,
+        cost,
+        scheme,
+        sharding,
+        topo,
+        hierarchical,
+        speeds,
+        queue,
+        split,
+        WireDtype::Bf16,
+    )
+}
+
+/// [`time_minibatch_dispatch_split`] under a configured wire dtype: the
+/// per-micro comm slot is priced at the dtype's payload bytes
+/// (`micro_comm_time_opt_dtype`). `Bf16` reproduces the fixed-dtype
+/// entry point bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_dispatch_split_dtype(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    speeds: &[f64],
+    queue: bool,
+    split: &SplitMap,
+    dtype: WireDtype,
+) -> MinibatchTiming {
     let d = plan.devices();
-    let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
+    let comm = micro_comm_time_opt_dtype(model, scheme, sharding, topo, hierarchical, dtype);
     let m_max = plan.max_micro_count();
     let inv_speed = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
     debug_assert!(
@@ -360,9 +435,42 @@ pub fn time_minibatch_failover(
     dead: &[bool],
     fails: &[(usize, usize)],
 ) -> MinibatchTiming {
+    time_minibatch_failover_dtype(
+        plan,
+        lens,
+        model,
+        cost,
+        scheme,
+        sharding,
+        topo,
+        hierarchical,
+        speeds,
+        dead,
+        fails,
+        WireDtype::Bf16,
+    )
+}
+
+/// [`time_minibatch_failover`] under a configured wire dtype (see
+/// [`time_minibatch_dispatch_split_dtype`]).
+#[allow(clippy::too_many_arguments)]
+pub fn time_minibatch_failover_dtype(
+    plan: &Plan,
+    lens: &[usize],
+    model: PaperModel,
+    cost: &CostModel,
+    scheme: CommScheme,
+    sharding: Sharding,
+    topo: &Topology,
+    hierarchical: bool,
+    speeds: &[f64],
+    dead: &[bool],
+    fails: &[(usize, usize)],
+    dtype: WireDtype,
+) -> MinibatchTiming {
     debug_assert!(scheme != CommScheme::Collective, "elastic × Collective is rejected at config validation");
     let d = plan.devices();
-    let comm = micro_comm_time_opt(model, scheme, sharding, topo, hierarchical);
+    let comm = micro_comm_time_opt_dtype(model, scheme, sharding, topo, hierarchical, dtype);
     let inv_speed = |dev: usize| 1.0 / speeds.get(dev).copied().unwrap_or(1.0);
     let order = lpt_order(plan, lens, cost);
     // Per-device pull budget: dead devices pull nothing; a device
@@ -613,6 +721,34 @@ mod tests {
         assert!((recovery_epilogue_bytes(2e9, 4, &topo, 0) - 2.0 * base).abs() < 1e-12);
         assert!(recovery_epilogue_bytes(1e9, 4, &topo, 5) > base);
         assert!(recovery_epilogue_s(PaperModel::M1_5B, 8, &topo, 1) > 0.0);
+    }
+
+    #[test]
+    fn dtype_pricing_doubles_under_f32_wire() {
+        // The fixed-dtype entry points are bf16 wrappers — bit-identical
+        // to their historical values — while the `_dtype` variants price
+        // a configured encoding.
+        let m = PaperModel::M7B;
+        assert_eq!(layer_bytes(m), layer_bytes_dtype(m, WireDtype::Bf16));
+        assert_eq!(layer_bytes_dtype(m, WireDtype::F32), 2.0 * layer_bytes(m));
+        assert_eq!(model_bytes_dtype(m, WireDtype::Bf16), 2.0 * m.params());
+        let topo = Topology::paper(16, 8);
+        assert_eq!(
+            hybrid_step_overhead_dtype(m, &topo, WireDtype::Bf16),
+            hybrid_step_overhead(m, &topo)
+        );
+        assert_eq!(
+            hybrid_step_overhead_dtype(m, &topo, WireDtype::F32),
+            2.0 * hybrid_step_overhead(m, &topo)
+        );
+        let bf = micro_comm_time_opt(m, CommScheme::Odc, Sharding::Full, &topo, false);
+        let f32c =
+            micro_comm_time_opt_dtype(m, CommScheme::Odc, Sharding::Full, &topo, false, WireDtype::F32);
+        assert_eq!(
+            micro_comm_time_opt_dtype(m, CommScheme::Odc, Sharding::Full, &topo, false, WireDtype::Bf16),
+            bf
+        );
+        assert!(f32c > bf, "f32 wire must price more volume than bf16");
     }
 
     #[test]

@@ -7,6 +7,14 @@ Usage: bench_trend.py <prev_dir> <fresh_dir>
 Tracked metrics (higher is better for all):
   * BENCH_hotpath.json  -> per_microbatch.reduction_pct
         (zero-copy vs seed comm-path win, %)
+  * BENCH_hotpath.json  -> fold.gbps
+        (chunk-parallel fold throughput, GB/s of folded source bytes;
+        written by `cargo bench --bench fold_kernel`, which merges into
+        the record comm_path writes — run it after comm_path)
+  * BENCH_hotpath.json  -> wire.bytes_reduction_fraction
+        (pushed-byte fraction bf16 payloads shed vs f32, measured from
+        OdcComm hotpath counters; carries an ABSOLUTE floor of
+        WIRE_FLOOR — halving the wire must always shed >=45%)
   * BENCH_dispatch.json -> static_bubble_time_s - queue_bubble_time_s
         at the 4x-slowdown row (bubble seconds the work queue removes)
   * BENCH_dispatch.json -> chaos.retained_throughput_fraction
@@ -29,6 +37,7 @@ import sys
 
 TOLERANCE = 0.15  # 15% relative regression budget
 SEQSPLIT_FLOOR = 0.15  # absolute: split must shear >=15% off the dominant-corpus makespan
+WIRE_FLOOR = 0.45  # absolute: bf16 payloads must shed >=45% of the f32 wire bytes
 
 
 def load(path):
@@ -41,6 +50,22 @@ def load(path):
 def hot_metric(rec):
     try:
         v = rec["per_microbatch"]["reduction_pct"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def fold_metric(rec):
+    try:
+        v = rec["fold"]["gbps"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def wire_metric(rec):
+    try:
+        v = rec["wire"]["bytes_reduction_fraction"]
         return float(v) if v is not None else None
     except (KeyError, TypeError, ValueError):
         return None
@@ -81,6 +106,8 @@ def main():
 
     checks = [
         ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric, None),
+        ("BENCH_hotpath.json", "fold_kernel fold.gbps", fold_metric, None),
+        ("BENCH_hotpath.json", "bf16 wire bytes reduction fraction", wire_metric, WIRE_FLOOR),
         ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric, None),
         ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric, None),
         ("BENCH_dispatch.json", "seqsplit makespan reduction fraction", seqsplit_metric, SEQSPLIT_FLOOR),
