@@ -1,0 +1,169 @@
+"""Unit tests for scripts/bench_trend.py — the CI perf-trajectory gate.
+
+The load-bearing cases are the baseline-side failure modes: a restored
+cache that is empty (first run), lacks a file (brand-new BENCH key, e.g.
+BENCH_wire.json the wire-calibration bench introduces), lacks a metric
+(new key inside an existing file), or is outright corrupt (truncated
+cache restore). All of those must SEED the trajectory, not fail the
+gate — only the fresh side is load-bearing.
+"""
+
+import importlib.util
+import json
+import os
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "..", "..", "scripts", "bench_trend.py")
+_spec = importlib.util.spec_from_file_location("bench_trend", SCRIPT)
+bt = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bt)
+
+
+def hotpath(reduction_pct=40.0, gbps=5.0, wire_frac=0.5):
+    return {
+        "measured": True,
+        "per_microbatch": {"reduction_pct": reduction_pct},
+        "fold": {"gbps": gbps},
+        "wire": {"bytes_reduction_fraction": wire_frac},
+    }
+
+
+def dispatch(margin=8.0, retained=0.9, shear=0.3):
+    return {
+        "measured": True,
+        "rows": [{"slowdown": 4.0, "static_bubble_time_s": margin + 2.0, "queue_bubble_time_s": 2.0}],
+        "chaos": {"retained_throughput_fraction": retained},
+        "seqsplit": {"makespan_reduction_fraction": shear},
+    }
+
+
+def wire(alpha_us=2.0, beta_gbps=8.0):
+    return {"measured": True, "transports": {"uds": {"alpha_us": alpha_us, "beta_gbps": beta_gbps}}}
+
+
+def write(d, records):
+    for fname, rec in records.items():
+        with open(os.path.join(d, fname), "w") as f:
+            json.dump(rec, f)
+
+
+def fresh_full(d):
+    write(d, {"BENCH_hotpath.json": hotpath(), "BENCH_dispatch.json": dispatch(), "BENCH_wire.json": wire()})
+
+
+def run(prev, fresh, checks=None):
+    msgs = []
+    failures = bt.run_checks(str(prev), str(fresh), checks=checks or bt.CHECKS, out=msgs.append)
+    return msgs, failures
+
+
+def test_first_run_seeds_every_metric(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    fresh_full(fresh)
+    msgs, failures = run(prev, fresh)
+    assert failures == []
+    assert len(msgs) == len(bt.CHECKS)
+    assert all("seeding" in m for m in msgs)
+
+
+def test_missing_baseline_file_seeds_only_that_file(tmp_path):
+    # the wire-calibration record is brand new this cycle: the restored
+    # baseline has hotpath + dispatch but no BENCH_wire.json
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    write(prev, {"BENCH_hotpath.json": hotpath(), "BENCH_dispatch.json": dispatch()})
+    fresh_full(fresh)
+    msgs, failures = run(prev, fresh)
+    assert failures == []
+    seeded = [m for m in msgs if "seeding" in m]
+    assert len(seeded) == 2  # the two wire_calib checks only
+    assert all("wire_calib" in m for m in seeded)
+
+
+def test_corrupt_baseline_seeds_instead_of_crashing(tmp_path):
+    # regression: a truncated cache restore used to raise out of
+    # json.load and kill the whole gate
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    (prev / "BENCH_hotpath.json").write_text('{"measured": true, "per_micro')
+    fresh_full(fresh)
+    msgs, failures = run(prev, fresh)
+    assert failures == []
+    assert any("unreadable" in m for m in msgs)
+
+
+def test_new_metric_in_existing_file_seeds(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    old_hot = hotpath()
+    del old_hot["fold"]  # baseline predates the fold_kernel key
+    write(prev, {"BENCH_hotpath.json": old_hot, "BENCH_dispatch.json": dispatch(), "BENCH_wire.json": wire()})
+    fresh_full(fresh)
+    msgs, failures = run(prev, fresh)
+    assert failures == []
+    assert any("no metric" in m and "fold" in m for m in msgs)
+
+
+def test_higher_is_better_regression_fails(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    write(prev, {"BENCH_wire.json": wire(beta_gbps=10.0)})
+    write(fresh, {"BENCH_wire.json": wire(beta_gbps=8.0)})  # -20% > 15% budget
+    checks = [c for c in bt.CHECKS if c[1] == "wire_calib uds beta_gbps"]
+    _, failures = run(prev, fresh, checks)
+    assert len(failures) == 1 and "regressed" in failures[0]
+
+
+def test_lower_is_better_direction_for_alpha(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    checks = [c for c in bt.CHECKS if c[1] == "wire_calib uds alpha_us"]
+    # alpha DROPPED 20%: an improvement, must pass even though it moved
+    # more than the tolerance
+    write(prev, {"BENCH_wire.json": wire(alpha_us=2.5)})
+    write(fresh, {"BENCH_wire.json": wire(alpha_us=2.0)})
+    _, failures = run(prev, fresh, checks)
+    assert failures == []
+    # alpha ROSE 50%: a regression for a lower-is-better metric
+    write(prev, {"BENCH_wire.json": wire(alpha_us=2.0)})
+    write(fresh, {"BENCH_wire.json": wire(alpha_us=3.0)})
+    _, failures = run(prev, fresh, checks)
+    assert len(failures) == 1 and "regressed" in failures[0]
+
+
+def test_within_tolerance_passes(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    write(prev, {"BENCH_hotpath.json": hotpath(reduction_pct=40.0)})
+    write(fresh, {"BENCH_hotpath.json": hotpath(reduction_pct=36.0)})  # -10% < 15%
+    checks = [c for c in bt.CHECKS if c[1] == "comm_path reduction_pct"]
+    msgs, failures = run(prev, fresh, checks)
+    assert failures == []
+    assert any("OK" in m for m in msgs)
+
+
+def test_fresh_side_is_load_bearing(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    # missing fresh record
+    _, failures = run(prev, fresh, [c for c in bt.CHECKS if c[0] == "BENCH_wire.json"])
+    assert failures and all("missing" in f for f in failures)
+    # unmeasured fresh record (the committed placeholder)
+    rec = wire()
+    rec["measured"] = False
+    write(fresh, {"BENCH_wire.json": rec})
+    _, failures = run(prev, fresh, [c for c in bt.CHECKS if c[0] == "BENCH_wire.json"])
+    assert failures and all("measured:false" in f for f in failures)
+    # corrupt fresh record
+    (fresh / "BENCH_wire.json").write_text("not json at all")
+    _, failures = run(prev, fresh, [c for c in bt.CHECKS if c[0] == "BENCH_wire.json"])
+    assert failures and all("unreadable" in f for f in failures)
+
+
+def test_absolute_floor_applies_even_when_seeding(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    write(fresh, {"BENCH_dispatch.json": dispatch(shear=0.05)})  # below SEQSPLIT_FLOOR
+    checks = [c for c in bt.CHECKS if c[1] == "seqsplit makespan reduction fraction"]
+    _, failures = run(prev, fresh, checks)
+    assert len(failures) == 1 and "absolute floor" in failures[0]

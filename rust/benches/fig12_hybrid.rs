@@ -17,10 +17,11 @@
 //!   so CI's bench smoke gate can always run it.
 
 use odc::comm::topology::Topology;
+use odc::comm::TransportKind;
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::report::{pct_delta, Table};
-use odc::sim::run::{simulate, SimConfig};
+use odc::sim::run::{simulate, SimConfig, WireCalib};
 use odc::sim::timeline::{hybrid_step_overhead_bytes, recovery_epilogue_bytes};
 use std::path::Path;
 
@@ -167,6 +168,43 @@ fn engine_mode() {
         measured * 1e3
     );
     println!("(prediction prices the paper topology's NICs; the engine moves shared memory — compare shapes, not absolutes)");
+
+    // ---- WireComm: calibrated link pricing vs measured transports ----
+    // With a measured BENCH_wire.json (`cargo bench --bench wire_calib`)
+    // the hand-set NIC guess above is replaced by fitted alpha/beta, and
+    // the SAME trainer runs over the real byte transport: predicted =
+    // inproc step wall + pushed bytes/step over beta (the bandwidth term
+    // of the wire model — alpha rides inside the measured inproc wall).
+    for kind in [TransportKind::Shm, TransportKind::Uds] {
+        let calib = match WireCalib::load(kind) {
+            Ok(c) => c,
+            Err(_) => {
+                println!(
+                    "wire step time (odc over {kind}): BENCH_wire.json not measured yet — \
+                     run `cargo bench --bench wire_calib`; skipping."
+                );
+                continue;
+            }
+        };
+        let mut cfg = mk(CommScheme::Odc, Balancer::LbMini, 0);
+        cfg.transport = kind;
+        match train(&cfg) {
+            Ok(r) => {
+                let n = r.logs.len().max(1);
+                let measured = r.logs.iter().map(|l| l.wall_s).sum::<f64>() / n as f64;
+                let wire_s = (r.wire_bytes as f64 / n as f64) / (calib.beta_gbps * 1e9);
+                let predicted = odc_wall.unwrap_or(0.0) + wire_s;
+                println!(
+                    "wire step time (odc over {kind}):  sim-predicted {:.3} ms  |  engine-measured {:.3} ms   (calibrated alpha {:.2} µs, beta {:.2} GB/s)",
+                    predicted * 1e3,
+                    measured * 1e3,
+                    calib.alpha_us,
+                    calib.beta_gbps
+                );
+            }
+            Err(e) => println!("fig12 --engine: {kind} transport run unavailable ({e}); skipping."),
+        }
+    }
 
     // ---- ElasticWorld: predicted vs measured recovery overhead ----
     // One crash (device 1, minibatch 1, before its 2nd pull) under

@@ -95,9 +95,11 @@ use super::fold::{self, FoldPiece, PieceData, WireDtype};
 use super::membership::{Membership, MembershipBarrier};
 use super::shared::SharedBuf;
 use super::topology::GroupMap;
+use super::ring::RingTransport;
+use super::socket::SocketTransport;
 use super::transport::{
-    FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
-    WireMsg,
+    frame, FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError,
+    Transport, TransportKind, WireCodec, WireMsg,
 };
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -173,6 +175,96 @@ impl WireMsg for Msg {
             | Msg::CrossAccum { data, .. } => data.len(),
             _ => 0,
         }
+    }
+}
+
+impl WireCodec for Msg {
+    fn encode(&self, out: &mut Vec<u8>) -> bool {
+        match self {
+            Msg::IntraAccum { layer, micro, weight, client, data } => {
+                out.push(0);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *micro);
+                frame::put_f32(out, *weight);
+                frame::put_u64(out, *client as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::IntraDone { client } => {
+                out.push(1);
+                frame::put_u64(out, *client as u64);
+            }
+            Msg::IntraRetract { micro, client } => {
+                out.push(2);
+                frame::put_u64(out, *micro);
+                frame::put_u64(out, *client as u64);
+            }
+            Msg::IntraSeqAccum { layer, seq, chunk, count, weight, client, data } => {
+                out.push(3);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *seq);
+                frame::put_u32(out, *chunk);
+                frame::put_u32(out, *count);
+                frame::put_f32(out, *weight);
+                frame::put_u64(out, *client as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::IntraSeqRetract { seq, chunk, client } => {
+                out.push(4);
+                frame::put_u64(out, *seq);
+                frame::put_u32(out, *chunk);
+                frame::put_u64(out, *client as u64);
+            }
+            Msg::CrossAccum { layer, group, data } => {
+                out.push(5);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *group as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::CrossDone => out.push(6),
+            // the two Flush variants carry mpsc reply channels — a
+            // process-local rendezvous on a self-link by construction;
+            // they ride the transport's ticketed local lane
+            Msg::IntraFlush { .. } | Msg::CrossFlush { .. } => return false,
+            Msg::Shutdown => out.push(7),
+        }
+        true
+    }
+
+    fn decode(bytes: &[u8]) -> Option<Msg> {
+        let mut r = frame::Reader::new(bytes.get(1..)?);
+        let msg = match bytes.first()? {
+            0 => Msg::IntraAccum {
+                layer: r.u64()? as usize,
+                micro: r.u64()?,
+                weight: r.f32()?,
+                client: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            1 => Msg::IntraDone { client: r.u64()? as usize },
+            2 => Msg::IntraRetract { micro: r.u64()?, client: r.u64()? as usize },
+            3 => Msg::IntraSeqAccum {
+                layer: r.u64()? as usize,
+                seq: r.u64()?,
+                chunk: r.u32()?,
+                count: r.u32()?,
+                weight: r.f32()?,
+                client: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            4 => Msg::IntraSeqRetract { seq: r.u64()?, chunk: r.u32()?, client: r.u64()? as usize },
+            5 => Msg::CrossAccum {
+                layer: r.u64()? as usize,
+                group: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            6 => Msg::CrossDone,
+            7 => Msg::Shutdown,
+            _ => return None,
+        };
+        if !r.done() {
+            return None;
+        }
+        Some(msg)
     }
 }
 
@@ -638,6 +730,34 @@ impl HybridComm {
             Arc::new(FaultyTransport::new(world, plan, policy)),
             wire,
         )
+    }
+
+    /// Build the full transport stack from a [`TransportKind`]: the
+    /// byte-moving base (`inproc` mailbox, `shm` ring, or `uds`
+    /// sockets), optionally wrapped in the chaos layer — both levels'
+    /// traffic crosses the same stack. This is the trainer's
+    /// `--transport` entry point; ticket-sequenced delivery keeps the
+    /// training bytes identical across all three bases under static
+    /// dispatch (see `comm/ring.rs`).
+    pub fn with_stack(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        group_size: usize,
+        wire: WireDtype,
+        kind: TransportKind,
+        faults: Option<(FaultPlan, RetryPolicy)>,
+    ) -> std::io::Result<Self> {
+        let world = membership.world();
+        let base: Arc<dyn Transport<Msg>> = match kind {
+            TransportKind::Inproc => Arc::new(InProcTransport::new(world)),
+            TransportKind::Shm => Arc::new(RingTransport::new(world)),
+            TransportKind::Uds => Arc::new(SocketTransport::bind_world(world)?),
+        };
+        let transport: Arc<dyn Transport<Msg>> = match faults {
+            Some((plan, policy)) => Arc::new(FaultyTransport::over(base, plan, policy)),
+            None => base,
+        };
+        Ok(HybridComm::with_transport(params, membership, group_size, transport, wire))
     }
 
     fn with_transport(

@@ -31,6 +31,13 @@
 //!   deterministic drop/dup/reorder/delay injection per a declarative
 //!   [`FaultPlan`]) with retransmit ladder, receiver-side reassembly,
 //!   and suspicion-counter escalation into ElasticWorld.
+//! * [`ring`] — WireComm: lock-free shared-memory SPSC ring-buffer
+//!   transport (turn-counter slot publish, frame fragmentation,
+//!   busy/park hybrid wait) — bytes leave the typed mailbox world.
+//! * [`socket`] — WireComm: UDS-with-TCP-fallback transport (framed
+//!   length-prefixed envelopes over kernel sockets, message fusion,
+//!   chunking) with a per-OS-process endpoint mode driven by
+//!   `runtime::spawn_world`.
 //! * [`membership`] — ElasticWorld: fault-tolerant elastic membership
 //!   for the one-sided backends (device crash mid-minibatch, join at a
 //!   minibatch boundary, deterministic rendezvous shard takeover,
@@ -48,7 +55,9 @@ pub mod hybrid;
 pub mod membership;
 pub mod odc;
 pub mod primbench;
+pub mod ring;
 pub mod shared;
+pub mod socket;
 pub mod topology;
 pub mod transport;
 pub mod volume;
@@ -61,8 +70,10 @@ pub use gather_cache::{CacheStats, GatherCache};
 pub use hybrid::HybridComm;
 pub use membership::{Membership, MembershipBarrier, OptReplica};
 pub use odc::OdcComm;
+pub use ring::RingTransport;
+pub use socket::SocketTransport;
 pub use topology::GroupMap;
 pub use transport::{
     Envelope, FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError,
-    Transport, WireMsg,
+    Transport, TransportKind, WireCodec, WireMsg,
 };

@@ -59,9 +59,11 @@ use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
 use super::backend::{seq_micro_key, CommBackend, GatherPolicy, HotpathStats, ParamStore};
 use super::fold::{self, FoldPiece, PieceData, WireDtype};
 use super::membership::{Membership, MembershipBarrier};
+use super::ring::RingTransport;
+use super::socket::SocketTransport;
 use super::transport::{
-    FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError, Transport,
-    WireMsg,
+    frame, FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError,
+    Transport, TransportKind, WireCodec, WireMsg,
 };
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -118,6 +120,83 @@ impl WireMsg for Msg {
             Msg::Accum { data, .. } | Msg::SeqAccum { data, .. } => data.len(),
             _ => 0,
         }
+    }
+}
+
+impl WireCodec for Msg {
+    fn encode(&self, out: &mut Vec<u8>) -> bool {
+        match self {
+            Msg::Accum { layer, micro, weight, client, data } => {
+                out.push(0);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *micro);
+                frame::put_f32(out, *weight);
+                frame::put_u64(out, *client as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::SeqAccum { layer, seq, chunk, count, weight, client, data } => {
+                out.push(1);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *seq);
+                frame::put_u32(out, *chunk);
+                frame::put_u32(out, *count);
+                frame::put_f32(out, *weight);
+                frame::put_u64(out, *client as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::SeqRetract { seq, chunk, client } => {
+                out.push(2);
+                frame::put_u64(out, *seq);
+                frame::put_u32(out, *chunk);
+                frame::put_u64(out, *client as u64);
+            }
+            Msg::Done { client } => {
+                out.push(3);
+                frame::put_u64(out, *client as u64);
+            }
+            Msg::Retract { micro, client } => {
+                out.push(4);
+                frame::put_u64(out, *micro);
+                frame::put_u64(out, *client as u64);
+            }
+            // Flush carries an mpsc reply channel — a process-local
+            // rendezvous by nature. It rides the transport's ticketed
+            // local lane (it is only ever sent on a self-link).
+            Msg::Flush { .. } => return false,
+            Msg::Shutdown => out.push(5),
+        }
+        true
+    }
+
+    fn decode(bytes: &[u8]) -> Option<Msg> {
+        let mut r = frame::Reader::new(bytes.get(1..)?);
+        let msg = match bytes.first()? {
+            0 => Msg::Accum {
+                layer: r.u64()? as usize,
+                micro: r.u64()?,
+                weight: r.f32()?,
+                client: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            1 => Msg::SeqAccum {
+                layer: r.u64()? as usize,
+                seq: r.u64()?,
+                chunk: r.u32()?,
+                count: r.u32()?,
+                weight: r.f32()?,
+                client: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            2 => Msg::SeqRetract { seq: r.u64()?, chunk: r.u32()?, client: r.u64()? as usize },
+            3 => Msg::Done { client: r.u64()? as usize },
+            4 => Msg::Retract { micro: r.u64()?, client: r.u64()? as usize },
+            5 => Msg::Shutdown,
+            _ => return None,
+        };
+        if !r.done() {
+            return None;
+        }
+        Some(msg)
     }
 }
 
@@ -214,6 +293,33 @@ impl OdcComm {
             Arc::new(FaultyTransport::new(world, plan, policy)),
             wire,
         )
+    }
+
+    /// Build the full transport stack from a [`TransportKind`]: the
+    /// byte-moving base (`inproc` mailbox, `shm` ring, or `uds`
+    /// sockets), optionally wrapped in the chaos layer. This is the
+    /// trainer's `--transport` entry point; delivery order — and
+    /// therefore the training bytes under static dispatch — is
+    /// identical across all three bases (ticket-sequenced, see
+    /// `comm/ring.rs`).
+    pub fn with_stack(
+        params: Arc<ParamStore>,
+        membership: Arc<Membership>,
+        wire: WireDtype,
+        kind: TransportKind,
+        faults: Option<(FaultPlan, RetryPolicy)>,
+    ) -> std::io::Result<Self> {
+        let world = membership.world();
+        let base: Arc<dyn Transport<Msg>> = match kind {
+            TransportKind::Inproc => Arc::new(InProcTransport::new(world)),
+            TransportKind::Shm => Arc::new(RingTransport::new(world)),
+            TransportKind::Uds => Arc::new(SocketTransport::bind_world(world)?),
+        };
+        let transport: Arc<dyn Transport<Msg>> = match faults {
+            Some((plan, policy)) => Arc::new(FaultyTransport::over(base, plan, policy)),
+            None => base,
+        };
+        Ok(OdcComm::with_transport(params, membership, transport, wire))
     }
 
     fn with_transport(

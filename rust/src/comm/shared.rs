@@ -116,6 +116,39 @@
 //!   piece retracts the micro's delivered siblings before crashing out,
 //!   so a survivor's re-run folds exactly once (see `docs/faults.md`).
 //!
+//! ## The wire timeline (WireComm — `super::ring`, `super::socket`)
+//!
+//! Under a byte-moving transport (`--transport shm|uds`) each send
+//! gains an encode → move → decode sub-structure, again strictly
+//! inside the phase boundaries:
+//!
+//! ```text
+//!  send ──▶ ticket claimed ──▶ encode (frame) ──▶ fuse? chunk? ──▶ move
+//!                                                                   │
+//!  deliver ◀── ticket-ordered stash ◀── decode ◀── reassemble ◀─────┘
+//! ```
+//!
+//! * **tickets reproduce the mailbox**: a per-destination ticket is
+//!   claimed atomically at send time and delivery is strictly
+//!   ticket-ordered, so every daemon observes the SAME total arrival
+//!   order it would under the in-process mailbox — which is why the
+//!   transport matrix asserts bit-identity, not tolerance;
+//! * **local-only control rides a ticketed lane**: messages that cannot
+//!   cross a process boundary (flush handshakes carrying channel
+//!   senders) take a local lane that merges by the same ticket order,
+//!   after flushing any frames fused ahead of them;
+//! * **fusion and chunking are invisible**: small same-(dst, micro)
+//!   frames coalesce below the fusion budget and oversized frames split
+//!   at the chunk size, but frames are reassembled before decode — the
+//!   daemon sees whole messages in ticket order, full stop;
+//! * **one-sided reads stay shared-memory**: gathers read `SharedBuf`
+//!   windows directly on every transport (both are same-host), so the
+//!   wire carries only the push-side mailbox traffic.
+//!
+//! See `docs/transport.md` for the frame format, the ring's memory
+//! layout, and the calibration loop that feeds the measured alpha/beta
+//! back into the simulator's link pricing.
+//!
 //! Violating the discipline is a logic bug in the coordinator, not in
 //! this substrate — mirroring how real RDMA gives you no protection
 //! either. The engine's integration tests (engine vs single-device

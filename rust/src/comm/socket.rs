@@ -1,0 +1,673 @@
+//! WireComm (2/2) — the UDS/TCP socket transport.
+//!
+//! [`SocketTransport`] moves every envelope through real kernel
+//! sockets: each rank binds a Unix-domain listener (falling back to a
+//! TCP loopback listener when the UDS bind fails — path-length limits,
+//! exotic filesystems), advertises its address in a shared rendezvous
+//! directory (`rank{d}.addr`), and peers connect one stream per
+//! directed link on first use. An acceptor thread per hosted rank
+//! spawns one reader thread per accepted connection; readers decode
+//! frames and hand them to the destination's queue.
+//!
+//! # Wire format
+//!
+//! The stream carries length-prefixed **segments**:
+//!
+//! ```text
+//! [len: u32 LE][last: u8][bytes…]      // one segment
+//! ```
+//!
+//! A [`frame`]-encoded envelope ≤ `CHUNK_BYTES` travels as a single
+//! `last=1` segment. Larger frames are **chunked** into `CHUNK_BYTES`
+//! segments (`last=1` only on the final one) so a multi-megabyte push
+//! never monopolizes a link buffer in one burst and the kernel can
+//! pipeline the copy — the receiving reassembly is a per-connection
+//! append (stream FIFO keeps a frame's chunks contiguous).
+//!
+//! # Fusion
+//!
+//! Consecutive small *data* frames on one link that share a microbatch
+//! id are **fused**: their segments accumulate in a per-connection
+//! buffer and flush as a single `write(2)` once the `FUSION_BUDGET` is
+//! reached, a different microbatch arrives, or a barrier message comes
+//! through (barriers — `Done`/`Flush`/`Shutdown` — always flush, so a
+//! fused tail can never outlive its own minibatch epilogue; this is
+//! the same discipline ChaosComm's limbo applies). Fusion only delays
+//! the syscall, never the order: tickets are claimed at enqueue, and
+//! the stream write order matches ticket order per link.
+//!
+//! # Two modes
+//!
+//! * **Hosted** ([`SocketTransport::bind_world`]) — one process hosts
+//!   all ranks (the trainer: device threads + daemon threads). Every
+//!   byte still crosses the kernel through a genuine socketpair, and a
+//!   shared per-destination ticket counter restores the in-process
+//!   mailbox's global arrival order, keeping backends bit-identical
+//!   (see `comm/ring.rs` for the ticket argument).
+//! * **Endpoint** ([`SocketTransport::endpoint`]) — one process per
+//!   rank (the `runtime::spawn_world` harness). No shared counters
+//!   exist across processes, so delivery is per-link FIFO with fair
+//!   cross-link arrival order, and protocols over it must be
+//!   order-tolerant (the harness's scatter-accumulate is).
+
+use super::transport::{frame, Envelope, SendError, Transport, WireCodec};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Frames larger than this are split into `last=0` segments.
+pub const CHUNK_BYTES: usize = 256 * 1024;
+/// Fused small-frame buffer flushes at this many bytes.
+pub const FUSION_BUDGET: usize = 32 * 1024;
+/// Segment header bytes (`u32` length + `u8` last flag).
+const SEG_HDR: usize = 5;
+/// How long connect/rendezvous waits for a peer's address file.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(20);
+
+static DIR_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+enum Listener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Uds(l) => l.accept().map(|(s, _)| Stream::Uds(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+enum Stream {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn shutdown(&self) {
+        let _ = match self {
+            Stream::Uds(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Uds(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Uds(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Uds(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// One outbound link: the stream plus the fusion buffer.
+struct Conn {
+    stream: Stream,
+    /// Pre-segmented fused bytes awaiting one `write(2)`.
+    fused: Vec<u8>,
+    /// Microbatch id the fused frames share.
+    fused_micro: u64,
+}
+
+impl Conn {
+    fn flush_fused(&mut self) -> io::Result<()> {
+        if self.fused.is_empty() {
+            return Ok(());
+        }
+        let buf = std::mem::take(&mut self.fused);
+        self.stream.write_all(&buf)
+    }
+}
+
+/// Per-destination delivery queue fed by reader threads and the local
+/// lane. Ordered mode releases strictly by ticket; unordered mode
+/// (endpoint) releases in arrival order.
+struct DstQueue<M> {
+    m: Mutex<QInner<M>>,
+    cv: Condvar,
+}
+
+struct QInner<M> {
+    ordered: bool,
+    next_ticket: u64,
+    stash: BTreeMap<u64, Envelope<M>>,
+    fifo: VecDeque<Envelope<M>>,
+    closed: bool,
+}
+
+impl<M> DstQueue<M> {
+    fn new(ordered: bool) -> Self {
+        DstQueue {
+            m: Mutex::new(QInner {
+                ordered,
+                next_ticket: 0,
+                stash: BTreeMap::new(),
+                fifo: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, ticket: u64, env: Envelope<M>) {
+        let mut q = self.m.lock().unwrap();
+        if q.ordered {
+            q.stash.insert(ticket, env);
+        } else {
+            q.fifo.push_back(env);
+        }
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<Envelope<M>> {
+        let mut q = self.m.lock().unwrap();
+        loop {
+            if q.ordered {
+                let next = q.next_ticket;
+                if let Some(env) = q.stash.remove(&next) {
+                    q.next_ticket += 1;
+                    return Some(env);
+                }
+            } else if let Some(env) = q.fifo.pop_front() {
+                return Some(env);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.m.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// UDS-with-TCP-fallback byte transport — see the module docs.
+pub struct SocketTransport<M: WireCodec> {
+    world: usize,
+    /// `None` = hosted mode (all ranks in this process); `Some(r)` =
+    /// endpoint mode (this process is rank `r` only).
+    rank: Option<usize>,
+    dir: PathBuf,
+    owns_dir: bool,
+    /// Hosted listener ranks (for the teardown dummy-connect).
+    hosted: Vec<usize>,
+    conns: Vec<Mutex<Option<Conn>>>,
+    seq: Vec<AtomicU64>,
+    tickets: Vec<AtomicU64>,
+    queues: Vec<Arc<DstQueue<M>>>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    closed: Arc<AtomicBool>,
+}
+
+impl<M: WireCodec> SocketTransport<M> {
+    /// Hosted mode: bind every rank's listener in this process (the
+    /// trainer path — device threads keep sharing the `ParamStore`,
+    /// while every mailbox byte crosses the kernel). Ticket-ordered:
+    /// delivery matches the in-process mailbox exactly.
+    pub fn bind_world(world: usize) -> io::Result<Self> {
+        let dir = std::env::temp_dir().join(format!(
+            "odc-wire-{}-{}",
+            std::process::id(),
+            DIR_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Self::build(world, None, dir, true, true)
+    }
+
+    /// Endpoint mode: this process hosts exactly `rank`, rendezvousing
+    /// with its peers through the shared `dir`. Delivery is per-link
+    /// FIFO only (no cross-process ticket counter exists).
+    pub fn endpoint(rank: usize, world: usize, dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Self::build(world, Some(rank), dir, false, false)
+    }
+
+    fn build(
+        world: usize,
+        rank: Option<usize>,
+        dir: PathBuf,
+        owns_dir: bool,
+        ordered: bool,
+    ) -> io::Result<Self> {
+        let hosted: Vec<usize> = match rank {
+            Some(r) => vec![r],
+            None => (0..world).collect(),
+        };
+        let queues: Vec<Arc<DstQueue<M>>> =
+            (0..world).map(|_| Arc::new(DstQueue::new(ordered))).collect();
+        let threads = Arc::new(Mutex::new(Vec::new()));
+        let closed = Arc::new(AtomicBool::new(false));
+        for &r in &hosted {
+            let listener = Self::bind_rank(&dir, r)?;
+            let q = Arc::clone(&queues[r]);
+            let reg = Arc::clone(&threads);
+            let stop = Arc::clone(&closed);
+            let acceptor = std::thread::spawn(move || {
+                loop {
+                    let stream = match listener.accept() {
+                        Ok(s) => s,
+                        Err(_) => break,
+                    };
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let q = Arc::clone(&q);
+                    let reader = std::thread::spawn(move || reader_loop::<M>(stream, q));
+                    reg.lock().unwrap().push(reader);
+                }
+            });
+            threads.lock().unwrap().push(acceptor);
+        }
+        Ok(SocketTransport {
+            world,
+            rank,
+            dir,
+            owns_dir,
+            hosted,
+            conns: (0..world * world).map(|_| Mutex::new(None)).collect(),
+            seq: (0..world * world).map(|_| AtomicU64::new(0)).collect(),
+            tickets: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            queues,
+            threads,
+            closed,
+        })
+    }
+
+    /// Bind rank `r`'s listener: UDS at `dir/rank{r}.sock`, falling
+    /// back to a TCP loopback socket; advertise in `dir/rank{r}.addr`.
+    fn bind_rank(dir: &Path, r: usize) -> io::Result<Listener> {
+        let sock = dir.join(format!("rank{r}.sock"));
+        let _ = std::fs::remove_file(&sock);
+        let (listener, addr_line) = match UnixListener::bind(&sock) {
+            Ok(l) => (Listener::Uds(l), format!("uds:{}", sock.display())),
+            Err(_) => {
+                let l = TcpListener::bind("127.0.0.1:0")?;
+                let port = l.local_addr()?.port();
+                (Listener::Tcp(l), format!("tcp:127.0.0.1:{port}"))
+            }
+        };
+        // write-then-rename so peers never read a torn address file
+        let tmp = dir.join(format!("rank{r}.addr.tmp"));
+        std::fs::write(&tmp, format!("{addr_line}\n"))?;
+        std::fs::rename(&tmp, dir.join(format!("rank{r}.addr")))?;
+        Ok(listener)
+    }
+
+    /// Resolve + connect to `dst`, polling for its address file until
+    /// the rendezvous timeout (peers may still be starting up).
+    fn connect(dir: &Path, dst: usize) -> io::Result<Stream> {
+        let addr_file = dir.join(format!("rank{dst}.addr"));
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        loop {
+            match std::fs::read_to_string(&addr_file) {
+                Ok(line) => {
+                    let line = line.trim();
+                    if let Some(path) = line.strip_prefix("uds:") {
+                        match UnixStream::connect(path) {
+                            Ok(s) => return Ok(Stream::Uds(s)),
+                            Err(e) if Instant::now() >= deadline => return Err(e),
+                            Err(_) => {}
+                        }
+                    } else if let Some(addr) = line.strip_prefix("tcp:") {
+                        match TcpStream::connect(addr) {
+                            Ok(s) => return Ok(Stream::Tcp(s)),
+                            Err(e) if Instant::now() >= deadline => return Err(e),
+                            Err(_) => {}
+                        }
+                    } else {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("malformed address file {}", addr_file.display()),
+                        ));
+                    }
+                }
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(io::Error::new(
+                        e.kind(),
+                        format!("rank{dst}.addr never appeared in {}", dir.display()),
+                    ));
+                }
+                Err(_) => {}
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Put one encoded frame on link `src→dst`, fusing or chunking as
+    /// the sizes dictate.
+    fn write_wire(&self, src: usize, dst: usize, barrier: bool, micro: u64, bytes: Vec<u8>) -> io::Result<()> {
+        let mut guard = self.conns[src * self.world + dst].lock().unwrap();
+        if guard.is_none() {
+            let stream = Self::connect(&self.dir, dst)?;
+            *guard = Some(Conn { stream, fused: Vec::new(), fused_micro: 0 });
+        }
+        let conn = guard.as_mut().expect("just connected");
+        let seg_len = SEG_HDR + bytes.len();
+        let fusible = !barrier && seg_len <= FUSION_BUDGET;
+        if !conn.fused.is_empty()
+            && (!fusible || conn.fused_micro != micro || conn.fused.len() + seg_len > FUSION_BUDGET)
+        {
+            conn.flush_fused()?;
+        }
+        if fusible {
+            if conn.fused.is_empty() {
+                conn.fused_micro = micro;
+            }
+            push_segment(&mut conn.fused, &bytes, true);
+            if conn.fused.len() >= FUSION_BUDGET {
+                conn.flush_fused()?;
+            }
+            return Ok(());
+        }
+        // immediate path: barrier or large frame (chunked)
+        let mut off = 0usize;
+        loop {
+            let take = (bytes.len() - off).min(CHUNK_BYTES);
+            let last = off + take == bytes.len();
+            let mut seg = Vec::with_capacity(SEG_HDR + take);
+            push_segment_raw(&mut seg, &bytes[off..off + take], last);
+            conn.stream.write_all(&seg)?;
+            off += take;
+            if last {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush a link's fused buffer (barrier discipline for local-only
+    /// messages, which bypass `write_wire`).
+    fn flush_link(&self, src: usize, dst: usize) {
+        if let Some(conn) = self.conns[src * self.world + dst].lock().unwrap().as_mut() {
+            let _ = conn.flush_fused();
+        }
+    }
+}
+
+fn push_segment_raw(out: &mut Vec<u8>, seg: &[u8], last: bool) {
+    out.extend_from_slice(&(seg.len() as u32).to_le_bytes());
+    out.push(last as u8);
+    out.extend_from_slice(seg);
+}
+
+fn push_segment(out: &mut Vec<u8>, whole_frame: &[u8], last: bool) {
+    push_segment_raw(out, whole_frame, last)
+}
+
+/// Per-connection reader: reassemble segments into frames, decode,
+/// enqueue. Exits on EOF / teardown.
+fn reader_loop<M: WireCodec>(mut stream: Stream, q: Arc<DstQueue<M>>) {
+    let mut pending: Vec<u8> = Vec::new();
+    loop {
+        let mut hdr = [0u8; SEG_HDR];
+        if stream.read_exact(&mut hdr).is_err() {
+            return; // EOF: peer closed or teardown
+        }
+        let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        let last = hdr[4] == 1;
+        let start = pending.len();
+        pending.resize(start + len, 0);
+        if stream.read_exact(&mut pending[start..]).is_err() {
+            return;
+        }
+        if !last {
+            continue;
+        }
+        let bytes = std::mem::take(&mut pending);
+        match frame::decode::<M>(&bytes) {
+            Some((ticket, env)) => q.push(ticket, env),
+            None => debug_assert!(false, "malformed socket frame"),
+        }
+    }
+}
+
+impl<M: WireCodec> Transport<M> for SocketTransport<M> {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError> {
+        debug_assert!(self.rank.is_none() || self.rank == Some(src), "endpoint sends as itself");
+        let seq = self.seq[src * self.world + dst].fetch_add(1, Ordering::Relaxed);
+        let env = Envelope { src, seq, micro, msg };
+        let ticket = self.tickets[dst].fetch_add(1, Ordering::Relaxed);
+        match frame::encode(ticket, &env) {
+            Some(bytes) => {
+                let barrier = env.msg.is_barrier();
+                self.write_wire(src, dst, barrier, micro, bytes).map_err(|_| SendError::Unreachable)
+            }
+            None => {
+                // local-only: barrier discipline, then the ticketed lane
+                self.flush_link(src, dst);
+                self.queues[dst].push(ticket, env);
+                Ok(())
+            }
+        }
+    }
+
+    fn send_env(&self, dst: usize, env: Envelope<M>) {
+        let ticket = self.tickets[dst].fetch_add(1, Ordering::Relaxed);
+        match frame::encode(ticket, &env) {
+            Some(bytes) => {
+                let barrier = env.msg.is_barrier();
+                let res = self.write_wire(env.src, dst, barrier, env.micro, bytes);
+                debug_assert!(res.is_ok(), "socket send_env failed: {res:?}");
+            }
+            None => {
+                self.flush_link(env.src, dst);
+                self.queues[dst].push(ticket, env);
+            }
+        }
+    }
+
+    fn recv(&self, dst: usize) -> Option<Envelope<M>> {
+        debug_assert!(self.rank.is_none() || self.rank == Some(dst), "endpoint receives as itself");
+        self.queues[dst].pop()
+    }
+
+    fn one_sided(&self, _src: usize, _dst: usize, _bytes: usize) -> Result<u32, SendError> {
+        // gathers / replica refresh stay shared-memory reads in hosted
+        // mode; `benches/wire_calib.rs` prices the socket path itself
+        Ok(0)
+    }
+}
+
+impl<M: WireCodec> Drop for SocketTransport<M> {
+    fn drop(&mut self) {
+        self.closed.store(true, Ordering::Release);
+        // flush + shut down every outbound stream (EOFs the readers)
+        for c in &self.conns {
+            if let Some(mut conn) = c.lock().unwrap().take() {
+                let _ = conn.flush_fused();
+                conn.stream.shutdown();
+            }
+        }
+        // pop each acceptor out of accept() with a throwaway connection
+        for &r in &self.hosted {
+            if let Ok(s) = Self::connect(&self.dir, r) {
+                s.shutdown();
+            }
+        }
+        for q in &self.queues {
+            q.close();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        if self.owns_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::WireMsg;
+
+    #[derive(Clone, Debug, PartialEq)]
+    enum SMsg {
+        Data(u64),
+        Blob(Vec<u8>),
+        Local(u64),
+        Done,
+    }
+
+    impl WireMsg for SMsg {
+        fn is_barrier(&self) -> bool {
+            matches!(self, SMsg::Done)
+        }
+        fn payload_bytes(&self) -> usize {
+            match self {
+                SMsg::Blob(b) => b.len(),
+                _ => 8,
+            }
+        }
+    }
+
+    impl WireCodec for SMsg {
+        fn encode(&self, out: &mut Vec<u8>) -> bool {
+            match self {
+                SMsg::Data(v) => {
+                    out.push(0);
+                    frame::put_u64(out, *v);
+                }
+                SMsg::Blob(b) => {
+                    out.push(1);
+                    frame::put_bytes(out, b);
+                }
+                SMsg::Local(_) => return false,
+                SMsg::Done => out.push(3),
+            }
+            true
+        }
+        fn decode(bytes: &[u8]) -> Option<SMsg> {
+            let mut r = frame::Reader::new(bytes.get(1..)?);
+            match bytes.first()? {
+                0 => Some(SMsg::Data(r.u64()?)),
+                1 => Some(SMsg::Blob(r.bytes()?)),
+                3 => Some(SMsg::Done),
+                _ => None,
+            }
+        }
+    }
+
+    #[test]
+    fn hosted_loopback_delivers_in_order() {
+        let t = Arc::new(SocketTransport::<SMsg>::bind_world(2).expect("bind"));
+        let tx = Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            for i in 0..300u64 {
+                tx.send(0, 1, i / 8, SMsg::Data(i)).unwrap();
+            }
+            tx.send(0, 1, 0, SMsg::Done).unwrap();
+        });
+        let mut got = Vec::new();
+        loop {
+            let env = t.recv(1).expect("open stream");
+            match env.msg {
+                SMsg::Data(v) => got.push(v),
+                SMsg::Done => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..300).collect::<Vec<_>>(), "fusion must not disturb order");
+    }
+
+    #[test]
+    fn chunks_large_frames() {
+        let t = Arc::new(SocketTransport::<SMsg>::bind_world(2).expect("bind"));
+        // > CHUNK_BYTES forces the multi-segment path
+        let blob: Vec<u8> = (0..CHUNK_BYTES + 12_345).map(|i| (i * 131 % 251) as u8).collect();
+        let expect = blob.clone();
+        let tx = Arc::clone(&t);
+        let h = std::thread::spawn(move || {
+            tx.send(0, 1, 0, SMsg::Blob(blob)).unwrap();
+            tx.send(0, 1, 0, SMsg::Done).unwrap();
+        });
+        let env = t.recv(1).expect("blob arrives");
+        assert_eq!(env.msg, SMsg::Blob(expect));
+        assert!(matches!(t.recv(1).expect("done").msg, SMsg::Done));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn local_lane_merges_in_ticket_order() {
+        let t = SocketTransport::<SMsg>::bind_world(2).expect("bind");
+        for i in 0..40u64 {
+            if i % 4 == 0 {
+                t.send(1, 1, 0, SMsg::Local(i)).unwrap();
+            } else {
+                t.send(1, 1, 0, SMsg::Data(i)).unwrap();
+            }
+        }
+        t.send(1, 1, 0, SMsg::Done).unwrap();
+        let mut got = Vec::new();
+        loop {
+            match t.recv(1).expect("open stream").msg {
+                SMsg::Local(v) | SMsg::Data(v) => got.push(v),
+                SMsg::Done => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn endpoint_pair_rendezvous_over_the_dir() {
+        // two endpoint transports in one test process — the same path
+        // spawn_world exercises across OS processes
+        let dir = std::env::temp_dir().join(format!("odc-wire-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = SocketTransport::<SMsg>::endpoint(0, 2, &dir).expect("bind rank 0");
+        let b = SocketTransport::<SMsg>::endpoint(1, 2, &dir).expect("bind rank 1");
+        for i in 0..100u64 {
+            a.send(0, 1, 0, SMsg::Data(i)).unwrap();
+        }
+        a.send(0, 1, 0, SMsg::Done).unwrap();
+        let mut got = Vec::new();
+        loop {
+            let env = b.recv(1).expect("open stream");
+            assert_eq!(env.src, 0);
+            match env.msg {
+                SMsg::Data(v) => got.push(v),
+                SMsg::Done => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, (0..100).collect::<Vec<_>>(), "per-link FIFO holds in endpoint mode");
+        drop(b);
+        drop(a);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

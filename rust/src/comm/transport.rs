@@ -30,10 +30,17 @@
 //! own id-keyed dedup as belt and braces).
 //!
 //! **Escalation.** A link whose request exhausts the retry budget
-//! increments a per-link *suspicion counter*; the message is reported
-//! lost ([`SendError::Lost`]) and the sender carries on. Once suspicion
-//! reaches [`RetryPolicy::suspicion_threshold`] the link is declared
-//! [`SendError::Unreachable`] (counted once in
+//! raises a per-link *suspicion counter* (an exhausted ladder weighs
+//! +2); the message is reported lost ([`SendError::Lost`]) and the
+//! sender carries on. Healthy deliveries *decay* suspicion by a
+//! saturating −1 rather than resetting it: a flapping link that
+//! alternates one success with one exhausted ladder still drifts
+//! upward and eventually escalates, while an isolated loss on a
+//! genuinely healthy link decays back to zero. A lost request consumes
+//! no link sequence number — nothing was ever put on the wire — so the
+//! receiver's reassembly cursor never waits on a permanent hole. Once
+//! suspicion reaches [`RetryPolicy::suspicion_threshold`] the link is
+//! declared [`SendError::Unreachable`] (counted once in
 //! [`FaultStats::escalations`]) and the backend escalates the sending
 //! device into the existing ElasticWorld failure machinery
 //! (`report_failed` → ring-successor takeover → orphan re-pull).
@@ -51,11 +58,23 @@
 //! they flush any limbo ahead of themselves: a reorder can therefore
 //! never stall a minibatch epilogue. Flush *reply* channels stay plain
 //! mpsc — they model local completion, not network traffic.
+//!
+//! **Byte-moving siblings (WireComm).** Two further implementations
+//! live next door: [`crate::comm::ring::RingTransport`] (same-host
+//! shared-memory SPSC slot rings) and
+//! [`crate::comm::socket::SocketTransport`] (UDS with TCP-loopback
+//! fallback). Both serialize envelopes through [`WireCodec`] into the
+//! [`frame`] byte format and deliver them in global per-destination
+//! *ticket* order, reproducing the in-process mailbox's arrival order
+//! exactly — which is why every backend stays bit-identical under
+//! `--transport shm|uds` (see `docs/transport.md`). [`TransportKind`]
+//! is the config-level selector; [`FaultyTransport::over`] layers the
+//! chaos machinery on any of them.
 
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Payload contract for messages crossing a [`Transport`].
@@ -86,6 +105,161 @@ pub struct Envelope<M> {
     pub micro: u64,
     /// The payload.
     pub msg: M,
+}
+
+/// Config-level selector for the transport under the one-sided
+/// backends (`--transport {inproc,shm,uds}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// The original in-process mailbox path (one mpsc per rank).
+    #[default]
+    Inproc,
+    /// Same-host shared-memory SPSC ring buffers
+    /// ([`crate::comm::ring::RingTransport`]).
+    Shm,
+    /// Unix-domain sockets with TCP-loopback fallback
+    /// ([`crate::comm::socket::SocketTransport`]).
+    Uds,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "mpsc" => Some(TransportKind::Inproc),
+            "shm" | "ring" => Some(TransportKind::Shm),
+            "uds" | "socket" | "tcp" => Some(TransportKind::Uds),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Shm => "shm",
+            TransportKind::Uds => "uds",
+        })
+    }
+}
+
+/// Byte serialization for messages crossing a *byte-moving* transport
+/// (the shared-memory ring and the socket transport). The in-process
+/// mailbox never encodes anything — this trait is only required when a
+/// backend is constructed over `--transport shm|uds`.
+pub trait WireCodec: WireMsg {
+    /// Append this message's byte image to `out` and return `true`, or
+    /// return `false` (leaving `out` untouched) when the message is
+    /// **local-only** — it carries process-local handles (e.g. a flush
+    /// reply channel) and must ride the transport's ticketed local
+    /// lane instead of the wire. Local-only messages are only ever
+    /// sent on self-links.
+    fn encode(&self, out: &mut Vec<u8>) -> bool;
+    /// Inverse of [`WireCodec::encode`]; `None` on a malformed image.
+    fn decode(bytes: &[u8]) -> Option<Self>
+    where
+        Self: Sized;
+}
+
+/// The length-free envelope frame shared by the byte-moving transports:
+/// `[ticket u64][src u64][seq u64][micro u64][payload…]`, all
+/// little-endian, payload = [`WireCodec::encode`] image. Transports add
+/// their own outer framing (slot fragments on the ring, a `u32` length
+/// prefix + chunk flag on the stream socket). The *ticket* is the
+/// global per-destination enqueue number that restores the in-process
+/// mailbox's total arrival order at the receiver.
+pub mod frame {
+    use super::{Envelope, WireCodec};
+
+    pub const HEADER: usize = 32;
+
+    pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+        put_u64(out, b.len() as u64);
+        out.extend_from_slice(b);
+    }
+
+    /// Cursor over a received byte image; every getter returns `None`
+    /// past the end, so malformed frames fail decode instead of
+    /// panicking the daemon.
+    pub struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Reader { buf, pos: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+            let end = self.pos.checked_add(n)?;
+            let s = self.buf.get(self.pos..end)?;
+            self.pos = end;
+            Some(s)
+        }
+
+        pub fn u32(&mut self) -> Option<u32> {
+            Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+        }
+
+        pub fn u64(&mut self) -> Option<u64> {
+            Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+        }
+
+        pub fn f32(&mut self) -> Option<f32> {
+            Some(f32::from_le_bytes(self.take(4)?.try_into().ok()?))
+        }
+
+        pub fn bytes(&mut self) -> Option<Vec<u8>> {
+            let n = self.u64()? as usize;
+            Some(self.take(n)?.to_vec())
+        }
+
+        pub fn done(&self) -> bool {
+            self.pos == self.buf.len()
+        }
+    }
+
+    /// Encode `env` under `ticket`; `None` when the payload is
+    /// local-only and must not cross a byte wire.
+    pub fn encode<M: WireCodec>(ticket: u64, env: &Envelope<M>) -> Option<Vec<u8>> {
+        let mut out = Vec::with_capacity(HEADER + env.msg.payload_bytes() + 64);
+        put_u64(&mut out, ticket);
+        put_u64(&mut out, env.src as u64);
+        put_u64(&mut out, env.seq);
+        put_u64(&mut out, env.micro);
+        if env.msg.encode(&mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Decode one frame image back into `(ticket, envelope)`.
+    pub fn decode<M: WireCodec>(bytes: &[u8]) -> Option<(u64, Envelope<M>)> {
+        if bytes.len() < HEADER {
+            return None;
+        }
+        let mut r = Reader::new(bytes);
+        let ticket = r.u64()?;
+        let src = r.u64()? as usize;
+        let seq = r.u64()?;
+        let micro = r.u64()?;
+        let msg = M::decode(&bytes[HEADER..])?;
+        Some((ticket, Envelope { src, seq, micro, msg }))
+    }
 }
 
 /// Terminal send outcomes on a lossy link.
@@ -250,6 +424,13 @@ pub trait Transport<M: WireMsg>: Send + Sync {
     /// Send `msg` from `src` to `dst`'s daemon. The reliable transport
     /// never fails; the faulty one reports terminal outcomes.
     fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError>;
+    /// Raw framed send of an **already-sequenced** envelope: limbo
+    /// releases, duplicates and barrier flushes re-put an envelope on
+    /// the wire without assigning a fresh link sequence number.
+    /// Implementations must deliver it to `dst` at its enqueue
+    /// position (the byte transports stamp their delivery ticket
+    /// here). [`Transport::send`] is `send_env` plus seq assignment.
+    fn send_env(&self, dst: usize, env: Envelope<M>);
     /// Blocking receive of the next in-order envelope for `dst`
     /// (single consumer per rank). `None` once all senders are gone.
     fn recv(&self, dst: usize) -> Option<Envelope<M>>;
@@ -293,14 +474,6 @@ impl<M: WireMsg> InProcTransport<M> {
         let seq = (0..world * world).map(|_| AtomicU64::new(0)).collect();
         InProcTransport { world, tx, rx, seq }
     }
-
-    fn send_env(&self, dst: usize, env: Envelope<M>) {
-        self.tx[dst].lock().unwrap().send(env).expect("daemon alive");
-    }
-
-    fn recv_env(&self, dst: usize) -> Option<Envelope<M>> {
-        self.rx[dst].lock().unwrap().recv().ok()
-    }
 }
 
 impl<M: WireMsg> Transport<M> for InProcTransport<M> {
@@ -314,8 +487,12 @@ impl<M: WireMsg> Transport<M> for InProcTransport<M> {
         Ok(())
     }
 
+    fn send_env(&self, dst: usize, env: Envelope<M>) {
+        self.tx[dst].lock().unwrap().send(env).expect("daemon alive");
+    }
+
     fn recv(&self, dst: usize) -> Option<Envelope<M>> {
-        self.recv_env(dst)
+        self.rx[dst].lock().unwrap().recv().ok()
     }
 
     fn one_sided(&self, _src: usize, _dst: usize, _bytes: usize) -> Result<u32, SendError> {
@@ -343,11 +520,14 @@ struct RecvState<M> {
     ooo: Vec<BTreeMap<u64, Envelope<M>>>,
 }
 
-/// Deterministic lossy wrapper over [`InProcTransport`]: injects the
-/// [`FaultPlan`] per link, runs the retransmit ladder, and reassembles
-/// an exactly-once in-order stream on the receiver side.
+/// Deterministic lossy wrapper over any inner [`Transport`] (the
+/// in-process mailbox by default — see [`FaultyTransport::over`] for
+/// chaos layered on a byte-moving transport): injects the [`FaultPlan`]
+/// per link, runs the retransmit ladder, and reassembles an
+/// exactly-once in-order stream on the receiver side.
 pub struct FaultyTransport<M> {
-    inner: InProcTransport<M>,
+    inner: Arc<dyn Transport<M>>,
+    world: usize,
     plan: FaultPlan,
     policy: RetryPolicy,
     links: Vec<Mutex<Link<M>>>,
@@ -360,7 +540,18 @@ pub struct FaultyTransport<M> {
 
 impl<M: WireMsg> FaultyTransport<M> {
     pub fn new(world: usize, plan: FaultPlan, policy: RetryPolicy) -> Self {
+        FaultyTransport::over(Arc::new(InProcTransport::new(world)), plan, policy)
+    }
+
+    /// Layer the chaos machinery on an arbitrary inner transport — the
+    /// chaos-over-ring/socket soak path. The wrapper owns sequence
+    /// assignment and reassembly; the inner transport only ever sees
+    /// [`Transport::send_env`] with the wrapper's seqs, so its own
+    /// delivery order (ticketed on the byte transports) is the
+    /// reassembly input exactly as the mpsc arrival order is in-proc.
+    pub fn over(inner: Arc<dyn Transport<M>>, plan: FaultPlan, policy: RetryPolicy) -> Self {
         plan.validate().expect("fault plan validated at config time");
+        let world = inner.world();
         let mut root = Rng::new(plan.seed ^ 0xC4A0_5C0D);
         let links = (0..world * world)
             .map(|li| {
@@ -383,7 +574,8 @@ impl<M: WireMsg> FaultyTransport<M> {
             })
             .collect();
         FaultyTransport {
-            inner: InProcTransport::new(world),
+            inner,
+            world,
             plan,
             policy,
             links,
@@ -393,6 +585,19 @@ impl<M: WireMsg> FaultyTransport<M> {
             retransmitted_bytes: AtomicU64::new(0),
             escalations: AtomicU64::new(0),
         }
+    }
+
+    /// Envelopes currently parked in sender limbo or receiver
+    /// out-of-order buffers, summed over every link — the bounded-memory
+    /// observable: after a full drain to a barrier it must be zero.
+    pub fn buffered_envelopes(&self) -> usize {
+        let held: usize = self.links.iter().map(|l| l.lock().unwrap().limbo.len()).sum();
+        let ooo: usize = self
+            .recv_state
+            .iter()
+            .map(|st| st.lock().unwrap().ooo.iter().map(|m| m.len()).sum::<usize>())
+            .sum();
+        held + ooo
     }
 
     fn partitioned(&self, src: usize, dst: usize) -> bool {
@@ -406,7 +611,14 @@ impl<M: WireMsg> FaultyTransport<M> {
         for attempt in 0..=self.policy.max_retries {
             let dropped = partitioned || link.rng.f64() < self.plan.drop;
             if !dropped {
-                link.suspicion = 0; // healthy traffic clears suspicion
+                // healthy traffic DECAYS suspicion — never resets it. A
+                // hard reset let a flapping link alternate one success
+                // with one exhausted ladder forever without crossing the
+                // threshold; weighing an exhausted ladder +2 against a
+                // −1 decay makes even strict 1:1 flapping drift upward
+                // and escalate, while an isolated loss on a healthy
+                // link decays back to zero within two deliveries.
+                link.suspicion = link.suspicion.saturating_sub(1);
                 return Ok(attempt);
             }
             if attempt == self.policy.max_retries {
@@ -420,7 +632,7 @@ impl<M: WireMsg> FaultyTransport<M> {
                 std::thread::sleep(Duration::from_micros(us));
             }
         }
-        link.suspicion += 1;
+        link.suspicion += 2;
         if link.suspicion >= self.policy.suspicion_threshold {
             if !link.escalated {
                 link.escalated = true;
@@ -457,21 +669,18 @@ impl<M: WireMsg> FaultyTransport<M> {
 
 impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
     fn world(&self) -> usize {
-        self.inner.world
+        self.world
     }
 
     fn send(&self, src: usize, dst: usize, micro: u64, msg: M) -> Result<(), SendError> {
-        let world = self.inner.world;
+        let world = self.world;
         let partitioned = self.partitioned(src, dst);
         let mut link = self.links[src * world + dst].lock().unwrap();
         if link.escalated {
             return Err(SendError::Unreachable);
         }
-        let seq = link.next_seq;
-        link.next_seq += 1;
         let bytes = msg.payload_bytes();
         let barrier = msg.is_barrier();
-        let env = Envelope { src, seq, micro, msg };
         if barrier {
             // control plane: flush everything held on this link first
             let mut held: Vec<Envelope<M>> =
@@ -481,7 +690,15 @@ impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
                 self.inner.send_env(dst, e);
             }
         }
+        // The ladder runs BEFORE a sequence number is consumed: a lost
+        // request never made it onto the wire, so it must not burn a
+        // seq. (It used to — the permanent hole stalled the receiver's
+        // reassembly cursor and every later envelope on the link piled
+        // up in the out-of-order buffer without bound.)
         self.ladder(&mut link, partitioned, bytes)?;
+        let seq = link.next_seq;
+        link.next_seq += 1;
+        let env = Envelope { src, seq, micro, msg };
         // on the wire: maybe duplicate (receiver reassembly discards it)
         if self.plan.dup > 0.0 && link.rng.f64() < self.plan.dup {
             self.retransmitted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -515,7 +732,7 @@ impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
             if let Some(env) = st.ready.pop_front() {
                 return Some(env);
             }
-            let env = self.inner.recv_env(dst)?;
+            let env = self.inner.recv(dst)?;
             let s = env.src;
             if env.seq < st.expected[s] {
                 continue; // duplicate: this seq was already delivered
@@ -531,11 +748,24 @@ impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
                 st.expected[s] += 1;
                 st.ready.push_back(e);
             }
+            // prune below the delivered watermark: a duplicate of an
+            // already-delivered seq that was buffered while the gap was
+            // open would otherwise sit in the map forever
+            let wm = st.expected[s];
+            if st.ooo[s].first_key_value().is_some_and(|(&k, _)| k < wm) {
+                st.ooo[s] = st.ooo[s].split_off(&wm);
+            }
         }
     }
 
+    fn send_env(&self, dst: usize, env: Envelope<M>) {
+        // a pre-sequenced envelope from an outer layer passes straight
+        // through: chaos is injected once, at this layer's `send`
+        self.inner.send_env(dst, env);
+    }
+
     fn one_sided(&self, src: usize, dst: usize, bytes: usize) -> Result<u32, SendError> {
-        let world = self.inner.world;
+        let world = self.world;
         let partitioned = self.partitioned(src, dst);
         let mut link = self.links[src * world + dst].lock().unwrap();
         if link.escalated {
@@ -549,7 +779,7 @@ impl<M: WireMsg> Transport<M> for FaultyTransport<M> {
     }
 
     fn flush_links(&self, src: usize) {
-        let world = self.inner.world;
+        let world = self.world;
         for dst in 0..world {
             let mut link = self.links[src * world + dst].lock().unwrap();
             let mut held: Vec<Envelope<M>> = link.limbo.drain(..).map(|(_, e)| e).collect();
@@ -665,14 +895,111 @@ mod tests {
             ..RetryPolicy::default()
         };
         let t = FaultyTransport::<TMsg>::new(2, plan, policy);
-        assert_eq!(t.send(0, 1, 0, TMsg::Data(0)), Err(SendError::Lost { suspicion: 1 }));
-        assert_eq!(t.send(0, 1, 1, TMsg::Data(1)), Err(SendError::Lost { suspicion: 2 }));
-        assert_eq!(t.send(0, 1, 2, TMsg::Data(2)), Err(SendError::Unreachable));
+        // an exhausted ladder weighs +2, so a fully dead link crosses a
+        // threshold of 3 on its second lost request
+        assert_eq!(t.send(0, 1, 0, TMsg::Data(0)), Err(SendError::Lost { suspicion: 2 }));
+        assert_eq!(t.send(0, 1, 1, TMsg::Data(1)), Err(SendError::Unreachable));
         assert_eq!(t.stats().escalations, 1);
         // dead links fail fast from here on; healthy links are untouched
         assert_eq!(t.send(0, 1, 3, TMsg::Data(3)), Err(SendError::Unreachable));
         assert_eq!(t.stats().escalations, 1);
         assert!(t.send(1, 0, 0, TMsg::Data(9)).is_ok());
+    }
+
+    #[test]
+    fn flapping_link_eventually_escalates() {
+        // Regression: `suspicion = 0` on any healthy delivery let a link
+        // that alternates one success with one exhausted retry ladder
+        // flap forever below any threshold. Under decay (+2 per
+        // exhausted ladder, −1 per success) the ~1:1 mix here drifts
+        // upward and must escalate well within the send budget.
+        let plan = FaultPlan { drop: 0.5, seed: 77, ..FaultPlan::default() };
+        let policy = RetryPolicy {
+            max_retries: 0, // every drop is an exhausted ladder
+            base_delay_us: 0,
+            max_delay_us: 0,
+            suspicion_threshold: 8,
+        };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        let mut escalated = false;
+        for i in 0..10_000u64 {
+            match t.send(0, 1, i, TMsg::Data(i)) {
+                Err(SendError::Unreachable) => {
+                    escalated = true;
+                    break;
+                }
+                Ok(()) | Err(SendError::Lost { .. }) => {}
+            }
+        }
+        assert!(escalated, "a 1:1 flapping link must cross the suspicion threshold");
+        assert_eq!(t.stats().escalations, 1);
+
+        // …while a mostly-healthy link (rare isolated losses) decays
+        // back down and never escalates spuriously.
+        let plan = FaultPlan { drop: 0.05, seed: 78, ..FaultPlan::default() };
+        let policy = RetryPolicy {
+            max_retries: 0,
+            base_delay_us: 0,
+            max_delay_us: 0,
+            suspicion_threshold: 8,
+        };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        for i in 0..10_000u64 {
+            assert_ne!(
+                t.send(0, 1, i, TMsg::Data(i)),
+                Err(SendError::Unreachable),
+                "isolated losses on a healthy link must decay, not accumulate"
+            );
+        }
+        assert_eq!(t.stats().escalations, 0);
+    }
+
+    #[test]
+    fn adversarial_reorder_keeps_reassembly_bounded() {
+        // 10k envelopes through a plan that loses ~10% outright
+        // (max_retries=0 ⇒ every drop is an exhausted ladder) while
+        // reordering/delaying/duplicating much of the rest. Lost
+        // requests consume no seq, so the receiver cursor never waits
+        // on a permanent hole; after the final barrier drains, no
+        // envelope may remain parked in limbo or the ooo buffers.
+        let plan = FaultPlan {
+            drop: 0.10,
+            dup: 0.30,
+            reorder: 0.35,
+            delay: 0.25,
+            seed: 0xB0B,
+            partition: Vec::new(),
+        };
+        let policy = RetryPolicy {
+            max_retries: 0,
+            base_delay_us: 0,
+            max_delay_us: 0,
+            suspicion_threshold: u32::MAX, // lossy, never escalating
+        };
+        let t = FaultyTransport::<TMsg>::new(2, plan, policy);
+        const N: u64 = 10_000;
+        let mut delivered_expect = Vec::new();
+        for i in 0..N {
+            if t.send(0, 1, i, TMsg::Data(i)).is_ok() {
+                delivered_expect.push(i);
+            }
+        }
+        // barrier: flushes limbo ahead of itself; retry until it lands
+        while t.send(0, 1, N, TMsg::Done).is_err() {}
+        let mut got = Vec::new();
+        loop {
+            let env = t.recv(1).expect("sender alive");
+            match env.msg {
+                TMsg::Data(v) => got.push(v),
+                TMsg::Done => break,
+            }
+        }
+        assert_eq!(got, delivered_expect, "every non-lost envelope exactly once, in order");
+        assert_eq!(
+            t.buffered_envelopes(),
+            0,
+            "reassembly state must drain to zero after the barrier — unbounded ooo growth"
+        );
     }
 
     #[test]
@@ -727,5 +1054,49 @@ mod tests {
         assert_eq!(p.backoff_us(0), p.base_delay_us);
         assert_eq!(p.backoff_us(1), 2 * p.base_delay_us);
         assert!(p.backoff_us(30) <= p.max_delay_us);
+    }
+
+    impl WireCodec for TMsg {
+        fn encode(&self, out: &mut Vec<u8>) -> bool {
+            match self {
+                TMsg::Data(v) => {
+                    out.push(0);
+                    frame::put_u64(out, *v);
+                }
+                TMsg::Done => out.push(1),
+            }
+            true
+        }
+        fn decode(bytes: &[u8]) -> Option<TMsg> {
+            let mut r = frame::Reader::new(&bytes[1..]);
+            match bytes.first()? {
+                0 => Some(TMsg::Data(r.u64()?)),
+                1 => Some(TMsg::Done),
+                _ => None,
+            }
+        }
+    }
+
+    #[test]
+    fn frame_codec_round_trips() {
+        let env = Envelope { src: 3, seq: 41, micro: 7, msg: TMsg::Data(0xDEAD_BEEF) };
+        let bytes = frame::encode(99, &env).expect("Data is wire-encodable");
+        let (ticket, back) = frame::decode::<TMsg>(&bytes).expect("well-formed frame");
+        assert_eq!(ticket, 99);
+        assert_eq!((back.src, back.seq, back.micro), (3, 41, 7));
+        assert_eq!(back.msg, TMsg::Data(0xDEAD_BEEF));
+        assert!(frame::decode::<TMsg>(&bytes[..frame::HEADER - 1]).is_none(), "truncated header");
+        assert!(frame::decode::<TMsg>(&bytes[..frame::HEADER]).is_none(), "truncated payload");
+    }
+
+    #[test]
+    fn transport_kind_parses_the_cli_grammar() {
+        assert_eq!(TransportKind::parse("inproc"), Some(TransportKind::Inproc));
+        assert_eq!(TransportKind::parse("shm"), Some(TransportKind::Shm));
+        assert_eq!(TransportKind::parse("ring"), Some(TransportKind::Shm));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("UDS"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("rdma"), None);
+        assert_eq!(TransportKind::default().to_string(), "inproc");
     }
 }

@@ -80,7 +80,7 @@ use crate::balance::packers::{plan_run_split, PackOpts, Plan};
 use crate::balance::split::{ChunkInfo, SplitMap, SplitMode};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::membership::Membership;
-use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy};
+use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy, TransportKind};
 use crate::config::{Balancer, CommScheme, WireDtype};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
@@ -177,6 +177,15 @@ pub struct TrainerConfig {
     /// under `Collective`, whose in-place rendezvous fold has no
     /// encode/decode stage.
     pub wire_dtype: WireDtype,
+    /// WireComm byte transport under the one-sided backends'
+    /// mailboxes: `Inproc` (default) is the typed mpsc path, `Shm`
+    /// moves framed bytes through lock-free shared-memory rings, `Uds`
+    /// through kernel sockets (Unix-domain, TCP-loopback fallback).
+    /// Ticket-sequenced delivery keeps all three bit-identical even
+    /// under Queue dispatch (`tests/transport_matrix.rs` pins it).
+    /// Rejected under `Collective`, which never touches the mailbox
+    /// transport. See `docs/transport.md`.
+    pub transport: TransportKind,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -211,6 +220,7 @@ impl TrainerConfig {
             seq_split: 0.0,
             seq_split_mode: SplitMode::Zigzag,
             wire_dtype: WireDtype::F32,
+            transport: TransportKind::Inproc,
             plan_override: None,
             split_override: None,
         }
@@ -342,6 +352,14 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
              for error feedback)"
         ));
     }
+    // --- WireComm transport legality (see docs/transport.md) --------------
+    if cfg.transport != TransportKind::Inproc && cfg.scheme == CommScheme::Collective {
+        return Err(anyhow!(
+            "--transport {} requires a one-sided scheme: Collective's rendezvous fold runs \
+             in shared memory and never touches the mailbox transport",
+            cfg.transport
+        ));
+    }
     // --- SeqSplit legality (see balance::split and docs/seqsplit.md) ------
     if cfg.seq_split != 0.0 {
         if !cfg.seq_split.is_finite() || cfg.seq_split < 0.0 || cfg.seq_split > 1.0 {
@@ -441,37 +459,39 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     for (l, p) in params.layers.iter().enumerate() {
         p.init_from(&man.load_init(l)?);
     }
-    let lossy = !cfg.fault_plan.is_noop();
+    // Chaos layer (when the plan is live) wraps whichever byte-moving
+    // base `cfg.transport` selects — the stacks compose (see
+    // comm/transport.rs "Byte-moving siblings").
+    let faults = if cfg.fault_plan.is_noop() {
+        None
+    } else {
+        Some((cfg.fault_plan.clone(), RetryPolicy::default()))
+    };
     let backend: Arc<dyn CommBackend> = match cfg.scheme {
         CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
-        CommScheme::Odc if lossy => Arc::new(OdcComm::with_faults_wire(
-            Arc::clone(&params),
-            Arc::clone(&membership),
-            cfg.fault_plan.clone(),
-            RetryPolicy::default(),
-            cfg.wire_dtype,
-        )),
-        CommScheme::Odc => Arc::new(OdcComm::with_wire(
-            Arc::clone(&params),
-            Arc::clone(&membership),
-            cfg.wire_dtype,
-        )),
+        CommScheme::Odc => Arc::new(
+            OdcComm::with_stack(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                cfg.wire_dtype,
+                cfg.transport,
+                faults,
+            )
+            .map_err(|e| anyhow!("transport {} failed to bind: {e}", cfg.transport))?,
+        ),
         // NB: constructed after init_from above — HybridComm seeds its
         // group replicas from the global store.
-        CommScheme::Hybrid if lossy => Arc::new(HybridComm::with_faults_wire(
-            Arc::clone(&params),
-            Arc::clone(&membership),
-            cfg.hybrid_group_size(),
-            cfg.fault_plan.clone(),
-            RetryPolicy::default(),
-            cfg.wire_dtype,
-        )),
-        CommScheme::Hybrid => Arc::new(HybridComm::with_wire(
-            Arc::clone(&params),
-            Arc::clone(&membership),
-            cfg.hybrid_group_size(),
-            cfg.wire_dtype,
-        )),
+        CommScheme::Hybrid => Arc::new(
+            HybridComm::with_stack(
+                Arc::clone(&params),
+                Arc::clone(&membership),
+                cfg.hybrid_group_size(),
+                cfg.wire_dtype,
+                cfg.transport,
+                faults,
+            )
+            .map_err(|e| anyhow!("transport {} failed to bind: {e}", cfg.transport))?,
+        ),
     };
 
     // --- data + plan -------------------------------------------------------

@@ -12,10 +12,10 @@
 //!   odc dist
 
 use odc::balance::SplitMode;
-use odc::comm::FaultPlan;
+use odc::comm::{FaultPlan, TransportKind};
 use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use odc::engine::trainer::{train, TrainerConfig};
-use odc::sim::run::{simulate, SimConfig};
+use odc::sim::run::{simulate, SimConfig, WireCalib};
 use odc::util::cli::Cli;
 use std::path::Path;
 
@@ -106,6 +106,19 @@ fn parse_wire_dtype(s: &str) -> WireDtype {
     }
 }
 
+/// Parse `--transport` — the WireComm byte transport under the
+/// one-sided backends (`inproc` mpsc mailboxes, `shm` lock-free rings,
+/// `uds` kernel sockets; see docs/transport.md).
+fn parse_transport(s: &str) -> TransportKind {
+    match TransportKind::parse(s) {
+        Some(k) => k,
+        None => {
+            eprintln!("invalid configuration: unknown --transport `{s}` (inproc|shm|uds)");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Parse `--seq-split-mode` — `ring` (equal tokens) or `zigzag` (equal
 /// predicted cost).
 fn parse_split_mode(s: &str) -> SplitMode {
@@ -175,6 +188,12 @@ fn main() -> anyhow::Result<()> {
                 .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
                 .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
                 .opt("wire-dtype", "bf16", "gradient payload precision: f32 | bf16 (the sim's historical pricing)")
+                .opt(
+                    "transport",
+                    "",
+                    "price links from the measured BENCH_wire.json cell for this transport \
+                     (shm | uds; empty = the paper's hand-set topology pricing)",
+                )
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -263,6 +282,19 @@ fn main() -> anyhow::Result<()> {
             sim_cfg.seq_split = seq_split;
             sim_cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
             sim_cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
+            if !a.get("transport").is_empty() {
+                let kind = parse_transport(a.get("transport"));
+                match WireCalib::load(kind) {
+                    Ok(c) => sim_cfg.wire_calib = Some(c),
+                    Err(e) => {
+                        eprintln!(
+                            "invalid configuration: --transport {kind} needs a measured \
+                             BENCH_wire.json (run `cargo bench --bench wire_calib`): {e}"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+            }
             let r = simulate(&sim_cfg);
             println!("{}", r.label);
             println!("  samples/s/device : {:.4}", r.samples_per_sec_per_device);
@@ -335,6 +367,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("seq-split", "0", "split sequences above this fraction of the per-device budget (0 = off)")
                 .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
                 .opt("wire-dtype", "f32", "gradient payload precision: f32 (bit-exact) | bf16 (half the wire bytes)")
+                .opt("transport", "inproc", "mailbox byte transport: inproc | shm (ring buffers) | uds (sockets)")
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -362,6 +395,15 @@ fn main() -> anyhow::Result<()> {
             cfg.seq_split = a.f64("seq-split");
             cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
             cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
+            cfg.transport = parse_transport(a.get("transport"));
+            if cfg.transport != TransportKind::Inproc && cfg.scheme == CommScheme::Collective {
+                eprintln!(
+                    "invalid configuration: --transport {} requires a one-sided scheme \
+                     (collective's rendezvous never touches the mailbox transport)",
+                    cfg.transport
+                );
+                std::process::exit(2);
+            }
             check_seq_split(cfg.seq_split, cfg.scheme, cfg.balancer);
             let lossy = !cfg.fault_plan.is_noop();
             let elastic = !cfg.fail_at.is_empty()
@@ -393,6 +435,42 @@ fn main() -> anyhow::Result<()> {
                     run.retries, run.retransmitted_bytes, run.escalations
                 );
             }
+        }
+        // internal: one endpoint rank of the multi-process wire smoke
+        // (spawned by `wire-smoke` — every byte crosses kernel sockets
+        // between genuinely separate OS processes)
+        "wire-worker" => {
+            let cli = Cli::new("odc wire-worker", "internal: one spawn_world endpoint rank")
+                .opt("rank", "0", "this process's rank")
+                .opt("world", "4", "total ranks")
+                .opt("dir", "", "shared rendezvous directory");
+            let a = match cli.parse_from(&rest) {
+                Ok(a) => a,
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    std::process::exit(2);
+                }
+            };
+            let code =
+                odc::runtime::spawn_world::worker_main(a.usize("rank"), a.usize("world"), a.get("dir"));
+            std::process::exit(code);
+        }
+        // CI hang detector: spawn `world` OS-process workers that run a
+        // deterministic scatter-accumulate over UDS and bit-check the
+        // reduction (see runtime::spawn_world)
+        "wire-smoke" => {
+            let cli = Cli::new("odc wire-smoke", "multi-process socket-transport smoke test")
+                .opt("world", "4", "worker OS processes")
+                .opt("timeout-s", "120", "kill + fail if workers outlive this deadline");
+            let a = match cli.parse_from(&rest) {
+                Ok(a) => a,
+                Err(msg) => {
+                    eprintln!("{msg}");
+                    std::process::exit(2);
+                }
+            };
+            let code = odc::runtime::spawn_world::smoke_main(a.usize("world"), a.u64("timeout-s"));
+            std::process::exit(code);
         }
         "dist" => {
             use odc::data::distributions::{sample_lengths, summarize};

@@ -6,9 +6,14 @@
 //! hosts the PJRT client + compiled executables on a dedicated *compute
 //! service* thread — the analogue of a GPU's single in-order stream —
 //! and device threads submit execute requests over a channel.
+//!
+//! [`spawn_world`] is the WireComm multi-process harness: workers as
+//! separate OS processes over socket-transport endpoints, driven by
+//! the hidden `odc wire-worker` / `odc wire-smoke` subcommands.
 
 pub mod manifest;
 pub mod service;
+pub mod spawn_world;
 pub mod xla_stub;
 
 pub use manifest::Manifest;

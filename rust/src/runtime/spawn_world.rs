@@ -1,0 +1,357 @@
+//! WireComm multi-process harness: workers as genuine OS processes.
+//!
+//! The trainer's `--transport uds` moves every mailbox byte through
+//! kernel sockets, but its device *threads* still share the
+//! `ParamStore` (one-sided gathers are shared-memory by design). This
+//! harness closes the remaining honesty gap: [`spawn_world`] launches
+//! `world` copies of the current executable (`odc wire-worker`), each
+//! an isolated OS process owning one [`SocketTransport::endpoint`]
+//! rank, and drives a deterministic scatter-accumulate whose reduction
+//! is **bit-checked** on every rank — nothing can leak through shared
+//! memory because there is none.
+//!
+//! The traffic is shaped to exercise both wire paths deliberately:
+//! each rank scatters its per-destination vector as one oversized
+//! slice (> `CHUNK_BYTES`, forcing the chunked multi-segment path) and
+//! eight small slices (< `FUSION_BUDGET`, coalesced by fusion).
+//! Endpoint mode delivers per-link FIFO with arbitrary cross-link
+//! interleaving, so the protocol is order-tolerant: slices are keyed
+//! by `(src, idx)` and folded in that order once complete — the same
+//! id-keyed fold discipline the ODC daemons use.
+//!
+//! `odc wire-smoke --world 4` is the CI entry point; the job timeout
+//! doubles as the hang detector (a wedged rendezvous, a lost wakeup,
+//! or a framing bug all present as "workers never exit").
+
+use crate::comm::fold::{f32_from_le_bytes, f32_to_le_bytes};
+use crate::comm::socket::SocketTransport;
+use crate::comm::transport::{frame, Transport, WireCodec, WireMsg};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Floats in slice 0 — 512 KiB on the wire, above `CHUNK_BYTES`.
+const BIG: usize = 128 * 1024;
+/// Floats per small slice — 16 KiB on the wire, below `FUSION_BUDGET`.
+const SMALL: usize = 4 * 1024;
+const SMALL_SLICES: usize = 8;
+const SLICES: usize = 1 + SMALL_SLICES;
+const VEC_LEN: usize = BIG + SMALL_SLICES * SMALL;
+
+#[derive(Clone, Debug)]
+enum SmokeMsg {
+    /// Slice `idx` of `SLICES` of the sender's vector for this rank,
+    /// as LE f32 bytes. Keyed by `(env.src, idx)` at the receiver.
+    Slice { idx: u32, data: Vec<u8> },
+    /// The sender has scattered its whole vector to this rank.
+    Done,
+    /// The sender's bit-checksum of its reduced vector (rank 0 audits).
+    Sum { bits: u64 },
+    /// Rank 0 verified everyone — workers may exit.
+    Release,
+}
+
+impl WireMsg for SmokeMsg {
+    fn is_barrier(&self) -> bool {
+        !matches!(self, SmokeMsg::Slice { .. })
+    }
+    fn payload_bytes(&self) -> usize {
+        match self {
+            SmokeMsg::Slice { data, .. } => data.len(),
+            _ => 0,
+        }
+    }
+}
+
+impl WireCodec for SmokeMsg {
+    fn encode(&self, out: &mut Vec<u8>) -> bool {
+        match self {
+            SmokeMsg::Slice { idx, data } => {
+                out.push(0);
+                frame::put_u32(out, *idx);
+                frame::put_bytes(out, data);
+            }
+            SmokeMsg::Done => out.push(1),
+            SmokeMsg::Sum { bits } => {
+                out.push(2);
+                frame::put_u64(out, *bits);
+            }
+            SmokeMsg::Release => out.push(3),
+        }
+        true
+    }
+    fn decode(bytes: &[u8]) -> Option<SmokeMsg> {
+        let mut r = frame::Reader::new(bytes.get(1..)?);
+        let msg = match bytes.first()? {
+            0 => SmokeMsg::Slice { idx: r.u32()?, data: r.bytes()? },
+            1 => SmokeMsg::Done,
+            2 => SmokeMsg::Sum { bits: r.u64()? },
+            3 => SmokeMsg::Release,
+            _ => return None,
+        };
+        if !r.done() {
+            return None;
+        }
+        Some(msg)
+    }
+}
+
+/// Element `i` of the vector rank `src` scatters to rank `dst` — a
+/// pure function every rank can recompute, with values exact in f32
+/// (k/256, k < 2^17) so the reduction has a unique bit pattern.
+fn value(src: usize, dst: usize, i: usize) -> f32 {
+    (((src * 1_000_003 + dst * 7_919 + i) % 65_521) as f32) * (1.0 / 256.0) - 128.0
+}
+
+fn bounds(idx: usize) -> (usize, usize) {
+    if idx == 0 {
+        (0, BIG)
+    } else {
+        (BIG + (idx - 1) * SMALL, BIG + idx * SMALL)
+    }
+}
+
+/// The reduction rank `dst` must arrive at: sum over sources in src
+/// order (the id-keyed fold order), checksummed by f32 bit pattern.
+fn expected_bits(world: usize, dst: usize) -> u64 {
+    let mut acc = vec![0f32; VEC_LEN];
+    for src in 0..world {
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += value(src, dst, i);
+        }
+    }
+    acc.iter().fold(0u64, |h, f| h.wrapping_add(f.to_bits() as u64))
+}
+
+fn run_worker(rank: usize, world: usize, dir: &str) -> Result<u64, String> {
+    if dir.is_empty() {
+        return Err("wire-worker needs --dir (spawned by `odc wire-smoke`)".into());
+    }
+    let t = SocketTransport::<SmokeMsg>::endpoint(rank, world, dir)
+        .map_err(|e| format!("endpoint bind failed: {e}"))?;
+
+    // scatter: one chunked big slice + fused small slices per dst
+    for dst in 0..world {
+        let vec: Vec<f32> = (0..VEC_LEN).map(|i| value(rank, dst, i)).collect();
+        for idx in 0..SLICES {
+            let (lo, hi) = bounds(idx);
+            let mut data = Vec::with_capacity((hi - lo) * 4);
+            f32_to_le_bytes(&mut data, &vec[lo..hi]);
+            t.send(rank, dst, 0, SmokeMsg::Slice { idx: idx as u32, data })
+                .map_err(|e| format!("slice push to {dst} failed: {e:?}"))?;
+        }
+        t.send(rank, dst, 0, SmokeMsg::Done).map_err(|e| format!("done to {dst} failed: {e:?}"))?;
+    }
+
+    // gather: order-tolerant collect keyed by (src, idx)
+    let mut slices: BTreeMap<(usize, u32), Vec<u8>> = BTreeMap::new();
+    let mut dones = 0usize;
+    let mut sums: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut payload_bytes = 0u64;
+    let mut released = false;
+    let want_sums = if rank == 0 { world - 1 } else { 0 };
+    while slices.len() < world * SLICES || dones < world || sums.len() < want_sums {
+        let env = t.recv(rank).ok_or("transport closed mid-protocol")?;
+        match env.msg {
+            SmokeMsg::Slice { idx, data } => {
+                payload_bytes += data.len() as u64;
+                if slices.insert((env.src, idx), data).is_some() {
+                    return Err(format!("duplicate slice ({}, {idx})", env.src));
+                }
+            }
+            SmokeMsg::Done => dones += 1,
+            SmokeMsg::Sum { bits } => {
+                sums.insert(env.src, bits);
+            }
+            SmokeMsg::Release => released = true,
+        }
+    }
+
+    // fold in (src, idx) order — deterministic under any arrival order
+    let mut acc = vec![0f32; VEC_LEN];
+    for ((src, idx), data) in &slices {
+        let (lo, _) = bounds(*idx as usize);
+        let piece = f32_from_le_bytes(data);
+        debug_assert!(*src < world);
+        for (i, p) in piece.iter().enumerate() {
+            acc[lo + i] += p;
+        }
+    }
+    let bits = acc.iter().fold(0u64, |h, f| h.wrapping_add(f.to_bits() as u64));
+    if bits != expected_bits(world, rank) {
+        return Err(format!("rank {rank} reduction mismatch: bits {bits:#x}"));
+    }
+
+    if rank == 0 {
+        for (src, got) in &sums {
+            let want = expected_bits(world, *src);
+            if *got != want {
+                return Err(format!("rank {src} reported bits {got:#x}, expected {want:#x}"));
+            }
+        }
+        for dst in 1..world {
+            t.send(0, dst, 0, SmokeMsg::Release)
+                .map_err(|e| format!("release to {dst} failed: {e:?}"))?;
+        }
+    } else {
+        t.send(rank, 0, 0, SmokeMsg::Sum { bits })
+            .map_err(|e| format!("sum to rank 0 failed: {e:?}"))?;
+        while !released {
+            released = matches!(
+                t.recv(rank).ok_or("transport closed awaiting release")?.msg,
+                SmokeMsg::Release
+            );
+        }
+    }
+    Ok(payload_bytes)
+}
+
+/// Entry point of the hidden `odc wire-worker` subcommand.
+pub fn worker_main(rank: usize, world: usize, dir: &str) -> i32 {
+    match run_worker(rank, world, dir) {
+        Ok(bytes) => {
+            println!("wire-worker rank {rank}/{world} OK ({bytes} payload bytes reduced)");
+            0
+        }
+        Err(e) => {
+            eprintln!("wire-worker rank {rank}/{world} FAILED: {e}");
+            1
+        }
+    }
+}
+
+/// Spawn `world` copies of `exe` as `wire-worker` OS processes sharing
+/// a fresh rendezvous dir; fail if any exits nonzero or outlives the
+/// deadline (killing the stragglers — the hang detector).
+pub fn spawn_world(
+    exe: &std::path::Path,
+    world: usize,
+    timeout: Duration,
+) -> Result<(), String> {
+    let dir = std::env::temp_dir().join(format!("odc-smoke-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    let mut children = Vec::new();
+    for rank in 0..world {
+        let child = std::process::Command::new(exe)
+            .arg("wire-worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--world")
+            .arg(world.to_string())
+            .arg("--dir")
+            .arg(&dir)
+            .spawn()
+            .map_err(|e| format!("spawn rank {rank}: {e}"))?;
+        children.push(child);
+    }
+    let deadline = Instant::now() + timeout;
+    let mut statuses: Vec<Option<bool>> = vec![None; world];
+    while statuses.iter().any(|s| s.is_none()) {
+        for (rank, child) in children.iter_mut().enumerate() {
+            if statuses[rank].is_none() {
+                if let Ok(Some(st)) = child.try_wait() {
+                    statuses[rank] = Some(st.success());
+                }
+            }
+        }
+        if statuses.iter().any(|s| s.is_none()) {
+            if Instant::now() >= deadline {
+                for child in children.iter_mut() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+                return Err(format!("workers still running after {timeout:?} — hang detected"));
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    match statuses.iter().position(|s| *s == Some(false)) {
+        Some(rank) => Err(format!("worker rank {rank} exited nonzero")),
+        None => Ok(()),
+    }
+}
+
+/// Entry point of the `odc wire-smoke` subcommand.
+pub fn smoke_main(world: usize, timeout_s: u64) -> i32 {
+    if world == 0 {
+        eprintln!("wire-smoke needs --world >= 1");
+        return 2;
+    }
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("wire-smoke: current_exe: {e}");
+            return 1;
+        }
+    };
+    match spawn_world(&exe, world, Duration::from_secs(timeout_s)) {
+        Ok(()) => {
+            println!(
+                "wire-smoke OK: {world} OS-process workers, bit-checked reduction of {} floats/rank",
+                VEC_LEN
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("wire-smoke FAILED: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_codec_round_trips() {
+        for msg in [
+            SmokeMsg::Slice { idx: 3, data: vec![1, 2, 3, 4] },
+            SmokeMsg::Done,
+            SmokeMsg::Sum { bits: 0xDEAD_BEEF },
+            SmokeMsg::Release,
+        ] {
+            let mut out = Vec::new();
+            assert!(msg.encode(&mut out));
+            let back = SmokeMsg::decode(&out).expect("decodes");
+            assert_eq!(format!("{msg:?}"), format!("{back:?}"));
+        }
+    }
+
+    #[test]
+    fn slice_geometry_covers_the_vector_exactly() {
+        let mut covered = 0usize;
+        for idx in 0..SLICES {
+            let (lo, hi) = bounds(idx);
+            assert_eq!(lo, covered, "slices must tile contiguously");
+            covered = hi;
+        }
+        assert_eq!(covered, VEC_LEN);
+        // slice 0 exceeds the chunk threshold, small slices fuse
+        assert!(BIG * 4 > crate::comm::socket::CHUNK_BYTES);
+        assert!(SMALL * 4 < crate::comm::socket::FUSION_BUDGET);
+    }
+
+    /// The whole protocol, in-process: endpoint transports in threads
+    /// (the OS-process path is `tests/` + CI's wire-smoke job — unit
+    /// tests must not respawn the test binary).
+    #[test]
+    fn worker_protocol_bit_checks_across_endpoint_ranks() {
+        let world = 3;
+        let dir = std::env::temp_dir().join(format!("odc-smoke-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let dir = dir.to_str().unwrap().to_string();
+                std::thread::spawn(move || run_worker(rank, world, &dir))
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let res = h.join().expect("worker thread");
+            assert!(res.is_ok(), "rank {rank}: {res:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

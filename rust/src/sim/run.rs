@@ -10,7 +10,7 @@ use crate::balance::cost::CostModel;
 use crate::balance::packers::{plan_run_split, PackOpts};
 use crate::balance::split::SplitMode;
 use crate::comm::topology::Topology;
-use crate::comm::transport::{FaultPlan, RetryPolicy};
+use crate::comm::transport::{FaultPlan, RetryPolicy, TransportKind};
 use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
 use crate::data::distributions::sample_lengths;
 use crate::sim::timeline::{
@@ -70,6 +70,69 @@ pub struct SimConfig {
     /// bit-for-bit; `F32` doubles the priced per-micro payload bytes
     /// (and the reported `wire_bytes`). See `docs/wire_precision.md`.
     pub wire_dtype: WireDtype,
+    /// WireComm measured link pricing (`--transport shm|uds` on the sim
+    /// CLI): replaces the hand-set intra-node latency/bandwidth with
+    /// the `alpha_us`/`beta_gbps` cell `benches/wire_calib.rs` measured
+    /// into `BENCH_wire.json` for that transport. `None` (default)
+    /// keeps the paper's hand-set topology pricing — every historical
+    /// sim number is reproduced bit-for-bit. Inter-node pricing is
+    /// untouched either way: both byte transports are same-host, so
+    /// they can only calibrate the intra link.
+    pub wire_calib: Option<WireCalib>,
+}
+
+/// A measured (alpha, beta) link cost model: `t(bytes) = alpha_us µs +
+/// bytes / (beta_gbps GB/s)` — the per-message setup cost and the
+/// sustained large-message bandwidth the calibration bench fits by
+/// least squares over the message-size sweep (the classic LogP-style
+/// two-parameter wire model).
+#[derive(Clone, Copy, Debug)]
+pub struct WireCalib {
+    /// Per-message setup cost, microseconds.
+    pub alpha_us: f64,
+    /// Sustained bandwidth, gigabytes per second.
+    pub beta_gbps: f64,
+}
+
+impl WireCalib {
+    /// Load the measured cell for `kind` from the repo's
+    /// `BENCH_wire.json`. Errors when the file is missing, unmeasured
+    /// (`measured: false` — the committed placeholder), malformed, or
+    /// has no cell for this transport.
+    pub fn load(kind: TransportKind) -> Result<WireCalib, String> {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wire.json");
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let json = crate::util::json::Json::parse(&text).map_err(|e| format!("{path}: {e:?}"))?;
+        if json.get("measured").and_then(|m| m.as_bool()) != Some(true) {
+            return Err(format!(
+                "{path} is the unmeasured placeholder (measured != true); run \
+                 `cargo bench --bench wire_calib` to calibrate"
+            ));
+        }
+        let cell = json
+            .get("transports")
+            .and_then(|t| t.get(&kind.to_string()))
+            .ok_or_else(|| format!("{path} has no cell for transport `{kind}`"))?;
+        let alpha_us = cell
+            .get("alpha_us")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{path}: transport `{kind}` cell is missing alpha_us"))?;
+        let beta_gbps = cell
+            .get("beta_gbps")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{path}: transport `{kind}` cell is missing beta_gbps"))?;
+        if !(alpha_us.is_finite() && alpha_us >= 0.0 && beta_gbps.is_finite() && beta_gbps > 0.0) {
+            return Err(format!("{path}: transport `{kind}` calibration is out of range"));
+        }
+        Ok(WireCalib { alpha_us, beta_gbps })
+    }
+
+    /// Apply the measured pricing to a topology: alpha becomes the
+    /// per-message latency, beta the intra-node bandwidth.
+    pub fn apply(&self, topo: &mut Topology) {
+        topo.latency = self.alpha_us * 1e-6;
+        topo.intra_bw = self.beta_gbps * 1e9;
+    }
 }
 
 impl SimConfig {
@@ -85,6 +148,7 @@ impl SimConfig {
             seq_split: 0.0,
             seq_split_mode: SplitMode::Zigzag,
             wire_dtype: WireDtype::Bf16,
+            wire_calib: None,
         }
     }
 }
@@ -260,7 +324,10 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     }
     let queue_dispatch = exp.balancer == Balancer::Queue;
     let cost = CostModel::for_model(exp.model);
-    let topo = Topology::paper(exp.devices, exp.devices_per_node);
+    let mut topo = Topology::paper(exp.devices, exp.devices_per_node);
+    if let Some(calib) = &cfg.wire_calib {
+        calib.apply(&mut topo);
+    }
     let mut rng = Rng::new(exp.seed);
 
     // Draw enough samples for `steps` minibatches.

@@ -5,6 +5,13 @@
 //! communication costs (Table 2 volumes over the topology bandwidths)
 //! overlapped with compute (§6.1: communication volume is constant in s
 //! while compute grows as O(s²), so long microbatches hide comm).
+//!
+//! Every equation here prices links exclusively through [`Topology`]
+//! (`latency`, `intra_bw`, `inter_bw`), so measured WireComm
+//! calibration (`crate::sim::run::WireCalib`, fed by
+//! `cargo bench --bench wire_calib`) slots in by overriding the
+//! topology fields before simulation — no formula changes, hand-set
+//! guesses replaced by fitted alpha/beta (see `docs/transport.md`).
 
 use crate::balance::cost::CostModel;
 use crate::balance::dispatch::{lpt_order, micro_flops_split, pull_schedule_budgeted, queue_busy_split};

@@ -25,7 +25,11 @@
 //!   `fault_stats().escalations ≥ 1`;
 //! * **InProc equivalence** — the trait-wrapped in-process transport
 //!   with an empty plan behaves exactly like the plain constructors
-//!   (same oracle folds, zero fault counters).
+//!   (same oracle folds, zero fault counters);
+//! * **chaos over real bytes** — the same soak layered over the
+//!   shared-memory ring (`FaultyTransport::over(RingTransport)`), so
+//!   encode → fault-inject → ring → decode hardening is proven on a
+//!   transport that actually moves bytes, not pointers.
 
 use odc::balance::cost::CostModel;
 use odc::balance::dispatch::{make_elastic_dispatcher, Dispatcher};
@@ -33,8 +37,9 @@ use odc::balance::packers::Plan;
 use odc::comm::backend::{CommBackend, ParamStore};
 use odc::comm::{
     ArenaStats, FaultPlan, FaultStats, HybridComm, Membership, OdcComm, RetryPolicy,
+    TransportKind,
 };
-use odc::config::{Balancer, CommScheme, PaperModel};
+use odc::config::{Balancer, CommScheme, PaperModel, WireDtype};
 use std::sync::{Arc, Mutex};
 
 /// Two layers, lengths chosen so padding differs across world sizes.
@@ -80,6 +85,7 @@ struct TrialOutcome {
 fn run_chaos(
     scheme: CommScheme,
     group_size: usize,
+    kind: TransportKind,
     world: usize,
     membership: Arc<Membership>,
     balancer: Balancer,
@@ -87,39 +93,39 @@ fn run_chaos(
     steps: usize,
 ) -> TrialOutcome {
     let params = Arc::new(ParamStore::new(&LAYERS, world));
-    let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match (scheme, plan) {
-        (CommScheme::Odc, Some(p)) => {
-            let c = Arc::new(OdcComm::with_faults(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                p,
-                RetryPolicy::default(),
-            ));
+    // `with_stack` builds the base transport for `kind` and layers
+    // `FaultyTransport::over` on top when a plan is given — the exact
+    // construction path the trainer uses, so the soak covers it too.
+    let faults = plan.map(|p| (p, RetryPolicy::default()));
+    let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match scheme {
+        CommScheme::Odc => {
+            let c = Arc::new(
+                OdcComm::with_stack(
+                    Arc::clone(&params),
+                    Arc::clone(&membership),
+                    WireDtype::F32,
+                    kind,
+                    faults,
+                )
+                .expect("transport binds"),
+            );
             (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
         }
-        (CommScheme::Odc, None) => {
-            let c = Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)));
-            (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
-        }
-        (CommScheme::Hybrid, Some(p)) => (
-            Arc::new(HybridComm::with_faults(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                group_size,
-                p,
-                RetryPolicy::default(),
-            )) as Arc<dyn CommBackend>,
+        CommScheme::Hybrid => (
+            Arc::new(
+                HybridComm::with_stack(
+                    Arc::clone(&params),
+                    Arc::clone(&membership),
+                    group_size,
+                    WireDtype::F32,
+                    kind,
+                    faults,
+                )
+                .expect("transport binds"),
+            ) as Arc<dyn CommBackend>,
             None,
         ),
-        (CommScheme::Hybrid, None) => (
-            Arc::new(HybridComm::with_membership(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                group_size,
-            )) as Arc<dyn CommBackend>,
-            None,
-        ),
-        (CommScheme::Collective, _) => unreachable!("chaos × Collective is rejected at config time"),
+        CommScheme::Collective => unreachable!("chaos × Collective is rejected at config time"),
     };
     let (plan, lens) = make_plan(world);
     let cost = CostModel::for_model(PaperModel::M1_5B);
@@ -226,6 +232,7 @@ fn transient_chaos_bit_identical_odc() {
         let outcome = run_chaos(
             CommScheme::Odc,
             0,
+            TransportKind::Inproc,
             world,
             membership,
             Balancer::Queue,
@@ -269,6 +276,7 @@ fn transient_chaos_bit_identical_hybrid() {
         let outcome = run_chaos(
             CommScheme::Hybrid,
             group_size,
+            TransportKind::Inproc,
             world,
             membership,
             Balancer::Queue,
@@ -294,6 +302,7 @@ fn fixed_seed_replays_exact_fault_counters() {
         run_chaos(
             CommScheme::Odc,
             0,
+            TransportKind::Inproc,
             world,
             membership,
             Balancer::LbMini,
@@ -332,6 +341,7 @@ fn partitioned_link_escalates_into_elastic_takeover() {
         let outcome = run_chaos(
             CommScheme::Odc,
             0,
+            TransportKind::Inproc,
             world,
             membership,
             Balancer::Queue,
@@ -356,7 +366,7 @@ fn inproc_transport_with_empty_plan_matches_plain_backends() {
     let steps = 3;
     let run = |plan: Option<FaultPlan>| {
         let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
-        run_chaos(CommScheme::Odc, 0, world, membership, Balancer::LbMini, plan, steps)
+        run_chaos(CommScheme::Odc, 0, TransportKind::Inproc, world, membership, Balancer::LbMini, plan, steps)
     };
     let plain = run(None);
     let wrapped = run(Some(FaultPlan::default()));
@@ -375,5 +385,88 @@ fn inproc_transport_with_empty_plan_matches_plain_backends() {
         plain.arena.unwrap().acquires,
         wrapped.arena.unwrap().acquires,
         "the transport seam must not change push accounting"
+    );
+}
+
+#[test]
+fn transient_chaos_bit_identical_over_ring() {
+    // The WireComm soak: the SAME chaos plan layered over the
+    // shared-memory ring, so the fault machinery exercises real encoded
+    // bytes — retransmits replay the encoded envelope, the ring
+    // fragments/reassembles it, and the decoded fold still equals the
+    // oracle bit for bit (asserted in-line by run_chaos).
+    let world = 4;
+    let steps = 4;
+    let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+    let outcome = run_chaos(
+        CommScheme::Odc,
+        0,
+        TransportKind::Shm,
+        world,
+        membership,
+        Balancer::Queue,
+        Some(chaos_plan(0x51C5)),
+        steps,
+    );
+    assert_exactly_once(&outcome, world, steps);
+    assert!(outcome.stats.retries > 0, "an 8% drop rate must retransmit over the ring");
+    assert_eq!(outcome.stats.escalations, 0, "transient loss must never escalate");
+    // The arena contracts are transport-independent: acquires count
+    // reduce_grad calls (exactly once per executed push) and growth
+    // stays inside the in-flight bound even though the ring copies
+    // bytes instead of moving pointers.
+    let stats = outcome.arena.expect("odc arena stats");
+    let pushes = (steps * world * MICROS_PER_DEV * LAYERS.len() * world) as u64;
+    assert_eq!(stats.acquires, pushes, "double or dropped pushes over the ring");
+    let bound = (world * world * (world * MICROS_PER_DEV) * LAYERS.len()) as u64;
+    assert!(
+        stats.fresh_allocs <= bound,
+        "arena growth {} exceeds in-flight bound {bound} over the ring",
+        stats.fresh_allocs
+    );
+}
+
+#[test]
+fn hybrid_chaos_over_ring_stays_exact() {
+    // Two-level traffic (intra fold + cross exchange) over the ring
+    // under the full transient fault mix.
+    let world = 4;
+    let steps = 3;
+    let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+    let outcome = run_chaos(
+        CommScheme::Hybrid,
+        2,
+        TransportKind::Shm,
+        world,
+        membership,
+        Balancer::Queue,
+        Some(chaos_plan(0x716E)),
+        steps,
+    );
+    assert_exactly_once(&outcome, world, steps);
+    assert!(outcome.stats.retries > 0);
+    assert_eq!(outcome.stats.escalations, 0);
+}
+
+#[test]
+fn ring_with_empty_plan_matches_inproc_schedule() {
+    // The byte transport itself must be invisible: an empty fault plan
+    // over the ring executes the same schedule as inproc with zero
+    // fault counters (the folds are oracle-asserted in-line).
+    let world = 4;
+    let steps = 3;
+    let run = |kind: TransportKind| {
+        let membership = Arc::new(Membership::with_schedule(world, &[], &[]).unwrap());
+        run_chaos(CommScheme::Odc, 0, kind, world, membership, Balancer::LbMini, None, steps)
+    };
+    let inproc = run(TransportKind::Inproc);
+    let ring = run(TransportKind::Shm);
+    assert_exactly_once(&inproc, world, steps);
+    assert_exactly_once(&ring, world, steps);
+    assert_eq!(ring.stats, FaultStats::default(), "a clean ring must count no faults");
+    assert_eq!(
+        inproc.arena.unwrap().acquires,
+        ring.arena.unwrap().acquires,
+        "the ring must not change push accounting"
     );
 }

@@ -1,0 +1,194 @@
+//! WireComm acceptance matrix: the byte-moving transports must be
+//! invisible to training semantics.
+//!
+//! The in-process mailbox (`inproc`), the shared-memory ring (`shm`)
+//! and the socket transport (`uds`) carry the SAME `Msg` streams; the
+//! per-destination ticket sequence reproduces the mailbox's total
+//! arrival order at every daemon, so a training run over a byte
+//! transport is BIT-identical to the in-proc run — assert_eq on every
+//! loss and every parameter, no tolerance. That holds for static
+//! dispatch AND for Queue (runtime placement): the id-keyed fold makes
+//! the folded bits placement-free, and the ticket order makes arrival
+//! transport-free.
+//!
+//! Everything here is artifact-gated on the `tiny` preset and
+//! self-skips when PJRT is stubbed or the environment cannot bind
+//! sockets (documented contract, see `engine_equivalence.rs`).
+
+use odc::comm::TransportKind;
+use odc::config::{Balancer, CommScheme, WireDtype};
+use odc::engine::trainer::{train, TrainRun, TrainerConfig};
+use std::path::{Path, PathBuf};
+
+fn tiny_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn have_artifacts() -> bool {
+    tiny_dir().join("manifest.json").exists()
+}
+
+fn base_cfg() -> TrainerConfig {
+    let mut c = TrainerConfig::new(tiny_dir());
+    c.world = 2;
+    c.minibs = 2;
+    c.steps = 2;
+    c.seed = 42;
+    c
+}
+
+/// Run the trainer; `None` skips on the two documented environmental
+/// gaps (PJRT stub, unbindable sockets), anything else is a hard error.
+fn try_train(cfg: &TrainerConfig) -> Option<TrainRun> {
+    match train(cfg) {
+        Ok(r) => Some(r),
+        Err(e) if format!("{e:#}").contains("PJRT backend unavailable") => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+        Err(e) if format!("{e:#}").contains("failed to bind") => {
+            eprintln!("skipping (sandbox without sockets?): {e:#}");
+            None
+        }
+        Err(e) => panic!("training run: {e:#}"),
+    }
+}
+
+fn assert_bit_identical(label: &str, a: &TrainRun, b: &TrainRun) {
+    assert_eq!(a.logs.len(), b.logs.len(), "{label}: step counts");
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens, "{label} step {}", x.step);
+        assert_eq!(x.loss, y.loss, "{label} step {}: losses must be bit-identical", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "{label} layer {l}: params must be bit-identical");
+    }
+}
+
+/// THE WireComm acceptance case: ODC and Hybrid over every byte
+/// transport, static dispatch, against their own in-proc run from the
+/// identical config — assert_eq, no tolerance.
+#[test]
+fn byte_transports_bit_identical_to_inproc_static() {
+    if !have_artifacts() {
+        return;
+    }
+    for (scheme, balancer, label) in [
+        (CommScheme::Odc, Balancer::LbMicro, "odc×lb-micro"),
+        (CommScheme::Odc, Balancer::LbMini, "odc×lb-mini"),
+        (CommScheme::Hybrid, Balancer::LbMini, "hybrid×lb-mini"),
+    ] {
+        let mut c = base_cfg();
+        c.scheme = scheme;
+        c.balancer = balancer;
+        let Some(oracle) = try_train(&c) else { return };
+        for kind in [TransportKind::Shm, TransportKind::Uds] {
+            let mut w = c.clone();
+            w.transport = kind;
+            let Some(r) = try_train(&w) else { return };
+            assert_bit_identical(&format!("{label} over {kind}"), &oracle, &r);
+            assert_eq!(
+                oracle.wire_bytes, r.wire_bytes,
+                "{label} over {kind}: the transport must not change pushed-byte accounting"
+            );
+        }
+    }
+}
+
+/// Queue dispatch with a 4× straggler over the byte transports: runtime
+/// placement AND real byte movement together still cannot move a bit —
+/// the fold key is the plan, the arrival order is the ticket sequence.
+#[test]
+fn queue_dispatch_over_byte_transports_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::Queue;
+    c.device_speed = vec![0.25, 1.0];
+    let Some(oracle) = try_train(&c) else { return };
+    for kind in [TransportKind::Shm, TransportKind::Uds] {
+        let mut w = c.clone();
+        w.transport = kind;
+        let Some(r) = try_train(&w) else { return };
+        assert_bit_identical(&format!("queue×odc over {kind}"), &oracle, &r);
+    }
+}
+
+/// The wire-precision knob composes with the transport: a bf16 run over
+/// the ring carries half the f32 bytes (same counter the inproc run
+/// reports) and lands on the same bits as bf16 over inproc — encode
+/// happens before the transport, decode after, error feedback included.
+#[test]
+fn bf16_wire_composes_with_byte_transports() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::LbMini;
+    c.wire_dtype = WireDtype::Bf16;
+    let Some(oracle) = try_train(&c) else { return };
+    let mut w = c.clone();
+    w.transport = TransportKind::Shm;
+    let Some(r) = try_train(&w) else { return };
+    assert_bit_identical("odc×bf16 over shm", &oracle, &r);
+    assert_eq!(oracle.wire_bytes, r.wire_bytes, "bf16 byte halving must survive the transport");
+}
+
+/// Elastic recovery over the ring: device 0 crashes mid-minibatch and
+/// the run still completes with the same bits as the same crash over
+/// inproc — retract/adopt/re-pull traffic is ordinary `Msg` traffic.
+#[test]
+fn elastic_crash_over_ring_matches_inproc() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.world = 4;
+    c.steps = 3;
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::Queue;
+    c.fail_at = vec![(0, 1, 1)];
+    let Some(oracle) = try_train(&c) else { return };
+    let mut w = c.clone();
+    w.transport = TransportKind::Shm;
+    let Some(r) = try_train(&w) else { return };
+    assert!(r.recovery_s > 0.0, "recovery overhead must be measured over the ring too");
+    assert_bit_identical("elastic×odc over shm", &oracle, &r);
+}
+
+/// Collective × byte transport is a config error: the collective
+/// backend's per-layer barriers assume the shared-memory mailbox, so
+/// the combination is rejected before artifacts are touched (holds
+/// even without `make artifacts`).
+#[test]
+fn collective_rejected_over_byte_transports() {
+    for kind in [TransportKind::Shm, TransportKind::Uds] {
+        let mut c = base_cfg();
+        c.scheme = CommScheme::Collective;
+        c.balancer = Balancer::LbMicro;
+        c.transport = kind;
+        let err = train(&c).unwrap_err().to_string();
+        assert!(err.contains("one-sided"), "unexpected error: {err}");
+    }
+}
+
+/// `--transport inproc` through the `with_stack` path is the seed path:
+/// explicitly selecting the default must be bit-identical to never
+/// mentioning it (the stack constructor may not perturb anything).
+#[test]
+fn explicit_inproc_bit_identical_to_default() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::LbMicro;
+    let Some(a) = try_train(&c) else { return };
+    let mut e = c.clone();
+    e.transport = TransportKind::Inproc;
+    let Some(b) = try_train(&e) else { return };
+    assert_bit_identical("explicit inproc", &a, &b);
+}

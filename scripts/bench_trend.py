@@ -4,7 +4,7 @@ previous CI run's records (restored via actions/cache).
 
 Usage: bench_trend.py <prev_dir> <fresh_dir>
 
-Tracked metrics (higher is better for all):
+Tracked metrics (higher is better unless noted):
   * BENCH_hotpath.json  -> per_microbatch.reduction_pct
         (zero-copy vs seed comm-path win, %)
   * BENCH_hotpath.json  -> fold.gbps
@@ -25,10 +25,21 @@ Tracked metrics (higher is better for all):
         the trend comparison it carries an ABSOLUTE floor of
         SEQSPLIT_FLOOR — splitting must always remove at least 15% of
         the straggler-pinned makespan, even on a first/seeding run)
+  * BENCH_wire.json     -> transports.uds.alpha_us   (LOWER is better:
+        per-message setup cost of the socket transport)
+  * BENCH_wire.json     -> transports.uds.beta_gbps
+        (sustained socket-transport bandwidth, GB/s)
 
-Exit codes: 0 = ok (including "no previous record yet" — the first run
-seeds the trajectory), 1 = a metric regressed more than TOLERANCE, fell
-below its absolute floor, or a fresh record is missing/measured:false.
+Baseline semantics: a metric or file that is missing, unmeasured, or
+unreadable in the PREVIOUS record seeds the trajectory at the fresh
+value instead of failing — brand-new BENCH keys (and a corrupted
+restored cache) are first runs, not regressions. Only the FRESH side is
+load-bearing: a fresh record that is missing, unmeasured, unparseable,
+or lacking a tracked metric fails the gate.
+
+Exit codes: 0 = ok (including any seeding), 1 = a metric regressed more
+than TOLERANCE, crossed its absolute floor, or a fresh record is
+missing/measured:false, 2 = usage error.
 """
 
 import json
@@ -41,10 +52,15 @@ WIRE_FLOOR = 0.45  # absolute: bf16 payloads must shed >=45% of the f32 wire byt
 
 
 def load(path):
+    """Read a BENCH record: (record, None) on success, (None, reason)
+    on a missing, unreadable, or unparseable file."""
     if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
+        return None, "missing"
+    try:
+        with open(path) as f:
+            return json.load(f), None
+    except (OSError, ValueError) as e:
+        return None, f"unreadable ({e})"
 
 
 def hot_metric(rec):
@@ -97,24 +113,44 @@ def seqsplit_metric(rec):
         return None
 
 
-def main():
-    if len(sys.argv) != 3:
-        print("usage: bench_trend.py <prev_dir> <fresh_dir>", file=sys.stderr)
-        return 2
-    prev_dir, fresh_dir = sys.argv[1], sys.argv[2]
-    failures = []
+def calib_alpha_metric(rec):
+    try:
+        v = rec["transports"]["uds"]["alpha_us"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
 
-    checks = [
-        ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric, None),
-        ("BENCH_hotpath.json", "fold_kernel fold.gbps", fold_metric, None),
-        ("BENCH_hotpath.json", "bf16 wire bytes reduction fraction", wire_metric, WIRE_FLOOR),
-        ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric, None),
-        ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric, None),
-        ("BENCH_dispatch.json", "seqsplit makespan reduction fraction", seqsplit_metric, SEQSPLIT_FLOOR),
-    ]
-    for fname, label, metric, abs_floor in checks:
-        fresh = load(os.path.join(fresh_dir, fname))
-        if fresh is None or not fresh.get("measured"):
+
+def calib_beta_metric(rec):
+    try:
+        v = rec["transports"]["uds"]["beta_gbps"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+# (file, label, metric, absolute floor or None, higher_is_better)
+CHECKS = [
+    ("BENCH_hotpath.json", "comm_path reduction_pct", hot_metric, None, True),
+    ("BENCH_hotpath.json", "fold_kernel fold.gbps", fold_metric, None, True),
+    ("BENCH_hotpath.json", "bf16 wire bytes reduction fraction", wire_metric, WIRE_FLOOR, True),
+    ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric, None, True),
+    ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric, None, True),
+    ("BENCH_dispatch.json", "seqsplit makespan reduction fraction", seqsplit_metric, SEQSPLIT_FLOOR, True),
+    ("BENCH_wire.json", "wire_calib uds alpha_us", calib_alpha_metric, None, False),
+    ("BENCH_wire.json", "wire_calib uds beta_gbps", calib_beta_metric, None, True),
+]
+
+
+def run_checks(prev_dir, fresh_dir, checks=CHECKS, out=print):
+    """Run every trend check; returns the list of failure messages."""
+    failures = []
+    for fname, label, metric, abs_floor, higher_is_better in checks:
+        fresh, fresh_err = load(os.path.join(fresh_dir, fname))
+        if fresh is None:
+            failures.append(f"{fname}: fresh record {fresh_err}")
+            continue
+        if not fresh.get("measured"):
             failures.append(f"{fname}: fresh record missing or still measured:false")
             continue
         cur = metric(fresh)
@@ -124,23 +160,43 @@ def main():
         if abs_floor is not None and cur < abs_floor:
             failures.append(f"{label} below absolute floor {abs_floor:.2f}: {cur:.4f}")
             continue
-        prev = load(os.path.join(prev_dir, fname))
-        if prev is None or not prev.get("measured"):
-            print(f"{label}: no measured previous record — seeding the trajectory at {cur:.4f}")
+        prev, prev_err = load(os.path.join(prev_dir, fname))
+        if prev is None:
+            # a missing OR corrupt baseline is a first run, not a
+            # regression — the restored cache is advisory
+            out(f"{label}: previous record {prev_err} — seeding the trajectory at {cur:.4f}")
+            continue
+        if not prev.get("measured"):
+            out(f"{label}: no measured previous record — seeding the trajectory at {cur:.4f}")
             continue
         old = metric(prev)
         if old is None:
-            print(f"{label}: previous record has no metric — seeding at {cur:.4f}")
+            # brand-new BENCH key (this metric didn't exist when the
+            # baseline was written) — seed it
+            out(f"{label}: previous record has no metric — seeding at {cur:.4f}")
             continue
-        floor = old - abs(old) * TOLERANCE
-        ok = cur >= floor
-        print(
+        if higher_is_better:
+            bound = old - abs(old) * TOLERANCE
+            ok = cur >= bound
+            kind = "floor"
+        else:
+            bound = old + abs(old) * TOLERANCE
+            ok = cur <= bound
+            kind = "ceiling"
+        out(
             f"{label}: previous {old:.4f} -> fresh {cur:.4f} "
-            f"(floor {floor:.4f}) {'OK' if ok else 'REGRESSION'}"
+            f"({kind} {bound:.4f}) {'OK' if ok else 'REGRESSION'}"
         )
         if not ok:
             failures.append(f"{label} regressed >{TOLERANCE:.0%}: {old:.4f} -> {cur:.4f}")
+    return failures
 
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: bench_trend.py <prev_dir> <fresh_dir>", file=sys.stderr)
+        return 2
+    failures = run_checks(sys.argv[1], sys.argv[2])
     for msg in failures:
         print(f"::error::{msg}")
     return 1 if failures else 0
