@@ -27,12 +27,13 @@ def hotpath(reduction_pct=40.0, gbps=5.0, wire_frac=0.5):
     }
 
 
-def dispatch(margin=8.0, retained=0.9, shear=0.3):
+def dispatch(margin=8.0, retained=0.9, shear=0.3, gain=0.12):
     return {
         "measured": True,
         "rows": [{"slowdown": 4.0, "static_bubble_time_s": margin + 2.0, "queue_bubble_time_s": 2.0}],
         "chaos": {"retained_throughput_fraction": retained},
         "seqsplit": {"makespan_reduction_fraction": shear},
+        "async": {"throughput_gain_fraction": gain},
     }
 
 
@@ -158,6 +159,30 @@ def test_fresh_side_is_load_bearing(tmp_path):
     (fresh / "BENCH_wire.json").write_text("not json at all")
     _, failures = run(prev, fresh, [c for c in bt.CHECKS if c[0] == "BENCH_wire.json"])
     assert failures and all("unreadable" in f for f in failures)
+
+
+def test_async_gain_regression_and_floor(tmp_path):
+    prev, fresh = tmp_path / "prev", tmp_path / "fresh"
+    prev.mkdir(), fresh.mkdir()
+    checks = [c for c in bt.CHECKS if c[1] == "asyncps throughput gain fraction"]
+    # the overlap win shrank 50%: a higher-is-better regression
+    write(prev, {"BENCH_dispatch.json": dispatch(gain=0.12)})
+    write(fresh, {"BENCH_dispatch.json": dispatch(gain=0.06)})
+    _, failures = run(prev, fresh, checks)
+    assert len(failures) == 1 and "regressed" in failures[0]
+    # a negative gain (async slower than the barrier) trips the absolute
+    # floor even on a seeding run with no baseline at all
+    write(fresh, {"BENCH_dispatch.json": dispatch(gain=-0.02)})
+    _, failures = run(tmp_path / "empty", fresh, checks)
+    assert len(failures) == 1 and "absolute floor" in failures[0]
+    # baseline predating the AsyncPS key seeds instead of failing
+    old = dispatch()
+    del old["async"]
+    write(prev, {"BENCH_dispatch.json": old})
+    write(fresh, {"BENCH_dispatch.json": dispatch(gain=0.12)})
+    msgs, failures = run(prev, fresh, checks)
+    assert failures == []
+    assert any("no metric" in m for m in msgs)
 
 
 def test_absolute_floor_applies_even_when_seeding(tmp_path):

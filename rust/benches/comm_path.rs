@@ -23,7 +23,7 @@
 //! steady state is allocation-free. ODC_BENCH_ITERS scales sampling.
 
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{GatherCache, OdcComm};
+use odc::comm::{CommStack, GatherCache, OdcComm};
 use odc::util::bench::Bencher;
 use odc::util::json::Json;
 use std::sync::Arc;
@@ -110,13 +110,15 @@ fn main() {
     let micro_total = (MINIBATCHES * MICROS) as f64;
 
     // ---- end-to-end minibatch schedule, per mode -------------------------
-    let comm_seed = Arc::new(OdcComm::new(Arc::clone(&params), WORLD));
+    let comm_seed =
+        CommStack::builder(Arc::clone(&params), WORLD).build_odc().expect("in-process odc stack");
     let r_seed = b.run("commpath_seed_3minibatches", || {
         run_minibatches(&comm_seed, &params, Mode::Seed)
     });
     let seed_ns_per_micro = r_seed.mean_ns / micro_total;
 
-    let comm_zc = Arc::new(OdcComm::new(Arc::clone(&params), WORLD));
+    let comm_zc =
+        CommStack::builder(Arc::clone(&params), WORLD).build_odc().expect("in-process odc stack");
     // warm-up (arena growth + first cache fill happen here, untimed)
     run_minibatches(&comm_zc, &params, Mode::ZeroCopy);
     let warm = comm_zc.arena_stats();
@@ -133,7 +135,8 @@ fn main() {
 
     // ---- isolated primitives (single device, no thread noise) -----------
     let pstore = Arc::new(ParamStore::new(&LAYERS, 1));
-    let prim1 = Arc::new(OdcComm::new(Arc::clone(&pstore), 1));
+    let prim1 =
+        CommStack::builder(Arc::clone(&pstore), 1).build_odc().expect("in-process odc stack");
     let mut scratch = vec![0.0f32; pstore.max_padded_len()];
     let r_direct = b.run("gather_direct_2MiB", || prim1.gather_params(0, 0, &mut scratch));
     let mut cache1 = GatherCache::new(&pstore, 0, true);

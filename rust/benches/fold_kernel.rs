@@ -19,7 +19,7 @@
 //! file wholesale. ODC_BENCH_ITERS scales sampling.
 
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{fold, FoldPiece, Membership, OdcComm, PieceData, WireDtype};
+use odc::comm::{fold, CommStack, FoldPiece, PieceData, WireDtype};
 use odc::util::bench::Bencher;
 use odc::util::json::Json;
 use std::sync::Arc;
@@ -37,11 +37,10 @@ fn pushed_bytes(wire: WireDtype) -> u64 {
     const WORLD: usize = 4;
     const LAYERS: [usize; 3] = [1 << 16, 1 << 15, 1 << 15];
     let params = Arc::new(ParamStore::new(&LAYERS, WORLD));
-    let comm = Arc::new(OdcComm::with_wire(
-        Arc::clone(&params),
-        Arc::new(Membership::all_live(WORLD)),
-        wire,
-    ));
+    let comm = CommStack::builder(Arc::clone(&params), WORLD)
+        .wire(wire)
+        .build_odc()
+        .expect("in-process odc stack");
     std::thread::scope(|s| {
         for dev in 0..WORLD {
             let comm = Arc::clone(&comm);

@@ -12,7 +12,7 @@ use odc::balance::packers::plan_run;
 use odc::comm::backend::{CommBackend, ParamStore};
 use odc::comm::primbench::{bench_primitive, Primitive};
 use odc::comm::shared::SharedBuf;
-use odc::comm::{GatherCache, OdcComm};
+use odc::comm::{CommStack, GatherCache};
 use odc::config::{Balancer, Dataset, ExperimentConfig, PaperModel};
 use odc::sim::run::{simulate, SimConfig};
 use odc::util::bench::Bencher;
@@ -67,12 +67,13 @@ fn main() {
     // buffer wins at engine scale)
     // (single device+daemon so the drain below can't block on peers)
     let params = Arc::new(ParamStore::new(&[1 << 20], 1));
-    let comm = OdcComm::new(Arc::clone(&params), 1);
+    let comm =
+        CommStack::builder(Arc::clone(&params), 1).build_odc().expect("in-process odc stack");
     let mut direct = vec![0.0f32; params.layers[0].padded_len()];
     b.run("gather_direct_4MiB", || comm.gather_params(0, 0, &mut direct));
     let mut cache = GatherCache::new(&params, 0, true);
-    let _ = cache.gather(&comm, 0); // one real gather per minibatch…
-    b.run("gather_cached_4MiB", || std::hint::black_box(cache.gather(&comm, 0)));
+    let _ = cache.gather(comm.as_ref(), 0); // one real gather per minibatch…
+    b.run("gather_cached_4MiB", || std::hint::black_box(cache.gather(comm.as_ref(), 0)));
     // one full reduce+drain cycle per iteration: the arena is back to
     // steady state after every end_minibatch, so the counters below
     // measure the warm path (bounded in-flight), not producer backlog

@@ -1,0 +1,578 @@
+//! AsyncPS backend: the classical parameter-server throughput regime
+//! the paper deliberately stops short of — dedicated shard servers,
+//! free-running workers, bounded staleness.
+//!
+//! The synchronous ODC backend ties three things to the end of every
+//! minibatch: the gradient fold (quorum of `Done`s), the optimizer
+//! apply, and the `end_step` barrier that readmits every worker at
+//! once. AsyncPS decouples them:
+//!
+//! * Each device's daemon is a **shard server** that buffers gradient
+//!   pieces *per minibatch* (`Msg::Accum` carries the minibatch index
+//!   `mb`) — so traffic from minibatch `t+1` can arrive while `t` is
+//!   still folding. The synchronous daemon counts one cumulative quorum
+//!   because the barrier guarantees no cross-minibatch overlap; here
+//!   that guarantee is gone, so the protocol tags everything.
+//! * The engine runs one **server thread** per shard driving
+//!   [`CommBackend::server_flush`]`(shard, mb)` → fold → Adam →
+//!   parameter write-back → [`ParamStore::publish_apply`]. Workers
+//!   never wait for it.
+//! * Workers are **admission-gated**, not barriered: before minibatch
+//!   `t` a worker blocks in [`ParamStore::wait_min_applies`]`(t - k)`
+//!   until the slowest shard has applied minibatch `t-k-1`'s fold.
+//!   `k = 0` demands every shard has applied `t-1` — exactly the
+//!   synchronous barrier condition — and because the fold itself is the
+//!   same id-keyed `(micro, client)` sort over the same pieces, a
+//!   `k = 0` run is **bit-identical** to synchronous ODC
+//!   (`tests/async_prop.rs` pins it). `k > 0` lets fast workers run up
+//!   to `k` minibatches ahead of the slowest apply — the classical
+//!   bounded-staleness contract (SSP): no worker ever computes on
+//!   parameters older than `k` applies behind its own minibatch index.
+//!
+//! Gathers stay one-sided and cacheable, but each shard slice is read
+//! under the [`ParamStore`] per-shard reader gate: at `k > 0` a server
+//! may rewrite its shard while a worker gathers, and the gate is what
+//! keeps a gather from observing a half-written shard (a *stale* shard
+//! is the contract; a *torn* one is not). Determinism scope: `k = 0`
+//! bit-identical; `k > 0` schedule-dependent by design — which
+//! minibatch's params a worker sees depends on real timing, exactly
+//! the throughput-vs-freshness trade the staleness ablation measures.
+//!
+//! Legality (enforced by `RunSpec::validate` before anything is built):
+//! ODC scheme only, LB-Mini/Queue balancers, static membership, clean
+//! transport — no fail/join events, no fault plans, no seq-split. The
+//! wire dtype and byte transports (`shm`/`uds`) compose freely.
+
+use super::arena::{ArenaMatrix, ArenaStats, PayloadArena};
+use super::backend::{CommBackend, GatherPolicy, HotpathStats, ParamStore};
+use super::fold::{self, FoldPiece, PieceData, WireDtype};
+use super::ring::RingTransport;
+use super::socket::SocketTransport;
+use super::transport::{
+    frame, InProcTransport, Transport, TransportKind, WireCodec, WireMsg,
+};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Clone)]
+enum Msg {
+    /// One gradient piece for this server's shard of `layer`, pushed by
+    /// `client` for global microbatch `micro` OF MINIBATCH `mb`. Unlike
+    /// the synchronous protocol the minibatch index is on the wire:
+    /// without a barrier, pieces of `mb+1` can land while `mb` is still
+    /// folding, and the server files each into its minibatch bucket.
+    Accum { mb: u64, layer: usize, micro: u64, weight: f32, client: usize, data: Vec<u8> },
+    /// `client` finished every microbatch of minibatch `mb`. Tagged for
+    /// the same reason: Dones for different minibatches interleave.
+    Done { mb: u64, client: usize },
+    /// The shard's server thread asks for minibatch `mb`'s completed
+    /// fold; the daemon replies once all `world` clients are done with
+    /// `mb`. Rides the ticketed local lane (self-link only).
+    Flush { mb: u64, reply: mpsc::Sender<Vec<Vec<f32>>> },
+    Shutdown,
+}
+
+impl WireMsg for Msg {
+    fn is_barrier(&self) -> bool {
+        !matches!(self, Msg::Accum { .. })
+    }
+    fn payload_bytes(&self) -> usize {
+        match self {
+            Msg::Accum { data, .. } => data.len(),
+            _ => 0,
+        }
+    }
+}
+
+impl WireCodec for Msg {
+    fn encode(&self, out: &mut Vec<u8>) -> bool {
+        match self {
+            Msg::Accum { mb, layer, micro, weight, client, data } => {
+                out.push(0);
+                frame::put_u64(out, *mb);
+                frame::put_u64(out, *layer as u64);
+                frame::put_u64(out, *micro);
+                frame::put_f32(out, *weight);
+                frame::put_u64(out, *client as u64);
+                frame::put_bytes(out, data);
+            }
+            Msg::Done { mb, client } => {
+                out.push(1);
+                frame::put_u64(out, *mb);
+                frame::put_u64(out, *client as u64);
+            }
+            // Flush carries an mpsc reply channel — process-local by
+            // nature, it rides the transport's ticketed local lane.
+            Msg::Flush { .. } => return false,
+            Msg::Shutdown => out.push(2),
+        }
+        true
+    }
+
+    fn decode(bytes: &[u8]) -> Option<Msg> {
+        let mut r = frame::Reader::new(bytes.get(1..)?);
+        let msg = match bytes.first()? {
+            0 => Msg::Accum {
+                mb: r.u64()?,
+                layer: r.u64()? as usize,
+                micro: r.u64()?,
+                weight: r.f32()?,
+                client: r.u64()? as usize,
+                data: r.bytes()?,
+            },
+            1 => Msg::Done { mb: r.u64()?, client: r.u64()? as usize },
+            2 => Msg::Shutdown,
+            _ => return None,
+        };
+        if !r.done() {
+            return None;
+        }
+        Some(msg)
+    }
+}
+
+/// A buffered piece awaiting its minibatch's fold.
+struct Piece {
+    micro: u64,
+    client: usize,
+    weight: f32,
+    data: Vec<u8>,
+}
+
+/// Everything a server has buffered for one in-flight minibatch.
+struct MbState {
+    /// Per-layer pieces, folded `(micro, client)`-keyed at the flush.
+    pending: Vec<Vec<Piece>>,
+    /// Clients done with this minibatch (static world: quorum = world).
+    done: usize,
+    /// The server thread's flush request, parked until the quorum.
+    reply: Option<mpsc::Sender<Vec<Vec<f32>>>>,
+}
+
+impl MbState {
+    fn new(layers: usize) -> Self {
+        MbState { pending: (0..layers).map(|_| Vec::new()).collect(), done: 0, reply: None }
+    }
+}
+
+pub struct AsyncPs {
+    world: usize,
+    /// The staleness bound `k`: how many minibatches a worker may run
+    /// ahead of the slowest shard's apply. Admission itself lives in
+    /// the trainer (`ParamStore::wait_min_applies`); the backend keeps
+    /// the bound for reporting and asserts.
+    staleness: usize,
+    params: Arc<ParamStore>,
+    transport: Arc<dyn Transport<Msg>>,
+    /// Folded gradients staged by `server_flush`, consumed by the shard
+    /// server thread's `take_grad_shard`.
+    taken: Vec<Mutex<Option<Vec<Vec<f32>>>>>,
+    daemons: Mutex<Vec<JoinHandle<()>>>,
+    /// Payload arenas indexed `[server][client]`. In-flight payloads
+    /// grow to ~(k+1) minibatches per pair — the arena grows on demand
+    /// past its single-minibatch prealloc and keeps the buffers
+    /// thereafter, so steady state is still allocation-free.
+    arenas: ArenaMatrix,
+    /// Each worker's current minibatch index (the `mb` its pushes are
+    /// tagged with); advanced by its own `end_minibatch`.
+    cur_mb: Vec<AtomicUsize>,
+    wire: WireDtype,
+    /// Error-feedback residuals, `[dev][layer]` (empty under `F32`).
+    residuals: Vec<Vec<Mutex<Vec<f32>>>>,
+    wire_bytes: Arc<AtomicU64>,
+    fold_ns: Arc<AtomicU64>,
+}
+
+impl AsyncPs {
+    /// Build over a byte transport. `pub(crate)`: construct through
+    /// [`crate::comm::CommStack`] — the builder is the only public
+    /// door, and it enforces the legality matrix (static membership,
+    /// no faults) before this runs.
+    pub(crate) fn with_stack(
+        params: Arc<ParamStore>,
+        world: usize,
+        staleness: usize,
+        wire: WireDtype,
+        kind: TransportKind,
+    ) -> std::io::Result<Self> {
+        let transport: Arc<dyn Transport<Msg>> = match kind {
+            TransportKind::Inproc => Arc::new(InProcTransport::new(world)),
+            TransportKind::Shm => Arc::new(RingTransport::new(world)),
+            TransportKind::Uds => Arc::new(SocketTransport::bind_world(world)?),
+        };
+        let shard_lens: Vec<usize> = params.layers.iter().map(|l| l.shard_len).collect();
+        let mut caps: Vec<usize> = shard_lens.iter().map(|&l| wire.bytes_for(l)).collect();
+        caps.push(caps.iter().copied().max().unwrap_or(0));
+        let arenas = ArenaMatrix::new(world, world, &caps);
+        let fold_threads = fold::default_fold_threads();
+        let fold_ns = Arc::new(AtomicU64::new(0));
+        let mut daemons = Vec::with_capacity(world);
+        for server in 0..world {
+            let lens = shard_lens.clone();
+            let row = arenas.row(server);
+            let link = Arc::clone(&transport);
+            let ns = Arc::clone(&fold_ns);
+            daemons.push(std::thread::spawn(move || {
+                server_loop(server, link, lens, world, row, wire, fold_threads, ns)
+            }));
+        }
+        let residuals = (0..world)
+            .map(|_| {
+                params
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Mutex::new(match wire {
+                            WireDtype::F32 => Vec::new(),
+                            WireDtype::Bf16 => vec![0.0; l.padded_len()],
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(AsyncPs {
+            world,
+            staleness,
+            params,
+            transport,
+            taken: (0..world).map(|_| Mutex::new(None)).collect(),
+            daemons: Mutex::new(daemons),
+            arenas,
+            cur_mb: (0..world).map(|_| AtomicUsize::new(0)).collect(),
+            wire,
+            residuals,
+            wire_bytes: Arc::new(AtomicU64::new(0)),
+            fold_ns,
+        })
+    }
+
+    /// The configured staleness bound `k`.
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+
+    /// Summed payload-arena counters (tests): the push path stays
+    /// allocation-free once the (k+1)-minibatch working set is warm.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arenas.stats()
+    }
+}
+
+/// Fold one layer's pieces in `(micro, client)` order — the SAME pure
+/// ordering rule as the synchronous daemon, which is what makes the
+/// `k = 0` degenerate case bit-identical — and send every payload home.
+fn fold_layer(
+    pieces: &mut Vec<Piece>,
+    len: usize,
+    arenas: &[Arc<PayloadArena>],
+    wire: WireDtype,
+    threads: usize,
+) -> Vec<f32> {
+    pieces.sort_by_key(|p| (p.micro, p.client));
+    let mut acc = vec![0.0f32; len];
+    let inputs: Vec<FoldPiece> = pieces
+        .iter()
+        .map(|p| FoldPiece { weight: p.weight, data: PieceData::Wire(&p.data, wire) })
+        .collect();
+    fold::fold_pieces(&mut acc, &inputs, threads);
+    drop(inputs);
+    for p in pieces.drain(..) {
+        arenas[p.client].release(p.data);
+    }
+    acc
+}
+
+/// The shard-server daemon: a per-minibatch bucketed state machine.
+/// Unlike the synchronous daemon it never counts a cumulative quorum —
+/// every message names its minibatch, buckets are folded and retired
+/// independently, and any number may be in flight at once (bounded by
+/// the admission gate to k+1 in practice).
+#[allow(clippy::too_many_arguments)]
+fn server_loop(
+    me: usize,
+    transport: Arc<dyn Transport<Msg>>,
+    shard_lens: Vec<usize>,
+    world: usize,
+    arenas: Vec<Arc<PayloadArena>>,
+    wire: WireDtype,
+    fold_threads: usize,
+    fold_ns: Arc<AtomicU64>,
+) {
+    let mut inflight: BTreeMap<u64, MbState> = BTreeMap::new();
+    loop {
+        let msg = match transport.recv(me) {
+            Some(env) => env.msg,
+            None => return,
+        };
+        let touched = match msg {
+            Msg::Accum { mb, layer, micro, weight, client, data } => {
+                let st = inflight.entry(mb).or_insert_with(|| MbState::new(shard_lens.len()));
+                // idempotent (belt and braces over transport dedup):
+                // (micro, client) identifies a push within a minibatch
+                if st.pending[layer].iter().any(|p| p.micro == micro && p.client == client) {
+                    arenas[client].release(data);
+                } else {
+                    st.pending[layer].push(Piece { micro, client, weight, data });
+                }
+                mb
+            }
+            Msg::Done { mb, client } => {
+                debug_assert!(client < world);
+                let st = inflight.entry(mb).or_insert_with(|| MbState::new(shard_lens.len()));
+                st.done += 1;
+                mb
+            }
+            Msg::Flush { mb, reply } => {
+                let st = inflight.entry(mb).or_insert_with(|| MbState::new(shard_lens.len()));
+                st.reply = Some(reply);
+                mb
+            }
+            Msg::Shutdown => return,
+        };
+        let ready = inflight
+            .get(&touched)
+            .map(|st| st.done == world && st.reply.is_some())
+            .unwrap_or(false);
+        if ready {
+            let mut st = inflight.remove(&touched).expect("bucket just checked");
+            let t0 = Instant::now();
+            let out: Vec<Vec<f32>> = st
+                .pending
+                .iter_mut()
+                .zip(&shard_lens)
+                .map(|(pieces, &len)| fold_layer(pieces, len, &arenas, wire, fold_threads))
+                .collect();
+            fold_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let _ = st.reply.take().expect("bucket just checked").send(out);
+        }
+    }
+}
+
+impl CommBackend for AsyncPs {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn gather_params(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        // One-sided read, per shard slice under the owner's reader
+        // gate: at k > 0 a shard server may be writing its slice back
+        // concurrently, and the gate keeps each shard's bytes whole
+        // (stale-but-consistent — the SSP contract). At k = 0 the gates
+        // are uncontended and the read is the synchronous one.
+        let p = &self.params.layers[layer];
+        for server in 0..self.world {
+            let r = p.shard_range(server);
+            let bytes = self.wire.bytes_for(r.len());
+            let _ = self.transport.one_sided(dev, server, bytes);
+            let n = r.end.min(out.len());
+            if r.start < n {
+                let _gate = self.params.shard_read(server);
+                p.buf.read(r.start, &mut out[r.start..n]);
+            }
+        }
+    }
+
+    fn gather_policy(&self) -> GatherPolicy {
+        // Same shape as ODC: one-sided reads, cacheable within the
+        // minibatch. The admission gate took the place of end_step as
+        // the cache-invalidation boundary (the trainer invalidates per
+        // minibatch in the async loop).
+        GatherPolicy::OneSided
+    }
+
+    fn reduce_grad(&self, dev: usize, layer: usize, grad: &[f32], weight: f32, micro: u64) {
+        let p = &self.params.layers[layer];
+        debug_assert_eq!(grad.len(), p.padded_len());
+        if weight == 0.0 {
+            return;
+        }
+        let mb = self.cur_mb[dev].load(Ordering::Relaxed) as u64;
+        let mut residual = self.residuals[dev][layer].lock().unwrap();
+        for server in 0..self.world {
+            let r = p.shard_range(server);
+            let mut data = self.arenas.arena(server, dev).acquire(self.wire.bytes_for(r.len()));
+            let src = &grad[r.clone()];
+            match self.wire {
+                WireDtype::F32 => fold::encode(&mut data, src, self.wire),
+                WireDtype::Bf16 => fold::encode_ef(&mut data, src, &mut residual[r], self.wire),
+            }
+            self.wire_bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+            let msg = Msg::Accum { mb, layer, micro, weight, client: dev, data };
+            self.transport.send(dev, server, micro, msg).expect("async-ps transport is clean");
+        }
+    }
+
+    fn end_minibatch(&self, dev: usize) {
+        // NON-blocking, the point of the tier: broadcast Done for the
+        // current minibatch and move on. The shard servers fold when
+        // their quorum lands; this worker is admission-gated at the TOP
+        // of its next minibatch, not barriered at the bottom of this
+        // one.
+        let mb = self.cur_mb[dev].load(Ordering::Relaxed) as u64;
+        for server in 0..self.world {
+            self.transport
+                .send(dev, server, 0, Msg::Done { mb, client: dev })
+                .expect("async-ps transport is clean");
+        }
+        self.cur_mb[dev].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn take_grad_shard(&self, dev: usize, layer: usize, out: &mut [f32]) {
+        let slot = self.taken[dev].lock().unwrap();
+        let grads = slot.as_ref().expect("take_grad_shard before server_flush");
+        out.copy_from_slice(&grads[layer]);
+    }
+
+    fn end_step(&self, _dev: usize) {
+        // No step barrier — that's the tier's entire reason to exist.
+        // Readmission happens through ParamStore::wait_min_applies at
+        // the top of the worker's next minibatch.
+    }
+
+    fn server_flush(&self, shard: usize, mb: usize) {
+        let (tx, rx) = mpsc::channel();
+        self.transport
+            .send(shard, shard, 0, Msg::Flush { mb: mb as u64, reply: tx })
+            .expect("async-ps transport is clean");
+        let grads = rx.recv().expect("shard server flush");
+        *self.taken[shard].lock().unwrap() = Some(grads);
+    }
+
+    fn hotpath_stats(&self) -> HotpathStats {
+        HotpathStats {
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            fold_ns: self.fold_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "async-ps"
+    }
+}
+
+impl Drop for AsyncPs {
+    fn drop(&mut self) {
+        for server in 0..self.world {
+            let _ = self.transport.send(server, server, 0, Msg::Shutdown);
+        }
+        for d in self.daemons.lock().unwrap().drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(world: usize, lens: &[usize], k: usize) -> (Arc<ParamStore>, Arc<AsyncPs>) {
+        let params = Arc::new(ParamStore::new(lens, world));
+        let comm = Arc::new(
+            AsyncPs::with_stack(
+                Arc::clone(&params),
+                world,
+                k,
+                WireDtype::F32,
+                TransportKind::Inproc,
+            )
+            .unwrap(),
+        );
+        (params, comm)
+    }
+
+    #[test]
+    fn per_mb_buckets_fold_independently() {
+        // Two minibatches fully in flight before ANY flush: each bucket
+        // folds its own pieces — the synchronous daemon's cumulative
+        // quorum counter would hopelessly conflate these.
+        let world = 2;
+        let (_params, comm) = mk(world, &[4], 1);
+        for dev in 0..world {
+            comm.reduce_grad(dev, 0, &[1.0; 4], 1.0, dev as u64);
+            comm.end_minibatch(dev); // advances dev's cur_mb to 1
+        }
+        for dev in 0..world {
+            comm.reduce_grad(dev, 0, &[10.0; 4], 1.0, dev as u64);
+            comm.end_minibatch(dev);
+        }
+        for shard in 0..world {
+            comm.server_flush(shard, 0);
+            let mut g = vec![0.0; 2];
+            comm.take_grad_shard(shard, 0, &mut g);
+            assert_eq!(g, vec![2.0; 2], "mb 0: 1.0 from each of 2 clients");
+            comm.server_flush(shard, 1);
+            comm.take_grad_shard(shard, 0, &mut g);
+            assert_eq!(g, vec![20.0; 2], "mb 1: 10.0 from each of 2 clients");
+        }
+    }
+
+    #[test]
+    fn fold_keyed_by_micro_id_not_push_order() {
+        // Same determinism pin as the synchronous daemon: values chosen
+        // so an arrival-order fold would differ in f32.
+        let world = 2;
+        let run = |push_order: &[(usize, u64, f32)]| -> Vec<Vec<f32>> {
+            let (_params, comm) = mk(world, &[4], 0);
+            for &(client, micro, val) in push_order {
+                comm.reduce_grad(client, 0, &[val; 4], 1.0, micro);
+            }
+            for dev in 0..world {
+                comm.end_minibatch(dev);
+            }
+            (0..world)
+                .map(|shard| {
+                    comm.server_flush(shard, 0);
+                    let mut g = vec![0.0f32; 2];
+                    comm.take_grad_shard(shard, 0, &mut g);
+                    g
+                })
+                .collect()
+        };
+        let in_order = run(&[(0, 0, 1e8), (1, 1, 1.0), (0, 2, -1e8)]);
+        let scrambled = run(&[(0, 2, -1e8), (0, 0, 1e8), (1, 1, 1.0)]);
+        assert_eq!(in_order, scrambled, "push order must not change a bit");
+        for shard in &in_order {
+            assert_eq!(shard, &vec![0.0f32; 2], "(1e8 + 1.0) + (-1e8) == 0.0 in f32");
+        }
+    }
+
+    #[test]
+    fn late_flush_request_parks_until_quorum() {
+        // Flush arriving before the last Done must park, not reply
+        // early with a partial fold.
+        let world = 2;
+        let (_params, comm) = mk(world, &[4], 0);
+        comm.reduce_grad(0, 0, &[3.0; 4], 1.0, 0);
+        comm.end_minibatch(0);
+        let c2 = Arc::clone(&comm);
+        let waiter = std::thread::spawn(move || {
+            c2.server_flush(0, 0); // parks: client 1 not done yet
+            let mut g = vec![0.0; 2];
+            c2.take_grad_shard(0, 0, &mut g);
+            g
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        comm.reduce_grad(1, 0, &[4.0; 4], 1.0, 1);
+        comm.end_minibatch(1);
+        assert_eq!(waiter.join().unwrap(), vec![7.0; 2]);
+    }
+
+    #[test]
+    fn shard_clock_gates_and_wakes() {
+        let params = Arc::new(ParamStore::new(&[8], 2));
+        assert_eq!(params.min_applies(), 0);
+        params.publish_apply(0);
+        assert_eq!(params.applies(0), 1);
+        assert_eq!(params.min_applies(), 0, "shard 1 still at 0");
+        let p2 = Arc::clone(&params);
+        let waiter = std::thread::spawn(move || p2.wait_min_applies(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        params.publish_apply(1);
+        assert_eq!(waiter.join().unwrap(), 1);
+        assert_eq!(params.wait_min_applies(0), 1, "already-met target returns observed min");
+    }
+}

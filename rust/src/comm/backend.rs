@@ -23,7 +23,7 @@
 use super::membership::OptReplica;
 use super::shared::ShardedParam;
 use super::transport::FaultStats;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// FastFold hot-path counters: cumulative bytes pushed over the wire
 /// (post-encoding, so `WireDtype::Bf16` shows the real halving) and
@@ -57,6 +57,20 @@ pub struct ParamStore {
     /// zero-filled windows themselves are lazily paged and cost no
     /// steady-state traffic).
     pub opt: Vec<Arc<OptReplica>>,
+    /// AsyncPS per-shard version clocks: `clock.applies[shard]` counts
+    /// optimizer applies published for that shard (a shard at version
+    /// `v` carries the parameters produced by minibatches `0..v`).
+    /// Every optimizer path bumps its shard's clock after writing the
+    /// fresh parameters back, so versions exist under every scheme;
+    /// only the bounded-staleness admission gate ever *waits* on them.
+    clock: ShardClock,
+    /// Per-shard writer gates: an AsyncPS shard server holds the write
+    /// side while rewriting its shard's slices across all layers, and
+    /// free-running gathers take the read side — so a `k>0` worker
+    /// never observes a half-written shard. Synchronous paths skip the
+    /// gates entirely (the minibatch barrier already separates writers
+    /// from readers).
+    gates: Vec<RwLock<()>>,
 }
 
 impl ParamStore {
@@ -64,7 +78,12 @@ impl ParamStore {
         let layers: Vec<Arc<ShardedParam>> =
             layer_lens.iter().map(|&l| Arc::new(ShardedParam::new(l, world))).collect();
         let opt = layers.iter().map(|l| Arc::new(OptReplica::new(l.padded_len()))).collect();
-        ParamStore { layers, opt }
+        ParamStore {
+            layers,
+            opt,
+            clock: ShardClock::new(world),
+            gates: (0..world).map(|_| RwLock::new(())).collect(),
+        }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -73,6 +92,83 @@ impl ParamStore {
 
     pub fn max_padded_len(&self) -> usize {
         self.layers.iter().map(|l| l.padded_len()).max().unwrap_or(0)
+    }
+
+    /// Publish one optimizer apply for `shard`: bump its version clock
+    /// and wake every admission waiter. Call AFTER the fresh parameters
+    /// (and any replicated optimizer state) are written back.
+    pub fn publish_apply(&self, shard: usize) {
+        self.clock.publish(shard);
+    }
+
+    /// Current version of `shard` (number of published applies).
+    pub fn applies(&self, shard: usize) -> u64 {
+        self.clock.applies(shard)
+    }
+
+    /// The slowest shard's version — what the staleness admission rule
+    /// gates on.
+    pub fn min_applies(&self) -> u64 {
+        self.clock.min_applies()
+    }
+
+    /// Block until every shard has published at least `target` applies;
+    /// returns the observed minimum at wake (≥ `target`). `target = t-k`
+    /// is the bounded-staleness admission gate for minibatch `t`; with
+    /// `k = 0` this is exactly the synchronous end-of-step barrier
+    /// condition (all shards applied minibatch `t-1`).
+    pub fn wait_min_applies(&self, target: u64) -> u64 {
+        self.clock.wait_min(target)
+    }
+
+    /// Take `shard`'s writer gate for the span of an optimizer write.
+    pub fn shard_write(&self, shard: usize) -> RwLockWriteGuard<'_, ()> {
+        self.gates[shard].write().unwrap()
+    }
+
+    /// Take `shard`'s reader gate for the span of a free-running gather.
+    pub fn shard_read(&self, shard: usize) -> RwLockReadGuard<'_, ()> {
+        self.gates[shard].read().unwrap()
+    }
+}
+
+/// The AsyncPS version clock: one monotonically increasing apply
+/// counter per shard under a single mutex (shard count = world, tiny),
+/// with a condvar so bounded-staleness admission can sleep instead of
+/// spinning on the slowest server.
+struct ShardClock {
+    applies: Mutex<Vec<u64>>,
+    advanced: Condvar,
+}
+
+impl ShardClock {
+    fn new(world: usize) -> Self {
+        ShardClock { applies: Mutex::new(vec![0; world.max(1)]), advanced: Condvar::new() }
+    }
+
+    fn publish(&self, shard: usize) {
+        let mut a = self.applies.lock().unwrap();
+        a[shard] += 1;
+        self.advanced.notify_all();
+    }
+
+    fn applies(&self, shard: usize) -> u64 {
+        self.applies.lock().unwrap()[shard]
+    }
+
+    fn min_applies(&self) -> u64 {
+        self.applies.lock().unwrap().iter().copied().min().unwrap_or(0)
+    }
+
+    fn wait_min(&self, target: u64) -> u64 {
+        let mut a = self.applies.lock().unwrap();
+        loop {
+            let min = a.iter().copied().min().unwrap_or(0);
+            if min >= target {
+                return min;
+            }
+            a = self.advanced.wait(a).unwrap();
+        }
     }
 }
 
@@ -229,6 +325,18 @@ pub trait CommBackend: Send + Sync {
     /// and replicated optimizer state it is about to read are settled.
     /// No-op for founding members and static schedules.
     fn await_join(&self, _dev: usize) {}
+
+    // ---- AsyncPS hooks (see `comm::async_ps`) --------------------------
+
+    /// AsyncPS server tier: block until shard `shard`'s gradient fold for
+    /// minibatch `mb` is complete (its full live quorum pushed and the
+    /// daemon folded), staging the result for `take_grad_shard(shard,
+    /// ..)`. Driven by the engine's per-shard server thread — workers
+    /// never call this; they run ahead under the staleness bound while
+    /// the server applies the optimizer at its own pace.
+    fn server_flush(&self, _shard: usize, _mb: usize) {
+        unreachable!("server_flush requires the AsyncPs backend")
+    }
 
     // ---- ChaosComm hooks (see `comm::transport`) -----------------------
 

@@ -656,7 +656,7 @@ impl HybridComm {
     /// [`GroupMap`]-style checks first when driven from config) and a
     /// `ParamStore` whose parameters are already initialized — the group
     /// replicas are seeded from it here.
-    pub fn new(params: Arc<ParamStore>, world: usize, group_size: usize) -> Self {
+    pub(crate) fn new(params: Arc<ParamStore>, world: usize, group_size: usize) -> Self {
         HybridComm::with_membership(params, Arc::new(Membership::all_live(world)), group_size)
     }
 
@@ -667,7 +667,7 @@ impl HybridComm {
     /// group to keep a completing member at every step
     /// ([`Membership::validate_groups`] — the trainer checks). With a
     /// static schedule this is exactly [`HybridComm::new`].
-    pub fn with_membership(
+    pub(crate) fn with_membership(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,
@@ -679,7 +679,7 @@ impl HybridComm {
     /// every fold bit-identical; `Bf16` halves pushed bytes at both
     /// levels with per-stream error feedback (see
     /// `docs/wire_precision.md`).
-    pub fn with_wire(
+    pub(crate) fn with_wire(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,
@@ -701,7 +701,7 @@ impl HybridComm {
     /// (bit-identity preserved); a link partitioned past the retry
     /// budget escalates into the elastic machinery (see
     /// [`CommBackend::link_escalated`]).
-    pub fn with_faults(
+    pub(crate) fn with_faults(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,
@@ -714,7 +714,7 @@ impl HybridComm {
     /// [`HybridComm::with_faults`] with a configured wire encoding — the
     /// retransmit ladder replays the SAME encoded payload, so fault
     /// tolerance and wire precision compose without interaction.
-    pub fn with_faults_wire(
+    pub(crate) fn with_faults_wire(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,
@@ -739,7 +739,7 @@ impl HybridComm {
     /// `--transport` entry point; ticket-sequenced delivery keeps the
     /// training bytes identical across all three bases under static
     /// dispatch (see `comm/ring.rs`).
-    pub fn with_stack(
+    pub(crate) fn with_stack(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         group_size: usize,

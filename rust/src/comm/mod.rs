@@ -43,10 +43,18 @@
 //!   minibatch boundary, deterministic rendezvous shard takeover,
 //!   replicated optimizer state) — the classical PS property collective
 //!   FSDP structurally cannot offer.
+//! * [`async_ps`] — AsyncPS: the bounded-staleness parameter-server
+//!   tier — dedicated shard-server daemons buffering per-minibatch
+//!   gradient buckets, free-running workers admission-gated on the
+//!   versioned `ParamStore` clock (`k = 0` bit-identical to [`odc`]).
+//! * [`stack`] — [`CommStack`], the single public builder every
+//!   backend is constructed through (membership × wire × transport ×
+//!   faults × staleness), holding the stack legality matrix.
 //! * [`backend`] — the `CommBackend` trait the engine drives.
 //! * [`primbench`] — the Fig 11 primitive bandwidth benchmark.
 
 pub mod arena;
+pub mod async_ps;
 pub mod backend;
 pub mod collective;
 pub mod fold;
@@ -58,11 +66,13 @@ pub mod primbench;
 pub mod ring;
 pub mod shared;
 pub mod socket;
+pub mod stack;
 pub mod topology;
 pub mod transport;
 pub mod volume;
 
 pub use arena::{ArenaMatrix, ArenaStats, PayloadArena};
+pub use async_ps::AsyncPs;
 pub use backend::{CommBackend, GatherPolicy, HotpathStats};
 pub use collective::CollectiveComm;
 pub use fold::{FoldPiece, PieceData, WireDtype};
@@ -72,6 +82,7 @@ pub use membership::{Membership, MembershipBarrier, OptReplica};
 pub use odc::OdcComm;
 pub use ring::RingTransport;
 pub use socket::SocketTransport;
+pub use stack::CommStack;
 pub use topology::GroupMap;
 pub use transport::{
     Envelope, FaultPlan, FaultStats, FaultyTransport, InProcTransport, RetryPolicy, SendError,

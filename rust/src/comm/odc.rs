@@ -236,7 +236,7 @@ pub struct OdcComm {
 }
 
 impl OdcComm {
-    pub fn new(params: Arc<ParamStore>, world: usize) -> Self {
+    pub(crate) fn new(params: Arc<ParamStore>, world: usize) -> Self {
         OdcComm::with_membership(params, Arc::new(Membership::all_live(world)))
     }
 
@@ -245,7 +245,7 @@ impl OdcComm {
     /// live quorum, the step barrier shrinks and grows with it, and a
     /// dead client's payload arenas are released at its fail-step fold.
     /// With a static schedule this is exactly [`OdcComm::new`].
-    pub fn with_membership(params: Arc<ParamStore>, membership: Arc<Membership>) -> Self {
+    pub(crate) fn with_membership(params: Arc<ParamStore>, membership: Arc<Membership>) -> Self {
         OdcComm::with_wire(params, membership, WireDtype::F32)
     }
 
@@ -253,7 +253,7 @@ impl OdcComm {
     /// the oracle; `Bf16` halves pushed gradient bytes (round-to-nearest
     /// -even + per-shard error feedback, f32 master accumulation
     /// server-side — tolerance-equivalent, see `docs/wire_precision.md`).
-    pub fn with_wire(
+    pub(crate) fn with_wire(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         wire: WireDtype,
@@ -267,7 +267,7 @@ impl OdcComm {
     /// are absorbed by the retransmit ladder + reassembly (bit-identical
     /// results); a partitioned link escalates the sender into the
     /// elastic machinery (see [`CommBackend::link_escalated`]).
-    pub fn with_faults(
+    pub(crate) fn with_faults(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         plan: FaultPlan,
@@ -279,7 +279,7 @@ impl OdcComm {
     /// [`OdcComm::with_faults`] with a configured wire encoding — the
     /// retransmit ladder replays the SAME encoded payload, so fault
     /// tolerance and wire precision compose without interaction.
-    pub fn with_faults_wire(
+    pub(crate) fn with_faults_wire(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         plan: FaultPlan,
@@ -302,7 +302,7 @@ impl OdcComm {
     /// therefore the training bytes under static dispatch — is
     /// identical across all three bases (ticket-sequenced, see
     /// `comm/ring.rs`).
-    pub fn with_stack(
+    pub(crate) fn with_stack(
         params: Arc<ParamStore>,
         membership: Arc<Membership>,
         wire: WireDtype,

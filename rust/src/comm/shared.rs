@@ -149,6 +149,44 @@
 //! layout, and the calibration loop that feeds the measured alpha/beta
 //! back into the simulator's link pricing.
 //!
+//! ## The async timeline (AsyncPS — `super::async_ps`)
+//!
+//! Under the bounded-staleness tier (`--staleness k`) the GLOBAL
+//! barrier-delimited optimizer phase above dissolves into per-shard
+//! apply windows, and the phase discipline becomes per-shard instead of
+//! per-world:
+//!
+//! ```text
+//!  worker d:  … mb t-1 … ──▶ ADMIT(t): wait min_applies ≥ t-k ──▶ mb t …
+//!                                │ (re-pull params: versions ≥ t-k)
+//!  server s:  ──────── quorum(mb t-1) ──▶ fold ▶ apply ▶ publish ────▶
+//!                       (shard s WRITTEN under its own gate,
+//!                        while workers run mb t, t+1, … t+k)
+//! ```
+//!
+//! * **the write lock moves into the shard**: each shard-server daemon
+//!   applies the optimizer under its per-shard gate the moment its
+//!   minibatch quorum lands ([`super::backend::ParamStore::shard_write`]),
+//!   so "params READ-ONLY during the microbatch phase" narrows to
+//!   "params of shard *s* are stable between *s*'s applies" — which is
+//!   why the minibatch-scoped [`super::gather_cache::GatherCache`] must
+//!   be invalidated per admission, not per `end_step`;
+//! * **staleness is bounded at admission, not delivery**: a worker
+//!   enters minibatch `t` only after every shard has applied minibatch
+//!   `t - k` ([`super::backend::ParamStore::wait_min_applies`]), so no
+//!   gather can observe parameters more than `k` applies old, under any
+//!   schedule;
+//! * **`k = 0` IS the synchronous timeline**: admission then waits for
+//!   all applies of `t - 1`, which reproduces the global optimizer
+//!   phase exactly — same fold order (sorted (micro, client) per
+//!   layer), same bytes (`tests/async_prop.rs` pins bit-identity across
+//!   transports);
+//! * **composition narrows**: the fault/wire sub-structures above slot
+//!   in unchanged (the tier is mailbox traffic like any other), but
+//!   elastic membership and fault-plan escalation are rejected at
+//!   config time — both assume the global barrier the tier removes (see
+//!   `docs/asyncps.md` and `RunSpec::validate`).
+//!
 //! Violating the discipline is a logic bug in the coordinator, not in
 //! this substrate — mirroring how real RDMA gives you no protection
 //! either. The engine's integration tests (engine vs single-device

@@ -1,0 +1,314 @@
+//! `CommStack`: the one public door for constructing a comm backend.
+//!
+//! The one-sided backends grew a five-deep constructor ladder
+//! (`new` → `with_membership` → `with_wire` → `with_faults` →
+//! `with_faults_wire` → `with_stack`) as membership, wire dtypes,
+//! fault plans and byte transports landed one PR at a time. Every new
+//! orthogonal knob doubled the ladder; call sites mixed rungs; and the
+//! AsyncPS tier adds yet another axis (the staleness bound) that the
+//! ladder cannot express without four more rungs. This builder
+//! collapses the ladder:
+//!
+//! ```ignore
+//! let comm = CommStack::builder(params, world)
+//!     .membership(membership)     // default: static all-live world
+//!     .wire(WireDtype::Bf16)      // default: F32
+//!     .transport(TransportKind::Shm) // default: Inproc
+//!     .faults(plan, policy)       // default: clean links
+//!     .staleness(2)               // default: synchronous
+//!     .build(CommScheme::Odc)?;   // -> Arc<dyn CommBackend>
+//! ```
+//!
+//! `build(scheme)` routes to the right concrete backend —
+//! notably `Odc` + `.staleness(k)` selects [`AsyncPs`], the
+//! bounded-staleness parameter-server tier, while `Odc` without it
+//! stays the synchronous [`OdcComm`] — and rejects illegal stacks
+//! (staleness under a barriered scheme, faults under staleness, …)
+//! before any daemon spawns. Tests and benches that need a concrete
+//! handle (arena stats, link escalation) use the typed terminals
+//! [`CommStack::build_odc`] / [`CommStack::build_hybrid`] /
+//! [`CommStack::build_async`] / [`CommStack::build_collective`].
+//!
+//! The ladder constructors still exist as `pub(crate)` shims for the
+//! backends' own unit tests; outside `comm` this builder is the only
+//! way to get a backend, so the legality matrix cannot be bypassed.
+
+use super::async_ps::AsyncPs;
+use super::backend::{CommBackend, ParamStore};
+use super::collective::CollectiveComm;
+use super::fold::WireDtype;
+use super::hybrid::HybridComm;
+use super::membership::Membership;
+use super::odc::OdcComm;
+use super::transport::{FaultPlan, RetryPolicy, TransportKind};
+use crate::config::CommScheme;
+use std::io;
+use std::sync::Arc;
+
+/// Builder for every comm backend. See the module docs; obtain one via
+/// [`CommStack::builder`].
+pub struct CommStack {
+    params: Arc<ParamStore>,
+    membership: Arc<Membership>,
+    wire: WireDtype,
+    transport: TransportKind,
+    faults: Option<(FaultPlan, RetryPolicy)>,
+    /// `Some(k)` engages the AsyncPS tier with staleness bound `k`.
+    /// `Some(0)` still runs the async machinery (per-mb buckets,
+    /// admission gate) — it *degenerates to* synchronous, bit-identical
+    /// by `tests/async_prop.rs`, rather than routing around it.
+    staleness: Option<usize>,
+    group_size: Option<usize>,
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidInput, msg)
+}
+
+impl CommStack {
+    /// Start a stack over `params` with a static all-live `world`:
+    /// in-process transport, f32 wire, clean links, synchronous.
+    pub fn builder(params: Arc<ParamStore>, world: usize) -> CommStack {
+        CommStack {
+            params,
+            membership: Arc::new(Membership::all_live(world)),
+            wire: WireDtype::F32,
+            transport: TransportKind::Inproc,
+            faults: None,
+            staleness: None,
+            group_size: None,
+        }
+    }
+
+    /// Elastic membership schedule (replaces the all-live default; the
+    /// schedule's world supersedes the builder's).
+    pub fn membership(mut self, m: Arc<Membership>) -> Self {
+        self.membership = m;
+        self
+    }
+
+    /// Wire payload precision for gradient pushes.
+    pub fn wire(mut self, wire: WireDtype) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    /// Byte transport under the one-sided backends.
+    pub fn transport(mut self, kind: TransportKind) -> Self {
+        self.transport = kind;
+        self
+    }
+
+    /// Deterministic fault injection + retry ladder on every link.
+    pub fn faults(mut self, plan: FaultPlan, policy: RetryPolicy) -> Self {
+        self.faults = Some((plan, policy));
+        self
+    }
+
+    /// Engage the AsyncPS bounded-staleness tier (ODC scheme only).
+    /// `k = 0` keeps workers synchronous-equivalent but still runs the
+    /// async protocol — the bit-identity degenerate case.
+    pub fn staleness(mut self, k: usize) -> Self {
+        self.staleness = Some(k);
+        self
+    }
+
+    /// Intra-node group size for the two-level hybrid backend.
+    pub fn groups(mut self, group_size: usize) -> Self {
+        self.group_size = Some(group_size);
+        self
+    }
+
+    /// Route to the backend for `scheme`, type-erased (the trainer's
+    /// door). Illegal stacks fail here, before any daemon spawns.
+    pub fn build(self, scheme: CommScheme) -> io::Result<Arc<dyn CommBackend>> {
+        match scheme {
+            CommScheme::Collective => Ok(self.build_collective()?),
+            CommScheme::Odc if self.staleness.is_some() => Ok(self.build_async()?),
+            CommScheme::Odc => Ok(self.build_odc()?),
+            CommScheme::Hybrid => Ok(self.build_hybrid()?),
+        }
+    }
+
+    /// Typed terminal: synchronous one-sided ODC.
+    pub fn build_odc(self) -> io::Result<Arc<OdcComm>> {
+        if let Some(k) = self.staleness {
+            return Err(bad(format!(
+                "staleness {k} selects the AsyncPs backend — use build(CommScheme::Odc) or \
+                 build_async(), not the synchronous build_odc() terminal"
+            )));
+        }
+        Ok(Arc::new(OdcComm::with_stack(
+            self.params,
+            self.membership,
+            self.wire,
+            self.transport,
+            self.faults,
+        )?))
+    }
+
+    /// Typed terminal: the AsyncPS bounded-staleness tier. Requires
+    /// `.staleness(k)`, a static membership, and clean links — the
+    /// fault retry/escalation machinery and the elastic join/fail
+    /// choreography are both synchronous-at-minibatch by construction.
+    pub fn build_async(self) -> io::Result<Arc<AsyncPs>> {
+        let k = self.staleness.ok_or_else(|| {
+            bad("build_async() without .staleness(k) — the bound is not optional".to_string())
+        })?;
+        if self.faults.is_some() {
+            return Err(bad(format!(
+                "staleness {k} cannot compose with a fault plan: retransmit escalation hands a \
+                 dead link to the elastic recovery path, which is synchronous machinery"
+            )));
+        }
+        if !self.membership.is_static() {
+            return Err(bad(format!(
+                "staleness {k} requires a static membership: join/fail choreography rendezvouses \
+                 at minibatch boundaries the async tier no longer has"
+            )));
+        }
+        Ok(Arc::new(AsyncPs::with_stack(
+            self.params,
+            self.membership.world(),
+            k,
+            self.wire,
+            self.transport,
+        )?))
+    }
+
+    /// Typed terminal: two-level hybrid sharding. Requires `.groups(n)`.
+    pub fn build_hybrid(self) -> io::Result<Arc<HybridComm>> {
+        if let Some(k) = self.staleness {
+            return Err(bad(format!(
+                "staleness {k} requires the odc scheme: hybrid's cross-group optimizer epilogue \
+                 is a per-step rendezvous, synchronous by construction"
+            )));
+        }
+        let group_size = self.group_size.ok_or_else(|| {
+            bad("hybrid needs .groups(devices_per_node) on the CommStack builder".to_string())
+        })?;
+        Ok(Arc::new(HybridComm::with_stack(
+            self.params,
+            self.membership,
+            group_size,
+            self.wire,
+            self.transport,
+            self.faults,
+        )?))
+    }
+
+    /// Typed terminal: the baseline collective. Rejects every
+    /// barrier-free knob — there is nothing to attach them to.
+    pub fn build_collective(self) -> io::Result<Arc<CollectiveComm>> {
+        if let Some(k) = self.staleness {
+            return Err(bad(format!(
+                "staleness {k} requires a barrier-free scheme: Collective's per-layer rendezvous \
+                 IS a staleness-0 barrier"
+            )));
+        }
+        if self.faults.is_some() {
+            return Err(bad(
+                "fault plans require a barrier-free scheme (a dropped collective message stalls \
+                 every rank at the next rendezvous)"
+                    .to_string(),
+            ));
+        }
+        if self.transport != TransportKind::Inproc {
+            return Err(bad(format!(
+                "--transport {} requires a one-sided scheme: Collective has no mailbox daemons \
+                 to move bytes between",
+                self.transport
+            )));
+        }
+        if !self.membership.is_static() {
+            return Err(bad(
+                "elastic membership requires a barrier-free scheme (Collective's rendezvous \
+                 deadlocks on a dead rank)"
+                    .to_string(),
+            ));
+        }
+        let world = self.membership.world();
+        Ok(Arc::new(CollectiveComm::new(self.params, world)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(world: usize) -> Arc<ParamStore> {
+        Arc::new(ParamStore::new(&[8], world))
+    }
+
+    #[test]
+    fn builder_routes_every_scheme() {
+        let comm = CommStack::builder(params(2), 2).build(CommScheme::Odc).unwrap();
+        assert_eq!(comm.name(), "odc");
+        let comm = CommStack::builder(params(2), 2)
+            .staleness(1)
+            .build(CommScheme::Odc)
+            .unwrap();
+        assert_eq!(comm.name(), "async-ps");
+        let comm = CommStack::builder(params(2), 2)
+            .groups(2)
+            .build(CommScheme::Hybrid)
+            .unwrap();
+        assert_eq!(comm.name(), "hybrid");
+        let comm = CommStack::builder(params(2), 2).build(CommScheme::Collective).unwrap();
+        assert_eq!(comm.name(), "collective");
+    }
+
+    #[test]
+    fn staleness_zero_still_selects_async_backend() {
+        // Some(0) must run the async machinery (that's the bit-identity
+        // degenerate case), not silently route back to sync ODC.
+        let comm = CommStack::builder(params(2), 2)
+            .staleness(0)
+            .build(CommScheme::Odc)
+            .unwrap();
+        assert_eq!(comm.name(), "async-ps");
+    }
+
+    #[test]
+    fn illegal_stacks_fail_before_daemons_spawn() {
+        let e = CommStack::builder(params(2), 2)
+            .staleness(1)
+            .build(CommScheme::Collective)
+            .unwrap_err();
+        assert!(e.to_string().contains("barrier-free"), "{e}");
+        let e = CommStack::builder(params(2), 2)
+            .staleness(1)
+            .build(CommScheme::Hybrid)
+            .unwrap_err();
+        assert!(e.to_string().contains("requires the odc scheme"), "{e}");
+        let e = CommStack::builder(params(2), 2)
+            .staleness(1)
+            .faults(FaultPlan::parse("drop=0.5,seed=1").unwrap(), RetryPolicy::default())
+            .build(CommScheme::Odc)
+            .unwrap_err();
+        assert!(e.to_string().contains("fault plan"), "{e}");
+        let e = CommStack::builder(params(2), 2)
+            .membership(Arc::new(Membership::with_schedule(2, &[], &[(1, 1)]).unwrap()))
+            .staleness(1)
+            .build(CommScheme::Odc)
+            .unwrap_err();
+        assert!(e.to_string().contains("static membership"), "{e}");
+        let e = CommStack::builder(params(2), 2)
+            .transport(TransportKind::Shm)
+            .build(CommScheme::Collective)
+            .unwrap_err();
+        assert!(e.to_string().contains("one-sided scheme"), "{e}");
+        let e = CommStack::builder(params(2), 2).build(CommScheme::Hybrid).unwrap_err();
+        assert!(e.to_string().contains(".groups("), "{e}");
+        let e = CommStack::builder(params(2), 2).staleness(0).build_odc().unwrap_err();
+        assert!(e.to_string().contains("build_async"), "{e}");
+    }
+
+    #[test]
+    fn typed_terminals_hand_back_concrete_backends() {
+        let odc = CommStack::builder(params(2), 2).build_odc().unwrap();
+        let _ = odc.arena_stats(); // concrete OdcComm API
+        let aps = CommStack::builder(params(2), 2).staleness(3).build_async().unwrap();
+        assert_eq!(aps.staleness(), 3);
+    }
+}

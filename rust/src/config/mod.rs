@@ -12,6 +12,9 @@ use std::fmt;
 /// is a first-class experiment knob alongside [`CommScheme`].
 pub use crate::comm::fold::WireDtype;
 
+pub mod runspec;
+pub use runspec::RunSpec;
+
 /// Paper evaluation models (DeepSeek-R1-Distill-Qwen family shapes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PaperModel {

@@ -1,0 +1,403 @@
+//! `RunSpec`: the one legality matrix for a run's comm/fault/split knobs.
+//!
+//! The trainer and the simulator grew the same validation twice — every
+//! flag PR (`--device-speed`, `--fail-at`, `--fault-plan`, `--seq-split`,
+//! `--wire-dtype`, `--transport`, now `--staleness`) added a near-copy
+//! of its legality checks to `engine::trainer::train` and `sim::run::
+//! simulate`, and the two drifted in wording and occasionally in
+//! substance. `RunSpec` is the shared shape both CLIs parse into and
+//! both entry points validate through: [`RunSpec::validate`] holds the
+//! full cross-knob matrix in ONE place, so a combination cannot be
+//! legal in the simulator and rejected by the trainer (or vice versa)
+//! by accident.
+//!
+//! Deliberate asymmetries that stay OUT of the shared matrix:
+//!
+//! * `wire_dtype = bf16` under `Collective` — the simulator PRICES bf16
+//!   wire bytes as an assumption (its historical default), while the
+//!   engine has a real codec and rejects the combination because the
+//!   rendezvous fold has no encode/decode stage. Engine-only, in
+//!   [`RunSpec::validate_engine`].
+//! * `seq_split` × `fail_at` — the engine permits a crash on a device
+//!   that hosts no chunks (checked after planning, when placement is
+//!   known); the simulator's failover pricing path is split-unaware and
+//!   rejects the combination outright. Each keeps its own check.
+//! * `pjrt_shard_ops` × `staleness` — engine-only knob, checked in the
+//!   trainer.
+//!
+//! `validate()` returns the run's [`Membership`] (derived fail-stops
+//! from fault-plan partitions already merged) so callers don't rebuild
+//! the elastic schedule a second time.
+
+use crate::comm::membership::Membership;
+use crate::comm::transport::{FaultPlan, TransportKind};
+use crate::config::{Balancer, CommScheme, WireDtype};
+use std::sync::Arc;
+
+/// Shared run shape: everything the trainer and the simulator both
+/// understand about a run, independent of artifacts or pricing.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub scheme: CommScheme,
+    pub balancer: Balancer,
+    /// Device count (the trainer's `world`, the simulator's `devices`).
+    pub world: usize,
+    /// Minibatches (bounds the elastic event schedule).
+    pub steps: usize,
+    /// Hybrid node-group size; 0 = all devices in one group.
+    pub devices_per_node: usize,
+    /// Per-device relative speed; empty = homogeneous fleet.
+    pub device_speed: Vec<f64>,
+    /// Crash events `(device, step, micro)`.
+    pub fail_at: Vec<(usize, usize, usize)>,
+    /// Join events `(device, step)`.
+    pub join_at: Vec<(usize, usize)>,
+    /// ChaosComm lossy-transport plan; noop = clean links.
+    pub fault_plan: FaultPlan,
+    /// SeqSplit threshold as a fraction of the per-device budget; 0 = off.
+    pub seq_split: f64,
+    /// Gradient payload precision on the wire.
+    pub wire_dtype: WireDtype,
+    /// Byte transport under the one-sided backends.
+    pub transport: TransportKind,
+    /// `Some(k)` = AsyncPS bounded-staleness tier; `None` = synchronous.
+    /// `Some(0)` still runs the async machinery (the bit-identity
+    /// degenerate case) — see `comm::async_ps`.
+    pub staleness: Option<usize>,
+}
+
+impl RunSpec {
+    /// A spec with every optional knob at its neutral default: uniform
+    /// fleet, static membership, clean links, no splitting, f32 wire,
+    /// in-process transport, synchronous.
+    pub fn new(scheme: CommScheme, balancer: Balancer, world: usize, steps: usize) -> RunSpec {
+        RunSpec {
+            scheme,
+            balancer,
+            world,
+            steps,
+            devices_per_node: 0,
+            device_speed: Vec::new(),
+            fail_at: Vec::new(),
+            join_at: Vec::new(),
+            fault_plan: FaultPlan::default(),
+            seq_split: 0.0,
+            wire_dtype: WireDtype::F32,
+            transport: TransportKind::Inproc,
+            staleness: None,
+        }
+    }
+
+    /// Effective hybrid group size (0 means "one group spanning world").
+    pub fn group_size(&self) -> usize {
+        if self.devices_per_node == 0 {
+            self.world
+        } else {
+            self.devices_per_node
+        }
+    }
+
+    /// Fail-stop schedule `(device, step)` with fault-plan partitions
+    /// merged in: a permanently partitioned link is a derived fail-stop
+    /// for its src device at the partition step (earliest, if several).
+    pub fn derived_fails(&self) -> Vec<(usize, usize)> {
+        let mut fails: Vec<(usize, usize)> = self.fail_at.iter().map(|&(d, s, _)| (d, s)).collect();
+        for &(src, _dst, step) in &self.fault_plan.partition {
+            match fails.iter_mut().find(|f| f.0 == src) {
+                Some(f) => f.1 = f.1.min(step),
+                None => fails.push((src, step)),
+            }
+        }
+        fails
+    }
+
+    /// The full shared legality matrix. On success returns the run's
+    /// membership (with derived fail-stops merged and the elastic
+    /// schedule validated against `steps`).
+    pub fn validate(&self) -> Result<Arc<Membership>, String> {
+        // --- balancer × scheme --------------------------------------------
+        if !self.balancer.legal_under(self.scheme) {
+            return Err(format!(
+                "{} requires a barrier-free scheme: Collective's per-layer rendezvous needs equal \
+                 microbatch counts on every device (LB-Mini runs unequal counts; Queue decides \
+                 placement at runtime)",
+                self.balancer
+            ));
+        }
+        // --- heterogeneous fleet ------------------------------------------
+        if !self.device_speed.is_empty() {
+            if self.device_speed.len() != self.world {
+                return Err(format!(
+                    "device_speed needs one entry per device: got {} for world {}",
+                    self.device_speed.len(),
+                    self.world
+                ));
+            }
+            if self.device_speed.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                return Err("device_speed entries must be finite and > 0".to_string());
+            }
+        }
+        // --- hybrid grouping ----------------------------------------------
+        if self.scheme == CommScheme::Hybrid {
+            let g = self.group_size();
+            if g == 0 || self.world % g != 0 {
+                return Err(format!(
+                    "hybrid sharding needs node groups that tile the device set: world {} % devices_per_node {} != 0",
+                    self.world, g
+                ));
+            }
+        }
+        // --- WireComm transport (see docs/transport.md) -------------------
+        if self.transport != TransportKind::Inproc && self.scheme == CommScheme::Collective {
+            return Err(format!(
+                "--transport {} requires a one-sided scheme: Collective's rendezvous fold runs \
+                 in shared memory and never touches the mailbox transport",
+                self.transport
+            ));
+        }
+        // --- AsyncPS staleness (see docs/asyncps.md) ----------------------
+        if let Some(k) = self.staleness {
+            if self.scheme == CommScheme::Collective {
+                return Err(format!(
+                    "staleness {k} requires a barrier-free scheme: Collective's per-layer \
+                     rendezvous IS a staleness-0 barrier — there is no admission gate to widen"
+                ));
+            }
+            if self.scheme == CommScheme::Hybrid {
+                return Err(format!(
+                    "staleness {k} requires the odc scheme: hybrid's cross-group optimizer \
+                     epilogue is a per-step rendezvous, synchronous by construction"
+                ));
+            }
+            if !matches!(self.balancer, Balancer::LbMini | Balancer::Queue) {
+                return Err(format!(
+                    "staleness {k} requires an LB-Mini or Queue balancer: synchronized-k packers \
+                     pad every device to equal microbatch counts, re-coupling the workers the \
+                     async tier exists to decouple"
+                ));
+            }
+            if !self.fail_at.is_empty() || !self.join_at.is_empty() {
+                return Err(format!(
+                    "staleness {k} requires a static membership: join/fail choreography \
+                     rendezvouses at minibatch boundaries the free-running async tier no longer \
+                     observes"
+                ));
+            }
+            if !self.fault_plan.is_noop() {
+                return Err(format!(
+                    "staleness {k} cannot compose with a fault plan: retransmit escalation hands \
+                     a dead link to the elastic recovery path, which is synchronous machinery"
+                ));
+            }
+            if self.seq_split != 0.0 {
+                return Err(format!(
+                    "staleness {k} cannot combine with seq_split: chunk micros of one sequence \
+                     rendezvous at their minibatch's fold, which free-running workers would \
+                     interleave across minibatches"
+                ));
+            }
+        }
+        // --- SeqSplit (see balance::split and docs/seqsplit.md) -----------
+        if self.seq_split != 0.0 {
+            if !self.seq_split.is_finite() || self.seq_split < 0.0 || self.seq_split > 1.0 {
+                return Err(format!(
+                    "seq_split must be a fraction of the per-device budget in (0, 1]: got {}",
+                    self.seq_split
+                ));
+            }
+            if self.scheme == CommScheme::Collective {
+                return Err(
+                    "seq_split requires a barrier-free scheme: Collective's padded per-layer \
+                     rendezvous assumes whole sequences, while a split sequence's chunks push \
+                     independently and meet only at the minibatch flush"
+                        .to_string(),
+                );
+            }
+            if !matches!(self.balancer, Balancer::LbMini | Balancer::Queue) {
+                return Err(
+                    "seq_split requires an LB-Mini or Queue balancer: synchronized-k packers pad \
+                     to equal microbatch counts, which singleton chunk micros break"
+                        .to_string(),
+                );
+            }
+        }
+        // --- ChaosComm fault plan (see comm::transport) -------------------
+        self.fault_plan.validate().map_err(|e| format!("fault_plan: {e}"))?;
+        if !self.fault_plan.is_noop() {
+            if self.scheme == CommScheme::Collective {
+                return Err(
+                    "fault_plan requires a barrier-free scheme: Collective's per-layer \
+                     rendezvous has no retransmit ladder to absorb a lossy link (a dropped \
+                     message stalls every rank at the next rendezvous)"
+                        .to_string(),
+                );
+            }
+            if let Some(&(s, d, _)) = self
+                .fault_plan
+                .partition
+                .iter()
+                .find(|&&(s, d, _)| s >= self.world || d >= self.world)
+            {
+                return Err(format!(
+                    "fault_plan partition {s}:{d} references a device >= world {}",
+                    self.world
+                ));
+            }
+            if let Some(&(s, d, step)) =
+                self.fault_plan.partition.iter().find(|&&(_, _, step)| step >= self.steps)
+            {
+                return Err(format!(
+                    "fault_plan partition {s}:{d}:{step} references a step >= steps {}",
+                    self.steps
+                ));
+            }
+            if !self.fault_plan.partition.is_empty() {
+                if !self.fail_at.is_empty() {
+                    // A partition IS a declared fail-stop for its src
+                    // device (derived in `derived_fails`); mixing it with
+                    // explicit crash points would let a fail_at victim's
+                    // in-flight pieces strand in a partitioned link's
+                    // limbo — use part= entries alone.
+                    return Err(
+                        "fail_at cannot be combined with fault_plan partitions: a partition \
+                         already implies a derived fail-stop for its src device"
+                            .to_string(),
+                    );
+                }
+                if self.scheme == CommScheme::Hybrid {
+                    // ODC carries the partition-escalation guarantee; the
+                    // hybrid cross-level quorum (one partial per group)
+                    // has no per-message retraction for a half-shipped
+                    // group partial. Transient rates are fully supported.
+                    return Err(
+                        "fault_plan partitions require --scheme odc (hybrid supports transient \
+                         drop/dup/reorder/delay only)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        // --- elastic membership (ElasticWorld, see comm::membership) ------
+        let membership =
+            Arc::new(Membership::with_schedule(self.world, &self.join_at, &self.derived_fails())?);
+        if !membership.is_static() {
+            if self.scheme == CommScheme::Collective {
+                return Err(
+                    "fail_at/join_at require a barrier-free scheme: one dead rank deadlocks \
+                     Collective's per-layer all-gather rendezvous, while a dead PS client just \
+                     stops pushing — the structural contrast the elastic scenario measures"
+                        .to_string(),
+                );
+            }
+            membership.validate(self.steps)?;
+            if self.scheme == CommScheme::Hybrid {
+                membership.validate_groups(self.group_size(), self.steps)?;
+            }
+        }
+        Ok(membership)
+    }
+
+    /// The shared matrix plus the engine-only codec constraint: the real
+    /// bf16 wire codec needs an encode/decode stage, which Collective's
+    /// in-place rendezvous fold does not have. (The simulator prices
+    /// bf16 under every scheme — pricing is an assumption, not a codec.)
+    pub fn validate_engine(&self) -> Result<Arc<Membership>, String> {
+        if self.wire_dtype == WireDtype::Bf16 && self.scheme == CommScheme::Collective {
+            return Err(
+                "wire_dtype bf16 requires a one-sided scheme: Collective's in-place rendezvous \
+                 fold has no encode/decode stage to quantize (and no per-shard residual state \
+                 for error feedback)"
+                    .to_string(),
+            );
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> RunSpec {
+        RunSpec::new(CommScheme::Odc, Balancer::LbMini, 4, 4)
+    }
+
+    #[test]
+    fn neutral_spec_is_legal_and_static() {
+        let m = base().validate().unwrap();
+        assert!(m.is_static());
+        assert_eq!(m.world(), 4);
+    }
+
+    #[test]
+    fn partitions_merge_into_derived_fails() {
+        let mut s = base();
+        s.fault_plan = FaultPlan::parse("drop=0.01,seed=1,part=1:2:2,part=1:3:1").unwrap();
+        // Same src twice: earliest step wins.
+        assert_eq!(s.derived_fails(), vec![(1, 1)]);
+        let m = s.validate().unwrap();
+        assert!(!m.is_static());
+    }
+
+    #[test]
+    fn staleness_matrix_rejects_every_synchronous_companion() {
+        let mut s = base();
+        s.staleness = Some(1);
+        s.scheme = CommScheme::Collective;
+        s.balancer = Balancer::LbMicro; // legal under Collective — isolates the staleness check
+        assert!(s.validate().unwrap_err().contains("barrier-free"));
+
+        let mut s = base();
+        s.staleness = Some(1);
+        s.scheme = CommScheme::Hybrid;
+        s.devices_per_node = 2;
+        assert!(s.validate().unwrap_err().contains("requires the odc scheme"));
+
+        let mut s = base();
+        s.staleness = Some(1);
+        s.balancer = Balancer::LbMicro;
+        assert!(s.validate().unwrap_err().contains("LB-Mini or Queue"));
+
+        let mut s = base();
+        s.staleness = Some(1);
+        s.fail_at = vec![(0, 1, 0)];
+        assert!(s.validate().unwrap_err().contains("static membership"));
+
+        let mut s = base();
+        s.staleness = Some(1);
+        s.fault_plan = FaultPlan::parse("drop=0.05,seed=7").unwrap();
+        assert!(s.validate().unwrap_err().contains("fault plan"));
+
+        let mut s = base();
+        s.staleness = Some(1);
+        s.seq_split = 0.5;
+        assert!(s.validate().unwrap_err().contains("seq_split"));
+
+        // And the legal stack passes, k = 0 included.
+        for k in [0, 1, 4] {
+            let mut s = base();
+            s.staleness = Some(k);
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn engine_matrix_adds_the_bf16_codec_constraint() {
+        let mut s = base();
+        s.scheme = CommScheme::Collective;
+        s.balancer = Balancer::LbMicro;
+        s.wire_dtype = WireDtype::Bf16;
+        // Shared matrix prices it; the engine's real codec rejects it.
+        s.validate().unwrap();
+        assert!(s.validate_engine().unwrap_err().contains("one-sided"));
+    }
+
+    #[test]
+    fn fault_plan_collective_names_the_barrier() {
+        let mut s = base();
+        s.scheme = CommScheme::Collective;
+        s.balancer = Balancer::LbMicro;
+        s.fault_plan = FaultPlan::parse("drop=0.05,seed=3").unwrap();
+        assert!(s.validate().unwrap_err().contains("barrier-free"));
+    }
+}

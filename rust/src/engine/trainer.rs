@@ -80,8 +80,8 @@ use crate::balance::packers::{plan_run_split, PackOpts, Plan};
 use crate::balance::split::{ChunkInfo, SplitMap, SplitMode};
 use crate::comm::backend::{CommBackend, GatherPolicy, ParamStore};
 use crate::comm::membership::Membership;
-use crate::comm::{CollectiveComm, FaultPlan, HybridComm, OdcComm, RetryPolicy, TransportKind};
-use crate::config::{Balancer, CommScheme, WireDtype};
+use crate::comm::{CommStack, FaultPlan, RetryPolicy, TransportKind};
+use crate::config::{Balancer, CommScheme, RunSpec, WireDtype};
 use crate::data::corpus::{make_dataset, BigramLm, Sample};
 use crate::data::distributions::DistSpec;
 use crate::engine::bufplan::BufferPlan;
@@ -186,6 +186,18 @@ pub struct TrainerConfig {
     /// Rejected under `Collective`, which never touches the mailbox
     /// transport. See `docs/transport.md`.
     pub transport: TransportKind,
+    /// AsyncPS (`--staleness`): `Some(k)` replaces the synchronous ODC
+    /// backend with the bounded-staleness parameter-server tier — one
+    /// shard-server thread per shard runs the optimizer the moment its
+    /// minibatch quorum lands, while workers free-run into the next
+    /// minibatch, admission-gated so the parameters they gather for
+    /// minibatch `t` reflect at least the step `t - k` apply.
+    /// `Some(0)` still runs the async machinery and is bit-identical to
+    /// `None` (pinned by `tests/async_prop.rs`); `k > 0` is
+    /// schedule-dependent by design. Requires `--scheme odc`, an
+    /// LB-Mini or Queue balancer, a static membership and clean links
+    /// (see `docs/asyncps.md` and [`RunSpec::validate`]).
+    pub staleness: Option<usize>,
     /// Test/ablation hook: run these exact plans instead of planning.
     /// Microbatch *composition* is semantically meaningful (packing
     /// offsets select positional embeddings), so equivalence tests pin
@@ -221,8 +233,30 @@ impl TrainerConfig {
             seq_split_mode: SplitMode::Zigzag,
             wire_dtype: WireDtype::F32,
             transport: TransportKind::Inproc,
+            staleness: None,
             plan_override: None,
             split_override: None,
+        }
+    }
+
+    /// Project this config onto the shared [`RunSpec`] shape — the
+    /// legality matrix both the trainer and the simulator validate
+    /// through (`RunSpec::validate` / `validate_engine`).
+    pub fn runspec(&self) -> RunSpec {
+        RunSpec {
+            scheme: self.scheme,
+            balancer: self.balancer,
+            world: self.world,
+            steps: self.steps,
+            devices_per_node: self.devices_per_node,
+            device_speed: self.device_speed.clone(),
+            fail_at: self.fail_at.clone(),
+            join_at: self.join_at.clone(),
+            fault_plan: self.fault_plan.clone(),
+            seq_split: self.seq_split,
+            wire_dtype: self.wire_dtype,
+            transport: self.transport,
+            staleness: self.staleness,
         }
     }
 
@@ -275,6 +309,15 @@ pub struct TrainRun {
     /// FastFold: seconds spent inside daemon-side fold kernels, summed
     /// across daemon threads (can exceed wall time).
     pub fold_s: f64,
+    /// AsyncPS: worst observed admission staleness across all
+    /// (worker, minibatch) admissions — how many optimizer applies the
+    /// gathered parameters were behind at minibatch start. Bounded by
+    /// the configured `k`; 0 on a synchronous run (and on every
+    /// `staleness = Some(0)` run, which is the degenerate case).
+    pub staleness_max: u64,
+    /// AsyncPS: p99 of the same observations (0 when synchronous).
+    /// Mirrored by the simulator's `RunResult::staleness_p99`.
+    pub staleness_p99: u64,
 }
 
 /// The plans `train` would generate for this config (same seeding path).
@@ -314,142 +357,24 @@ pub fn plan_preview_split(cfg: &TrainerConfig) -> Result<(Vec<Plan>, SplitMap)> 
 
 /// Train per the config; returns the loss curve and final parameters.
 pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
-    // Config validation first (none of it needs artifacts on disk).
-    if !cfg.balancer.legal_under(cfg.scheme) {
+    // Config validation first (none of it needs artifacts on disk). The
+    // whole cross-knob legality matrix lives in [`RunSpec::validate`],
+    // shared verbatim with the simulator; `validate_engine` adds the
+    // engine-only bf16-codec constraint. The returned membership already
+    // carries the derived fail-stops of fault-plan partitions.
+    let spec = cfg.runspec();
+    let membership = spec.validate_engine().map_err(|e| anyhow!("{e}"))?;
+    if cfg.pjrt_shard_ops && cfg.staleness.is_some() {
+        // Engine-only: the AsyncPS optimizer runs on shard-server
+        // threads driving the native AdamW loop; the PJRT chunk-kernel
+        // path is a worker-thread validation mode with no client to
+        // hand those threads.
         return Err(anyhow!(
-            "{} requires a barrier-free scheme: Collective's per-layer rendezvous needs equal \
-             microbatch counts on every device (LB-Mini runs unequal counts; Queue decides \
-             placement at runtime)",
-            cfg.balancer
+            "pjrt_shard_ops requires the synchronous optimizer phase: AsyncPS shard servers \
+             run the native AdamW loop, not the PJRT chunk kernels"
         ));
     }
-    if !cfg.device_speed.is_empty() {
-        if cfg.device_speed.len() != cfg.world {
-            return Err(anyhow!(
-                "device_speed needs one entry per device: got {} for world {}",
-                cfg.device_speed.len(),
-                cfg.world
-            ));
-        }
-        if cfg.device_speed.iter().any(|s| !s.is_finite() || *s <= 0.0) {
-            return Err(anyhow!("device_speed entries must be finite and > 0"));
-        }
-    }
-    if cfg.scheme == CommScheme::Hybrid {
-        let g = cfg.hybrid_group_size();
-        if g == 0 || cfg.world % g != 0 {
-            return Err(anyhow!(
-                "hybrid sharding needs node groups that tile the device set: world {} % devices_per_node {} != 0",
-                cfg.world,
-                g
-            ));
-        }
-    }
-    if cfg.wire_dtype == WireDtype::Bf16 && cfg.scheme == CommScheme::Collective {
-        return Err(anyhow!(
-            "wire_dtype bf16 requires a one-sided scheme: Collective's in-place rendezvous \
-             fold has no encode/decode stage to quantize (and no per-shard residual state \
-             for error feedback)"
-        ));
-    }
-    // --- WireComm transport legality (see docs/transport.md) --------------
-    if cfg.transport != TransportKind::Inproc && cfg.scheme == CommScheme::Collective {
-        return Err(anyhow!(
-            "--transport {} requires a one-sided scheme: Collective's rendezvous fold runs \
-             in shared memory and never touches the mailbox transport",
-            cfg.transport
-        ));
-    }
-    // --- SeqSplit legality (see balance::split and docs/seqsplit.md) ------
-    if cfg.seq_split != 0.0 {
-        if !cfg.seq_split.is_finite() || cfg.seq_split < 0.0 || cfg.seq_split > 1.0 {
-            return Err(anyhow!(
-                "seq_split must be a fraction of the per-device budget in (0, 1]: got {}",
-                cfg.seq_split
-            ));
-        }
-        if cfg.scheme == CommScheme::Collective {
-            return Err(anyhow!(
-                "seq_split requires a barrier-free scheme: Collective's padded per-layer \
-                 rendezvous assumes whole sequences, while a split sequence's chunks push \
-                 independently and meet only at the minibatch flush"
-            ));
-        }
-        if !matches!(cfg.balancer, Balancer::LbMini | Balancer::Queue) {
-            return Err(anyhow!(
-                "seq_split requires an LB-Mini or Queue balancer: synchronized-k packers pad \
-                 to equal microbatch counts, which singleton chunk micros break"
-            ));
-        }
-    }
-    // --- ChaosComm fault plan (see comm::transport) ------------------------
-    cfg.fault_plan.validate().map_err(|e| anyhow!("fault_plan: {e}"))?;
-    if !cfg.fault_plan.is_noop() {
-        if cfg.scheme == CommScheme::Collective {
-            return Err(anyhow!(
-                "fault_plan requires a one-sided scheme: Collective's per-layer rendezvous \
-                 has no retransmit ladder to absorb a lossy link"
-            ));
-        }
-        if let Some(&(s, d, _)) =
-            cfg.fault_plan.partition.iter().find(|&&(s, d, _)| s >= cfg.world || d >= cfg.world)
-        {
-            return Err(anyhow!("fault_plan partition {s}:{d} references a device >= world {}", cfg.world));
-        }
-        if !cfg.fault_plan.partition.is_empty() {
-            if !cfg.fail_at.is_empty() {
-                // A partition IS a declared fail-stop for its src device
-                // (derived below); mixing it with explicit crash points
-                // would let a fail_at victim's in-flight pieces strand in
-                // a partitioned link's limbo — use part= entries alone.
-                return Err(anyhow!(
-                    "fail_at cannot be combined with fault_plan partitions: a partition already \
-                     implies a derived fail-stop for its src device"
-                ));
-            }
-            if cfg.scheme == CommScheme::Hybrid {
-                // ODC carries the partition-escalation guarantee; the
-                // hybrid cross-level quorum (one partial per group) has
-                // no per-message retraction for a half-shipped group
-                // partial, so a persistent partition is rejected rather
-                // than risking a wedged cross fold. Transient rates
-                // (drop/dup/reorder/delay) are fully supported.
-                return Err(anyhow!(
-                    "fault_plan partitions require --scheme odc (hybrid supports transient \
-                     drop/dup/reorder/delay only)"
-                ));
-            }
-        }
-    }
-    // --- elastic membership (ElasticWorld, see comm::membership) ----------
-    // A permanently partitioned link is a derived fail-stop: its src
-    // device escalates at the partition step (earliest, if several) and
-    // the schedule routes takeover exactly like an explicit fail_at.
-    let mut fails: Vec<(usize, usize)> = cfg.fail_at.iter().map(|&(d, s, _)| (d, s)).collect();
-    for &(src, _dst, step) in &cfg.fault_plan.partition {
-        match fails.iter_mut().find(|f| f.0 == src) {
-            Some(f) => f.1 = f.1.min(step),
-            None => fails.push((src, step)),
-        }
-    }
-    let membership = Arc::new(
-        Membership::with_schedule(cfg.world, &cfg.join_at, &fails).map_err(|e| anyhow!("{e}"))?,
-    );
-    if !membership.is_static() {
-        if cfg.scheme == CommScheme::Collective {
-            return Err(anyhow!(
-                "fail_at/join_at require a barrier-free scheme: one dead rank deadlocks \
-                 Collective's per-layer all-gather rendezvous, while a dead PS client just \
-                 stops pushing — the structural contrast the elastic scenario measures"
-            ));
-        }
-        membership.validate(cfg.steps).map_err(|e| anyhow!("{e}"))?;
-        if cfg.scheme == CommScheme::Hybrid {
-            membership
-                .validate_groups(cfg.hybrid_group_size(), cfg.steps)
-                .map_err(|e| anyhow!("{e}"))?;
-        }
-    }
+    let fails = spec.derived_fails();
     let man = Manifest::load(&cfg.artifacts_dir)?;
     let host = ComputeService::start(&man)?;
 
@@ -459,40 +384,29 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     for (l, p) in params.layers.iter().enumerate() {
         p.init_from(&man.load_init(l)?);
     }
-    // Chaos layer (when the plan is live) wraps whichever byte-moving
-    // base `cfg.transport` selects — the stacks compose (see
-    // comm/transport.rs "Byte-moving siblings").
-    let faults = if cfg.fault_plan.is_noop() {
-        None
-    } else {
-        Some((cfg.fault_plan.clone(), RetryPolicy::default()))
-    };
-    let backend: Arc<dyn CommBackend> = match cfg.scheme {
-        CommScheme::Collective => Arc::new(CollectiveComm::new(Arc::clone(&params), cfg.world)),
-        CommScheme::Odc => Arc::new(
-            OdcComm::with_stack(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                cfg.wire_dtype,
-                cfg.transport,
-                faults,
-            )
-            .map_err(|e| anyhow!("transport {} failed to bind: {e}", cfg.transport))?,
-        ),
-        // NB: constructed after init_from above — HybridComm seeds its
-        // group replicas from the global store.
-        CommScheme::Hybrid => Arc::new(
-            HybridComm::with_stack(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                cfg.hybrid_group_size(),
-                cfg.wire_dtype,
-                cfg.transport,
-                faults,
-            )
-            .map_err(|e| anyhow!("transport {} failed to bind: {e}", cfg.transport))?,
-        ),
-    };
+    // One door for every backend: the CommStack builder routes the
+    // scheme (Odc + staleness selects AsyncPs) and re-checks stack
+    // legality before any daemon spawns. Chaos layer (when the plan is
+    // live) wraps whichever byte-moving base `cfg.transport` selects —
+    // the stacks compose (see comm/transport.rs "Byte-moving siblings").
+    // NB: built after init_from above — HybridComm seeds its group
+    // replicas from the global store.
+    let mut stack = CommStack::builder(Arc::clone(&params), cfg.world)
+        .membership(Arc::clone(&membership))
+        .wire(cfg.wire_dtype)
+        .transport(cfg.transport);
+    if !cfg.fault_plan.is_noop() {
+        stack = stack.faults(cfg.fault_plan.clone(), RetryPolicy::default());
+    }
+    if let Some(k) = cfg.staleness {
+        stack = stack.staleness(k);
+    }
+    if cfg.scheme == CommScheme::Hybrid {
+        stack = stack.groups(cfg.hybrid_group_size());
+    }
+    let backend: Arc<dyn CommBackend> = stack
+        .build(cfg.scheme)
+        .map_err(|e| anyhow!("transport {} failed to bind: {e}", cfg.transport))?;
 
     // --- data + plan -------------------------------------------------------
     let max_bucket = *man.seq_buckets.iter().max().unwrap();
@@ -609,8 +523,14 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     let loss_sum: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
     let wall: Arc<Vec<Mutex<f64>>> = Arc::new((0..cfg.steps).map(|_| Mutex::new(0.0)).collect());
     let recovery: Arc<Mutex<f64>> = Arc::new(Mutex::new(0.0));
+    let stale_obs: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
 
     // --- device threads ----------------------------------------------------
+    // AsyncPS additionally runs one shard-server thread per shard: the
+    // optimizer role moves off the worker threads entirely, applying
+    // each minibatch's folded gradient the moment its quorum lands and
+    // publishing the shard's apply count on the ParamStore clock that
+    // admission-gates the free-running workers.
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
         for dev in 0..cfg.world {
@@ -633,9 +553,22 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
                 loss_sum: Arc::clone(&loss_sum),
                 wall: Arc::clone(&wall),
                 recovery: Arc::clone(&recovery),
+                stale_obs: Arc::clone(&stale_obs),
                 slow_extra,
             };
             handles.push(s.spawn(move || device_main(ctx)));
+        }
+        if cfg.staleness.is_some() {
+            for shard in 0..cfg.world {
+                let ctx = ServerCtx {
+                    shard,
+                    cfg: cfg.clone(),
+                    backend: Arc::clone(&backend),
+                    params: Arc::clone(&params),
+                    tok_count: Arc::clone(&tok_count),
+                };
+                handles.push(s.spawn(move || shard_server_main(ctx)));
+            }
         }
         for h in handles {
             h.join().map_err(|_| anyhow!("device thread panicked"))??;
@@ -667,6 +600,18 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
     let recovery_s = *recovery.lock().unwrap();
     let fs = backend.fault_stats();
     let hp = backend.hotpath_stats();
+    // AsyncPS staleness accounting: one observation per (worker,
+    // minibatch) admission; empty on synchronous runs.
+    let (staleness_max, staleness_p99) = {
+        let mut obs = stale_obs.lock().unwrap().clone();
+        if obs.is_empty() {
+            (0, 0)
+        } else {
+            obs.sort_unstable();
+            let idx = ((obs.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+            (*obs.last().unwrap(), obs[idx])
+        }
+    };
     Ok(TrainRun {
         logs,
         final_params,
@@ -677,6 +622,8 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainRun> {
         escalations: fs.escalations,
         wire_bytes: hp.wire_bytes,
         fold_s: hp.fold_ns as f64 * 1e-9,
+        staleness_max,
+        staleness_p99,
     })
 }
 
@@ -781,6 +728,10 @@ struct DeviceCtx {
     wall: Arc<Vec<Mutex<f64>>>,
     /// Summed recovery device-seconds (see `TrainRun::recovery_s`).
     recovery: Arc<Mutex<f64>>,
+    /// AsyncPS: observed admission staleness, one entry per (worker,
+    /// minibatch) admission (see `TrainRun::staleness_max`). Untouched
+    /// on synchronous runs.
+    stale_obs: Arc<Mutex<Vec<u64>>>,
     /// Straggler emulation: extra sleep per compute call, as a multiple
     /// of the call's own duration (`1/speed - 1`; 0 = nominal device).
     slow_extra: f64,
@@ -899,6 +850,18 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         ctx.cfg.fail_at.iter().find(|f| f.0 == dev).map(|f| (f.1, f.2));
 
     for step in join..steps {
+        // AsyncPS admission gate (SSP): before touching minibatch
+        // `step`, wait until every shard's apply count covers step
+        // `step - k` — the parameters gathered below are then at most
+        // `k` applies behind. `k = 0` makes this exactly the barrier
+        // the synchronous scheme has (no apply/gather overlap at all),
+        // which is what the bit-identity suite pins.
+        if let Some(k) = ctx.cfg.staleness {
+            let target = (step as u64).saturating_sub(k as u64);
+            let min_applied = ctx.params.wait_min_applies(target);
+            let observed = (step as u64).saturating_sub(min_applied);
+            ctx.stale_obs.lock().unwrap().push(observed);
+        }
         let t0 = Instant::now();
         // The dispatch pull loop: static dispatch serves this device its
         // own plan row (Collective: padded to the common count so the
@@ -960,6 +923,21 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
             return Ok(());
         }
 
+        if ctx.cfg.staleness.is_some() {
+            // AsyncPS: the optimizer role lives on the shard-server
+            // threads (`shard_server_main`) — the worker's Done above
+            // completed its part of the minibatch quorum, and it
+            // free-runs into the next minibatch without waiting for
+            // the apply. Cached gathers still expire at the minibatch
+            // edge: the next admission re-reads whatever parameter
+            // versions the bound admits.
+            bufs.cache.invalidate();
+            if ctx.membership.first_completing(step) == dev {
+                *ctx.wall[step].lock().unwrap() = t0.elapsed().as_secs_f64();
+            }
+            continue;
+        }
+
         // ---- server role: sharded AdamW on every shard this device
         // serves at this step — its own, plus any adopted from a dead
         // (or not-yet-joined) peer via the rendezvous rule ----
@@ -1008,6 +986,11 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
                     ctx.params.opt[l].publish(r.start, &slot.adam[l].m, &slot.adam[l].v);
                 }
             }
+            // Advance the shard's apply count on the ParamStore clock.
+            // Synchronous schemes never wait on it (the end_step barrier
+            // already orders everything), but keeping it current means
+            // the clock is a truthful version record under every scheme.
+            ctx.params.publish_apply(shard);
             if let Some(t) = t_rec {
                 *ctx.recovery.lock().unwrap() += t.elapsed().as_secs_f64();
             }
@@ -1025,6 +1008,57 @@ fn device_main(ctx: DeviceCtx) -> Result<()> {
         if ctx.membership.first_completing(step) == dev {
             *ctx.wall[step].lock().unwrap() = t0.elapsed().as_secs_f64();
         }
+    }
+    Ok(())
+}
+
+/// Everything one AsyncPS shard-server thread needs (a deliberately
+/// smaller surface than [`DeviceCtx`]: servers never touch PJRT, the
+/// dispatcher, or the loss metrics).
+struct ServerCtx {
+    shard: usize,
+    cfg: TrainerConfig,
+    backend: Arc<dyn CommBackend>,
+    params: Arc<ParamStore>,
+    /// Shared with the workers: the token totals their pushes were
+    /// weighted against. Each worker's adds for minibatch `t` are
+    /// sequenced before its Done, which is sequenced before the flush
+    /// reply that wakes this thread — so the load below is final.
+    tok_count: Arc<Vec<AtomicU64>>,
+}
+
+/// The AsyncPS optimizer tier: one thread per shard, decoupled from the
+/// worker threads. Each iteration blocks in [`CommBackend::server_flush`]
+/// until minibatch `step`'s fold quorum lands on this shard's daemon
+/// (all `world` Dones received — the same id-keyed fold as the
+/// synchronous path, so the folded bytes are dispatch-order-invariant),
+/// then runs the identical 1/ntok + AdamW + write-back sequence the
+/// synchronous optimizer phase runs, and finally publishes the apply on
+/// the ParamStore clock — the event the workers' admission gate waits
+/// on. Writes take the shard's write gate so a concurrent worker gather
+/// (legal when `k > 0`) sees a torn-free before-or-after image of each
+/// layer; with `k = 0` the admission gate means no gather is ever in
+/// flight here, reproducing the synchronous schedule exactly.
+fn shard_server_main(ctx: ServerCtx) -> Result<()> {
+    let shard = ctx.shard;
+    let mut slot = recover_slot(&ctx.params, shard, 0);
+    let max_shard = ctx.params.layers.iter().map(|p| p.shard_len).max().unwrap_or(0);
+    let mut gshard = vec![0.0f32; max_shard];
+    for step in 0..ctx.cfg.steps {
+        ctx.backend.server_flush(shard, step);
+        let ntok = ctx.tok_count[step].load(Ordering::SeqCst).max(1) as f32;
+        for (l, p) in ctx.params.layers.iter().enumerate() {
+            let g = &mut gshard[..p.shard_len];
+            ctx.backend.take_grad_shard(shard, l, g);
+            for x in g.iter_mut() {
+                *x /= ntok;
+            }
+            slot.adam[l].step(&ctx.cfg.adam, &mut slot.params[l], g);
+            let r = p.shard_range(shard);
+            let _gate = ctx.params.shard_write(shard);
+            p.buf.write(r.start, &slot.params[l]);
+        }
+        ctx.params.publish_apply(shard);
     }
     Ok(())
 }

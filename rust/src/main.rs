@@ -13,7 +13,9 @@
 
 use odc::balance::SplitMode;
 use odc::comm::{FaultPlan, TransportKind};
-use odc::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
+use odc::config::{
+    Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, RunSpec, Sharding, WireDtype,
+};
 use odc::engine::trainer::{train, TrainerConfig};
 use odc::sim::run::{simulate, SimConfig, WireCalib};
 use odc::util::cli::Cli;
@@ -131,30 +133,33 @@ fn parse_split_mode(s: &str) -> SplitMode {
     }
 }
 
-/// Shared SeqSplit legality checks for both CLIs (`--seq-split`):
-/// splitting needs a barrier-free scheme and a balancer whose plans
-/// tolerate singleton chunk micros. Exit-2 like every other config
-/// error.
-fn check_seq_split(seq_split: f64, scheme: CommScheme, balancer: Balancer) {
-    if seq_split == 0.0 {
-        return;
+/// Parse `--staleness` — AsyncPS bounded staleness: empty = synchronous
+/// barrier, `k` = workers may start a minibatch once every shard server
+/// has applied through `t − k` (0 = the async machinery on the
+/// synchronous schedule; see docs/asyncps.md).
+fn parse_staleness(s: &str) -> Option<usize> {
+    if s.is_empty() {
+        return None;
     }
-    if !seq_split.is_finite() || seq_split < 0.0 || seq_split > 1.0 {
-        eprintln!("invalid configuration: --seq-split must be a fraction in (0, 1]: got {seq_split}");
-        std::process::exit(2);
+    match s.parse::<usize>() {
+        Ok(k) => Some(k),
+        Err(_) => {
+            eprintln!(
+                "invalid configuration: --staleness expects a non-negative integer \
+                 (empty = synchronous), got `{s}`"
+            );
+            std::process::exit(2);
+        }
     }
-    if scheme == CommScheme::Collective {
-        eprintln!(
-            "invalid configuration: --seq-split requires a barrier-free scheme: collective's \
-             padded barrier slots assume whole sequences"
-        );
-        std::process::exit(2);
-    }
-    if !matches!(balancer, Balancer::LbMini | Balancer::Queue) {
-        eprintln!(
-            "invalid configuration: --seq-split requires --balancer lb-mini or queue \
-             (synchronized-k packers pad to equal microbatch counts)"
-        );
+}
+
+/// Validate a fully-parsed [`RunSpec`] on the CLI's standard exit-2
+/// path — the ONE legality matrix both subcommands consult, so `sim`
+/// and `train` cannot drift on which flag combinations are legal.
+fn check_spec(spec: &RunSpec, engine: bool) {
+    let res = if engine { spec.validate_engine() } else { spec.validate() };
+    if let Err(e) = res {
+        eprintln!("invalid configuration: {e}");
         std::process::exit(2);
     }
 }
@@ -194,6 +199,12 @@ fn main() -> anyhow::Result<()> {
                     "price links from the measured BENCH_wire.json cell for this transport \
                      (shm | uds; empty = the paper's hand-set topology pricing)",
                 )
+                .opt(
+                    "staleness",
+                    "",
+                    "AsyncPS bounded staleness k: workers run up to k minibatches ahead of the \
+                     slowest shard's apply (empty = synchronous barrier)",
+                )
                 .flag("hybrid", "ZeRO++-style hybrid sharding");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -230,44 +241,29 @@ fn main() -> anyhow::Result<()> {
                 std::process::exit(2);
             }
             let device_speed = parse_device_speed(a.get("device-speed"))?;
-            anyhow::ensure!(
-                device_speed.is_empty() || device_speed.len() == exp.devices,
-                "--device-speed needs one entry per device: got {} for {} devices",
-                device_speed.len(),
-                exp.devices
-            );
             let fail_at = parse_fail_at(a.get("fail-at"))?;
-            if !fail_at.is_empty() && exp.scheme == CommScheme::Collective {
-                eprintln!(
-                    "invalid configuration: --fail-at requires a barrier-free scheme \
-                     (one dead rank deadlocks collective's per-layer barriers)"
-                );
-                std::process::exit(2);
-            }
             let fault_plan = parse_fault_plan(a.get("fault-plan"));
-            if !fault_plan.is_noop() && exp.scheme == CommScheme::Collective {
-                eprintln!(
-                    "invalid configuration: --fault-plan requires a barrier-free scheme \
-                     (a dropped collective message stalls every rank at the next rendezvous)"
-                );
-                std::process::exit(2);
-            }
-            if !fault_plan.partition.is_empty() && exp.scheme != CommScheme::Odc {
-                eprintln!(
-                    "invalid configuration: --fault-plan partitions require --scheme odc \
-                     (hybrid supports transient drop/dup/reorder/delay only)"
-                );
-                std::process::exit(2);
-            }
-            if !fault_plan.partition.is_empty() && !fail_at.is_empty() {
-                eprintln!(
-                    "invalid configuration: --fail-at cannot combine with --fault-plan partitions \
-                     (a partition already implies a derived fail-stop for its src device)"
-                );
-                std::process::exit(2);
-            }
             let seq_split = a.f64("seq-split");
-            check_seq_split(seq_split, exp.scheme, exp.balancer);
+            let wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
+            let staleness = parse_staleness(a.get("staleness"));
+            // The shared legality matrix (same one the trainer consults).
+            let spec = RunSpec {
+                scheme: exp.scheme,
+                balancer: exp.balancer,
+                world: exp.devices,
+                steps: exp.steps,
+                devices_per_node: exp.devices_per_node,
+                device_speed: device_speed.clone(),
+                fail_at: fail_at.clone(),
+                join_at: Vec::new(),
+                fault_plan: fault_plan.clone(),
+                seq_split,
+                wire_dtype,
+                transport: TransportKind::Inproc,
+                staleness,
+            };
+            check_spec(&spec, false);
+            // Sim-only: the failover pricing path is split-unaware.
             if seq_split != 0.0 && (!fail_at.is_empty() || !fault_plan.partition.is_empty()) {
                 eprintln!(
                     "invalid configuration: --seq-split cannot combine with --fail-at or \
@@ -281,7 +277,8 @@ fn main() -> anyhow::Result<()> {
             sim_cfg.fault_plan = fault_plan;
             sim_cfg.seq_split = seq_split;
             sim_cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
-            sim_cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
+            sim_cfg.wire_dtype = wire_dtype;
+            sim_cfg.staleness = staleness;
             if !a.get("transport").is_empty() {
                 let kind = parse_transport(a.get("transport"));
                 match WireCalib::load(kind) {
@@ -318,6 +315,13 @@ fn main() -> anyhow::Result<()> {
                 "  mean minibatch   : {:.3}s  ({} minibatches, {} samples)",
                 r.mean_minibatch_s, r.minibatches, r.samples
             );
+            if let Some(k) = sim_cfg.staleness {
+                println!(
+                    "  async (k = {k})    : {:.4} samples/s whole-run, staleness p99 {:.1} \
+                     (bounded-staleness admission schedule)",
+                    r.async_throughput, r.staleness_p99
+                );
+            }
             if r.hybrid_step_overhead_s > 0.0 {
                 println!("  hybrid step ovh  : {:.3} ms/minibatch (cross-node optimizer exchange)", r.hybrid_step_overhead_s * 1e3);
             }
@@ -368,6 +372,12 @@ fn main() -> anyhow::Result<()> {
                 .opt("seq-split-mode", "zigzag", "chunk boundaries: ring (equal tokens) | zigzag (equal cost)")
                 .opt("wire-dtype", "f32", "gradient payload precision: f32 (bit-exact) | bf16 (half the wire bytes)")
                 .opt("transport", "inproc", "mailbox byte transport: inproc | shm (ring buffers) | uds (sockets)")
+                .opt(
+                    "staleness",
+                    "",
+                    "AsyncPS bounded staleness k: workers run up to k minibatches ahead of the \
+                     slowest shard's apply (empty = synchronous barrier; 0 = bit-identical async)",
+                )
                 .flag("pjrt-shard-ops", "run adam through the PJRT chunk kernel");
             let a = match cli.parse_from(&rest) {
                 Ok(a) => a,
@@ -396,15 +406,11 @@ fn main() -> anyhow::Result<()> {
             cfg.seq_split_mode = parse_split_mode(a.get("seq-split-mode"));
             cfg.wire_dtype = parse_wire_dtype(a.get("wire-dtype"));
             cfg.transport = parse_transport(a.get("transport"));
-            if cfg.transport != TransportKind::Inproc && cfg.scheme == CommScheme::Collective {
-                eprintln!(
-                    "invalid configuration: --transport {} requires a one-sided scheme \
-                     (collective's rendezvous never touches the mailbox transport)",
-                    cfg.transport
-                );
-                std::process::exit(2);
-            }
-            check_seq_split(cfg.seq_split, cfg.scheme, cfg.balancer);
+            cfg.staleness = parse_staleness(a.get("staleness"));
+            // The shared legality matrix plus the engine-only codec
+            // constraint — `train` re-validates, but catching it here
+            // keeps the CLI's exit-2 contract for config errors.
+            check_spec(&cfg.runspec(), true);
             let lossy = !cfg.fault_plan.is_noop();
             let elastic = !cfg.fail_at.is_empty()
                 || !cfg.join_at.is_empty()
@@ -420,6 +426,12 @@ fn main() -> anyhow::Result<()> {
                 println!(
                     "hotpath  wire_bytes {}  ({} wire)  fold_s {:.6}",
                     run.wire_bytes, cfg.wire_dtype, run.fold_s
+                );
+            }
+            if let Some(k) = cfg.staleness {
+                println!(
+                    "staleness  max {}  p99 {}  (bounded-staleness admission, k = {k})",
+                    run.staleness_max, run.staleness_p99
                 );
             }
             if elastic {

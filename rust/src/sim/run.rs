@@ -11,11 +11,14 @@ use crate::balance::packers::{plan_run_split, PackOpts};
 use crate::balance::split::SplitMode;
 use crate::comm::topology::Topology;
 use crate::comm::transport::{FaultPlan, RetryPolicy, TransportKind};
-use crate::config::{Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, Sharding, WireDtype};
+use crate::config::{
+    Balancer, CommScheme, Dataset, ExperimentConfig, PaperModel, RunSpec, Sharding, WireDtype,
+};
 use crate::data::distributions::sample_lengths;
 use crate::sim::timeline::{
-    fault_minibatch_overhead, hybrid_step_overhead_dtype, model_bytes_dtype, recovery_epilogue_s,
-    time_minibatch_dispatch_split_dtype, time_minibatch_failover_dtype,
+    async_admission_schedule, fault_minibatch_overhead, hybrid_step_overhead_dtype,
+    model_bytes_dtype, recovery_epilogue_s, time_minibatch_dispatch_split_dtype,
+    time_minibatch_failover_dtype,
 };
 use crate::util::rng::Rng;
 
@@ -79,6 +82,19 @@ pub struct SimConfig {
     /// untouched either way: both byte transports are same-host, so
     /// they can only calibrate the intra link.
     pub wire_calib: Option<WireCalib>,
+    /// AsyncPS bounded staleness, mirroring `TrainerConfig::staleness`:
+    /// `Some(k)` replaces the end-of-minibatch barrier with the SSP
+    /// admission gate (a worker may start minibatch `t` once every shard
+    /// server has applied through `t − k`), so a straggler's optimizer
+    /// epilogue overlaps the fast devices' next compute phase.
+    /// `Some(0)` prices the degenerate synchronous case — same total
+    /// wall as `None` up to float association (the engine's k = 0 path
+    /// is bit-identical; see `docs/asyncps.md`). `None` (default) keeps
+    /// the synchronous accumulation, reproducing every historical sim
+    /// number bit-for-bit. Requires ODC + LB-Mini/Queue, static
+    /// membership, clean links, no seq_split — the shared `RunSpec`
+    /// matrix rejects everything else.
+    pub staleness: Option<usize>,
 }
 
 /// A measured (alpha, beta) link cost model: `t(bytes) = alpha_us µs +
@@ -149,6 +165,7 @@ impl SimConfig {
             seq_split_mode: SplitMode::Zigzag,
             wire_dtype: WireDtype::Bf16,
             wire_calib: None,
+            staleness: None,
         }
     }
 }
@@ -219,6 +236,19 @@ pub struct RunResult {
     /// master-accumulate traffic / `SIM_FOLD_GBPS`) — the sim mirror
     /// of `TrainRun::fold_s`. 0 under Collective.
     pub fold_s: f64,
+    /// AsyncPS: 99th-percentile observed staleness at admission (how
+    /// many applies behind the freshest shard a worker's pulled params
+    /// were when it started a minibatch), over all (device, minibatch)
+    /// admissions. Bounded above by the configured `k`; 0 under
+    /// synchronous runs and in the k = 0 degenerate case. Sim mirror of
+    /// `TrainRun::staleness_p99`.
+    pub staleness_p99: f64,
+    /// AsyncPS: whole-run samples/s under the staleness-admission
+    /// schedule (`samples / total_wall`, NOT per device — the headline
+    /// `samples_per_sec_per_device` already uses the async wall when
+    /// staleness is configured). 0 under synchronous runs, where the
+    /// metric would be redundant.
+    pub async_throughput: f64,
     pub minibatches: usize,
     pub samples: usize,
 }
@@ -233,94 +263,50 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     if let Err(e) = exp.validate() {
         panic!("invalid experiment cell: {e}");
     }
-    if !cfg.device_speed.is_empty() {
-        assert_eq!(
-            cfg.device_speed.len(),
-            exp.devices,
-            "device_speed needs one entry per device"
-        );
-        assert!(
-            cfg.device_speed.iter().all(|s| s.is_finite() && *s > 0.0),
-            "device_speed entries must be finite and > 0"
-        );
+    // Shared legality matrix — the SAME `RunSpec::validate` the trainer
+    // consults, so a combination cannot be legal here and rejected there
+    // (or vice versa). Sim-only constraints stay below.
+    let spec = RunSpec {
+        scheme: exp.scheme,
+        balancer: exp.balancer,
+        world: exp.devices,
+        steps: exp.steps,
+        devices_per_node: exp.devices_per_node,
+        device_speed: cfg.device_speed.clone(),
+        fail_at: cfg.fail_at.clone(),
+        join_at: Vec::new(),
+        fault_plan: cfg.fault_plan.clone(),
+        seq_split: cfg.seq_split,
+        wire_dtype: cfg.wire_dtype,
+        transport: TransportKind::Inproc,
+        staleness: cfg.staleness,
+    };
+    if let Err(e) = spec.validate() {
+        panic!("invalid experiment cell: {e}");
     }
-    if let Err(e) = cfg.fault_plan.validate() {
-        panic!("invalid experiment cell: fault_plan: {e}");
-    }
-    let mut fail_at = cfg.fail_at.clone();
-    if !cfg.fault_plan.is_noop() {
-        assert!(
-            exp.scheme != CommScheme::Collective,
-            "invalid experiment cell: fault_plan requires a barrier-free scheme (a dropped \
-             collective message stalls every rank at the next rendezvous)"
-        );
-        for &(src, dst, step) in &cfg.fault_plan.partition {
-            assert!(src < exp.devices && dst < exp.devices, "partition link {src}->{dst} out of range");
-            assert!(step < exp.steps, "partition step {step} out of range");
-        }
-        if !cfg.fault_plan.partition.is_empty() {
-            assert!(
-                exp.scheme == CommScheme::Odc,
-                "invalid experiment cell: fault_plan partitions require the odc scheme \
-                 (hybrid's cross-level quorum has no per-message retraction; the trainer \
-                 rejects the combination too)"
-            );
-            assert!(
-                cfg.fail_at.is_empty(),
-                "invalid experiment cell: fail_at cannot combine with fault_plan partitions — \
-                 a partition already implies a derived fail-stop for its src device"
-            );
-            // A partitioned link escalates its src at the first touch past
-            // the retry budget: derive the fail-stop the trainer
-            // synthesizes (min step per src, zero completed pulls — the
-            // whole plan row re-dispatches to survivors).
-            for &(src, _dst, step) in &cfg.fault_plan.partition {
-                match fail_at.iter_mut().find(|f| f.0 == src) {
-                    Some(f) => f.1 = f.1.min(step),
-                    None => fail_at.push((src, step, 0)),
-                }
-            }
-        }
-    }
-    if !fail_at.is_empty() {
-        assert!(
-            exp.scheme != CommScheme::Collective,
-            "invalid experiment cell: fail_at requires a barrier-free scheme (one dead rank \
-             deadlocks Collective's per-layer all-gather rendezvous)"
-        );
-        for &(dev, step, _) in &fail_at {
-            assert!(dev < exp.devices, "fail_at device {dev} out of range");
-            assert!(step < exp.steps, "fail_at step {step} out of range");
-        }
-        let mut devs: Vec<usize> = fail_at.iter().map(|f| f.0).collect();
-        devs.sort_unstable();
-        devs.dedup();
-        assert_eq!(devs.len(), fail_at.len(), "one fail_at event per device");
-        assert!(devs.len() < exp.devices, "at least one device must survive");
-    }
-    // SeqSplit legality, mirroring the trainer's validation errors.
+    // Sim-only: the failover pricing path is split-unaware — the trainer
+    // permits a crash on a device that hosts no chunks (placement is
+    // known after planning), but the pricing model cannot re-dispatch a
+    // chunked micro.
     if cfg.seq_split != 0.0 {
         assert!(
-            cfg.seq_split.is_finite() && cfg.seq_split > 0.0 && cfg.seq_split <= 1.0,
-            "invalid experiment cell: seq_split must be a fraction in (0, 1]: got {}",
-            cfg.seq_split
-        );
-        assert!(
-            exp.scheme != CommScheme::Collective,
-            "invalid experiment cell: seq_split requires a barrier-free scheme (Collective's \
-             padded barrier slots assume whole sequences)"
-        );
-        assert!(
-            matches!(exp.balancer, Balancer::LbMini | Balancer::Queue),
-            "invalid experiment cell: seq_split requires an LB-Mini or Queue balancer \
-             (synchronized-k packers pad to equal microbatch counts)"
-        );
-        assert!(
-            fail_at.is_empty(),
+            cfg.fail_at.is_empty() && cfg.fault_plan.partition.is_empty(),
             "invalid experiment cell: seq_split cannot combine with fail_at or partitions in \
              the simulator — the failover pricing path is split-unaware (the trainer permits a \
              crash on a device that hosts no chunks; see docs/seqsplit.md)"
         );
+    }
+    // Fail-stop triples for the pricing loop: a partitioned link
+    // escalates its src at the first touch past the retry budget (min
+    // step per src, zero completed pulls — the whole plan row
+    // re-dispatches to survivors), exactly the schedule
+    // `spec.derived_fails()` fed into the validated membership.
+    let mut fail_at = cfg.fail_at.clone();
+    for &(src, _dst, step) in &cfg.fault_plan.partition {
+        match fail_at.iter_mut().find(|f| f.0 == src) {
+            Some(f) => f.1 = f.1.min(step),
+            None => fail_at.push((src, step, 0)),
+        }
     }
     let queue_dispatch = exp.balancer == Balancer::Queue;
     let cost = CostModel::for_model(exp.model);
@@ -364,6 +350,9 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     let mut total_micros = 0usize;
     let mut dead = vec![false; exp.devices];
     let mut samples = 0usize;
+    // Per-step (wall, per-device busy) snapshots for the AsyncPS
+    // admission schedule — only collected when staleness is configured.
+    let mut async_steps: Vec<(f64, Vec<f64>)> = Vec::new();
     for (step, plan) in plans.iter().enumerate() {
         let fails_now: Vec<(usize, usize)> =
             fail_at.iter().filter(|f| f.1 == step).map(|f| (f.0, f.2)).collect();
@@ -438,6 +427,9 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         total_micros += micros;
         total_wall += t.wall + ADAM_EPILOGUE_S + step_overhead + step_recovery + fault_stall;
         total_busy += t.busy.iter().sum::<f64>();
+        if cfg.staleness.is_some() {
+            async_steps.push((t.wall, t.busy.clone()));
+        }
         // Speed- and dispatch-aware packing estimate, so the bubble
         // rate and dispatch_wait_s tell one consistent story (failure
         // steps: the estimate still describes the healthy schedule).
@@ -467,6 +459,26 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
     links.dedup();
     let escalations = links.len() as u64;
 
+    // AsyncPS: replace the synchronous sum-of-(wall + epilogue) with the
+    // staleness-admission schedule. A device's next minibatch starts as
+    // soon as its own work is done AND every shard has applied through
+    // t − 1 − k, so a straggler's epilogue overlaps the fast devices'
+    // compute instead of gating the whole fleet. Legality (validated
+    // above) guarantees no faults/fails/splits here, so the recovery and
+    // stall terms the sync accumulator carries are all zero. k = 0
+    // reproduces the synchronous wall up to float association (the
+    // additions happen per-device rather than in one running sum).
+    let mut staleness_p99 = 0.0;
+    let mut async_throughput = 0.0;
+    if let Some(k) = cfg.staleness {
+        let walls: Vec<f64> = async_steps.iter().map(|s| s.0).collect();
+        let busy: Vec<Vec<f64>> = async_steps.iter().map(|s| s.1.clone()).collect();
+        let sched = async_admission_schedule(&walls, &busy, k, ADAM_EPILOGUE_S + step_overhead);
+        total_wall = sched.total_wall;
+        staleness_p99 = sched.staleness_p99;
+        async_throughput = samples as f64 / total_wall.max(1e-12);
+    }
+
     let d = exp.devices as f64;
     let bubble_rate = if bubble_total > 0.0 { 1.0 - bubble_busy / (d * bubble_total) } else { 0.0 };
     let device_utilization =
@@ -487,6 +499,8 @@ pub fn simulate(cfg: &SimConfig) -> RunResult {
         escalations,
         wire_bytes,
         fold_s,
+        staleness_p99,
+        async_throughput,
         minibatches: plans.len(),
         samples,
     }
@@ -1071,5 +1085,123 @@ mod tests {
         assert_eq!(flat.hybrid_step_overhead_s, 0.0);
         let single = quick(CommScheme::Odc, Balancer::LbMicro, 4);
         assert_eq!(single.hybrid_step_overhead_s, 0.0);
+    }
+
+    fn async_cell(staleness: Option<usize>, speed: Vec<f64>) -> RunResult {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Odc;
+        exp.balancer = Balancer::Queue;
+        exp.devices = 4;
+        exp.devices_per_node = 4;
+        exp.minibs = 8;
+        exp.steps = 8;
+        exp.seed = 7;
+        let mut cfg = SimConfig::new(exp);
+        cfg.device_speed = speed;
+        cfg.staleness = staleness;
+        simulate(&cfg)
+    }
+
+    #[test]
+    fn staleness_zero_degenerates_to_the_synchronous_wall() {
+        // k = 0's admission gate IS the barrier; only the association of
+        // the wall additions differs (per-device running maxima vs one
+        // running sum), so the walls agree to ~ulp-scale relative error.
+        // The BIT-identity pin for k = 0 lives in the engine
+        // (tests/async_prop.rs), where both paths run the same fold.
+        let sync = async_cell(None, vec![0.25, 1.0, 1.0, 1.0]);
+        let k0 = async_cell(Some(0), vec![0.25, 1.0, 1.0, 1.0]);
+        let sync_wall = sync.mean_minibatch_s * sync.minibatches as f64;
+        let k0_wall = k0.mean_minibatch_s * k0.minibatches as f64;
+        assert!(
+            (sync_wall - k0_wall).abs() <= 1e-9 * sync_wall,
+            "k = 0 wall {} must reproduce the synchronous wall {}",
+            k0_wall,
+            sync_wall
+        );
+        assert_eq!(k0.staleness_p99, 0.0, "no admission can observe staleness under k = 0");
+        assert!(k0.async_throughput > 0.0);
+        assert_eq!(sync.async_throughput, 0.0, "sync runs don't report the async metric");
+        assert_eq!(sync.staleness_p99, 0.0);
+    }
+
+    #[test]
+    fn staleness_overlaps_the_straggler_and_strictly_gains() {
+        // The AsyncPS headline: with a persistent 4× straggler, k = 2
+        // lets the fast devices run ahead through the admission window
+        // instead of idling at every barrier — strictly higher
+        // throughput than the synchronous schedule of the SAME packing,
+        // and the observed staleness stays within the bound.
+        let sync = async_cell(None, vec![0.25, 1.0, 1.0, 1.0]);
+        let k2 = async_cell(Some(2), vec![0.25, 1.0, 1.0, 1.0]);
+        assert!(
+            k2.samples_per_sec_per_device > sync.samples_per_sec_per_device,
+            "staleness-2 throughput {} must beat sync {}",
+            k2.samples_per_sec_per_device,
+            sync.samples_per_sec_per_device
+        );
+        assert!(k2.staleness_p99 <= 2.0, "p99 {} exceeds the bound", k2.staleness_p99);
+        // Deterministic: same cell, same numbers.
+        let again = async_cell(Some(2), vec![0.25, 1.0, 1.0, 1.0]);
+        assert_eq!(k2.samples_per_sec_per_device, again.samples_per_sec_per_device);
+        assert_eq!(k2.staleness_p99, again.staleness_p99);
+    }
+
+    #[test]
+    fn staleness_widens_monotonically() {
+        // A wider admission window can only help (or tie): each k's
+        // schedule dominates the (k-1) schedule pointwise.
+        let speeds = vec![0.25, 1.0, 1.0, 1.0];
+        let mut prev = async_cell(Some(0), speeds.clone()).samples_per_sec_per_device;
+        for k in 1..4 {
+            let cur = async_cell(Some(k), speeds.clone()).samples_per_sec_per_device;
+            assert!(cur >= prev, "k={k} throughput {cur} regressed below k-1 {prev}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "barrier-free")]
+    fn staleness_under_collective_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Collective;
+        exp.balancer = Balancer::LbMicro;
+        let mut cfg = SimConfig::new(exp);
+        cfg.staleness = Some(2);
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires the odc scheme")]
+    fn staleness_under_hybrid_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Hybrid;
+        exp.balancer = Balancer::LbMini;
+        let mut cfg = SimConfig::new(exp);
+        cfg.staleness = Some(1);
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "static membership")]
+    fn staleness_with_fail_at_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Odc;
+        exp.balancer = Balancer::LbMini;
+        let mut cfg = SimConfig::new(exp);
+        cfg.staleness = Some(1);
+        cfg.fail_at = vec![(0, 2, 1)];
+        let _ = simulate(&cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "LB-Mini or Queue")]
+    fn staleness_under_synchronized_k_balancer_panics_in_sim() {
+        let mut exp = ExperimentConfig::golden();
+        exp.scheme = CommScheme::Odc;
+        exp.balancer = Balancer::LbMicro;
+        let mut cfg = SimConfig::new(exp);
+        cfg.staleness = Some(1);
+        let _ = simulate(&cfg);
     }
 }

@@ -168,6 +168,85 @@ pub fn fault_minibatch_overhead(
     (retries, bytes, stall)
 }
 
+/// Result of scheduling a whole run under the AsyncPS admission rule
+/// (see [`async_admission_schedule`]).
+#[derive(Clone, Debug)]
+pub struct AsyncSchedule {
+    /// Wall seconds until the LAST minibatch's optimizer apply lands —
+    /// the same finish line the synchronous accumulation uses.
+    pub total_wall: f64,
+    /// Worst observed admission staleness across (device, step) starts.
+    pub staleness_max: u64,
+    /// p99 of the same observations.
+    pub staleness_p99: f64,
+}
+
+/// AsyncPS pricing: replay the per-minibatch timings as a free-running
+/// bounded-staleness schedule instead of the synchronous
+/// `Σ (wall + apply)` accumulation.
+///
+/// Device `d` may start minibatch `t` once (a) it finished its own
+/// minibatch `t - 1` and (b) the optimizer apply of minibatch
+/// `t - 1 - k` has landed — the engine's admission gate
+/// (`ParamStore::wait_min_applies`). The apply of minibatch `t`
+/// completes `apply_s` after the slowest device's pushes (the shard
+/// servers fold the moment the quorum lands):
+///
+/// ```text
+/// start(d,t)  = max(finish(d,t-1), A[t-1-k])
+/// finish(d,t) = start(d,t) + dur(d,t)
+/// A[t]        = max_d finish(d,t) + apply_s
+/// ```
+///
+/// `dur(d,t) = walls[t] - (max_busy(t) - busy[t][d])`: the minibatch
+/// wall minus the device's idle share, so the critical device carries
+/// exactly the synchronous wall (exposed comm included) and faster
+/// devices free-run into their admission window. With `k = 0` the gate
+/// IS the synchronous barrier and `total_wall` degenerates to
+/// `Σ (walls[t] + apply_s)` (up to float association); with `k ≥ 1`
+/// every device overlaps the apply epilogue — and any step where it is
+/// not the straggler — with its own next minibatch, which is where the
+/// async throughput gain comes from. Observed staleness at a start is
+/// `t` minus the number of applies that have landed by then, the same
+/// quantity the engine's `TrainRun::staleness_p99` reports.
+pub fn async_admission_schedule(
+    walls: &[f64],
+    busy: &[Vec<f64>],
+    staleness: usize,
+    apply_s: f64,
+) -> AsyncSchedule {
+    let steps = walls.len();
+    let devices = busy.first().map_or(0, |b| b.len());
+    if steps == 0 || devices == 0 {
+        return AsyncSchedule { total_wall: 0.0, staleness_max: 0, staleness_p99: 0.0 };
+    }
+    let mut finish = vec![0.0f64; devices];
+    let mut applies: Vec<f64> = Vec::with_capacity(steps);
+    let mut obs: Vec<u64> = Vec::with_capacity(steps * devices);
+    for t in 0..steps {
+        let max_busy = busy[t].iter().cloned().fold(0.0f64, f64::max);
+        let gate = if t > staleness { applies[t - 1 - staleness] } else { 0.0 };
+        let mut step_max = 0.0f64;
+        for d in 0..devices {
+            let start = finish[d].max(gate);
+            // Applies are monotone, so the landed count is a prefix.
+            let landed = applies.iter().take_while(|&&a| a <= start).count();
+            obs.push((t as u64).saturating_sub(landed as u64));
+            let dur = walls[t] - (max_busy - busy[t][d]);
+            finish[d] = start + dur.max(0.0);
+            step_max = step_max.max(finish[d]);
+        }
+        applies.push(step_max + apply_s);
+    }
+    obs.sort_unstable();
+    let idx = ((obs.len() as f64 * 0.99).ceil() as usize).saturating_sub(1);
+    AsyncSchedule {
+        total_wall: *applies.last().unwrap(),
+        staleness_max: *obs.last().unwrap(),
+        staleness_p99: obs[idx] as f64,
+    }
+}
+
 /// Result of timing one minibatch.
 #[derive(Clone, Debug)]
 pub struct MinibatchTiming {

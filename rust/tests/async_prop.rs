@@ -1,0 +1,200 @@
+//! AsyncPS property suite: the bounded-staleness parameter-server tier
+//! against the synchronous ODC engine it generalizes.
+//!
+//! Three claims, matching `docs/asyncps.md`:
+//!
+//! 1. **k = 0 is the synchronous engine, bit for bit.** With the
+//!    admission gate at zero the shard servers still run the optimizer
+//!    (the async machinery is fully engaged), but every worker waits
+//!    for every apply before re-pulling — same fold order (sorted by
+//!    (micro, client) per layer), same update order, same bytes. Pinned
+//!    across Queue × {inproc, shm, uds}: assert_eq, no tolerance.
+//! 2. **The staleness bound is an invariant, not a hint.** Under a 4×
+//!    straggler with `k = 2`, every admission observes parameters at
+//!    most 2 applies behind — `staleness_max ≤ k` by construction, and
+//!    the run still completes every step.
+//! 3. **Bounded staleness still trains.** `k = 2` descends on the tiny
+//!    preset and lands near the synchronous trajectory — async is a
+//!    throughput knob, not a different optimization problem.
+
+use odc::comm::TransportKind;
+use odc::config::{Balancer, CommScheme};
+use odc::engine::trainer::{train, TrainRun, TrainerConfig};
+use std::path::{Path, PathBuf};
+
+fn tiny_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+fn have_artifacts() -> bool {
+    tiny_dir().join("manifest.json").exists()
+}
+
+fn base_cfg() -> TrainerConfig {
+    let mut c = TrainerConfig::new(tiny_dir());
+    c.world = 2;
+    c.minibs = 2;
+    c.steps = 2;
+    c.seed = 42;
+    c.scheme = CommScheme::Odc;
+    c.balancer = Balancer::Queue;
+    c
+}
+
+/// Run the trainer, treating the in-tree PJRT stub as a skip — the
+/// documented contract: artifact-gated tests stay green until the real
+/// `xla` crate is wired in. Any other failure is a hard error.
+fn try_train(cfg: &TrainerConfig) -> Option<TrainRun> {
+    match train(cfg) {
+        Ok(r) => Some(r),
+        Err(e) if format!("{e:#}").contains("PJRT backend unavailable") => {
+            eprintln!("skipping: {e:#}");
+            None
+        }
+        Err(e) => panic!("training run: {e:#}"),
+    }
+}
+
+/// THE AsyncPS acceptance case: `--staleness 0` swaps in the whole
+/// parameter-server tier (shard-server daemons running the optimizer,
+/// admission gates, version clock) and must not move a single bit
+/// relative to the synchronous backend — on the typed in-process
+/// transport AND over real bytes (shm ring, unix sockets).
+#[test]
+fn staleness_zero_bit_identical_to_sync_odc_across_transports() {
+    if !have_artifacts() {
+        return;
+    }
+    for kind in [TransportKind::Inproc, TransportKind::Shm, TransportKind::Uds] {
+        let mut sync_cfg = base_cfg();
+        sync_cfg.transport = kind;
+        let mut async_cfg = sync_cfg.clone();
+        async_cfg.staleness = Some(0);
+        let (Some(s), Some(a)) = (try_train(&sync_cfg), try_train(&async_cfg)) else { return };
+        for (x, y) in s.logs.iter().zip(&a.logs) {
+            assert_eq!(x.tokens, y.tokens, "{kind:?} step {}", x.step);
+            assert_eq!(
+                x.loss, y.loss,
+                "{kind:?} step {}: k=0 loss must be bit-identical to sync",
+                x.step
+            );
+        }
+        for (l, (ps, pa)) in s.final_params.iter().zip(&a.final_params).enumerate() {
+            assert_eq!(ps, pa, "{kind:?} layer {l}: k=0 params must be bit-identical to sync");
+        }
+        assert_eq!(a.staleness_max, 0, "{kind:?}: k=0 admissions can never observe staleness");
+        assert_eq!(a.staleness_p99, 0, "{kind:?}: k=0 admissions can never observe staleness");
+        assert_eq!(s.staleness_max, 0, "{kind:?}: a sync run reports no staleness");
+    }
+}
+
+/// The bound is enforced at admission, so no schedule — not even a 4×
+/// straggler racing ahead of the slow device's quorum — can observe
+/// parameters more than `k` applies old.
+#[test]
+fn staleness_bound_holds_under_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.steps = 4;
+    c.staleness = Some(2);
+    c.device_speed = vec![0.25, 1.0]; // device 0 is a 4× straggler
+    let Some(r) = try_train(&c) else { return };
+    assert_eq!(r.logs.len(), 4, "all steps must complete under async admission");
+    assert!(
+        r.staleness_max <= 2,
+        "observed staleness {} exceeds the configured bound k=2",
+        r.staleness_max
+    );
+    assert!(r.staleness_p99 <= r.staleness_max, "p99 cannot exceed the max");
+}
+
+/// Convergence ablation: a `k = 2` run descends and lands near the
+/// synchronous trajectory. The trajectories are NOT bit-comparable
+/// (that is the point of admitting stale parameters), so the assertion
+/// is about optimization health, not bits.
+#[test]
+fn staleness_two_still_converges_near_sync() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sync_cfg = base_cfg();
+    sync_cfg.steps = 4;
+    sync_cfg.adam.lr = 3e-3;
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.staleness = Some(2);
+    let (Some(s), Some(a)) = (try_train(&sync_cfg), try_train(&async_cfg)) else { return };
+    let a_first = a.logs.first().unwrap().loss;
+    let a_last = a.logs.last().unwrap().loss;
+    let s_last = s.logs.last().unwrap().loss;
+    assert!(a_last < a_first, "async loss should descend: {a_first} -> {a_last}");
+    assert!(
+        (a_last - s_last).abs() < 0.1 * s_last.abs().max(1.0),
+        "k=2 final loss {a_last} strayed from the sync trajectory {s_last}"
+    );
+}
+
+/// `k = 0` is also deterministic across runs (the property every other
+/// equivalence suite leans on): the admission gate serializes applies,
+/// and the per-layer fold is keyed, not arrival-ordered.
+#[test]
+fn staleness_zero_deterministic_across_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = base_cfg();
+    c.staleness = Some(0);
+    c.device_speed = vec![1.0, 0.25];
+    let (Some(a), Some(b)) = (try_train(&c), try_train(&c)) else { return };
+    for (x, y) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.loss, y.loss, "step {}", x.step);
+    }
+    for (l, (pa, pb)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(pa, pb, "layer {l}");
+    }
+}
+
+/// The legality matrix runs before artifacts are touched, so these hold
+/// even without `make artifacts` (the bugfix this PR pins: contradictory
+/// combos must die in validation, not at artifact load or mid-run).
+#[test]
+fn staleness_rejected_in_illegal_combinations() {
+    // Collective has no admission gate to bound — its barriers ARE the
+    // synchronization.
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::LbMicro;
+    c.staleness = Some(1);
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+
+    // Hybrid's two-tier fold has no single apply clock per shard.
+    let mut h = base_cfg();
+    h.scheme = CommScheme::Hybrid;
+    h.staleness = Some(1);
+    let err = train(&h).unwrap_err().to_string();
+    assert!(err.contains("requires the odc scheme"), "unexpected error: {err}");
+
+    // Synchronized-k balancers assume the barrier the tier removes.
+    let mut b = base_cfg();
+    b.balancer = Balancer::LbMicro;
+    b.staleness = Some(1);
+    let err = train(&b).unwrap_err().to_string();
+    assert!(err.contains("LB-Mini or Queue"), "unexpected error: {err}");
+
+    // Elastic membership would race the version clock.
+    let mut f = base_cfg();
+    f.staleness = Some(1);
+    f.fail_at = vec![(0, 1, 0)];
+    let err = train(&f).unwrap_err().to_string();
+    assert!(err.contains("static membership"), "unexpected error: {err}");
+
+    // The PJRT shard-op path batches applies in the synchronous phase.
+    let mut p = base_cfg();
+    p.staleness = Some(0);
+    p.pjrt_shard_ops = true;
+    let err = train(&p).unwrap_err().to_string();
+    assert!(err.contains("synchronous optimizer phase"), "unexpected error: {err}");
+}

@@ -36,7 +36,7 @@ use odc::balance::dispatch::{make_elastic_dispatcher, Dispatcher};
 use odc::balance::packers::Plan;
 use odc::comm::backend::{CommBackend, ParamStore};
 use odc::comm::{
-    ArenaStats, FaultPlan, FaultStats, HybridComm, Membership, OdcComm, RetryPolicy,
+    ArenaStats, CommStack, FaultPlan, FaultStats, Membership, OdcComm, RetryPolicy,
     TransportKind,
 };
 use odc::config::{Balancer, CommScheme, PaperModel, WireDtype};
@@ -93,36 +93,24 @@ fn run_chaos(
     steps: usize,
 ) -> TrialOutcome {
     let params = Arc::new(ParamStore::new(&LAYERS, world));
-    // `with_stack` builds the base transport for `kind` and layers
+    // `CommStack` builds the base transport for `kind` and layers
     // `FaultyTransport::over` on top when a plan is given — the exact
     // construction path the trainer uses, so the soak covers it too.
-    let faults = plan.map(|p| (p, RetryPolicy::default()));
+    let mut stack = CommStack::builder(Arc::clone(&params), world)
+        .membership(Arc::clone(&membership))
+        .wire(WireDtype::F32)
+        .transport(kind);
+    if let Some(p) = plan {
+        stack = stack.faults(p, RetryPolicy::default());
+    }
     let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match scheme {
         CommScheme::Odc => {
-            let c = Arc::new(
-                OdcComm::with_stack(
-                    Arc::clone(&params),
-                    Arc::clone(&membership),
-                    WireDtype::F32,
-                    kind,
-                    faults,
-                )
-                .expect("transport binds"),
-            );
+            let c = stack.build_odc().expect("transport binds");
             (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
         }
         CommScheme::Hybrid => (
-            Arc::new(
-                HybridComm::with_stack(
-                    Arc::clone(&params),
-                    Arc::clone(&membership),
-                    group_size,
-                    WireDtype::F32,
-                    kind,
-                    faults,
-                )
-                .expect("transport binds"),
-            ) as Arc<dyn CommBackend>,
+            stack.groups(group_size).build_hybrid().expect("transport binds")
+                as Arc<dyn CommBackend>,
             None,
         ),
         CommScheme::Collective => unreachable!("chaos × Collective is rejected at config time"),

@@ -6,19 +6,21 @@
 //! minibatch-scoped gather cache.
 
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{CollectiveComm, GatherCache, HybridComm, OdcComm};
+use odc::comm::{CommStack, GatherCache};
+use odc::config::CommScheme;
 use std::sync::Arc;
 
 /// Backend under test: 0 = Collective, 1 = ODC, 2 = Hybrid with a
 /// single group (all-intra), 3 = Hybrid with per-device groups
 /// (all-cross), 4 = Hybrid with two-device groups (needs world % 2 == 0).
 fn make_backend(which: usize, params: &Arc<ParamStore>, world: usize) -> Arc<dyn CommBackend> {
+    let stack = || CommStack::builder(Arc::clone(params), world);
     match which {
-        0 => Arc::new(CollectiveComm::new(Arc::clone(params), world)),
-        1 => Arc::new(OdcComm::new(Arc::clone(params), world)),
-        2 => Arc::new(HybridComm::new(Arc::clone(params), world, world)),
-        3 => Arc::new(HybridComm::new(Arc::clone(params), world, 1)),
-        4 => Arc::new(HybridComm::new(Arc::clone(params), world, 2)),
+        0 => stack().build(CommScheme::Collective).unwrap(),
+        1 => stack().build(CommScheme::Odc).unwrap(),
+        2 => stack().groups(world).build(CommScheme::Hybrid).unwrap(),
+        3 => stack().groups(1).build(CommScheme::Hybrid).unwrap(),
+        4 => stack().groups(2).build(CommScheme::Hybrid).unwrap(),
         _ => unreachable!(),
     }
 }
@@ -105,7 +107,7 @@ fn repeated_runs_deterministic() {
 fn odc_unequal_counts_many_minibatches() {
     let world = 3;
     let params = Arc::new(ParamStore::new(&[50], world));
-    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     std::thread::scope(|s| {
         for dev in 0..world {
             let comm = Arc::clone(&comm);
@@ -139,7 +141,7 @@ fn odc_arena_never_allocates_within_prealloc() {
     // 2 layers => prealloc is 3 buffers per pair; push each layer once
     // per minibatch (2 in-flight max per pair).
     let params = Arc::new(ParamStore::new(&[30, 12], world));
-    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     std::thread::scope(|s| {
         for dev in 0..world {
             let comm = Arc::clone(&comm);
@@ -171,7 +173,7 @@ fn odc_arena_growth_bounded_and_stops_after_warmup() {
     let world = 2;
     let micros = 8; // 8 pushes per pair per minibatch vs prealloc of 2
     let params = Arc::new(ParamStore::new(&[40], world));
-    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     let run_minibatches = |n: usize| {
         std::thread::scope(|s| {
             for dev in 0..world {
@@ -271,7 +273,7 @@ fn gather_cache_bit_identical_to_direct_gathers() {
         let vals: Vec<f32> = (0..p.logical_len).map(|i| ((l + 1) * (i + 3) % 97) as f32).collect();
         p.init_from(&vals);
     }
-    let comm = OdcComm::new(Arc::clone(&params), world);
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     assert!(comm.gathers_cacheable());
     for dev in 0..world {
         let mut cache = GatherCache::new(&params, dev, true);
@@ -279,7 +281,7 @@ fn gather_cache_bit_identical_to_direct_gathers() {
             let mut direct = vec![0.0f32; p.padded_len()];
             comm.gather_params(dev, l, &mut direct);
             for _ in 0..3 {
-                let cached = cache.gather(&comm, l);
+                let cached = cache.gather(comm.as_ref(), l);
                 assert_eq!(&cached[..], &direct[..], "dev {dev} layer {l}");
             }
         }
@@ -340,7 +342,8 @@ fn hybrid_skewed_counts_arena_growth_stops_after_warmup() {
     let group_size = 2;
     let layers = [30usize, 12];
     let params = Arc::new(ParamStore::new(&layers, world));
-    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, group_size));
+    let comm =
+        CommStack::builder(Arc::clone(&params), world).groups(group_size).build_hybrid().unwrap();
     let micros = |dev: usize| if dev == 0 { 8 } else { 1 };
     let run_minibatches = |n: usize| {
         std::thread::scope(|s| {
@@ -414,7 +417,7 @@ fn odc_seq_fold_arena_exact_accounting_within_prealloc() {
     // 1 layer => prealloc 2 buffers/pair; 2 pushes/pair per minibatch
     // (one chunk + one micro) — exactly at the prealloc, never past it.
     let params = Arc::new(ParamStore::new(&[40], world));
-    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     std::thread::scope(|s| {
         for dev in 0..world {
             let comm = Arc::clone(&comm);
@@ -455,7 +458,7 @@ fn odc_seq_fold_arena_growth_bounded_under_split_skew() {
     let world = 2;
     let chunks = 8usize;
     let params = Arc::new(ParamStore::new(&[40], world));
-    let comm = Arc::new(OdcComm::new(Arc::clone(&params), world));
+    let comm = CommStack::builder(Arc::clone(&params), world).build_odc().unwrap();
     let run_minibatches = |n: usize| {
         std::thread::scope(|s| {
             for dev in 0..world {
@@ -512,7 +515,8 @@ fn hybrid_seq_fold_arena_exact_accounting_across_groups() {
     let group_size = 2;
     let steps = 25usize;
     let params = Arc::new(ParamStore::new(&[40], world));
-    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, group_size));
+    let comm =
+        CommStack::builder(Arc::clone(&params), world).groups(group_size).build_hybrid().unwrap();
     std::thread::scope(|s| {
         for dev in 0..world {
             let comm = Arc::clone(&comm);
@@ -558,7 +562,7 @@ fn hybrid_gather_cache_bit_identical_across_groups() {
         let vals: Vec<f32> = (0..p.logical_len).map(|i| ((l + 1) * (i + 3) % 97) as f32).collect();
         p.init_from(&vals);
     }
-    let comm = Arc::new(HybridComm::new(Arc::clone(&params), world, 2));
+    let comm = CommStack::builder(Arc::clone(&params), world).groups(2).build_hybrid().unwrap();
     assert!(comm.gathers_cacheable());
     for dev in 0..world {
         let mut cache = GatherCache::for_policy(&params, dev, comm.gather_policy());

@@ -24,7 +24,7 @@ use odc::balance::cost::CostModel;
 use odc::balance::dispatch::{make_elastic_dispatcher, Dispatcher};
 use odc::balance::packers::Plan;
 use odc::comm::backend::{CommBackend, ParamStore};
-use odc::comm::{ArenaStats, HybridComm, Membership, OdcComm};
+use odc::comm::{ArenaStats, CommStack, Membership, OdcComm};
 use odc::config::{Balancer, CommScheme, PaperModel};
 use odc::util::rng::Rng;
 use std::sync::{Arc, Mutex};
@@ -62,17 +62,16 @@ fn run_elastic(
     steps: usize,
 ) -> TrialOutcome {
     let params = Arc::new(ParamStore::new(&LAYERS, world));
+    let stack =
+        CommStack::builder(Arc::clone(&params), world).membership(Arc::clone(&membership));
     let (backend, odc_handle): (Arc<dyn CommBackend>, Option<Arc<OdcComm>>) = match scheme {
         CommScheme::Odc => {
-            let c = Arc::new(OdcComm::with_membership(Arc::clone(&params), Arc::clone(&membership)));
+            let c = stack.build_odc().expect("in-process odc stack");
             (Arc::clone(&c) as Arc<dyn CommBackend>, Some(c))
         }
         CommScheme::Hybrid => (
-            Arc::new(HybridComm::with_membership(
-                Arc::clone(&params),
-                Arc::clone(&membership),
-                group_size,
-            )) as Arc<dyn CommBackend>,
+            stack.groups(group_size).build_hybrid().expect("in-process hybrid stack")
+                as Arc<dyn CommBackend>,
             None,
         ),
         CommScheme::Collective => unreachable!("elastic × Collective is rejected at config time"),

@@ -613,6 +613,28 @@ fn elastic_schedule_validated() {
     assert!(err.contains("no completing member"), "unexpected error: {err}");
 }
 
+/// AsyncPS staleness goes through the same pre-artifact validation:
+/// contradictory combos die in `RunSpec::validate`, not at artifact
+/// load or mid-run (the full legality matrix lives in
+/// `tests/async_prop.rs`).
+#[test]
+fn staleness_rejected_before_artifact_load() {
+    let mut c = base_cfg();
+    c.scheme = CommScheme::Collective;
+    c.balancer = Balancer::LbMicro;
+    c.staleness = Some(1);
+    let err = train(&c).unwrap_err().to_string();
+    assert!(err.contains("barrier-free"), "unexpected error: {err}");
+
+    let mut f = base_cfg();
+    f.scheme = CommScheme::Odc;
+    f.balancer = Balancer::Queue;
+    f.staleness = Some(1);
+    f.fail_at = vec![(0, 1, 0)];
+    let err = train(&f).unwrap_err().to_string();
+    assert!(err.contains("static membership"), "unexpected error: {err}");
+}
+
 /// Config validation runs before artifacts are touched, so this holds
 /// even without `make artifacts`.
 #[test]

@@ -17,7 +17,7 @@
 
 use odc::comm::backend::{CommBackend, ParamStore};
 use odc::comm::fold::{self, CHUNK_ELEMS};
-use odc::comm::{ArenaStats, FoldPiece, HotpathStats, Membership, OdcComm, PieceData, WireDtype};
+use odc::comm::{ArenaStats, CommStack, FoldPiece, HotpathStats, PieceData, WireDtype};
 use std::sync::Arc;
 
 fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
@@ -129,11 +129,10 @@ const MICROS: u64 = 2;
 /// dtype — only the encoding differs.
 fn run_backend(wire: WireDtype) -> (Vec<Vec<Vec<f32>>>, HotpathStats, ArenaStats) {
     let params = Arc::new(ParamStore::new(&LAYERS, WORLD));
-    let comm = Arc::new(OdcComm::with_wire(
-        Arc::clone(&params),
-        Arc::new(Membership::all_live(WORLD)),
-        wire,
-    ));
+    let comm = CommStack::builder(Arc::clone(&params), WORLD)
+        .wire(wire)
+        .build_odc()
+        .expect("in-process odc stack");
     let mut per_dev = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..WORLD)

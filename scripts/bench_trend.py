@@ -25,6 +25,12 @@ Tracked metrics (higher is better unless noted):
         the trend comparison it carries an ABSOLUTE floor of
         SEQSPLIT_FLOOR — splitting must always remove at least 15% of
         the straggler-pinned makespan, even on a first/seeding run)
+  * BENCH_dispatch.json -> async.throughput_gain_fraction
+        (whole-run throughput AsyncPS bounded-staleness admission (k=2)
+        gains over the synchronous barrier on the 4x-straggler Queue
+        cell; carries an ABSOLUTE floor of ASYNC_FLOOR — overlapping the
+        straggler must always gain SOMETHING, and a negative value means
+        the admission schedule made the run slower than the barrier)
   * BENCH_wire.json     -> transports.uds.alpha_us   (LOWER is better:
         per-message setup cost of the socket transport)
   * BENCH_wire.json     -> transports.uds.beta_gbps
@@ -49,6 +55,7 @@ import sys
 TOLERANCE = 0.15  # 15% relative regression budget
 SEQSPLIT_FLOOR = 0.15  # absolute: split must shear >=15% off the dominant-corpus makespan
 WIRE_FLOOR = 0.45  # absolute: bf16 payloads must shed >=45% of the f32 wire bytes
+ASYNC_FLOOR = 0.0005  # absolute: bounded-staleness admission must beat the barrier
 
 
 def load(path):
@@ -113,6 +120,14 @@ def seqsplit_metric(rec):
         return None
 
 
+def async_metric(rec):
+    try:
+        v = rec["async"]["throughput_gain_fraction"]
+        return float(v) if v is not None else None
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 def calib_alpha_metric(rec):
     try:
         v = rec["transports"]["uds"]["alpha_us"]
@@ -137,6 +152,7 @@ CHECKS = [
     ("BENCH_dispatch.json", "ablation_dispatch 4x bubble margin", disp_metric, None, True),
     ("BENCH_dispatch.json", "chaos retained throughput fraction", chaos_metric, None, True),
     ("BENCH_dispatch.json", "seqsplit makespan reduction fraction", seqsplit_metric, SEQSPLIT_FLOOR, True),
+    ("BENCH_dispatch.json", "asyncps throughput gain fraction", async_metric, ASYNC_FLOOR, True),
     ("BENCH_wire.json", "wire_calib uds alpha_us", calib_alpha_metric, None, False),
     ("BENCH_wire.json", "wire_calib uds beta_gbps", calib_beta_metric, None, True),
 ]
